@@ -1,0 +1,184 @@
+//! End-to-end driver (DESIGN.md §6, EXPERIMENTS.md §E2E): the full system
+//! on a real small workload, proving all layers compose.
+//!
+//! 1. **Real bytes**: spawn the in-tree TCP object store (manager + 5
+//!    storage nodes on loopback), stage a scaled-down BLAST database, and
+//!    execute the BLAST I/O workload with real reads/writes, measuring
+//!    wallclock.
+//! 2. **System identification** (§2.5) against that store.
+//! 3. **Provisioning search** (paper §3.2, scenarios I & II): AOT analytic
+//!    prescreen through PJRT (L1/L2 artifact) + discrete-event refinement,
+//!    answering the paper's questions — best partitioning, best chunk
+//!    size, cost/performance trade-off.
+//! 4. **§3.3 speedup accounting**: predictor cost vs the real run.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example blast_provisioning
+//! ```
+
+use wfpred::ident::{identify, CampaignCfg, IdentConfig};
+use wfpred::model::Platform;
+use wfpred::predict::Predictor;
+use wfpred::runtime::{ScorerRuntime, StageDesc};
+use wfpred::search::{SearchSpace, Searcher};
+use wfpred::store::{Cluster, StorePlacement};
+use wfpred::util::table::Table;
+use wfpred::util::units::Bytes;
+use wfpred::workload::blast::{blast, BlastParams};
+use std::time::Instant;
+
+/// Scaled-down BLAST: 1/64 of the RefSeq database, 4 workers, real bytes.
+fn run_real_blast() -> (f64, u64) {
+    println!("== 1. real workload on the in-tree TCP store ==");
+    let n_app = 4usize;
+    let n_storage = 5usize;
+    let db_bytes = (1.67 * (1u64 << 30) as f64 / 64.0) as usize; // ~26 MB
+    let cl = Cluster::start(n_storage).expect("cluster");
+
+    // Stage the database (prestaged in the paper: "we assume the database
+    // is already loaded in intermediate storage").
+    let mut stager = cl.client().unwrap().with_chunk_size(256 * 1024);
+    let db: Vec<u8> = (0..db_bytes).map(|i| (i as u32).wrapping_mul(2654435761).to_le_bytes()[1]).collect();
+    stager.write("refseq.db", &db).unwrap();
+    for w in 0..n_app {
+        let mut c = cl
+            .client()
+            .unwrap()
+            .with_chunk_size(256 * 1024)
+            .with_placement(StorePlacement::OnNode { node: w as u32 });
+        c.write(&format!("queries.{w}"), &vec![b'A'; 64 * 1024]).unwrap();
+    }
+
+    // Run the workload: every worker reads the full DB + its query file,
+    // "searches" (checksums — the storage system only sees the I/O), and
+    // writes its result file.
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..n_app)
+        .map(|w| {
+            let addr = cl.manager.addr.clone();
+            std::thread::spawn(move || {
+                let mut c = wfpred::store::StoreClient::connect(&addr)
+                    .unwrap()
+                    .with_chunk_size(256 * 1024);
+                let db = c.read("refseq.db").unwrap();
+                let queries = c.read(&format!("queries.{w}")).unwrap();
+                // Stand-in for sequence search: a pass over the data.
+                let mut acc = 0u64;
+                for chunk in db.chunks(8) {
+                    acc = acc.wrapping_add(chunk.iter().map(|&b| b as u64).sum());
+                }
+                acc = acc.wrapping_add(queries.len() as u64);
+                let result = format!("worker {w} score {acc}\n").repeat(2000);
+                c.write(&format!("result.{w}"), result.as_bytes()).unwrap();
+                (db.len(), acc)
+            })
+        })
+        .collect();
+    let mut total_read = 0usize;
+    for h in handles {
+        let (n, _) = h.join().unwrap();
+        total_read += n;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "  {n_app} workers × {:.1} MB DB (striped over {n_storage} nodes, 256 KB chunks)",
+        db_bytes as f64 / 1e6
+    );
+    println!("  moved {:.1} MB in {wall:.2}s — all bytes over real TCP loopback", total_read as f64 / 1e6);
+    println!("  stored total: {:.1} MB across nodes\n", cl.stored_total() as f64 / 1e6);
+    (wall, total_read as u64)
+}
+
+fn main() {
+    let (real_wall, _) = run_real_blast();
+
+    println!("== 2. system identification (paper §2.5) ==");
+    let ident_cfg = IdentConfig {
+        file_size: Bytes::mb(4),
+        chunk_size: Bytes::kb(256),
+        probe_size: Bytes::mb(4),
+        campaign: CampaignCfg { rel_accuracy: 0.1, min_samples: 4, max_samples: 20 },
+    };
+    let id = identify(&ident_cfg).expect("identification");
+    println!("{}\n", id.summary());
+
+    println!("== 3. provisioning search (paper §3.2, scenarios I & II) ==");
+    // The production question is posed for the paper's 20-node testbed;
+    // the platform profile carries the 1 Gbps-era service times.
+    let plat = Platform::paper_testbed();
+    let predictor = Predictor::new(plat.clone());
+    let params = BlastParams::default();
+    let stages = vec![StageDesc {
+        tasks_per_app: true,
+        tasks_fixed: 0.0,
+        read_mb: params.db_size.as_f64() as f32 / (1u64 << 20) as f32,
+        read_local_frac: 0.0,
+        write_mb: params.output_file.as_f64() as f32 / (1u64 << 20) as f32,
+        fan_single: false,
+        compute_total_s: params.queries as f32 * params.per_query.as_secs_f64() as f32,
+    }];
+    let rt = ScorerRuntime::load_default().ok();
+    if rt.is_none() {
+        println!("  (no AOT artifact — run `make artifacts` for the L1/L2 prescreen)");
+    }
+    let t0 = Instant::now();
+    let space = SearchSpace::elastic(
+        vec![11, 17, 20],
+        vec![Bytes::kb(256), Bytes::mb(1), Bytes::mb(4)],
+    );
+    let mut searcher = Searcher::new(&predictor).with_top_k(10);
+    if let Some(rt) = rt.as_ref() {
+        searcher = searcher.with_runtime(rt);
+    }
+    let report = searcher.search(&space, &stages, |cfg| blast(cfg.n_app, &params));
+    let search_wall = t0.elapsed().as_secs_f64();
+
+    println!(
+        "  explored {} configurations ({} pruned by the AOT analytic prescreen) in {search_wall:.2}s",
+        report.candidates.len(),
+        report.pruned
+    );
+    let show = |what: &str, i: usize| {
+        let c = &report.candidates[i];
+        println!(
+            "  {what:<24} {:<28} time {:>7.1}s  cost {:>8.0} node-s",
+            c.config.label,
+            c.time_s(),
+            c.cost_node_s()
+        );
+    };
+    show("best performance:", report.best_time);
+    show("lowest cost:", report.best_cost);
+    show("most cost-efficient:", report.best_efficiency);
+
+    println!("\n  pareto front (time/cost trade-off, scenario II):");
+    let mut t = Table::new(&["config", "time (s)", "cost (node-s)"]);
+    for &i in &report.pareto {
+        let c = &report.candidates[i];
+        t.row(&[c.config.label.clone(), format!("{:.1}", c.time_s()), format!("{:.0}", c.cost_node_s())]);
+    }
+    for line in t.render().lines() {
+        println!("  {line}");
+    }
+
+    println!("\n== 4. §3.3 accounting ==");
+    let best = &report.candidates[report.best_time];
+    let per_pred = best
+        .refined
+        .as_ref()
+        .map(|p| p.predictor_wallclock_secs)
+        .unwrap_or(search_wall / report.candidates.len() as f64);
+    println!("  one DES prediction: {:.0} ms on one core", per_pred * 1e3);
+    println!(
+        "  an actual 20-node run of the best config would occupy the cluster for {:.0}s",
+        best.time_s()
+    );
+    println!(
+        "  -> {:.0}x faster, {:.0}x fewer node-seconds (paper claims 10-100x / 200-2000x)",
+        best.time_s() / per_pred,
+        best.time_s() / per_pred * best.config.n_hosts() as f64
+    );
+    println!(
+        "  (scaled-down real-bytes run above took {real_wall:.2}s of wallclock for 1/64 of the DB on 1 host)"
+    );
+}

@@ -1,0 +1,47 @@
+"""AOT export: lower the L2 predictor to HLO *text* for the rust runtime.
+
+HLO text — not `HloModuleProto.serialize()` — is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the xla crate's
+bundled XLA (xla_extension 0.5.1) rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids and round-trips cleanly. Lowered with
+`return_tuple=True`; the rust side unwraps with `to_tuple1()`.
+
+Run once via `make artifacts`; python never runs on the request path.
+
+Usage: python -m compile.aot --out ../artifacts/predictor.hlo.txt
+"""
+
+import argparse
+import os
+
+from jax._src.lib import xla_client as xc
+
+from compile.model import EXPORT_BATCH, EXPORT_STAGES, lower_for_export
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/predictor.hlo.txt")
+    args = ap.parse_args()
+
+    lowered = lower_for_export()
+    text = to_hlo_text(lowered)
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(text)
+    # ABI sidecar so the rust runtime can check shapes without parsing HLO.
+    with open(args.out + ".meta", "w") as f:
+        f.write(f"batch {EXPORT_BATCH}\nstages {EXPORT_STAGES}\n")
+    print(f"wrote {len(text)} chars to {args.out} (B={EXPORT_BATCH}, S={EXPORT_STAGES})")
+
+
+if __name__ == "__main__":
+    main()

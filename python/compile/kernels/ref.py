@@ -1,0 +1,122 @@
+"""Pure-jnp oracle for the analytic configuration-scoring kernel.
+
+This is the L1 correctness reference: `queue_model.py` (the Pallas kernel)
+must reproduce these numbers exactly (same ops, same dtype); pytest
+asserts allclose at 1e-5 across randomized batches.
+
+The model scores a *batch* of candidate deployments for a multi-stage
+workflow with a closed-form bottleneck analysis — a vectorized version of
+the back-of-envelope the paper's predictor replaces (§5 "back of the
+envelope calculations are a common mechanism…"). The search layer uses it
+to prune the configuration space before refining the top candidates with
+the discrete-event predictor; only *ranking* quality matters (DESIGN.md
+§8).
+
+Input layout (all float32):
+  cfg   (8, B): per-config columns
+        row 0  n_app          application nodes
+        row 1  n_storage      storage nodes
+        row 2  stripe         stripe width
+        row 3  repl           replication level
+        row 4  chunk_mb       chunk size in MiB
+        row 5  collocated     0/1 — app and storage share hosts
+        row 6  io_window      outstanding chunk requests per op
+        row 7  (reserved)
+  stages (S, 8): per-stage columns
+        col 0  tasks_mode     0 = fixed count, 1 = one task per app node
+        col 1  tasks_fixed    task count when tasks_mode = 0
+        col 2  read_mb        per-task bytes read (MiB)
+        col 3  read_local     fraction of reads served from the local node
+        col 4  write_mb       per-task bytes written (MiB)
+        col 5  write_fan      0 = striped, 1 = all to a single node
+        col 6  compute_total  total compute seconds across the stage
+        col 7  active         1 = stage exists
+  plat  (8,): net_bps, local_bps, sm_write_ns_per_byte, sm_read_ns_per_byte,
+        manager_op_s, latency_s, storage_op_s, (reserved)
+
+Output (2, B): row 0 = estimated makespan (s), row 1 = cost (node-seconds).
+"""
+
+import jax.numpy as jnp
+
+MIB = float(1 << 20)
+
+
+def stage_time(cfg, stage, plat):
+    """Closed-form makespan estimate of one stage for every config.
+
+    cfg: (8, B); stage: (8,) one row of the stage matrix; plat: (8,).
+    Returns (B,) stage time in seconds.
+    """
+    n_app = jnp.maximum(cfg[0], 1.0)
+    n_sto = jnp.maximum(cfg[1], 1.0)
+    stripe = jnp.clip(cfg[2], 1.0, cfg[1])
+    repl = jnp.maximum(cfg[3], 1.0)
+    chunk_mb = jnp.maximum(cfg[4], 1.0 / 1024.0)
+    window = jnp.maximum(cfg[6], 1.0)
+
+    net = plat[0]
+    local = plat[1]
+    sm_w = plat[2] * 1e-9  # s per byte
+    sm_r = plat[3] * 1e-9
+    man_op = plat[4]
+    lat = plat[5]
+    sto_op = plat[6]
+
+    tasks = jnp.where(stage[0] > 0.5, n_app, stage[1])
+    tasks = jnp.maximum(tasks, 0.0)
+    waves = jnp.ceil(tasks / n_app)
+    servers = jnp.maximum(jnp.minimum(tasks, n_app), 1.0)
+
+    read_b = stage[2] * MIB
+    local_frac = stage[3]
+    write_b = stage[4] * MIB
+    fan_single = stage[5] > 0.5
+    compute_total = stage[6]
+
+    # --- per-task serial path (client viewpoint) ---
+    remote_read = read_b * (1.0 - local_frac)
+    local_read = read_b * local_frac
+    # Remote reads run at the fair share of the storage-side aggregate
+    # when it is below the client NIC rate (tasks contend for n_sto NICs).
+    read_bw = jnp.minimum(net, n_sto * net / jnp.maximum(tasks, 1.0))
+    # Writes leave the client once (chained replication downstream).
+    t_serial = remote_read / read_bw + local_read / local + write_b / net
+    # Per-chunk round-trip overhead, pipelined over the window.
+    chunks = (read_b + write_b) / (chunk_mb * MIB)
+    t_overhead = chunks * (2.0 * lat + sto_op) / window
+    per_task_compute = jnp.where(
+        tasks > 0.0, compute_total / jnp.maximum(tasks, 1.0), 0.0
+    )
+    t_client = waves * (t_serial + t_overhead + per_task_compute)
+
+    # --- aggregate resource bottlenecks ---
+    t_read_nic = tasks * remote_read / (n_sto * net)
+    write_targets = jnp.where(fan_single, 1.0, stripe)
+    t_write_nic = tasks * write_b * repl / (write_targets * net)
+    t_sm_read = tasks * read_b * sm_r / n_sto
+    t_sm_write = tasks * write_b * repl * sm_w / write_targets
+    # Manager: ~4 metadata ops per task (alloc, commit, lookup, ack).
+    t_man = tasks * 4.0 * man_op
+    t_compute = compute_total / servers
+
+    t = jnp.maximum(t_client, t_read_nic)
+    t = jnp.maximum(t, t_write_nic)
+    t = jnp.maximum(t, t_sm_read + t_sm_write)
+    t = jnp.maximum(t, t_man)
+    t = jnp.maximum(t, t_compute)
+    active = stage[7] > 0.5
+    return jnp.where(active & (tasks > 0.0), t, 0.0)
+
+
+def score_configs_ref(cfg, stages, plat):
+    """Reference scorer: (8, B), (S, 8), (8,) → (2, B)."""
+    cfg = cfg.astype(jnp.float32)
+    stages = stages.astype(jnp.float32)
+    plat = plat.astype(jnp.float32)
+    total = jnp.zeros(cfg.shape[1], dtype=jnp.float32)
+    for s in range(stages.shape[0]):
+        total = total + stage_time(cfg, stages[s], plat)
+    nodes = jnp.where(cfg[5] > 0.5, jnp.maximum(cfg[0], cfg[1]), cfg[0] + cfg[1]) + 1.0
+    cost = total * nodes
+    return jnp.stack([total, cost], axis=0)

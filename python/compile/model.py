@@ -1,0 +1,41 @@
+"""L2 model: the batched configuration scorer the rust coordinator calls.
+
+Wraps the L1 Pallas kernel (`kernels.queue_model`) into the jitted
+function that `aot.py` lowers to the AOT artifact. The function signature
+is the artifact ABI (shapes are static at export time):
+
+    predictor(cfg: f32[8, B], stages: f32[S, 8], plat: f32[8]) -> f32[2, B]
+
+Rust (`rust/src/runtime`) feeds the same layouts (see
+`python/compile/kernels/ref.py` for field meaning) and reads back
+(time, cost) per configuration. Padding conventions: unused batch columns
+carry zeros (scored as garbage, ignored by the caller); unused stage rows
+have active=0 and contribute exactly zero.
+"""
+
+import jax
+
+from compile.kernels.queue_model import score_configs
+from compile.kernels.ref import score_configs_ref
+
+# Artifact ABI constants (DESIGN.md §8): 4096 configs, up to 6 stages.
+EXPORT_BATCH = 4096
+EXPORT_STAGES = 6
+
+
+def predictor(cfg, stages, plat):
+    """Score a batch of configurations (the exported computation)."""
+    return score_configs(cfg, stages, plat)
+
+
+def predictor_ref(cfg, stages, plat):
+    """Pure-jnp twin of `predictor` (testing / what-if exploration)."""
+    return score_configs_ref(cfg, stages, plat)
+
+
+def lower_for_export():
+    """Lower the jitted predictor at the export shapes."""
+    spec_cfg = jax.ShapeDtypeStruct((8, EXPORT_BATCH), jax.numpy.float32)
+    spec_stages = jax.ShapeDtypeStruct((EXPORT_STAGES, 8), jax.numpy.float32)
+    spec_plat = jax.ShapeDtypeStruct((8,), jax.numpy.float32)
+    return jax.jit(predictor).lower(spec_cfg, spec_stages, spec_plat)

@@ -1,0 +1,98 @@
+"""L1 correctness: the Pallas kernel vs the pure-jnp oracle.
+
+The core signal: `score_configs` (Pallas, interpret=True) must match
+`score_configs_ref` to 1e-5 across randomized inputs, shapes and stage
+counts — including hypothesis-driven sweeps.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.queue_model import score_configs, LANE
+from compile.kernels.ref import score_configs_ref
+
+
+def random_inputs(rng, batch, n_stages):
+    """Plausible random configs/stages/platform."""
+    cfg = np.zeros((8, batch), dtype=np.float32)
+    cfg[0] = rng.integers(1, 32, batch)  # n_app
+    cfg[1] = rng.integers(1, 32, batch)  # n_storage
+    cfg[2] = np.minimum(rng.integers(1, 32, batch), cfg[1])  # stripe
+    cfg[3] = rng.integers(1, 4, batch)  # repl
+    cfg[4] = rng.choice([0.25, 1.0, 4.0, 16.0], batch)  # chunk MiB
+    cfg[5] = rng.integers(0, 2, batch)  # collocated
+    cfg[6] = rng.choice([1, 4, 8, 16], batch)  # window
+    stages = np.zeros((n_stages, 8), dtype=np.float32)
+    stages[:, 0] = rng.integers(0, 2, n_stages)  # tasks_mode
+    stages[:, 1] = rng.integers(1, 64, n_stages)  # tasks_fixed
+    stages[:, 2] = rng.uniform(0, 2000, n_stages)  # read_mb
+    stages[:, 3] = rng.uniform(0, 1, n_stages)  # read_local
+    stages[:, 4] = rng.uniform(0, 500, n_stages)  # write_mb
+    stages[:, 5] = rng.integers(0, 2, n_stages)  # write_fan
+    stages[:, 6] = rng.uniform(0, 2000, n_stages)  # compute_total
+    stages[:, 7] = rng.integers(0, 2, n_stages)  # active
+    plat = np.array(
+        [
+            rng.uniform(50e6, 10e9),  # net_bps
+            rng.uniform(100e6, 20e9),  # local_bps
+            rng.uniform(0.1, 20.0),  # sm_write ns/B
+            rng.uniform(0.1, 20.0),  # sm_read ns/B
+            rng.uniform(1e-5, 1e-3),  # manager_op s
+            rng.uniform(1e-5, 5e-4),  # latency s
+            rng.uniform(1e-5, 5e-4),  # storage_op s
+            0.0,
+        ],
+        dtype=np.float32,
+    )
+    return cfg, stages, plat
+
+
+@pytest.mark.parametrize("batch", [LANE, 2 * LANE, 8 * LANE])
+@pytest.mark.parametrize("n_stages", [1, 3, 6])
+def test_kernel_matches_ref(batch, n_stages):
+    rng = np.random.default_rng(batch * 31 + n_stages)
+    cfg, stages, plat = random_inputs(rng, batch, n_stages)
+    got = np.asarray(score_configs(cfg, stages, plat))
+    want = np.asarray(score_configs_ref(cfg, stages, plat))
+    assert got.shape == (2, batch)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    tiles=st.integers(1, 4),
+    n_stages=st.integers(1, 6),
+)
+def test_kernel_matches_ref_hypothesis(seed, tiles, n_stages):
+    rng = np.random.default_rng(seed)
+    cfg, stages, plat = random_inputs(rng, tiles * LANE, n_stages)
+    got = np.asarray(score_configs(cfg, stages, plat))
+    want = np.asarray(score_configs_ref(cfg, stages, plat))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_inactive_stages_contribute_zero():
+    rng = np.random.default_rng(7)
+    cfg, stages, plat = random_inputs(rng, LANE, 4)
+    stages[:, 7] = 0.0  # all inactive
+    got = np.asarray(score_configs(cfg, stages, plat))
+    np.testing.assert_array_equal(got, np.zeros_like(got))
+
+
+def test_non_multiple_of_lane_rejected():
+    rng = np.random.default_rng(9)
+    cfg, stages, plat = random_inputs(rng, LANE, 2)
+    with pytest.raises(AssertionError):
+        score_configs(cfg[:, : LANE - 1], stages, plat)
+
+
+def test_outputs_finite_and_nonnegative():
+    rng = np.random.default_rng(11)
+    cfg, stages, plat = random_inputs(rng, 4 * LANE, 6)
+    got = np.asarray(score_configs(cfg, stages, plat))
+    assert np.all(np.isfinite(got))
+    assert np.all(got >= 0.0)
+    # cost = time × nodes ≥ time (nodes ≥ 1)
+    assert np.all(got[1] >= got[0] - 1e-6)

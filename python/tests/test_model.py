@@ -1,0 +1,94 @@
+"""L2 model sanity: monotonicity and decision-relevant behaviours of the
+analytic scorer (ranking is what the search consumes)."""
+
+import numpy as np
+
+from compile.kernels.ref import score_configs_ref
+from compile.kernels.queue_model import LANE, score_configs
+from compile.model import lower_for_export, EXPORT_BATCH
+
+
+def paper_platform():
+    return np.array(
+        [117.5e6, 600e6, 0.9, 0.75, 230e-6, 90e-6, 60e-6, 0.0], dtype=np.float32
+    )
+
+
+def blast_stage(db_mb=1710.0, out_mb=5.0, compute_total=2000.0):
+    s = np.zeros((1, 8), dtype=np.float32)
+    s[0] = [1, 0, db_mb, 0.0, out_mb, 0, compute_total, 1]
+    return s
+
+
+def partition_configs(chunk_mb=0.25):
+    """19 nodes split n_app/19-n_app, one column per partitioning."""
+    cfg = np.zeros((8, LANE), dtype=np.float32)
+    for i, n_app in enumerate(range(1, 19)):
+        cfg[:, i] = [n_app, 19 - n_app, 19 - n_app, 1, chunk_mb, 0, 8, 0]
+    return cfg
+
+
+def test_blast_partitioning_interior_optimum():
+    cfg = partition_configs()
+    out = np.asarray(score_configs(cfg, blast_stage(), paper_platform()))
+    times = out[0, :18]
+    best = int(np.argmin(times)) + 1  # n_app of the best column
+    assert 5 <= best <= 17, f"interior optimum expected, got n_app={best}"
+    assert times[0] > 2.0 * times[best - 1], "1-app edge should be much slower"
+
+
+def test_more_storage_never_hurts_io_bound_stage():
+    # Pure-IO stage (no compute): adding storage nodes at fixed app count
+    # must not increase the estimate.
+    plat = paper_platform()
+    stage = blast_stage(compute_total=0.0)
+    cfg = np.zeros((8, LANE), dtype=np.float32)
+    for i, n_sto in enumerate(range(1, 20)):
+        cfg[:, i] = [10, n_sto, n_sto, 1, 1.0, 0, 8, 0]
+    out = np.asarray(score_configs_ref(cfg, stage, plat))
+    t = out[0, :19]
+    assert np.all(np.diff(t) <= 1e-6), f"not monotone: {t}"
+
+
+def test_replication_increases_write_cost():
+    plat = paper_platform()
+    stage = np.zeros((1, 8), dtype=np.float32)
+    stage[0] = [0, 19, 0.0, 0.0, 100.0, 0, 0.0, 1]  # pure write stage
+    cfg = np.zeros((8, LANE), dtype=np.float32)
+    for i, r in enumerate([1, 2, 4]):
+        cfg[:, i] = [19, 19, 19, r, 1.0, 1, 8, 0]
+    out = np.asarray(score_configs_ref(cfg, stage, plat))
+    t = out[0, :3]
+    assert t[0] < t[1] < t[2], f"replication should cost: {t}"
+
+
+def test_incast_fan_in_slower_than_striped():
+    plat = paper_platform()
+    striped = np.zeros((1, 8), dtype=np.float32)
+    striped[0] = [0, 19, 0.0, 0.0, 100.0, 0, 0.0, 1]
+    fan = striped.copy()
+    fan[0, 5] = 1  # single-node fan-in
+    cfg = np.zeros((8, LANE), dtype=np.float32)
+    cfg[:, 0] = [19, 19, 19, 1, 1.0, 1, 8, 0]
+    t_striped = np.asarray(score_configs_ref(cfg, striped, plat))[0, 0]
+    t_fan = np.asarray(score_configs_ref(cfg, fan, plat))[0, 0]
+    assert t_fan > 2.0 * t_striped
+
+
+def test_faster_network_never_slower():
+    rng = np.random.default_rng(3)
+    from tests.test_kernel import random_inputs
+
+    cfg, stages, plat = random_inputs(rng, LANE, 3)
+    slow = np.asarray(score_configs_ref(cfg, stages, plat))
+    plat2 = plat.copy()
+    plat2[0] *= 10.0  # 10× remote bandwidth
+    plat2[1] *= 10.0
+    fast = np.asarray(score_configs_ref(cfg, stages, plat2))
+    assert np.all(fast[0] <= slow[0] + 1e-6)
+
+
+def test_export_lowering_shapes():
+    lowered = lower_for_export()
+    text = lowered.as_text()
+    assert f"8x{EXPORT_BATCH}" in text.replace(" ", "") or "tensor<8x4096xf32>" in text

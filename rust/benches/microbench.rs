@@ -1,0 +1,143 @@
+//! Microbenchmarks of the system's hot paths (hand-rolled harness;
+//! criterion is unavailable offline). Run: `cargo bench --bench microbench`.
+//!
+//! These are the §Perf baselines tracked in EXPERIMENTS.md: DES engine
+//! event throughput, full-predictor latency per scenario, testbed trial
+//! cost, real-store loopback throughput, and AOT-artifact execution
+//! latency.
+
+use wfpred::model::{simulate, Config, Platform};
+use wfpred::sim::{Scheduler, SimState, Simulation};
+use wfpred::store::{Cluster, StorePlacement};
+use wfpred::testbed::Testbed;
+use wfpred::util::bench::{black_box, write_results, BenchRunner};
+use wfpred::util::jsonw::Json;
+use wfpred::util::units::{Bytes, SimTime};
+use wfpred::workload::blast::{blast, BlastParams};
+use wfpred::workload::patterns::{pipeline, reduce, PatternScale};
+
+/// Raw engine throughput: a self-rescheduling event chain.
+struct Chain {
+    left: u64,
+}
+impl SimState for Chain {
+    type Ev = u32;
+    fn handle(&mut self, sched: &mut Scheduler<u32>, _now: SimTime, ev: u32) {
+        if self.left > 0 {
+            self.left -= 1;
+            sched.after(SimTime::from_ns(5), ev + 1);
+        }
+    }
+}
+
+fn main() {
+    let mut results = Json::arr();
+    let mut record = |name: &str, r: &wfpred::util::bench::BenchResult, per_iter_units: f64, unit: &str| {
+        let rate = per_iter_units / r.secs.mean();
+        println!("    -> {rate:.2e} {unit}/s");
+        results.push(
+            Json::obj()
+                .set("name", name)
+                .set("secs_per_iter", r.secs.mean())
+                .set("std", r.secs.std())
+                .set("rate", rate)
+                .set("unit", unit),
+        );
+    };
+
+    println!("== DES engine ==");
+    let n_events = 2_000_000u64;
+    let r = BenchRunner::new(1, 5).run("engine: 2M chained events", |_| {
+        let mut sim = Simulation::new(Chain { left: n_events });
+        sim.sched.at(SimTime::ZERO, 0);
+        black_box(sim.run());
+    });
+    record("engine_chain", &r, n_events as f64, "events");
+
+    println!("\n== predictor end-to-end ==");
+    let plat = Platform::paper_testbed();
+    for (name, wl, cfg) in [
+        ("pipeline-medium-dss", pipeline(19, PatternScale::Medium, false), Config::dss(19)),
+        ("reduce-large-dss", reduce(19, PatternScale::Large, false), Config::dss(19)),
+        ("blast-14/5", blast(14, &BlastParams::default()), Config::partitioned(14, 5, Bytes::kb(256))),
+    ] {
+        let mut events = 0u64;
+        let r = BenchRunner::new(1, 5).run(&format!("predict: {name}"), |_| {
+            let rep = simulate(&wl, &cfg, &plat);
+            events = rep.events;
+            black_box(rep.turnaround);
+        });
+        record(&format!("predict_{name}"), &r, events as f64, "sim-events");
+    }
+
+    println!("\n== testbed trial ==");
+    let tb = Testbed::new(Platform::paper_testbed());
+    let wl = pipeline(19, PatternScale::Medium, false);
+    let cfg = Config::dss(19);
+    let r = BenchRunner::new(1, 5).run("testbed trial: pipeline-medium-dss", |i| {
+        black_box(tb.trial(&wl, &cfg, i as u64).turnaround);
+    });
+    record("testbed_trial", &r, 1.0, "trials");
+
+    println!("\n== real TCP store (loopback) ==");
+    let cl = Cluster::start(3).unwrap();
+    let mut client = cl.client().unwrap().with_chunk_size(1 << 20);
+    let data = vec![7u8; 8 << 20];
+    let mut i = 0u64;
+    let r = BenchRunner::new(1, 8).run("store: write 8MB striped/3 nodes", |_| {
+        i += 1;
+        client.write(&format!("bench.{i}"), &data).unwrap();
+    });
+    record("store_write", &r, data.len() as f64, "bytes");
+    let mut j = 0u64;
+    let r = BenchRunner::new(1, 8).run("store: read 8MB back", |_| {
+        j += 1;
+        let name = format!("bench.{}", (j % i) + 1);
+        black_box(client.read(&name).unwrap());
+    });
+    record("store_read", &r, data.len() as f64, "bytes");
+    let mut z = 0u64;
+    let r = BenchRunner::new(1, 8).run("store: 0-size op (manager path)", |_| {
+        z += 1;
+        client.zero_size_op(&format!("z.{z}")).unwrap();
+    });
+    record("store_zero_op", &r, 1.0, "ops");
+    // Placement variant: incast to one node.
+    let mut c2 = cl.client().unwrap().with_chunk_size(1 << 20).with_placement(StorePlacement::OnNode { node: 0 });
+    let mut k = 0u64;
+    let r = BenchRunner::new(1, 8).run("store: write 8MB to one node", |_| {
+        k += 1;
+        c2.write(&format!("one.{k}"), &data).unwrap();
+    });
+    record("store_write_onenode", &r, data.len() as f64, "bytes");
+
+    println!("\n== AOT artifact (PJRT) ==");
+    match wfpred::runtime::ScorerRuntime::load_default() {
+        Ok(rt) => {
+            let plat = wfpred::runtime::encode_platform(&Platform::paper_testbed());
+            let stages = vec![wfpred::runtime::StageDesc {
+                tasks_per_app: true,
+                tasks_fixed: 0.0,
+                read_mb: 1710.0,
+                read_local_frac: 0.0,
+                write_mb: 5.0,
+                fan_single: false,
+                compute_total_s: 2000.0,
+            }];
+            let configs: Vec<[f32; 8]> = (0..rt.batch)
+                .map(|i| {
+                    let n_app = 1 + (i % 18);
+                    wfpred::runtime::encode_config(&Config::partitioned(n_app, 19 - n_app, Bytes::kb(256)))
+                })
+                .collect();
+            let batch = rt.batch;
+            let r = BenchRunner::new(2, 10).run(&format!("artifact: score {batch} configs"), |_| {
+                black_box(rt.score(&configs, &stages, &plat).unwrap());
+            });
+            record("artifact_score", &r, batch as f64, "configs");
+        }
+        Err(e) => println!("artifact unavailable ({e}); run `make artifacts`"),
+    }
+
+    write_results("microbench.json", &Json::obj().set("benches", results).render());
+}

@@ -1,0 +1,378 @@
+//! Command-line interface.
+//!
+//! ```text
+//! wfpred identify [--file-size-mb N --chunk-kb N]      system identification (§2.5)
+//! wfpred predict  --pattern P [--scale S --wass ...]   one prediction (coarse model)
+//! wfpred run      --pattern P [--trials N ...]         "actual" testbed campaign
+//! wfpred search   [--allocations 11,17,20 ...]         configuration-space search
+//! wfpred trace    --emit P --out FILE | --show FILE    workload trace tools
+//! ```
+
+use crate::ident::{identify, IdentConfig};
+use crate::model::{Config, Placement, Platform};
+use crate::predict::Predictor;
+use crate::runtime::{ScorerRuntime, StageDesc};
+use crate::search::{SearchSpace, Searcher};
+use crate::testbed::Testbed;
+use crate::util::flags::Flags;
+use crate::util::table::Table;
+use crate::util::units::Bytes;
+use crate::workload::blast::{blast, BlastParams};
+use crate::workload::modftdock::{modftdock, DockParams};
+use crate::workload::montage::montage;
+use crate::workload::patterns::{broadcast, pipeline, reduce, PatternScale};
+use crate::workload::{trace, Workload};
+
+pub fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = run(&args);
+    std::process::exit(code);
+}
+
+pub fn run(args: &[String]) -> i32 {
+    let Some(cmd) = args.first() else {
+        eprintln!("{USAGE}");
+        return 2;
+    };
+    let rest = &args[1..];
+    let result = match cmd.as_str() {
+        "identify" => cmd_identify(rest),
+        "predict" => cmd_predict(rest),
+        "run" => cmd_run(rest),
+        "compare" => cmd_compare(rest),
+        "search" => cmd_search(rest),
+        "trace" => cmd_trace(rest),
+        "--help" | "help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(format!("unknown command {other:?}\n{USAGE}")),
+    };
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("{e}");
+            2
+        }
+    }
+}
+
+const USAGE: &str = "wfpred — predicting intermediate storage performance for workflow applications
+
+commands:
+  identify   run the system-identification procedure against the in-tree TCP store
+  predict    predict a workload's turnaround with the queue-based model
+  run        measure a workload on the emulated testbed (mean ± std over trials)
+  compare    actual vs predicted side by side, with energy estimates
+  search     explore the provisioning/partitioning/configuration space (BLAST)
+  trace      emit or inspect workload trace files
+
+run `wfpred <command> --help` for flags.";
+
+fn platform_by_name(name: &str) -> Result<Platform, String> {
+    match name {
+        "paper" | "ram" => Ok(Platform::paper_testbed()),
+        "hdd" => Ok(Platform::paper_testbed_hdd()),
+        "ssd" => Ok(Platform::paper_testbed_ssd()),
+        "10g" => Ok(Platform::paper_testbed_10g()),
+        other => Err(format!("unknown platform {other:?} (paper|hdd|ssd|10g)")),
+    }
+}
+
+fn scale_by_name(name: &str) -> Result<PatternScale, String> {
+    match name {
+        "small" => Ok(PatternScale::Small),
+        "medium" => Ok(PatternScale::Medium),
+        "large" => Ok(PatternScale::Large),
+        other => Err(format!("unknown scale {other:?}")),
+    }
+}
+
+/// Build (workload, config) for the CLI's shared pattern flags.
+fn build_workload(f: &Flags) -> Result<(Workload, Config), String> {
+    let n = f.get_u64("nodes") as usize;
+    let wass = f.get_bool("wass");
+    let scale = scale_by_name(&f.get("scale"))?;
+    let chunk = Bytes::kb(f.get_u64("chunk-kb"));
+    let wl = match f.get("pattern").as_str() {
+        "pipeline" => pipeline(n, scale, wass),
+        "reduce" => reduce(n, scale, wass),
+        "broadcast" => broadcast(n, scale, f.get_u64("replicas") as u32),
+        "montage" => montage(n),
+        "modftdock" => modftdock(&DockParams::default(), wass),
+        "blast" => {
+            let params = BlastParams { queries: f.get_u64("queries") as u32, ..Default::default() };
+            blast(f.get_u64("app-nodes") as usize, &params)
+        }
+        other => return Err(format!("unknown pattern {other:?}")),
+    };
+    let cfg = if f.get("pattern") == "blast" {
+        let n_app = f.get_u64("app-nodes") as usize;
+        Config::partitioned(n_app, n - n_app, chunk)
+    } else if wass {
+        let mut c = Config::wass(n).with_chunk(chunk);
+        if f.get("pattern") == "broadcast" {
+            c.placement = Placement::RoundRobin; // broadcast optimizes via replication
+        }
+        c
+    } else {
+        Config::dss(n).with_chunk(chunk)
+    };
+    Ok((wl, cfg))
+}
+
+fn pattern_flags(f: Flags) -> Flags {
+    f.flag("pattern", "pipeline", "pipeline|reduce|broadcast|montage|blast|modftdock")
+        .flag("nodes", "19", "worker nodes (excl. manager)")
+        .flag("scale", "medium", "small|medium|large")
+        .switch("wass", "workflow-aware configuration (placement hints + locality)")
+        .flag("replicas", "1", "broadcast-file replicas")
+        .flag("chunk-kb", "1024", "chunk size in KB")
+        .flag("queries", "200", "BLAST query count")
+        .flag("app-nodes", "14", "BLAST application nodes")
+        .flag("platform", "paper", "paper|hdd|ssd|10g")
+}
+
+fn cmd_identify(args: &[String]) -> Result<(), String> {
+    let f = Flags::new("wfpred identify")
+        .flag("file-size-mb", "8", "benchmark file size")
+        .flag("chunk-kb", "1024", "chunk size")
+        .flag("min-samples", "5", "Jain floor")
+        .flag("max-samples", "60", "Jain ceiling")
+        .parse(args)?;
+    let cfg = IdentConfig {
+        file_size: Bytes::mb(f.get_u64("file-size-mb")),
+        chunk_size: Bytes::kb(f.get_u64("chunk-kb")),
+        probe_size: Bytes::mb(f.get_u64("file-size-mb")),
+        campaign: crate::ident::CampaignCfg {
+            rel_accuracy: 0.05,
+            min_samples: f.get_u64("min-samples"),
+            max_samples: f.get_u64("max-samples"),
+        },
+    };
+    let id = identify(&cfg).map_err(|e| e.to_string())?;
+    println!("system identification (paper §2.5) against the in-tree TCP store:");
+    println!("{}", id.summary());
+    Ok(())
+}
+
+fn cmd_predict(args: &[String]) -> Result<(), String> {
+    let f = pattern_flags(Flags::new("wfpred predict")).parse(args)?;
+    let (wl, cfg) = build_workload(&f)?;
+    let plat = platform_by_name(&f.get("platform"))?;
+    let pred = Predictor::new(plat).predict(&wl, &cfg);
+    println!("workload {:<24} config {}", wl.name, cfg.label);
+    println!("predicted turnaround: {}", pred.turnaround);
+    for (s, t) in pred.stage_times.iter().enumerate() {
+        println!("  stage {s}: {t}");
+    }
+    println!("cost: {:.1} node-seconds", pred.cost_node_secs);
+    println!("predictor wallclock: {:.3}s ({} events)", pred.predictor_wallclock_secs, pred.report.events);
+    Ok(())
+}
+
+fn cmd_run(args: &[String]) -> Result<(), String> {
+    let f = pattern_flags(Flags::new("wfpred run"))
+        .flag("trials", "15", "minimum trials")
+        .parse(args)?;
+    let (wl, cfg) = build_workload(&f)?;
+    let plat = platform_by_name(&f.get("platform"))?;
+    let trials = f.get_u64("trials");
+    let tb = Testbed::new(plat).with_trials(trials, trials * 3);
+    let stats = tb.run(&wl, &cfg);
+    println!("workload {:<24} config {} ({} trials)", wl.name, cfg.label, stats.turnaround.n());
+    println!("actual turnaround: {:.3}s ± {:.3}s", stats.mean(), stats.std());
+    for (s, st) in stats.stages.iter().enumerate() {
+        println!("  stage {s}: {:.3}s ± {:.3}s", st.mean(), st.std());
+    }
+    println!("conn retries/trial: {:.1}", stats.mean_conn_retries);
+    Ok(())
+}
+
+fn cmd_compare(args: &[String]) -> Result<(), String> {
+    let f = pattern_flags(Flags::new("wfpred compare"))
+        .flag("trials", "8", "minimum trials")
+        .parse(args)?;
+    let (wl, cfg) = build_workload(&f)?;
+    let plat = platform_by_name(&f.get("platform"))?;
+    let trials = f.get_u64("trials");
+    let tb = Testbed::new(plat.clone()).with_trials(trials, trials * 3);
+    let stats = tb.run(&wl, &cfg);
+    let pred = Predictor::new(plat).predict(&wl, &cfg);
+    let pm = crate::model::PowerModel::xeon_e5345();
+    let actual_t = stats.mean();
+    let pred_t = pred.turnaround.as_secs_f64();
+    let mut t = Table::new(&["metric", "actual (testbed)", "predicted (model)"]);
+    t.row(&["turnaround".into(), format!("{actual_t:.2}s ± {:.2}", stats.std()), format!("{pred_t:.2}s")]);
+    t.row(&[
+        "energy".into(),
+        format!("{:.3} kWh", pm.energy_kwh(&stats.sample)),
+        format!("{:.3} kWh", pm.energy_kwh(&pred.report)),
+    ]);
+    t.row(&[
+        "cost".into(),
+        format!("{:.0} node-s", actual_t * cfg.n_hosts() as f64),
+        format!("{:.0} node-s", pred.cost_node_secs),
+    ]);
+    println!("workload {:<24} config {} ({} trials)", wl.name, cfg.label, stats.turnaround.n());
+    print!("{}", t.render());
+    println!("prediction error: {:+.1}%", (pred_t - actual_t) / actual_t * 100.0);
+    Ok(())
+}
+
+fn cmd_search(args: &[String]) -> Result<(), String> {
+    let f = Flags::new("wfpred search")
+        .flag("allocations", "11,17,20", "total cluster sizes")
+        .flag("chunks-kb", "256,1024,4096", "chunk sizes (KB)")
+        .flag("queries", "200", "BLAST query count")
+        .flag("top-k", "12", "candidates refined with the DES predictor")
+        .flag("platform", "paper", "paper|hdd|ssd|10g")
+        .flag("artifact", "artifacts/predictor.hlo.txt", "AOT scorer (empty to disable)")
+        .parse(args)?;
+    let plat = platform_by_name(&f.get("platform"))?;
+    let chunks: Vec<Bytes> = f.get_u64_list("chunks-kb").into_iter().map(Bytes::kb).collect();
+    let space = SearchSpace::elastic(
+        f.get_u64_list("allocations").into_iter().map(|x| x as usize).collect(),
+        chunks,
+    );
+    let params = BlastParams { queries: f.get_u64("queries") as u32, ..Default::default() };
+    let predictor = Predictor::new(plat);
+    let rt = if f.get("artifact").is_empty() {
+        None
+    } else {
+        match ScorerRuntime::load(f.get("artifact")) {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                eprintln!("note: no AOT prescreen ({e}); refining the whole grid");
+                None
+            }
+        }
+    };
+    let mut searcher = Searcher::new(&predictor).with_top_k(f.get_u64("top-k") as usize);
+    if let Some(rt) = rt.as_ref() {
+        searcher = searcher.with_runtime(rt);
+    }
+    let stages = vec![StageDesc {
+        tasks_per_app: true,
+        tasks_fixed: 0.0,
+        read_mb: params.db_size.as_f64() as f32 / (1u64 << 20) as f32,
+        read_local_frac: 0.0,
+        write_mb: params.output_file.as_f64() as f32 / (1u64 << 20) as f32,
+        fan_single: false,
+        compute_total_s: params.queries as f32 * params.per_query.as_secs_f64() as f32,
+    }];
+    let report = searcher.search(&space, &stages, |cfg| blast(cfg.n_app, &params));
+
+    println!(
+        "searched {} configurations ({} pruned by the analytic prescreen) in {:.2}s\n",
+        report.candidates.len(),
+        report.pruned,
+        report.wallclock_secs
+    );
+    let show = |label: &str, i: usize| {
+        let c = &report.candidates[i];
+        println!(
+            "{label:<22} {:<28} time {:.1}s  cost {:.0} node-s",
+            c.config.label,
+            c.time_s(),
+            c.cost_node_s()
+        );
+    };
+    show("best performance:", report.best_time);
+    show("lowest cost:", report.best_cost);
+    show("most cost-efficient:", report.best_efficiency);
+    println!("\npareto front (time vs cost):");
+    let mut t = Table::new(&["config", "time (s)", "cost (node-s)"]);
+    for &i in &report.pareto {
+        let c = &report.candidates[i];
+        t.row(&[c.config.label.clone(), format!("{:.1}", c.time_s()), format!("{:.0}", c.cost_node_s())]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_trace(args: &[String]) -> Result<(), String> {
+    let f = pattern_flags(Flags::new("wfpred trace"))
+        .flag("out", "", "write the generated trace here")
+        .flag("show", "", "parse and summarize an existing trace file")
+        .parse(args)?;
+    if !f.get("show").is_empty() {
+        let text = std::fs::read_to_string(f.get("show")).map_err(|e| e.to_string())?;
+        let wl = trace::from_text(&text)?;
+        println!(
+            "workload {}: {} files, {} tasks, {} stages, reads {} writes {}",
+            wl.name,
+            wl.files.len(),
+            wl.tasks.len(),
+            wl.n_stages(),
+            wl.bytes_read(),
+            wl.bytes_written()
+        );
+        return Ok(());
+    }
+    let (wl, _) = build_workload(&f)?;
+    let text = trace::to_text(&wl);
+    let out = f.get("out");
+    if out.is_empty() {
+        print!("{text}");
+    } else {
+        std::fs::write(&out, &text).map_err(|e| e.to_string())?;
+        println!("wrote {} ({} lines)", out, text.lines().count());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn unknown_command_fails() {
+        assert_eq!(run(&argv(&["bogus"])), 2);
+        assert_eq!(run(&[]), 2);
+    }
+
+    #[test]
+    fn predict_pipeline_runs() {
+        assert_eq!(run(&argv(&["predict", "--pattern", "pipeline", "--nodes", "4", "--scale", "small"])), 0);
+    }
+
+    #[test]
+    fn run_testbed_quick() {
+        assert_eq!(
+            run(&argv(&["run", "--pattern", "reduce", "--nodes", "4", "--scale", "small", "--trials", "3"])),
+            0
+        );
+    }
+
+    #[test]
+    fn trace_roundtrip_via_cli() {
+        let dir = std::env::temp_dir().join("wfpred_cli_trace_test.trace");
+        let path = dir.to_str().unwrap().to_string();
+        assert_eq!(
+            run(&argv(&["trace", "--pattern", "reduce", "--nodes", "3", "--scale", "small", "--out", &path])),
+            0
+        );
+        assert_eq!(run(&argv(&["trace", "--show", &path])), 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn compare_runs_modftdock() {
+        assert_eq!(
+            run(&argv(&[
+                "compare", "--pattern", "modftdock", "--nodes", "6", "--scale", "small", "--trials", "2"
+            ])),
+            0
+        );
+    }
+
+    #[test]
+    fn predict_rejects_bad_pattern() {
+        assert_eq!(run(&argv(&["predict", "--pattern", "nope"])), 2);
+    }
+}

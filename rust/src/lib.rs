@@ -1,0 +1,67 @@
+//! # wfpred — predicting intermediate storage performance for workflow applications
+//!
+//! Full-system reproduction of Costa et al., *"Predicting Intermediate
+//! Storage Performance for Workflow Applications"* (CS.DC 2013).
+//!
+//! The crate contains, bottom-up:
+//!
+//! * [`util`] — self-contained substrates (deterministic RNG, statistics
+//!   with Jain's confidence-interval procedure, a mini argument parser, a
+//!   JSON writer, unit helpers, a property-testing harness). The build
+//!   environment is offline, so these are implemented in-tree.
+//! * [`sim`] — a discrete-event simulation core: virtual clock, event
+//!   queue, and FIFO single-server service stations (the "queues" of the
+//!   paper's queue-based model).
+//! * [`model`] — **the paper's contribution**: the coarse queue-based
+//!   model of a distributed object-based storage system (manager, storage
+//!   nodes, client SAIs, per-host network in/out queues) plus the
+//!   application driver that replays a workflow's I/O trace over it.
+//! * [`workload`] — workload descriptions: file-dependency DAGs, the
+//!   pipeline / reduce / broadcast synthetic patterns, the BLAST and
+//!   Montage-like workflows, and a text trace format.
+//! * [`testbed`] — a high-fidelity emulator of the *actual* system
+//!   (detailed control paths, connection timeouts and retries, stagger,
+//!   jitter, heterogeneity). Plays the role of the paper's 20-node
+//!   MosaStore deployment; see DESIGN.md §3–4.
+//! * [`store`] — a real, threaded, TCP distributed object store
+//!   (manager + storage nodes + client SAI) used for real-byte runs and
+//!   to seed system identification.
+//! * [`ident`] — the paper's §2.5 system-identification procedure.
+//! * [`predict`] — the user-facing predictor façade.
+//! * [`runtime`] — PJRT loader/executor for the AOT-compiled analytic
+//!   prescreen (`artifacts/predictor.hlo.txt`).
+//! * [`search`] — configuration-space exploration: analytic prescreen →
+//!   discrete-event refinement → pareto front / scenario reports.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use wfpred::prelude::*;
+//!
+//! let platform = Platform::paper_testbed();        // 20 nodes, 1 Gbps, RAMdisk
+//! let workload = patterns::pipeline(19, PatternScale::Medium, false);
+//! let config = Config::dss(19);                     // default MosaStore-like setup
+//! let report = Predictor::new(platform).predict(&workload, &config);
+//! println!("predicted turnaround: {}", report.turnaround);
+//! ```
+pub mod util;
+pub mod sim;
+pub mod model;
+pub mod workload;
+pub mod testbed;
+pub mod store;
+pub mod ident;
+pub mod predict;
+pub mod runtime;
+pub mod search;
+pub mod cli;
+
+/// Convenience re-exports of the most used public types.
+pub mod prelude {
+    pub use crate::model::config::{Config, Placement};
+    pub use crate::model::platform::{Platform, DiskKind};
+    pub use crate::predict::{Predictor, Prediction};
+    pub use crate::testbed::{Testbed, TrialStats};
+    pub use crate::workload::{patterns, patterns::PatternScale, Workload};
+    pub use crate::util::units::{Bytes, SimTime};
+}

@@ -1,0 +1,4 @@
+//! wfpred CLI entrypoint.
+fn main() {
+    wfpred::cli::main();
+}

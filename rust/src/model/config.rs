@@ -1,0 +1,243 @@
+//! Storage-system and deployment configuration — the decision space of the
+//! paper (§1 "The Problem"): provisioning (how many nodes), partitioning
+//! (app vs storage nodes), and configuration (stripe width, replication,
+//! chunk size, placement policy).
+
+use crate::util::units::Bytes;
+
+/// System-wide data placement policy (paper §2.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Placement {
+    /// Default: chunks round-robin across a stripe of `stripe_width` nodes.
+    RoundRobin,
+    /// Workflow-aware: place output on the storage node collocated with
+    /// the writing client (pipeline optimization); files may still
+    /// override via their own hints.
+    Local,
+}
+
+impl std::fmt::Display for Placement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Placement::RoundRobin => write!(f, "round-robin"),
+            Placement::Local => write!(f, "local"),
+        }
+    }
+}
+
+/// A complete deployment + storage configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Descriptive label (DSS / WASS / "14app-5sto-256KB" …).
+    pub label: String,
+    /// Number of application (client) nodes.
+    pub n_app: usize,
+    /// Number of storage nodes.
+    pub n_storage: usize,
+    /// Clients and storage nodes share hosts (the paper's synthetic-
+    /// benchmark testbed runs "both a storage node and a client access
+    /// module" on every machine). When false, clients and storage nodes
+    /// occupy disjoint hosts (the BLAST partitioning scenarios).
+    pub collocated: bool,
+    /// Stripe width: number of storage nodes a file's chunks spread over.
+    pub stripe_width: usize,
+    /// System-wide replication level (≥ 1).
+    pub replication: u32,
+    /// Chunk size.
+    pub chunk_size: Bytes,
+    /// System-wide placement policy.
+    pub placement: Placement,
+    /// Data-location-aware task scheduling (WASS deployments: "for a given
+    /// compute task, if all input file chunks exist on a single storage
+    /// node, the task is scheduled on that node").
+    pub location_aware: bool,
+    /// Max outstanding chunk requests per client operation (SAI pipeline
+    /// window; MosaStore-like clients bound in-flight chunks).
+    pub io_window: usize,
+}
+
+impl Config {
+    /// The paper's DSS baseline on `n` collocated nodes: stripe over all
+    /// storage nodes, no replication, 1 MB chunks, round-robin, no
+    /// pattern-aware optimization.
+    pub fn dss(n: usize) -> Config {
+        Config {
+            label: "DSS".into(),
+            n_app: n,
+            n_storage: n,
+            collocated: true,
+            stripe_width: n,
+            replication: 1,
+            chunk_size: Bytes::mb(1),
+            placement: Placement::RoundRobin,
+            location_aware: false,
+            io_window: 8,
+        }
+    }
+
+    /// The paper's WASS configuration on `n` collocated nodes: local
+    /// placement + data-location-aware scheduling; per-file hints
+    /// (collocation, replication) come from the workload.
+    pub fn wass(n: usize) -> Config {
+        Config {
+            label: "WASS".into(),
+            placement: Placement::Local,
+            location_aware: true,
+            ..Config::dss(n)
+        }
+    }
+
+    /// A partitioned deployment (BLAST scenarios): `n_app` application
+    /// nodes and `n_storage` dedicated storage nodes on disjoint hosts.
+    pub fn partitioned(n_app: usize, n_storage: usize, chunk: Bytes) -> Config {
+        Config {
+            label: format!("{n_app}app/{n_storage}sto/{chunk}"),
+            n_app,
+            n_storage,
+            collocated: false,
+            stripe_width: n_storage,
+            replication: 1,
+            chunk_size: chunk,
+            placement: Placement::RoundRobin,
+            location_aware: false,
+            io_window: 8,
+        }
+    }
+
+    pub fn with_label(mut self, label: impl Into<String>) -> Config {
+        self.label = label.into();
+        self
+    }
+
+    pub fn with_stripe(mut self, w: usize) -> Config {
+        self.stripe_width = w;
+        self
+    }
+
+    pub fn with_replication(mut self, r: u32) -> Config {
+        self.replication = r;
+        self
+    }
+
+    pub fn with_chunk(mut self, c: Bytes) -> Config {
+        self.chunk_size = c;
+        self
+    }
+
+    pub fn with_window(mut self, w: usize) -> Config {
+        self.io_window = w;
+        self
+    }
+
+    /// Total hosts: manager host + app/storage hosts.
+    pub fn n_hosts(&self) -> usize {
+        1 + if self.collocated { self.n_app.max(self.n_storage) } else { self.n_app + self.n_storage }
+    }
+
+    /// Host of client `c` (manager is host 0; clients follow).
+    pub fn client_host(&self, c: usize) -> usize {
+        debug_assert!(c < self.n_app);
+        1 + c
+    }
+
+    /// Host of storage node `s`.
+    pub fn storage_host(&self, s: usize) -> usize {
+        debug_assert!(s < self.n_storage);
+        if self.collocated {
+            1 + s
+        } else {
+            1 + self.n_app + s
+        }
+    }
+
+    /// The storage node collocated with client `c`, if any.
+    pub fn storage_on_client_host(&self, c: usize) -> Option<usize> {
+        if self.collocated && c < self.n_storage {
+            Some(c)
+        } else {
+            None
+        }
+    }
+
+    /// The client collocated with storage node `s`, if any.
+    pub fn client_on_storage_host(&self, s: usize) -> Option<usize> {
+        if self.collocated && s < self.n_app {
+            Some(s)
+        } else {
+            None
+        }
+    }
+
+    /// Validate invariants; called by `simulate`.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_app == 0 || self.n_storage == 0 {
+            return Err("need at least one app node and one storage node".into());
+        }
+        if self.stripe_width == 0 || self.stripe_width > self.n_storage {
+            return Err(format!(
+                "stripe width {} must be in [1, n_storage={}]",
+                self.stripe_width, self.n_storage
+            ));
+        }
+        if self.replication == 0 {
+            return Err("replication level must be >= 1".into());
+        }
+        if self.replication as usize > self.n_storage {
+            return Err(format!(
+                "replication {} exceeds storage nodes {}",
+                self.replication, self.n_storage
+            ));
+        }
+        if self.chunk_size.as_u64() == 0 {
+            return Err("chunk size must be positive".into());
+        }
+        if self.io_window == 0 {
+            return Err("io window must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dss_defaults_match_paper() {
+        let c = Config::dss(19);
+        assert_eq!(c.n_hosts(), 20, "19 dual-role nodes + manager = paper testbed");
+        assert_eq!(c.stripe_width, 19);
+        assert_eq!(c.replication, 1);
+        assert_eq!(c.chunk_size, Bytes::mb(1));
+        assert!(!c.location_aware);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn host_mapping_collocated() {
+        let c = Config::dss(19);
+        assert_eq!(c.client_host(0), 1);
+        assert_eq!(c.storage_host(0), 1);
+        assert_eq!(c.storage_on_client_host(3), Some(3));
+        assert_eq!(c.client_on_storage_host(3), Some(3));
+    }
+
+    #[test]
+    fn host_mapping_partitioned() {
+        let c = Config::partitioned(14, 5, Bytes::kb(256));
+        assert_eq!(c.n_hosts(), 20);
+        assert_eq!(c.client_host(13), 14);
+        assert_eq!(c.storage_host(0), 15);
+        assert_eq!(c.storage_host(4), 19);
+        assert_eq!(c.storage_on_client_host(2), None);
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        assert!(Config::dss(19).with_stripe(20).validate().is_err());
+        assert!(Config::dss(19).with_replication(0).validate().is_err());
+        assert!(Config::dss(19).with_replication(20).validate().is_err());
+        assert!(Config::partitioned(0, 5, Bytes::mb(1)).validate().is_err());
+        assert!(Config::dss(19).with_chunk(Bytes(0)).validate().is_err());
+    }
+}

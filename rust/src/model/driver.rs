@@ -1,0 +1,228 @@
+//! Application driver: replays the workflow DAG over the storage model.
+//!
+//! "Once the simulator instantiates the storage system, it starts the
+//! application driver that processes the application workload" (§2.4).
+//! A task becomes runnable when all its input files are committed; the
+//! driver then assigns it to an application node. Under WASS deployments
+//! the assignment is data-location-aware: "for a given compute task, if
+//! all input file chunks exist on a single storage node, the task is
+//! scheduled on that node to increase access locality" (§3.1).
+
+use crate::model::engine::{Ev, World};
+use crate::model::proto::OpKind;
+use crate::model::report::TaskRecord;
+use crate::sim::Scheduler;
+use crate::util::units::SimTime;
+use crate::workload::{Workload, TaskId};
+use std::collections::VecDeque;
+
+/// Per-task execution phase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase {
+    /// Not yet started.
+    Waiting,
+    /// Reading input file `cursor`.
+    Reading(usize),
+    /// Compute delay in progress.
+    Computing,
+    /// Writing output file `cursor`.
+    Writing(usize),
+    Done,
+}
+
+/// Driver bookkeeping, separated from the protocol state of `World`.
+#[derive(Debug)]
+pub struct DriverState {
+    /// Per task: number of input files not yet committed.
+    deps_left: Vec<usize>,
+    /// Per file: tasks waiting on it.
+    waiting: Vec<Vec<TaskId>>,
+    /// Released tasks not yet assigned to a client.
+    ready: VecDeque<TaskId>,
+    /// Per client: busy flag.
+    busy: Vec<bool>,
+    phase: Vec<Phase>,
+    task_client: Vec<usize>,
+    task_start: Vec<SimTime>,
+    finished: usize,
+}
+
+impl DriverState {
+    pub fn new(wl: &Workload, cfg: &crate::model::config::Config) -> DriverState {
+        let n = wl.tasks.len();
+        let mut deps_left = vec![0usize; n];
+        let mut waiting: Vec<Vec<TaskId>> = vec![Vec::new(); wl.files.len()];
+        for (ti, t) in wl.tasks.iter().enumerate() {
+            for &f in &t.reads {
+                if !wl.files[f].prestaged {
+                    deps_left[ti] += 1;
+                    waiting[f].push(ti);
+                }
+            }
+        }
+        DriverState {
+            deps_left,
+            waiting,
+            ready: VecDeque::new(),
+            busy: vec![false; cfg.n_app],
+            phase: vec![Phase::Waiting; n],
+            task_client: vec![usize::MAX; n],
+            task_start: vec![SimTime::ZERO; n],
+            finished: 0,
+        }
+    }
+
+    /// Tasks with no unmet dependencies at t=0.
+    pub fn initially_ready(&self) -> Vec<TaskId> {
+        (0..self.deps_left.len()).filter(|&t| self.deps_left[t] == 0).collect()
+    }
+
+    pub fn finished_tasks(&self) -> usize {
+        self.finished
+    }
+}
+
+impl<'a> World<'a> {
+    /// A file committed at the manager: notify waiting tasks.
+    pub(crate) fn file_committed(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, file: usize) {
+        let waiters = std::mem::take(&mut self.driver.waiting[file]);
+        for t in waiters {
+            debug_assert!(self.driver.deps_left[t] > 0);
+            self.driver.deps_left[t] -= 1;
+            if self.driver.deps_left[t] == 0 {
+                sched.at(now, Ev::Release(t));
+            }
+        }
+    }
+
+    /// A task's dependencies are satisfied: queue it and try to place it.
+    pub(crate) fn driver_release(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, task: TaskId) {
+        self.driver.ready.push_back(task);
+        self.try_assign(sched, now);
+    }
+
+    /// The client a task prefers, if constrained.
+    ///
+    /// Pin wins; otherwise, under data-location-aware scheduling, if all
+    /// committed input chunks of the task live on one storage node whose
+    /// host runs a client, that client is preferred.
+    fn preferred_client(&self, task: TaskId) -> Option<usize> {
+        let t = &self.wl.tasks[task];
+        if let Some(c) = t.pin_client {
+            return Some(c);
+        }
+        if !self.cfg.location_aware || t.reads.is_empty() {
+            return None;
+        }
+        let mut node: Option<usize> = None;
+        for &f in &t.reads {
+            let meta = self.meta[f].as_ref()?; // all inputs are committed at release
+            for group in &meta.chunks {
+                // A chunk counts as "on node s" if any replica is on s —
+                // follow the primary for the locality decision.
+                let primary = *group.first()?;
+                match node {
+                    None => node = Some(primary),
+                    Some(n) if n == primary => {}
+                    Some(_) => return None, // spread over >1 node
+                }
+            }
+        }
+        let s = node?;
+        self.cfg.client_on_storage_host(s)
+    }
+
+    /// Match ready tasks to free clients (FIFO, honoring preferences).
+    fn try_assign(&mut self, sched: &mut Scheduler<Ev>, now: SimTime) {
+        let mut remaining = VecDeque::new();
+        while let Some(task) = self.driver.ready.pop_front() {
+            let choice = match self.preferred_client(task) {
+                Some(c) => {
+                    if self.driver.busy[c] {
+                        None // wait for the preferred node specifically
+                    } else {
+                        Some(c)
+                    }
+                }
+                None => (0..self.cfg.n_app).find(|&c| !self.driver.busy[c]),
+            };
+            match choice {
+                Some(c) => self.start_task(sched, now, task, c),
+                None => remaining.push_back(task),
+            }
+        }
+        self.driver.ready = remaining;
+    }
+
+    fn start_task(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, task: TaskId, client: usize) {
+        debug_assert!(!self.driver.busy[client]);
+        self.driver.busy[client] = true;
+        self.driver.task_client[task] = client;
+        self.driver.task_start[task] = now;
+        self.driver.phase[task] = Phase::Reading(0);
+        self.advance_task(sched, now, task);
+    }
+
+    /// An I/O operation of `task` completed; move its state machine.
+    pub(crate) fn driver_io_done(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, task: TaskId) {
+        match self.driver.phase[task] {
+            Phase::Reading(i) => self.driver.phase[task] = Phase::Reading(i + 1),
+            Phase::Writing(i) => self.driver.phase[task] = Phase::Writing(i + 1),
+            p => unreachable!("io_done in phase {p:?}"),
+        }
+        self.advance_task(sched, now, task);
+    }
+
+    pub(crate) fn driver_compute_done(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, task: TaskId) {
+        debug_assert_eq!(self.driver.phase[task], Phase::Computing);
+        self.driver.phase[task] = Phase::Writing(0);
+        self.advance_task(sched, now, task);
+    }
+
+    /// Issue the next step of a task's read → compute → write sequence.
+    fn advance_task(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, task: TaskId) {
+        let client = self.driver.task_client[task];
+        let spec = &self.wl.tasks[task];
+        match self.driver.phase[task] {
+            Phase::Reading(i) => {
+                if i < spec.reads.len() {
+                    let f = spec.reads[i];
+                    self.start_op(sched, now, OpKind::Read, client, task, f);
+                } else if spec.compute > SimTime::ZERO {
+                    self.driver.phase[task] = Phase::Computing;
+                    // Detailed fidelity: compute times jitter like any
+                    // other service (OS scheduling, cache effects).
+                    let t = SimTime::from_secs_f64(spec.compute.as_secs_f64() * self.jitter());
+                    sched.after(t, Ev::ComputeDone(task));
+                } else {
+                    self.driver.phase[task] = Phase::Writing(0);
+                    self.advance_task(sched, now, task);
+                }
+            }
+            Phase::Writing(i) => {
+                if i < spec.writes.len() {
+                    let f = spec.writes[i];
+                    self.start_op(sched, now, OpKind::Write, client, task, f);
+                } else {
+                    self.finish_task(sched, now, task);
+                }
+            }
+            p => unreachable!("advance in phase {p:?}"),
+        }
+    }
+
+    fn finish_task(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, task: TaskId) {
+        let client = self.driver.task_client[task];
+        self.driver.phase[task] = Phase::Done;
+        self.driver.busy[client] = false;
+        self.driver.finished += 1;
+        self.task_records.push(TaskRecord {
+            task,
+            stage: self.wl.tasks[task].stage,
+            client,
+            start: self.driver.task_start[task],
+            end: now,
+        });
+        self.try_assign(sched, now);
+    }
+}

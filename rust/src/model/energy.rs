@@ -1,0 +1,91 @@
+//! Energy model — the paper's future-work item (iii): "enable different
+//! optimization functions … including adding energy models [13]" (their
+//! [13] is the authors' own deduplication energy/performance study).
+//!
+//! A deliberately simple, explanatory model in the spirit of §2.1's
+//! "explore the impact of configuration choices in situations where
+//! direct measurement is difficult": every allocated host draws idle
+//! power for the whole run; busy components (CPU-side services) and NICs
+//! add active deltas weighted by their utilization integrals, which the
+//! simulator already tracks per station.
+
+use crate::model::report::SimReport;
+
+/// Per-host power characteristics (watts).
+#[derive(Clone, Copy, Debug)]
+pub struct PowerModel {
+    /// Idle draw of one powered-on host.
+    pub idle_w: f64,
+    /// Extra draw when the host's CPU-side services are busy.
+    pub cpu_active_w: f64,
+    /// Extra draw when a NIC direction is transferring.
+    pub nic_active_w: f64,
+}
+
+impl PowerModel {
+    /// A 2007-era Xeon E5345 1U server: ~220 W idle, ~80 W CPU delta,
+    /// a few watts per busy NIC direction.
+    pub fn xeon_e5345() -> PowerModel {
+        PowerModel { idle_w: 220.0, cpu_active_w: 80.0, nic_active_w: 4.0 }
+    }
+
+    /// Estimate total energy (joules) of a simulated run.
+    ///
+    /// idle: every host × turnaround; active: per-station busy time from
+    /// the report's utilization integrals.
+    pub fn energy_joules(&self, report: &SimReport) -> f64 {
+        let t = report.turnaround.as_secs_f64();
+        let hosts = report.util.nic.len() as f64;
+        let idle = self.idle_w * hosts * t;
+
+        // NIC busy time (both directions, all hosts).
+        let nic_busy: f64 = report.util.nic.iter().map(|&(o, i)| (o + i) * t).sum();
+        // CPU-side busy time: manager + storage components (clients mostly
+        // block on I/O; their service slices are charged too).
+        let cpu_busy: f64 = report.util.manager_util * t
+            + report.util.storage.iter().map(|&(u, _)| u * t).sum::<f64>();
+
+        idle + self.nic_active_w * nic_busy + self.cpu_active_w * cpu_busy
+    }
+
+    /// Energy in kWh (what a cost-conscious user compares).
+    pub fn energy_kwh(&self, report: &SimReport) -> f64 {
+        self.energy_joules(report) / 3.6e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{simulate, Config, Platform};
+    use crate::workload::patterns::{pipeline, PatternScale};
+
+    #[test]
+    fn energy_scales_with_time_and_hosts() {
+        let plat = Platform::paper_testbed();
+        let pm = PowerModel::xeon_e5345();
+        let small = simulate(&pipeline(4, PatternScale::Small, false), &Config::dss(4), &plat);
+        let medium = simulate(&pipeline(4, PatternScale::Medium, false), &Config::dss(4), &plat);
+        let e_small = pm.energy_joules(&small);
+        let e_medium = pm.energy_joules(&medium);
+        assert!(e_small > 0.0);
+        assert!(e_medium > e_small, "10x data must cost more energy");
+        // Idle power dominates: energy roughly tracks hosts × time.
+        let floor = pm.idle_w * 5.0 * medium.turnaround.as_secs_f64();
+        assert!(e_medium >= floor);
+        assert!(e_medium < floor * 2.0, "active delta should not double idle draw");
+    }
+
+    #[test]
+    fn wass_saves_energy_on_pipeline() {
+        // Same workload, faster configuration ⇒ less idle-time energy.
+        let plat = Platform::paper_testbed();
+        let pm = PowerModel::xeon_e5345();
+        let dss = simulate(&pipeline(19, PatternScale::Medium, false), &Config::dss(19), &plat);
+        let wass = simulate(&pipeline(19, PatternScale::Medium, true), &Config::wass(19), &plat);
+        assert!(
+            pm.energy_joules(&wass) < pm.energy_joules(&dss) * 0.5,
+            "the 6x-faster configuration should save well over half the energy"
+        );
+    }
+}

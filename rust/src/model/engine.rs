@@ -1,0 +1,852 @@
+//! The simulation world: instantiates the queue-based model (paper Fig 2)
+//! for a (workload, config, platform) triple and runs it to completion.
+//!
+//! Every host owns a NIC modeled as an out-queue and an in-queue service;
+//! messages are fragmented into frames at the out-queue, cross the core
+//! with a latency, are reassembled after the in-queue, and are then handed
+//! to the destination component's own queue. Manager, storage and client
+//! components are FIFO single-server stations with service times from the
+//! [`Platform`] (system identification). The application driver
+//! (`driver.rs`) feeds client queues by replaying the workload DAG.
+
+use crate::model::config::{Config, Placement};
+use crate::model::driver::DriverState;
+use crate::model::fidelity::Fidelity;
+use crate::model::platform::Platform;
+use crate::model::proto::*;
+use crate::model::report::{OpRecord, SimReport, TaskRecord, UtilReport};
+use crate::sim::{Scheduler, SimState, Simulation, Station};
+use crate::util::rng::Rng;
+use crate::util::units::{Bytes, SimTime};
+use crate::workload::{FileHint, Workload};
+use std::collections::HashMap;
+
+/// Connection key: canonical (host, host) pair. Data-path connections are
+/// pooled per host pair (as the real SAI does) and persist for the run;
+/// the handshake is paid on first use and SYNs can be lost when the
+/// passive side's in-NIC is deeply backlogged.
+pub(crate) type ConnKey = (usize, usize);
+
+/// State of a per-(op, host-pair) data connection (detailed fidelity).
+#[derive(Debug)]
+pub(crate) enum ConnState {
+    /// Awaiting SYN/ACK; messages queue up. `dst` is the passive side
+    /// whose in-NIC congestion governs SYN loss.
+    Pending { dst: usize, buf: Vec<MsgId> },
+    Up,
+}
+
+/// Committed file metadata at the manager: one replica group per chunk.
+#[derive(Clone, Debug)]
+pub struct FileMeta {
+    pub chunks: Vec<Vec<usize>>,
+}
+
+/// Simulation events.
+#[derive(Clone, Debug)]
+pub enum Ev {
+    /// A frame finished service at host's out-NIC.
+    NicOutDone(usize),
+    /// A frame finished service at host's in-NIC.
+    NicInDone(usize),
+    /// A frame arrives at the destination host (post-latency).
+    FrameArrive(usize, Frame),
+    /// A component station finished serving a message.
+    CompDone(CompId),
+    /// A task's dependencies are satisfied.
+    Release(usize),
+    /// A task's compute phase finished.
+    ComputeDone(usize),
+    /// Attempt (or retry) a data-connection handshake.
+    ConnTry(ConnKey),
+    /// Handshake completed; flush buffered messages.
+    ConnUp(ConnKey),
+    /// Per-target stream setup finished; open the op's chunk window
+    /// (detailed fidelity only).
+    OpenWindow(OpId),
+}
+
+pub struct World<'a> {
+    pub(crate) cfg: &'a Config,
+    pub(crate) plat: &'a Platform,
+    pub(crate) wl: &'a Workload,
+    pub(crate) fid: Fidelity,
+    pub(crate) rng: Rng,
+    /// Per-host speed multiplier drawn per trial (heterogeneity knob).
+    pub(crate) speed_mult: Vec<f64>,
+    /// Data connections (detailed fidelity only).
+    pub(crate) conns: HashMap<ConnKey, ConnState>,
+    pub(crate) conn_retries: u64,
+    /// Precomputed network service times (ns per byte) — the frame path
+    /// is the simulator's hot loop (§Perf).
+    ns_per_byte_remote: f64,
+    ns_per_byte_local: f64,
+
+    // Per-host NIC stations.
+    pub(crate) nic_out: Vec<Station<Frame>>,
+    pub(crate) nic_in: Vec<Station<Frame>>,
+    // Component stations.
+    pub(crate) manager_st: Station<MsgId>,
+    pub(crate) storage_st: Vec<Station<MsgId>>,
+    pub(crate) client_st: Vec<Station<MsgId>>,
+
+    // Message arena (messages are retired in place; ids stay stable).
+    pub(crate) msgs: Vec<Msg>,
+
+    // Manager state.
+    pub(crate) meta: Vec<Option<FileMeta>>,
+    pub(crate) rr_cursor: usize,
+
+    // Client operation state.
+    pub(crate) ops: Vec<Op>,
+
+    // Driver state.
+    pub(crate) driver: DriverState,
+
+    // Accounting.
+    pub(crate) stored: Vec<u64>,
+    pub(crate) net_bytes: u64,
+    pub(crate) op_records: Vec<OpRecord>,
+    pub(crate) task_records: Vec<TaskRecord>,
+}
+
+impl<'a> World<'a> {
+    pub fn new(wl: &'a Workload, cfg: &'a Config, plat: &'a Platform, fid: Fidelity) -> World<'a> {
+        let h = cfg.n_hosts();
+        let mut rng = Rng::new(fid.seed ^ 0x5EED_CAFE);
+        let speed_mult = (0..h)
+            .map(|_| {
+                if fid.hetero_sigma > 0.0 {
+                    rng.normal(1.0, fid.hetero_sigma).clamp(0.7, 1.3)
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        let mut w = World {
+            cfg,
+            plat,
+            wl,
+            fid,
+            rng,
+            speed_mult,
+            conns: HashMap::new(),
+            conn_retries: 0,
+            ns_per_byte_remote: 1e9 / plat.net_remote_bps,
+            ns_per_byte_local: 1e9 / plat.net_local_bps,
+            nic_out: (0..h).map(|_| Station::new()).collect(),
+            nic_in: (0..h).map(|_| Station::new()).collect(),
+            manager_st: Station::new(),
+            storage_st: (0..cfg.n_storage).map(|_| Station::new()).collect(),
+            client_st: (0..cfg.n_app).map(|_| Station::new()).collect(),
+            msgs: Vec::with_capacity(1024),
+            meta: vec![None; wl.files.len()],
+            rr_cursor: 0,
+            ops: Vec::with_capacity(wl.tasks.len() * 4),
+            driver: DriverState::new(wl, cfg),
+            stored: vec![0; cfg.n_storage],
+            net_bytes: 0,
+            op_records: Vec::new(),
+            task_records: Vec::new(),
+        };
+        w.prestage_files();
+        w
+    }
+
+    /// Commit prestaged files' metadata at t=0 (e.g., the BLAST database
+    /// "already loaded in intermediate storage"). Bytes are accounted but
+    /// no traffic is generated.
+    fn prestage_files(&mut self) {
+        for (fid, f) in self.wl.files.iter().enumerate() {
+            if !f.prestaged {
+                continue;
+            }
+            let repl = f.replication.unwrap_or(self.cfg.replication) as usize;
+            let stripe = self.stripe_targets_for(fid, None);
+            let n_chunks = f.size.chunks(self.cfg.chunk_size);
+            let mut chunks = Vec::with_capacity(n_chunks as usize);
+            for i in 0..n_chunks {
+                let group = self.replica_group(stripe[i as usize % stripe.len()], repl);
+                for (r, &s) in group.iter().enumerate() {
+                    let b = if f.size.as_u64() == 0 {
+                        0
+                    } else {
+                        let full = self.cfg.chunk_size.as_u64();
+                        (f.size.as_u64() - i * full).min(full)
+                    };
+                    let _ = r;
+                    self.stored[s] += b;
+                }
+                chunks.push(group);
+            }
+            self.meta[fid] = Some(FileMeta { chunks });
+        }
+    }
+
+    // ---------------- placement (manager policy) ----------------
+
+    /// Replica group for a primary: ring successors on the storage set.
+    pub(crate) fn replica_group(&self, primary: usize, repl: usize) -> Vec<usize> {
+        let n = self.cfg.n_storage;
+        (0..repl.min(n)).map(|k| (primary + k) % n).collect()
+    }
+
+    /// Stripe targets for writing `file` from `client` (None = prestage).
+    pub(crate) fn stripe_targets_for(&mut self, file: usize, client: Option<usize>) -> Vec<usize> {
+        let hint = self.wl.files[file].hint;
+        let n = self.cfg.n_storage;
+        match hint {
+            FileHint::OnNode(s) => vec![s % n],
+            FileHint::Striped => {
+                let w = self.cfg.stripe_width.min(n);
+                let start = self.next_cursor(n);
+                (0..w).map(|k| (start + k) % n).collect()
+            }
+            FileHint::Local => {
+                if let Some(c) = client {
+                    if let Some(s) = self.cfg.storage_on_client_host(c) {
+                        return vec![s];
+                    }
+                }
+                // No collocated storage: fall back to one rotating node.
+                let s = self.next_cursor(n);
+                vec![s]
+            }
+            FileHint::Default => match self.cfg.placement {
+                Placement::Local => {
+                    if let Some(c) = client {
+                        if let Some(s) = self.cfg.storage_on_client_host(c) {
+                            return vec![s];
+                        }
+                    }
+                    let s = self.next_cursor(n);
+                    vec![s]
+                }
+                Placement::RoundRobin => {
+                    let w = self.cfg.stripe_width.min(n);
+                    let start = self.next_cursor(n);
+                    (0..w).map(|k| (start + k) % n).collect()
+                }
+            },
+        }
+    }
+
+    /// Next stripe start: a global round-robin cursor in the coarse model,
+    /// randomized per op in the detailed one ("limited randomness in the
+    /// data placement decisions" was a real-system anomaly the paper found).
+    fn next_cursor(&mut self, n: usize) -> usize {
+        if self.fid.random_placement {
+            self.rng.below(n as u64) as usize
+        } else {
+            let s = self.rr_cursor % n;
+            self.rr_cursor += 1;
+            s
+        }
+    }
+
+    /// Multiplicative service-time noise (detailed fidelity).
+    pub(crate) fn jitter(&mut self) -> f64 {
+        if self.fid.jitter_sigma > 0.0 {
+            self.rng.normal(1.0, self.fid.jitter_sigma).clamp(0.5, 2.0)
+        } else {
+            1.0
+        }
+    }
+
+    // ---------------- network ----------------
+
+    pub(crate) fn host_of(&self, c: CompId) -> usize {
+        match c {
+            CompId::Manager => 0,
+            CompId::Storage(s) => self.cfg.storage_host(s),
+            CompId::Client(c) => self.cfg.client_host(c),
+        }
+    }
+
+    /// Send a message. In the coarse model this fragments straight into
+    /// frames; in the detailed model, data-path messages first need a
+    /// per-(op, host-pair) connection, whose SYN can be lost under
+    /// congestion (3 s retry).
+    pub(crate) fn send(
+        &mut self,
+        sched: &mut Scheduler<Ev>,
+        now: SimTime,
+        from: CompId,
+        to: CompId,
+        payload: Payload,
+    ) {
+        let src = self.host_of(from);
+        let dst = self.host_of(to);
+        let local = src == dst;
+        let needs_conn = self.fid.connections && !local && payload.data_path_op().is_some();
+        let msg_id = self.msgs.len();
+        self.msgs.push(Msg { from, to, payload, local });
+
+        if needs_conn {
+            let key: ConnKey = (src.min(dst), src.max(dst));
+            match self.conns.get_mut(&key) {
+                Some(ConnState::Up) => self.transmit(sched, now, msg_id),
+                Some(ConnState::Pending { buf, .. }) => buf.push(msg_id),
+                None => {
+                    self.conns.insert(key, ConnState::Pending { dst, buf: vec![msg_id] });
+                    sched.at(now, Ev::ConnTry(key));
+                }
+            }
+        } else {
+            self.transmit(sched, now, msg_id);
+        }
+    }
+
+    /// Frame service time on a NIC (hot path: precomputed rate, no float
+    /// rounding round-trip through seconds).
+    #[inline(always)]
+    fn frame_svc(&self, bytes: u64, local: bool) -> SimTime {
+        let nspb = if local { self.ns_per_byte_local } else { self.ns_per_byte_remote };
+        SimTime((bytes as f64 * nspb) as u64)
+    }
+
+    /// Fragment a message into frames and enqueue at the source out-NIC.
+    fn transmit(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, msg_id: MsgId) {
+        let msg = &self.msgs[msg_id];
+        let src = self.host_of(msg.from);
+        let local = msg.local;
+        let size = msg.payload.wire_size();
+        self.net_bytes += size.as_u64();
+
+        let frame_cap = self.plat.frame_size.as_u64();
+        let total = size.as_u64().max(1);
+        let n_frames = total.div_ceil(frame_cap);
+        let mut left = total;
+        for i in 0..n_frames {
+            let b = left.min(frame_cap);
+            left -= b;
+            let frame = Frame { msg: msg_id, bytes: Bytes(b), last: i == n_frames - 1 };
+            let svc = self.frame_svc(b, local);
+            if let Some(t) = self.nic_out[src].arrive(now, frame, svc) {
+                sched.at(t, Ev::NicOutDone(src));
+            }
+        }
+    }
+
+    /// Attempt a connection handshake: SYNs are dropped with a probability
+    /// that grows with the passive side's in-NIC backlog — the mechanism
+    /// behind the "TCP connection initiation timeout of 3s" stalls the
+    /// paper reports (§5).
+    fn on_conn_try(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, key: ConnKey) {
+        let dst = match self.conns.get(&key) {
+            Some(ConnState::Pending { dst, .. }) => *dst,
+            _ => return, // already up (stale retry)
+        };
+        let qlen = self.nic_in[dst].queue_len();
+        let p = self.fid.syn_drop_prob(qlen);
+        if p > 0.0 && self.rng.next_f64() < p {
+            self.conn_retries += 1;
+            sched.at(now + self.fid.conn_timeout, Ev::ConnTry(key));
+        } else {
+            // Handshake RTT before the stream opens.
+            sched.at(now + self.plat.net_latency * 2, Ev::ConnUp(key));
+        }
+    }
+
+    fn on_conn_up(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, key: ConnKey) {
+        let buf = match self.conns.insert(key, ConnState::Up) {
+            Some(ConnState::Pending { buf, .. }) => buf,
+            _ => return,
+        };
+        for msg_id in buf {
+            self.transmit(sched, now, msg_id);
+        }
+    }
+
+    fn on_nic_out_done(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, host: usize) {
+        let (frame, next) = self.nic_out[host].complete(now);
+        if let Some(t) = next {
+            sched.at(t, Ev::NicOutDone(host));
+        }
+        let msg = &self.msgs[frame.msg];
+        let dst = self.host_of(msg.to);
+        let lat = if msg.local { self.plat.net_latency_local } else { self.plat.net_latency };
+        sched.at(now + lat, Ev::FrameArrive(dst, frame));
+    }
+
+    fn on_frame_arrive(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, host: usize, frame: Frame) {
+        let local = self.msgs[frame.msg].local;
+        let mut svc = self.frame_svc(frame.bytes.as_u64(), local);
+        // Detailed fidelity: concurrent-flow multiplexing overhead on
+        // remote receive under backlog (see Fidelity::mux_eta).
+        if self.fid.mux_eta > 0.0 && !local {
+            let q = self.nic_in[host].queue_len() as f64;
+            svc = SimTime((svc.0 as f64 * (1.0 + self.fid.mux_eta * (1.0 + q).ln())) as u64);
+        }
+        if let Some(t) = self.nic_in[host].arrive(now, frame, svc) {
+            sched.at(t, Ev::NicInDone(host));
+        }
+    }
+
+    fn on_nic_in_done(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, host: usize) {
+        let (frame, next) = self.nic_in[host].complete(now);
+        if let Some(t) = next {
+            sched.at(t, Ev::NicInDone(host));
+        }
+        if frame.last {
+            // Message fully assembled: hand to destination component queue.
+            let to = self.msgs[frame.msg].to;
+            self.comp_arrive(sched, now, to, frame.msg);
+        }
+    }
+
+    // ---------------- components ----------------
+
+    /// Service time a component charges for a message (with detailed-
+    /// fidelity jitter, heterogeneity and manager lock contention).
+    fn comp_service(&mut self, comp: CompId, msg: MsgId) -> SimTime {
+        let base = match comp {
+            CompId::Manager => {
+                let t = self.plat.manager_time(0);
+                // Lock contention: service inflates with the backlog
+                // ("unreasonable locking overheads at the manager", §5).
+                let q = self.manager_st.queue_len() as f64;
+                SimTime::from_secs_f64(t.as_secs_f64() * (1.0 + self.fid.manager_contention * q))
+            }
+            CompId::Storage(s) => {
+                let host = self.cfg.storage_host(s);
+                match &self.msgs[msg].payload {
+                    Payload::ChunkPut { size, .. } => self.plat.storage_time(*size, true, host),
+                    Payload::ChunkGet { size, .. } => self.plat.storage_time(*size, false, host),
+                    _ => self.plat.storage_time(Bytes::ZERO, false, host),
+                }
+            }
+            CompId::Client(c) => self.plat.client_time(self.cfg.client_host(c)),
+        };
+        let host = self.host_of(comp);
+        let mult = self.jitter() / self.speed_mult[host];
+        SimTime::from_secs_f64(base.as_secs_f64() * mult)
+    }
+
+    /// A message (or application op) arrives at a component's queue.
+    pub(crate) fn comp_arrive(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, comp: CompId, msg: MsgId) {
+        let svc = self.comp_service(comp, msg);
+        let st = match comp {
+            CompId::Manager => &mut self.manager_st,
+            CompId::Storage(s) => &mut self.storage_st[s],
+            CompId::Client(c) => &mut self.client_st[c],
+        };
+        if let Some(t) = st.arrive(now, msg, svc) {
+            sched.at(t, Ev::CompDone(comp));
+        }
+    }
+
+    fn on_comp_done(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, comp: CompId) {
+        let st = match comp {
+            CompId::Manager => &mut self.manager_st,
+            CompId::Storage(s) => &mut self.storage_st[s],
+            CompId::Client(c) => &mut self.client_st[c],
+        };
+        let (msg, next) = st.complete(now);
+        if let Some(t) = next {
+            sched.at(t, Ev::CompDone(comp));
+        }
+        match comp {
+            CompId::Manager => self.manager_process(sched, now, msg),
+            CompId::Storage(s) => self.storage_process(sched, now, s, msg),
+            CompId::Client(c) => self.client_process(sched, now, c, msg),
+        }
+    }
+
+    // ---------------- manager protocol ----------------
+
+    fn manager_process(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, msg: MsgId) {
+        // Messages are processed exactly once: take the payload instead of
+        // deep-cloning it (ChunkPut carries a replica-chain Vec).
+        let payload = std::mem::replace(&mut self.msgs[msg].payload, Payload::MetaPing);
+        match payload {
+            Payload::WriteAlloc { op } => {
+                let (client, file) = (self.ops[op].client, self.ops[op].file);
+                let repl = self.wl.files[file].replication.unwrap_or(self.cfg.replication) as usize;
+                let stripe = self.stripe_targets_for(file, Some(client));
+                self.ops[op].targets =
+                    stripe.iter().map(|&p| self.replica_group(p, repl)).collect();
+                self.send(sched, now, CompId::Manager, CompId::Client(client), Payload::WriteAllocResp { op });
+            }
+            Payload::ChunkCommit { op } => {
+                let o = &self.ops[op];
+                let (client, file) = (o.client, o.file);
+                // Build per-chunk metadata from the op's stripe groups.
+                let groups = o.targets.clone();
+                let n_chunks = o.n_chunks;
+                let chunks: Vec<Vec<usize>> =
+                    (0..n_chunks).map(|i| groups[i as usize % groups.len()].clone()).collect();
+                self.meta[file] = Some(FileMeta { chunks });
+                self.send(sched, now, CompId::Manager, CompId::Client(client), Payload::CommitAck { op });
+                // File becomes visible: release dependents.
+                self.file_committed(sched, now, file);
+            }
+            Payload::ReadLookup { op } => {
+                let client = self.ops[op].client;
+                debug_assert!(
+                    self.meta[self.ops[op].file].is_some(),
+                    "read of uncommitted file {} — driver bug",
+                    self.wl.files[self.ops[op].file].name
+                );
+                self.send(sched, now, CompId::Manager, CompId::Client(client), Payload::ReadLookupResp { op });
+            }
+            // Detailed fidelity: FUSE-ish open/close round trips and
+            // periodic allocation rounds.
+            Payload::Open { op } => {
+                let client = self.ops[op].client;
+                self.send(sched, now, CompId::Manager, CompId::Client(client), Payload::OpenResp { op });
+            }
+            Payload::Close { op } => {
+                let client = self.ops[op].client;
+                self.send(sched, now, CompId::Manager, CompId::Client(client), Payload::CloseResp { op });
+            }
+            Payload::MetaPing => {} // pure manager load, no reply
+            p => unreachable!("manager got {p:?}"),
+        }
+    }
+
+    // ---------------- storage protocol ----------------
+
+    fn storage_process(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, s: usize, msg: MsgId) {
+        // Messages are processed exactly once: take the payload instead of
+        // deep-cloning it (ChunkPut carries a replica-chain Vec).
+        let payload = std::mem::replace(&mut self.msgs[msg].payload, Payload::MetaPing);
+        match payload {
+            Payload::ChunkPut { op, chunk, size, chain } => {
+                self.stored[s] += size.as_u64();
+                if let Some((&next_s, rest)) = chain.split_first() {
+                    // Chained replication: forward to the next replica.
+                    self.send(
+                        sched,
+                        now,
+                        CompId::Storage(s),
+                        CompId::Storage(next_s),
+                        Payload::ChunkPut { op, chunk, size, chain: rest.to_vec() },
+                    );
+                } else {
+                    let client = self.ops[op].client;
+                    self.send(sched, now, CompId::Storage(s), CompId::Client(client), Payload::ChunkPutAck { op, chunk });
+                }
+            }
+            Payload::ChunkGet { op, chunk, size } => {
+                let client = self.ops[op].client;
+                self.send(sched, now, CompId::Storage(s), CompId::Client(client), Payload::ChunkData { op, chunk, size });
+            }
+            p => unreachable!("storage got {p:?}"),
+        }
+    }
+
+    // ---------------- client protocol ----------------
+
+    fn client_process(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, c: usize, msg: MsgId) {
+        // Messages are processed exactly once: take the payload instead of
+        // deep-cloning it (ChunkPut carries a replica-chain Vec).
+        let payload = std::mem::replace(&mut self.msgs[msg].payload, Payload::MetaPing);
+        match payload {
+            Payload::AppIssue { op } => {
+                // Detailed protocol opens the file at the manager first;
+                // the coarse model goes straight to alloc/lookup ("only
+                // one control message to initiate a storage function").
+                let req = if self.fid.control_rounds {
+                    Payload::Open { op }
+                } else {
+                    self.first_meta_request(op)
+                };
+                self.send(sched, now, CompId::Client(c), CompId::Manager, req);
+            }
+            Payload::OpenResp { op } => {
+                let req = self.first_meta_request(op);
+                self.send(sched, now, CompId::Client(c), CompId::Manager, req);
+            }
+            Payload::WriteAllocResp { op } | Payload::ReadLookupResp { op } => {
+                // Detailed fidelity charges a stream-setup cost per
+                // distinct storage target before the chunk window opens
+                // (Fig 1's "connection handling and metadata access
+                // overheads" at wide stripes); the coarse model opens
+                // immediately.
+                let setup = self.fid.per_target_setup;
+                if setup > SimTime::ZERO {
+                    let n_targets = self.op_distinct_targets(op) as u64;
+                    sched.at(now + setup * n_targets, Ev::OpenWindow(op));
+                } else {
+                    self.open_window(sched, now, op);
+                }
+            }
+            Payload::ChunkPutAck { op, .. } | Payload::ChunkData { op, .. } => {
+                self.ops[op].done += 1;
+                if self.ops[op].next < self.ops[op].n_chunks {
+                    self.issue_next_chunk(sched, now, op);
+                } else if self.ops[op].done == self.ops[op].n_chunks {
+                    match self.ops[op].kind {
+                        OpKind::Write => {
+                            self.send(sched, now, CompId::Client(c), CompId::Manager, Payload::ChunkCommit { op });
+                        }
+                        OpKind::Read => self.finish_or_close(sched, now, c, op),
+                    }
+                }
+            }
+            Payload::CommitAck { op } => self.finish_or_close(sched, now, c, op),
+            Payload::CloseResp { op } => self.op_finished(sched, now, op),
+            p => unreachable!("client got {p:?}"),
+        }
+    }
+
+    /// Open an op's chunk window: issue the first `io_window` chunks.
+    fn open_window(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, op: OpId) {
+        let burst = (self.cfg.io_window as u32).min(self.ops[op].n_chunks);
+        for _ in 0..burst {
+            self.issue_next_chunk(sched, now, op);
+        }
+    }
+
+    /// Distinct storage nodes this op will touch.
+    fn op_distinct_targets(&self, op: OpId) -> usize {
+        let o = &self.ops[op];
+        let mut seen = [false; 64];
+        let mut extra = Vec::new(); // for > 64 storage nodes
+        let mut count = 0usize;
+        let mut mark = |s: usize| {
+            if s < 64 {
+                if !seen[s] {
+                    seen[s] = true;
+                    count += 1;
+                }
+            } else if !extra.contains(&s) {
+                extra.push(s);
+                count += 1;
+            }
+        };
+        match o.kind {
+            OpKind::Write => {
+                for g in &o.targets {
+                    for &s in g {
+                        mark(s);
+                    }
+                }
+            }
+            OpKind::Read => {
+                if let Some(meta) = self.meta[o.file].as_ref() {
+                    for g in &meta.chunks {
+                        mark(g[0]);
+                    }
+                }
+            }
+        }
+        count.max(1)
+    }
+
+    /// The first metadata request of an op.
+    fn first_meta_request(&self, op: OpId) -> Payload {
+        match self.ops[op].kind {
+            OpKind::Write => Payload::WriteAlloc { op },
+            OpKind::Read => Payload::ReadLookup { op },
+        }
+    }
+
+    /// Finish an op directly (coarse) or via a close round trip (detailed).
+    fn finish_or_close(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, c: usize, op: OpId) {
+        if self.fid.control_rounds {
+            self.send(sched, now, CompId::Client(c), CompId::Manager, Payload::Close { op });
+        } else {
+            self.op_finished(sched, now, op);
+        }
+    }
+
+    /// Issue the next chunk of an op (window flow control).
+    fn issue_next_chunk(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, op: OpId) {
+        let i = self.ops[op].next;
+        debug_assert!(i < self.ops[op].n_chunks);
+        self.ops[op].next += 1;
+        // Detailed protocol touches the manager once per allocation batch
+        // (non-blocking metadata round — pure manager + network load).
+        if self.fid.control_rounds && i > 0 && i % self.fid.alloc_batch == 0 {
+            let c = self.ops[op].client;
+            self.send(sched, now, CompId::Client(c), CompId::Manager, Payload::MetaPing);
+        }
+        let size = self.ops[op].chunk_bytes(i, self.cfg.chunk_size);
+        let c = self.ops[op].client;
+        match self.ops[op].kind {
+            OpKind::Write => {
+                let groups = &self.ops[op].targets;
+                let group = &groups[i as usize % groups.len()];
+                let (primary, chain) = (group[0], group[1..].to_vec());
+                self.send(
+                    sched,
+                    now,
+                    CompId::Client(c),
+                    CompId::Storage(primary),
+                    Payload::ChunkPut { op, chunk: i, size, chain },
+                );
+            }
+            OpKind::Read => {
+                let file = self.ops[op].file;
+                let meta = self.meta[file].as_ref().expect("read before commit");
+                let group = &meta.chunks[i as usize];
+                // Prefer a replica on our own host; otherwise spread
+                // deterministically by (chunk, client).
+                let src = self
+                    .cfg
+                    .storage_on_client_host(c)
+                    .filter(|s| group.contains(s))
+                    .unwrap_or_else(|| group[(i as usize + c) % group.len()]);
+                self.send(sched, now, CompId::Client(c), CompId::Storage(src), Payload::ChunkGet { op, chunk: i, size });
+            }
+        }
+    }
+
+    /// A whole-file operation completed at the client.
+    fn op_finished(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, op: OpId) {
+        let o = &self.ops[op];
+        self.op_records.push(OpRecord {
+            client: o.client,
+            task: o.task,
+            file: o.file,
+            is_write: o.kind == OpKind::Write,
+            bytes: o.size,
+            start: SimTime(o.started_ns),
+            end: now,
+        });
+        let task = o.task;
+        self.driver_io_done(sched, now, task);
+    }
+
+    /// Create a new client op and enqueue it at the client service.
+    pub(crate) fn start_op(
+        &mut self,
+        sched: &mut Scheduler<Ev>,
+        now: SimTime,
+        kind: OpKind,
+        client: usize,
+        task: usize,
+        file: usize,
+    ) {
+        let size = self.wl.files[file].size;
+        let n_chunks = size.chunks(self.cfg.chunk_size) as u32;
+        let op = self.ops.len();
+        self.ops.push(Op {
+            kind,
+            client,
+            task,
+            file,
+            size,
+            n_chunks,
+            targets: Vec::new(),
+            done: 0,
+            next: 0,
+            started_ns: now.as_ns(),
+        });
+        let msg_id = self.msgs.len();
+        self.msgs.push(Msg {
+            from: CompId::Client(client),
+            to: CompId::Client(client),
+            payload: Payload::AppIssue { op },
+            local: true,
+        });
+        self.comp_arrive(sched, now, CompId::Client(client), msg_id);
+    }
+
+    fn finish_report(mut self, end: SimTime, events: u64) -> SimReport {
+        for st in self.nic_out.iter_mut().chain(self.nic_in.iter_mut()) {
+            st.finish(end);
+        }
+        self.manager_st.finish(end);
+        for st in self.storage_st.iter_mut().chain(self.client_st.iter_mut()) {
+            st.finish(end);
+        }
+        let cap = self.plat.node_capacity.as_u64();
+        let overflows = if cap == 0 {
+            0
+        } else {
+            self.stored.iter().filter(|&&b| b > cap).count()
+        };
+        let util = UtilReport {
+            manager_util: self.manager_st.stats.utilization(end),
+            manager_mean_qlen: self.manager_st.stats.mean_qlen(end),
+            storage: self
+                .storage_st
+                .iter()
+                .map(|s| (s.stats.utilization(end), s.stats.mean_qlen(end)))
+                .collect(),
+            nic: self
+                .nic_out
+                .iter()
+                .zip(self.nic_in.iter())
+                .map(|(o, i)| (o.stats.utilization(end), i.stats.utilization(end)))
+                .collect(),
+        };
+        SimReport {
+            config_label: self.cfg.label.clone(),
+            turnaround: end,
+            ops: self.op_records,
+            tasks: self.task_records,
+            net_bytes: Bytes(self.net_bytes),
+            stored: self.stored.iter().map(|&b| Bytes(b)).collect(),
+            capacity_overflows: overflows,
+            util,
+            events,
+            conn_retries: self.conn_retries,
+        }
+    }
+}
+
+impl<'a> SimState for World<'a> {
+    type Ev = Ev;
+
+    fn handle(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, ev: Ev) {
+        match ev {
+            Ev::NicOutDone(h) => self.on_nic_out_done(sched, now, h),
+            Ev::NicInDone(h) => self.on_nic_in_done(sched, now, h),
+            Ev::FrameArrive(h, f) => self.on_frame_arrive(sched, now, h, f),
+            Ev::CompDone(c) => self.on_comp_done(sched, now, c),
+            Ev::Release(t) => self.driver_release(sched, now, t),
+            Ev::ComputeDone(t) => self.driver_compute_done(sched, now, t),
+            Ev::ConnTry(k) => self.on_conn_try(sched, now, k),
+            Ev::ConnUp(k) => self.on_conn_up(sched, now, k),
+            Ev::OpenWindow(op) => self.open_window(sched, now, op),
+        }
+    }
+}
+
+/// Run the predictor once: simulate `wl` on `cfg`/`plat` at coarse
+/// fidelity (the paper's model) and report.
+///
+/// Panics on invalid inputs (config/workload validation errors are
+/// programming errors at this level; the CLI validates earlier with
+/// friendly messages).
+pub fn simulate(wl: &Workload, cfg: &Config, plat: &Platform) -> SimReport {
+    simulate_fid(wl, cfg, plat, Fidelity::coarse())
+}
+
+/// Run one simulation at an explicit fidelity (the testbed uses
+/// `Fidelity::detailed(seed)` per trial).
+pub fn simulate_fid(wl: &Workload, cfg: &Config, plat: &Platform, fid: Fidelity) -> SimReport {
+    cfg.validate().unwrap_or_else(|e| panic!("invalid config: {e}"));
+    plat.validate().unwrap_or_else(|e| panic!("invalid platform: {e}"));
+    wl.validate().unwrap_or_else(|e| panic!("invalid workload: {e}"));
+
+    let stagger = fid.stagger_mean;
+    let mut sim = Simulation::new(World::new(wl, cfg, plat, fid));
+    // Release initially-runnable tasks (staggered under detailed fidelity:
+    // "coordination overheads make them slightly staggered", §5).
+    let initial = sim.state.driver.initially_ready();
+    for t in initial {
+        // Workload-declared release time (richer description, §5) plus
+        // the testbed's stochastic coordination stagger.
+        let mut at = wl.tasks[t].release;
+        if stagger > SimTime::ZERO {
+            at += SimTime::from_secs_f64(sim.state.rng.exp(stagger.as_secs_f64()));
+        }
+        sim.sched.at(at, Ev::Release(t));
+    }
+    let end = sim.run_capped(50_000_000_000);
+    let events = sim.sched.processed();
+    let done = sim.state.driver.finished_tasks();
+    assert_eq!(
+        done,
+        wl.tasks.len(),
+        "simulation drained with {done}/{} tasks finished — workload deadlock (config {})",
+        wl.tasks.len(),
+        cfg.label
+    );
+    sim.state.finish_report(end, events)
+}

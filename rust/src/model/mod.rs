@@ -1,0 +1,37 @@
+//! The paper's queue-based storage-system model (§2.3–2.4).
+//!
+//! "All participating machines are modeled similarly, regardless of their
+//! specific role: each machine hosts a network component and can host one
+//! or more system components (each modeled as a service with its own
+//! queue)." — this module is that model, instantiated on the [`crate::sim`]
+//! engine and driven by a workload's I/O trace.
+//!
+//! Layout:
+//! * [`config`] — storage-system + deployment configuration (the knobs the
+//!   search explores: stripe width, replication, chunk size, placement,
+//!   app/storage partitioning).
+//! * [`platform`] — service times from system identification (μ_net, μ_sm,
+//!   μ_man, μ_cli) and platform presets (paper testbed, HDD, SSD, 10GbE).
+//! * [`proto`] — message types of the (coarse) storage protocol.
+//! * [`engine`] — the simulation world: per-host NIC queues, component
+//!   stations, manager metadata, client operations.
+//! * [`driver`] — the application driver: releases tasks when their input
+//!   files exist, with optional data-location-aware scheduling (WASS).
+//! * [`report`] — simulation output: turnaround, per-stage/per-task times,
+//!   transfer and storage accounting, per-component utilization.
+
+pub mod config;
+pub mod platform;
+pub mod proto;
+pub mod fidelity;
+pub mod energy;
+pub mod engine;
+pub mod driver;
+pub mod report;
+
+pub use config::{Config, Placement};
+pub use engine::{simulate, simulate_fid};
+pub use energy::PowerModel;
+pub use fidelity::Fidelity;
+pub use platform::{DiskKind, Platform};
+pub use report::SimReport;

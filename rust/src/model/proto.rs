@@ -1,0 +1,215 @@
+//! Protocol entities of the coarse storage model.
+//!
+//! The paper models "the data paths at chunk-level granularity, and the
+//! control paths at a coarser granularity: modeling only one control
+//! message to initiate a specific storage function". The write path is
+//! exactly the paper's §2.4 walk-through: alloc at the manager → chunk
+//! puts to storage (round-robin over the allocated stripe, chained
+//! replication) → chunk-map commit at the manager. Reads are lookup →
+//! per-chunk gets.
+
+use crate::util::units::Bytes;
+use crate::workload::{FileId, TaskId};
+
+/// A system component (service + queue) in the model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompId {
+    Manager,
+    Storage(usize),
+    Client(usize),
+}
+
+pub type MsgId = usize;
+pub type OpId = usize;
+
+/// Fixed size the model assumes for every control message ("we model all
+/// control messages as having the same size", §5).
+pub const CTRL_MSG: Bytes = Bytes(1024);
+
+/// Message payloads. Data messages (`ChunkPut`, `ReplicaPut`, `ChunkData`)
+/// carry chunk-sized payloads; everything else is control.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    // ---- application → client SAI ----
+    /// The driver hands an operation to the client service.
+    AppIssue { op: OpId },
+
+    // ---- write path ----
+    /// client → manager: allocate space for a write.
+    WriteAlloc { op: OpId },
+    /// manager → client: stripe targets decided (stored in op state).
+    WriteAllocResp { op: OpId },
+    /// client → storage: store one chunk; `chain` holds the remaining
+    /// replica targets (chained replication).
+    ChunkPut { op: OpId, chunk: u32, size: Bytes, chain: Vec<usize> },
+    /// tail storage → client: chunk fully stored on all replicas.
+    ChunkPutAck { op: OpId, chunk: u32 },
+    /// client → manager: chunk map, closes the write.
+    ChunkCommit { op: OpId },
+    /// manager → client: commit acknowledged; file becomes visible.
+    CommitAck { op: OpId },
+
+    // ---- read path ----
+    /// client → manager: where are the chunks of this file?
+    ReadLookup { op: OpId },
+    /// manager → client: chunk map available (stored in op state).
+    ReadLookupResp { op: OpId },
+    /// client → storage: send one chunk.
+    ChunkGet { op: OpId, chunk: u32, size: Bytes },
+    /// storage → client: chunk payload.
+    ChunkData { op: OpId, chunk: u32, size: Bytes },
+
+    // ---- detailed-fidelity control rounds (testbed protocol only) ----
+    /// client → manager: open the file handle (FUSE-ish extra round).
+    Open { op: OpId },
+    /// manager → client.
+    OpenResp { op: OpId },
+    /// client → manager: close the handle.
+    Close { op: OpId },
+    /// manager → client.
+    CloseResp { op: OpId },
+    /// client → manager: periodic allocation/metadata round (no reply;
+    /// pure manager + network load).
+    MetaPing,
+}
+
+impl Payload {
+    /// Wire size of a message carrying this payload.
+    pub fn wire_size(&self) -> Bytes {
+        match self {
+            Payload::ChunkPut { size, .. }
+            | Payload::ChunkData { size, .. } => *size + CTRL_MSG,
+            _ => CTRL_MSG,
+        }
+    }
+
+    /// The op this message belongs to *if* it travels on a per-op data
+    /// connection (client↔storage / storage↔storage streams). Metadata
+    /// traffic uses long-lived manager connections and returns `None`.
+    pub fn data_path_op(&self) -> Option<OpId> {
+        match self {
+            Payload::ChunkPut { op, .. }
+            | Payload::ChunkPutAck { op, .. }
+            | Payload::ChunkGet { op, .. }
+            | Payload::ChunkData { op, .. } => Some(*op),
+            _ => None,
+        }
+    }
+}
+
+/// An in-flight message.
+#[derive(Clone, Debug)]
+pub struct Msg {
+    pub from: CompId,
+    pub to: CompId,
+    pub payload: Payload,
+    /// Whether source and destination share a host (loopback transfer).
+    pub local: bool,
+}
+
+/// A network frame: a fragment of one message traversing NIC queues.
+#[derive(Clone, Copy, Debug)]
+pub struct Frame {
+    pub msg: MsgId,
+    pub bytes: Bytes,
+    /// Last frame of its message — delivery trigger (frames of one message
+    /// traverse the same FIFO queues, so order within a message holds).
+    pub last: bool,
+}
+
+/// Client-side operation kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    Write,
+    Read,
+}
+
+/// Client-side state of a whole-file operation.
+#[derive(Clone, Debug)]
+pub struct Op {
+    pub kind: OpKind,
+    pub client: usize,
+    pub task: TaskId,
+    pub file: FileId,
+    pub size: Bytes,
+    pub n_chunks: u32,
+    /// Write: stripe targets chosen by the manager (replica groups are
+    /// derived per chunk). Read: per-chunk replica groups from metadata.
+    pub targets: Vec<Vec<usize>>,
+    /// Chunks completed (acked / received).
+    pub done: u32,
+    /// Next chunk index to issue (window flow control).
+    pub next: u32,
+    pub started_ns: u64,
+}
+
+impl Op {
+    /// Size of chunk `i` (the last chunk may be partial).
+    pub fn chunk_bytes(&self, i: u32, chunk_size: Bytes) -> Bytes {
+        debug_assert!(i < self.n_chunks);
+        if self.size.as_u64() == 0 {
+            return Bytes::ZERO;
+        }
+        let full = chunk_size.as_u64();
+        let rem = self.size.as_u64() - i as u64 * full;
+        Bytes(rem.min(full))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn control_messages_have_fixed_size() {
+        let p = Payload::WriteAlloc { op: 0 };
+        assert_eq!(p.wire_size(), CTRL_MSG);
+        let p = Payload::ChunkPutAck { op: 0, chunk: 3 };
+        assert_eq!(p.wire_size(), CTRL_MSG);
+    }
+
+    #[test]
+    fn data_messages_carry_payload() {
+        let p = Payload::ChunkPut { op: 0, chunk: 0, size: Bytes::mb(1), chain: vec![] };
+        assert_eq!(p.wire_size(), Bytes::mb(1) + CTRL_MSG);
+        let p = Payload::ChunkData { op: 0, chunk: 0, size: Bytes::kb(256) };
+        assert_eq!(p.wire_size(), Bytes::kb(256) + CTRL_MSG);
+    }
+
+    #[test]
+    fn partial_last_chunk() {
+        let op = Op {
+            kind: OpKind::Write,
+            client: 0,
+            task: 0,
+            file: 0,
+            size: Bytes(2_500_000),
+            n_chunks: 3,
+            targets: vec![],
+            done: 0,
+            next: 0,
+            started_ns: 0,
+        };
+        let cs = Bytes::mb(1);
+        assert_eq!(op.chunk_bytes(0, cs), Bytes::mb(1));
+        assert_eq!(op.chunk_bytes(1, cs), Bytes::mb(1));
+        assert_eq!(op.chunk_bytes(2, cs), Bytes(2_500_000 - 2 * 1_048_576));
+    }
+
+    #[test]
+    fn zero_size_op_single_empty_chunk() {
+        let op = Op {
+            kind: OpKind::Write,
+            client: 0,
+            task: 0,
+            file: 0,
+            size: Bytes::ZERO,
+            n_chunks: 1,
+            targets: vec![],
+            done: 0,
+            next: 0,
+            started_ns: 0,
+        };
+        assert_eq!(op.chunk_bytes(0, Bytes::mb(1)), Bytes::ZERO);
+    }
+}

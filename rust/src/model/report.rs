@@ -1,0 +1,149 @@
+//! Simulation output: what the simulator "reports … per each read or
+//! write" (§2.4: time spent, data transferred, storage used) plus the
+//! aggregates the evaluation plots (turnaround, per-stage makespan) and
+//! the diagnostics the paper's §5 uses (component utilization).
+
+use crate::util::units::{Bytes, SimTime};
+
+/// Record of one completed whole-file operation.
+#[derive(Clone, Debug)]
+pub struct OpRecord {
+    pub client: usize,
+    pub task: usize,
+    pub file: usize,
+    pub is_write: bool,
+    pub bytes: Bytes,
+    pub start: SimTime,
+    pub end: SimTime,
+}
+
+impl OpRecord {
+    pub fn latency(&self) -> SimTime {
+        self.end - self.start
+    }
+}
+
+/// Record of one completed task.
+#[derive(Clone, Debug)]
+pub struct TaskRecord {
+    pub task: usize,
+    pub stage: u32,
+    pub client: usize,
+    pub start: SimTime,
+    pub end: SimTime,
+}
+
+/// Per-component utilization diagnostics.
+#[derive(Clone, Debug)]
+pub struct UtilReport {
+    pub manager_util: f64,
+    pub manager_mean_qlen: f64,
+    /// (utilization, mean queue length) per storage node.
+    pub storage: Vec<(f64, f64)>,
+    /// (out-NIC utilization, in-NIC utilization) per host.
+    pub nic: Vec<(f64, f64)>,
+}
+
+/// Full output of one simulated run.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub config_label: String,
+    /// Application turnaround — the paper's headline metric.
+    pub turnaround: SimTime,
+    pub ops: Vec<OpRecord>,
+    pub tasks: Vec<TaskRecord>,
+    /// Bytes that crossed the network (both directions, data + control).
+    pub net_bytes: Bytes,
+    /// Bytes stored per storage node at the end of the run.
+    pub stored: Vec<Bytes>,
+    /// Storage nodes whose stored bytes exceeded the platform capacity.
+    pub capacity_overflows: usize,
+    pub util: UtilReport,
+    /// Total simulation events processed (cost metric for §3.3).
+    pub events: u64,
+    /// Connection SYN retries (detailed fidelity only; 0 for the
+    /// predictor — one of the paper's named sources of real-system noise).
+    pub conn_retries: u64,
+}
+
+impl SimReport {
+    /// Makespan of one stage: last task end − first task start.
+    pub fn stage_time(&self, stage: u32) -> SimTime {
+        let xs: Vec<&TaskRecord> = self.tasks.iter().filter(|t| t.stage == stage).collect();
+        if xs.is_empty() {
+            return SimTime::ZERO;
+        }
+        let start = xs.iter().map(|t| t.start).min().unwrap();
+        let end = xs.iter().map(|t| t.end).max().unwrap();
+        end - start
+    }
+
+    pub fn n_stages(&self) -> u32 {
+        self.tasks.iter().map(|t| t.stage + 1).max().unwrap_or(0)
+    }
+
+    /// Total bytes currently stored across nodes.
+    pub fn stored_total(&self) -> Bytes {
+        Bytes(self.stored.iter().map(|b| b.as_u64()).sum())
+    }
+
+    /// Peak per-node stored bytes.
+    pub fn stored_max(&self) -> Bytes {
+        self.stored.iter().copied().max().unwrap_or(Bytes::ZERO)
+    }
+
+    /// Mean operation latency for reads or writes.
+    pub fn mean_op_latency(&self, writes: bool) -> SimTime {
+        let xs: Vec<u64> = self
+            .ops
+            .iter()
+            .filter(|o| o.is_write == writes)
+            .map(|o| o.latency().as_ns())
+            .collect();
+        if xs.is_empty() {
+            SimTime::ZERO
+        } else {
+            SimTime(xs.iter().sum::<u64>() / xs.len() as u64)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report_with_tasks(tasks: Vec<TaskRecord>) -> SimReport {
+        SimReport {
+            config_label: "t".into(),
+            turnaround: SimTime::from_ms(10),
+            ops: vec![],
+            tasks,
+            net_bytes: Bytes::ZERO,
+            stored: vec![Bytes::mb(1), Bytes::mb(3)],
+            capacity_overflows: 0,
+            util: UtilReport { manager_util: 0.0, manager_mean_qlen: 0.0, storage: vec![], nic: vec![] },
+            events: 0,
+            conn_retries: 0,
+        }
+    }
+
+    #[test]
+    fn stage_time_spans_first_start_to_last_end() {
+        let r = report_with_tasks(vec![
+            TaskRecord { task: 0, stage: 0, client: 0, start: SimTime::from_ms(1), end: SimTime::from_ms(5) },
+            TaskRecord { task: 1, stage: 0, client: 1, start: SimTime::from_ms(2), end: SimTime::from_ms(9) },
+            TaskRecord { task: 2, stage: 1, client: 0, start: SimTime::from_ms(9), end: SimTime::from_ms(10) },
+        ]);
+        assert_eq!(r.stage_time(0), SimTime::from_ms(8));
+        assert_eq!(r.stage_time(1), SimTime::from_ms(1));
+        assert_eq!(r.stage_time(7), SimTime::ZERO);
+        assert_eq!(r.n_stages(), 2);
+    }
+
+    #[test]
+    fn storage_aggregates() {
+        let r = report_with_tasks(vec![]);
+        assert_eq!(r.stored_total(), Bytes::mb(4));
+        assert_eq!(r.stored_max(), Bytes::mb(3));
+    }
+}

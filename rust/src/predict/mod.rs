@@ -1,0 +1,99 @@
+//! User-facing predictor façade.
+//!
+//! [`Predictor`] wraps the queue-based model: given a workload, a
+//! configuration and a platform (from system identification), it returns a
+//! [`Prediction`] with the turnaround estimate, per-stage breakdown, and
+//! the cost metrics the provisioning scenarios need (paper §3.2: cost =
+//! total CPU time = nodes × turnaround). It also reports the predictor's
+//! own wallclock cost so the §3.3 speedup claim can be measured.
+
+use crate::model::{simulate, Config, Platform, SimReport};
+use crate::util::units::SimTime;
+use crate::workload::Workload;
+use std::time::Instant;
+
+/// A performance prediction for one (workload, config) point.
+#[derive(Clone, Debug)]
+pub struct Prediction {
+    /// Predicted application turnaround.
+    pub turnaround: SimTime,
+    /// Predicted per-stage makespans.
+    pub stage_times: Vec<SimTime>,
+    /// Allocation cost in node-seconds: (hosts incl. manager) × turnaround.
+    pub cost_node_secs: f64,
+    /// Wallclock the predictor itself spent (for §3.3 speedup accounting).
+    pub predictor_wallclock_secs: f64,
+    /// Full simulation report (per-op records, utilization, …).
+    pub report: SimReport,
+}
+
+impl Prediction {
+    /// Cost per unit of performance (node-seconds per completed task) —
+    /// "the allocation that is most cost efficient (i.e., has lowest cost
+    /// per unit of performance)".
+    pub fn cost_efficiency(&self) -> f64 {
+        self.cost_node_secs / self.report.tasks.len().max(1) as f64
+    }
+}
+
+/// The performance predictor: a platform characterization plus the model.
+#[derive(Clone, Debug)]
+pub struct Predictor {
+    pub platform: Platform,
+}
+
+impl Predictor {
+    pub fn new(platform: Platform) -> Predictor {
+        Predictor { platform }
+    }
+
+    /// Predict the turnaround of `workload` under `config`.
+    pub fn predict(&self, workload: &Workload, config: &Config) -> Prediction {
+        let t0 = Instant::now();
+        let report = simulate(workload, config, &self.platform);
+        let wall = t0.elapsed().as_secs_f64();
+        let stage_times = (0..report.n_stages()).map(|s| report.stage_time(s)).collect();
+        let cost = config.n_hosts() as f64 * report.turnaround.as_secs_f64();
+        Prediction {
+            turnaround: report.turnaround,
+            stage_times,
+            cost_node_secs: cost,
+            predictor_wallclock_secs: wall,
+            report,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::Bytes;
+    use crate::workload::{FileSpec, TaskSpec};
+
+    fn tiny_workload() -> Workload {
+        let mut w = Workload::new("tiny");
+        let a = w.add_file(FileSpec::new("in", Bytes::mb(4)).prestaged());
+        let b = w.add_file(FileSpec::new("out", Bytes::mb(4)));
+        w.add_task(TaskSpec::new("t", 0).reads(a).writes(b));
+        w
+    }
+
+    #[test]
+    fn predicts_tiny_workload() {
+        let p = Predictor::new(Platform::paper_testbed());
+        let pred = p.predict(&tiny_workload(), &Config::dss(4));
+        assert!(pred.turnaround > SimTime::ZERO);
+        assert_eq!(pred.stage_times.len(), 1);
+        assert!(pred.cost_node_secs > 0.0);
+        assert_eq!(pred.report.tasks.len(), 1);
+        assert!(pred.cost_efficiency() > 0.0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let p = Predictor::new(Platform::paper_testbed());
+        let a = p.predict(&tiny_workload(), &Config::dss(4));
+        let b = p.predict(&tiny_workload(), &Config::dss(4));
+        assert_eq!(a.turnaround, b.turnaround);
+    }
+}

@@ -1,0 +1,256 @@
+//! PJRT runtime: load the AOT-compiled analytic scorer and run it from
+//! the rust hot path.
+//!
+//! `make artifacts` lowers the L2 JAX model (which calls the L1 Pallas
+//! kernel) to `artifacts/predictor.hlo.txt` once; this module loads the
+//! HLO text, compiles it on the PJRT CPU client, and executes it with
+//! concrete batches. Python never runs at this point — the binary is
+//! self-contained after artifacts are built.
+//!
+//! ABI (see python/compile/model.py): inputs `f32[8, B]` configs,
+//! `f32[S, 8]` stages, `f32[8]` platform; output tuple of one
+//! `f32[2, B]` (row 0 time, row 1 cost). B and S are static per artifact
+//! and read from the `.meta` sidecar.
+
+use crate::model::{Config, Platform};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// One stage descriptor for the analytic scorer (mirrors the python ABI).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageDesc {
+    /// One task per app node (true) or fixed task count (false).
+    pub tasks_per_app: bool,
+    pub tasks_fixed: f32,
+    pub read_mb: f32,
+    pub read_local_frac: f32,
+    pub write_mb: f32,
+    /// All writes fan into a single node (collocation/incast).
+    pub fan_single: bool,
+    pub compute_total_s: f32,
+}
+
+impl StageDesc {
+    fn encode(&self) -> [f32; 8] {
+        [
+            if self.tasks_per_app { 1.0 } else { 0.0 },
+            self.tasks_fixed,
+            self.read_mb,
+            self.read_local_frac,
+            self.write_mb,
+            if self.fan_single { 1.0 } else { 0.0 },
+            self.compute_total_s,
+            1.0, // active
+        ]
+    }
+}
+
+/// Encode a [`Config`] into one column of the config matrix.
+pub fn encode_config(cfg: &Config) -> [f32; 8] {
+    [
+        cfg.n_app as f32,
+        cfg.n_storage as f32,
+        cfg.stripe_width as f32,
+        cfg.replication as f32,
+        cfg.chunk_size.as_f64() as f32 / (1u64 << 20) as f32,
+        if cfg.collocated { 1.0 } else { 0.0 },
+        cfg.io_window as f32,
+        0.0,
+    ]
+}
+
+/// Encode a [`Platform`] into the scorer's platform vector.
+pub fn encode_platform(plat: &Platform) -> [f32; 8] {
+    [
+        plat.net_remote_bps as f32,
+        plat.net_local_bps as f32,
+        plat.storage_ns_per_byte_write as f32,
+        plat.storage_ns_per_byte_read as f32,
+        plat.manager_op.as_secs_f64() as f32,
+        plat.net_latency.as_secs_f64() as f32,
+        plat.storage_op.as_secs_f64() as f32,
+        0.0,
+    ]
+}
+
+/// A compiled, executable scorer.
+pub struct ScorerRuntime {
+    exe: xla::PjRtLoadedExecutable,
+    /// Static batch width of the artifact.
+    pub batch: usize,
+    /// Static stage capacity of the artifact.
+    pub stages: usize,
+}
+
+/// (time seconds, cost node-seconds) per configuration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Score {
+    pub time_s: f32,
+    pub cost_node_s: f32,
+}
+
+impl ScorerRuntime {
+    /// Load `artifacts/predictor.hlo.txt` (+ `.meta`) and compile it.
+    pub fn load(artifact: impl AsRef<Path>) -> Result<ScorerRuntime> {
+        let artifact = artifact.as_ref();
+        let meta_path = format!("{}.meta", artifact.display());
+        let meta = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {meta_path} (run `make artifacts`)"))?;
+        let mut batch = 0usize;
+        let mut stages = 0usize;
+        for line in meta.lines() {
+            let mut it = line.split_whitespace();
+            match (it.next(), it.next()) {
+                (Some("batch"), Some(v)) => batch = v.parse()?,
+                (Some("stages"), Some(v)) => stages = v.parse()?,
+                _ => {}
+            }
+        }
+        anyhow::ensure!(batch > 0 && stages > 0, "bad meta file {meta_path}");
+
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            artifact.to_str().context("non-utf8 artifact path")?,
+        )
+        .context("parsing HLO text (regenerate with `make artifacts`)")?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compiling artifact")?;
+        Ok(ScorerRuntime { exe, batch, stages })
+    }
+
+    /// Load from the default artifact location relative to the repo root.
+    pub fn load_default() -> Result<ScorerRuntime> {
+        ScorerRuntime::load("artifacts/predictor.hlo.txt")
+    }
+
+    /// Score configurations for a workflow described by `stage_descs`
+    /// (≤ `stages`). Returns one [`Score`] per input config; inputs
+    /// larger than the artifact batch are processed in batch-sized runs.
+    pub fn score(
+        &self,
+        configs: &[[f32; 8]],
+        stage_descs: &[StageDesc],
+        platform: &[f32; 8],
+    ) -> Result<Vec<Score>> {
+        anyhow::ensure!(
+            stage_descs.len() <= self.stages,
+            "workflow has {} stages, artifact supports {}",
+            stage_descs.len(),
+            self.stages
+        );
+        let mut out = Vec::with_capacity(configs.len());
+        for chunk in configs.chunks(self.batch) {
+            out.extend(self.score_one_batch(chunk, stage_descs, platform)?);
+        }
+        Ok(out)
+    }
+
+    fn score_one_batch(
+        &self,
+        configs: &[[f32; 8]],
+        stage_descs: &[StageDesc],
+        platform: &[f32; 8],
+    ) -> Result<Vec<Score>> {
+        debug_assert!(configs.len() <= self.batch);
+        // Column-major fill of the (8, B) matrix, zero-padded.
+        let b = self.batch;
+        let mut cfg_mat = vec![0f32; 8 * b];
+        for (j, col) in configs.iter().enumerate() {
+            for (i, &v) in col.iter().enumerate() {
+                cfg_mat[i * b + j] = v;
+            }
+        }
+        let mut stage_mat = vec![0f32; self.stages * 8];
+        for (s, d) in stage_descs.iter().enumerate() {
+            stage_mat[s * 8..s * 8 + 8].copy_from_slice(&d.encode());
+        }
+
+        let cfg_lit = xla::Literal::vec1(&cfg_mat).reshape(&[8, b as i64])?;
+        let stage_lit = xla::Literal::vec1(&stage_mat).reshape(&[self.stages as i64, 8])?;
+        let plat_lit = xla::Literal::vec1(&platform[..]);
+
+        let result = self.exe.execute::<xla::Literal>(&[cfg_lit, stage_lit, plat_lit])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?; // exported with return_tuple=True
+        let values = out.to_vec::<f32>()?; // (2, B) row-major
+        anyhow::ensure!(values.len() == 2 * b, "unexpected output size {}", values.len());
+        Ok(configs
+            .iter()
+            .enumerate()
+            .map(|(j, _)| Score { time_s: values[j], cost_node_s: values[b + j] })
+            .collect())
+    }
+}
+
+/// Describe a [`crate::workload::Workload`]'s stages for the scorer —
+/// aggregates per-stage I/O volumes out of the task list.
+pub fn describe_stages(wl: &crate::workload::Workload) -> Vec<StageDesc> {
+    use crate::workload::FileHint;
+    let n_stages = wl.n_stages() as usize;
+    let mut descs = vec![StageDesc::default(); n_stages];
+    let mut counts = vec![0u32; n_stages];
+    for t in &wl.tasks {
+        let s = t.stage as usize;
+        counts[s] += 1;
+        for &f in &t.reads {
+            let file = &wl.files[f];
+            descs[s].read_mb += file.size.as_f64() as f32 / (1u64 << 20) as f32;
+            if matches!(file.hint, FileHint::Local | FileHint::OnNode(_)) {
+                descs[s].read_local_frac += 1.0; // normalized below
+            }
+        }
+        for &f in &t.writes {
+            let file = &wl.files[f];
+            descs[s].write_mb += file.size.as_f64() as f32 / (1u64 << 20) as f32;
+            if matches!(file.hint, FileHint::OnNode(_)) {
+                descs[s].fan_single = true;
+            }
+        }
+        descs[s].compute_total_s += t.compute.as_secs_f64() as f32;
+    }
+    for (s, d) in descs.iter_mut().enumerate() {
+        let n = counts[s].max(1) as f32;
+        let n_reads: f32 = wl
+            .tasks
+            .iter()
+            .filter(|t| t.stage as usize == s)
+            .map(|t| t.reads.len() as f32)
+            .sum();
+        d.tasks_fixed = n;
+        d.read_mb /= n;
+        d.write_mb /= n;
+        d.read_local_frac = if n_reads > 0.0 { d.read_local_frac / n_reads } else { 0.0 };
+    }
+    descs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::Bytes;
+    use crate::workload::patterns::{reduce, PatternScale};
+
+    #[test]
+    fn encode_config_roundtrip_fields() {
+        let c = Config::partitioned(14, 5, Bytes::kb(256));
+        let e = encode_config(&c);
+        assert_eq!(e[0], 14.0);
+        assert_eq!(e[1], 5.0);
+        assert_eq!(e[4], 0.25);
+        assert_eq!(e[5], 0.0);
+    }
+
+    #[test]
+    fn describe_stages_aggregates() {
+        let wl = reduce(19, PatternScale::Medium, true);
+        let d = describe_stages(&wl);
+        assert_eq!(d.len(), 2);
+        // Stage 0: 19 producers, 100 MB in (local hint), 10 MB out to one node.
+        assert!((d[0].read_mb - 100.0).abs() < 1.0, "{}", d[0].read_mb);
+        assert!((d[0].write_mb - 10.0).abs() < 0.1);
+        assert!(d[0].fan_single, "collocated intermediates fan into one node");
+        assert!(d[0].read_local_frac > 0.9);
+        // Stage 1: the reducer reads 19 × 10 MB.
+        assert!((d[1].read_mb - 190.0).abs() < 1.0);
+    }
+}

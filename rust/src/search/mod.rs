@@ -1,0 +1,322 @@
+//! Configuration-space exploration — the purpose the predictor serves
+//! (paper §1: "enable selecting a good choice in a reasonable time" across
+//! provisioning, partitioning and per-subsystem configuration).
+//!
+//! Pipeline: enumerate the grid → **analytic prescreen** (one PJRT
+//! execution of the AOT artifact scores the whole grid; L1/L2) → refine
+//! the top candidates with the discrete-event predictor (L3) → report the
+//! answers to the paper's four user questions: best-performance
+//! configuration, lowest-cost allocation, best partitioning, and most
+//! cost-efficient point — plus the time/cost pareto front of Scenario II.
+
+pub mod anneal;
+
+use crate::model::Config;
+use crate::predict::{Prediction, Predictor};
+use crate::runtime::{encode_config, encode_platform, Score, ScorerRuntime, StageDesc};
+use crate::util::units::Bytes;
+use crate::workload::Workload;
+
+/// The decision space (paper §1 "The Problem"): provisioning ×
+/// partitioning × configuration.
+#[derive(Clone, Debug)]
+pub struct SearchSpace {
+    /// Candidate total allocation sizes (incl. the manager host).
+    pub allocations: Vec<usize>,
+    /// Chunk sizes to explore.
+    pub chunk_sizes: Vec<Bytes>,
+    /// Replication levels to explore.
+    pub replication: Vec<u32>,
+    /// Minimum storage nodes to consider per partitioning.
+    pub min_storage: usize,
+}
+
+impl SearchSpace {
+    /// Scenario I space: one fixed cluster, all partitionings × chunks.
+    pub fn fixed_cluster(total_nodes: usize, chunk_sizes: Vec<Bytes>) -> SearchSpace {
+        SearchSpace { allocations: vec![total_nodes], chunk_sizes, replication: vec![1], min_storage: 1 }
+    }
+
+    /// Scenario II space: several allocation sizes (paper: 11, 17, 20).
+    pub fn elastic(allocations: Vec<usize>, chunk_sizes: Vec<Bytes>) -> SearchSpace {
+        SearchSpace { allocations, chunk_sizes, replication: vec![1], min_storage: 1 }
+    }
+
+    /// Enumerate all candidate configurations.
+    pub fn enumerate(&self) -> Vec<Config> {
+        let mut out = Vec::new();
+        for &total in &self.allocations {
+            assert!(total >= 3, "need at least app + storage + manager");
+            let workers = total - 1; // manager takes one host
+            for n_app in 1..=(workers - self.min_storage) {
+                let n_storage = workers - n_app;
+                for &chunk in &self.chunk_sizes {
+                    for &r in &self.replication {
+                        if r as usize > n_storage {
+                            continue;
+                        }
+                        let cfg = Config::partitioned(n_app, n_storage, chunk).with_replication(r);
+                        out.push(cfg);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One evaluated candidate.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub config: Config,
+    /// Analytic prescreen score (None when no artifact is available).
+    pub prescreen: Option<Score>,
+    /// Discrete-event refinement (None if pruned).
+    pub refined: Option<Prediction>,
+}
+
+impl Candidate {
+    /// Best available time estimate (refined preferred).
+    pub fn time_s(&self) -> f64 {
+        self.refined
+            .as_ref()
+            .map(|p| p.turnaround.as_secs_f64())
+            .or(self.prescreen.map(|s| s.time_s as f64))
+            .unwrap_or(f64::INFINITY)
+    }
+
+    pub fn cost_node_s(&self) -> f64 {
+        self.refined
+            .as_ref()
+            .map(|p| p.cost_node_secs)
+            .or(self.prescreen.map(|s| s.cost_node_s as f64))
+            .unwrap_or(f64::INFINITY)
+    }
+}
+
+/// Search outcome: the paper's four questions, answered.
+#[derive(Debug)]
+pub struct SearchReport {
+    pub candidates: Vec<Candidate>,
+    /// Index of the fastest refined configuration.
+    pub best_time: usize,
+    /// Index of the cheapest refined configuration.
+    pub best_cost: usize,
+    /// Index of the most cost-efficient (lowest cost × time product).
+    pub best_efficiency: usize,
+    /// Pareto-optimal (time, cost) candidates, sorted by time.
+    pub pareto: Vec<usize>,
+    /// How many candidates the prescreen pruned before refinement.
+    pub pruned: usize,
+    pub wallclock_secs: f64,
+}
+
+/// The search engine.
+pub struct Searcher<'a> {
+    pub predictor: &'a Predictor,
+    /// AOT analytic scorer; when None every candidate is refined.
+    pub runtime: Option<&'a ScorerRuntime>,
+    /// Candidates refined with the discrete-event predictor.
+    pub refine_top_k: usize,
+}
+
+impl<'a> Searcher<'a> {
+    pub fn new(predictor: &'a Predictor) -> Searcher<'a> {
+        Searcher { predictor, runtime: None, refine_top_k: 12 }
+    }
+
+    pub fn with_runtime(mut self, rt: &'a ScorerRuntime) -> Searcher<'a> {
+        self.runtime = Some(rt);
+        self
+    }
+
+    pub fn with_top_k(mut self, k: usize) -> Searcher<'a> {
+        self.refine_top_k = k.max(1);
+        self
+    }
+
+    /// Explore `space` for a workload family: `workload_for(config)`
+    /// builds the concrete workload for a candidate (e.g. BLAST's task
+    /// count follows the app-node count). `stage_descs` describes the
+    /// family for the analytic prescreen.
+    pub fn search(
+        &self,
+        space: &SearchSpace,
+        stage_descs: &[StageDesc],
+        workload_for: impl Fn(&Config) -> Workload,
+    ) -> SearchReport {
+        let t0 = std::time::Instant::now();
+        let configs = space.enumerate();
+        assert!(!configs.is_empty(), "empty search space");
+
+        // --- analytic prescreen (one artifact execution) ---
+        let prescreen: Vec<Option<Score>> = match self.runtime {
+            Some(rt) => {
+                let cols: Vec<[f32; 8]> = configs.iter().map(encode_config).collect();
+                let plat = encode_platform(&self.predictor.platform);
+                match rt.score(&cols, stage_descs, &plat) {
+                    Ok(scores) => scores.into_iter().map(Some).collect(),
+                    Err(e) => {
+                        eprintln!("prescreen failed ({e}); refining everything");
+                        vec![None; configs.len()]
+                    }
+                }
+            }
+            None => vec![None; configs.len()],
+        };
+
+        // --- pick refinement set: union of top-K by time and by cost ---
+        let k = self.refine_top_k.min(configs.len());
+        let mut order_time: Vec<usize> = (0..configs.len()).collect();
+        let mut order_cost = order_time.clone();
+        let time_of = |i: usize| prescreen[i].map(|s| s.time_s).unwrap_or(0.0);
+        let cost_of = |i: usize| prescreen[i].map(|s| s.cost_node_s).unwrap_or(0.0);
+        order_time.sort_by(|&a, &b| time_of(a).partial_cmp(&time_of(b)).unwrap());
+        order_cost.sort_by(|&a, &b| cost_of(a).partial_cmp(&cost_of(b)).unwrap());
+        let mut refine: Vec<bool> = vec![false; configs.len()];
+        let all_prescreened = prescreen.iter().all(|p| p.is_some());
+        if all_prescreened {
+            for &i in order_time.iter().take(k).chain(order_cost.iter().take(k)) {
+                refine[i] = true;
+            }
+        } else {
+            refine.iter_mut().for_each(|r| *r = true);
+        }
+
+        // --- discrete-event refinement ---
+        let mut candidates: Vec<Candidate> = Vec::with_capacity(configs.len());
+        let mut pruned = 0;
+        for (i, cfg) in configs.into_iter().enumerate() {
+            let refined = if refine[i] {
+                let wl = workload_for(&cfg);
+                Some(self.predictor.predict(&wl, &cfg))
+            } else {
+                pruned += 1;
+                None
+            };
+            candidates.push(Candidate { config: cfg, prescreen: prescreen[i], refined });
+        }
+
+        // --- answers ---
+        let refined_idx: Vec<usize> =
+            (0..candidates.len()).filter(|&i| candidates[i].refined.is_some()).collect();
+        let best_by = |f: &dyn Fn(&Candidate) -> f64| {
+            *refined_idx
+                .iter()
+                .min_by(|&&a, &&b| f(&candidates[a]).partial_cmp(&f(&candidates[b])).unwrap())
+                .unwrap()
+        };
+        let best_time = best_by(&|c| c.time_s());
+        let best_cost = best_by(&|c| c.cost_node_s());
+        let best_efficiency = best_by(&|c| c.time_s() * c.cost_node_s());
+
+        // Pareto front over refined candidates.
+        let mut front: Vec<usize> = Vec::new();
+        for &i in &refined_idx {
+            let (t, c) = (candidates[i].time_s(), candidates[i].cost_node_s());
+            let dominated = refined_idx.iter().any(|&j| {
+                j != i
+                    && candidates[j].time_s() <= t
+                    && candidates[j].cost_node_s() <= c
+                    && (candidates[j].time_s() < t || candidates[j].cost_node_s() < c)
+            });
+            if !dominated {
+                front.push(i);
+            }
+        }
+        front.sort_by(|&a, &b| candidates[a].time_s().partial_cmp(&candidates[b].time_s()).unwrap());
+
+        SearchReport {
+            candidates,
+            best_time,
+            best_cost,
+            best_efficiency,
+            pareto: front,
+            pruned,
+            wallclock_secs: t0.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+/// Ranking agreement between prescreen and refined estimates over a
+/// report: fraction of refined candidate pairs ordered identically
+/// (Kendall-τ-style; used by the prescreen ablation bench).
+pub fn ranking_agreement(report: &SearchReport) -> f64 {
+    let xs: Vec<(f64, f64)> = report
+        .candidates
+        .iter()
+        .filter(|c| c.refined.is_some() && c.prescreen.is_some())
+        .map(|c| {
+            (c.prescreen.unwrap().time_s as f64, c.refined.as_ref().unwrap().turnaround.as_secs_f64())
+        })
+        .collect();
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    for i in 0..xs.len() {
+        for j in (i + 1)..xs.len() {
+            total += 1;
+            if ((xs[i].0 < xs[j].0) == (xs[i].1 < xs[j].1)) || (xs[i].0 == xs[j].0) {
+                agree += 1;
+            }
+        }
+    }
+    if total == 0 {
+        1.0
+    } else {
+        agree as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Platform;
+    use crate::workload::blast::{blast, BlastParams};
+
+    #[test]
+    fn space_enumeration_counts() {
+        let s = SearchSpace::fixed_cluster(20, vec![Bytes::kb(256), Bytes::mb(1)]);
+        // 19 workers → n_app 1..18 → 18 partitionings × 2 chunks.
+        assert_eq!(s.enumerate().len(), 36);
+        let e = SearchSpace::elastic(vec![11, 17, 20], vec![Bytes::mb(1)]);
+        assert_eq!(e.enumerate().len(), 9 + 15 + 18);
+    }
+
+    #[test]
+    fn search_without_runtime_refines_everything() {
+        let predictor = Predictor::new(Platform::paper_testbed());
+        let searcher = Searcher::new(&predictor);
+        let space = SearchSpace {
+            allocations: vec![8],
+            chunk_sizes: vec![Bytes::mb(1)],
+            replication: vec![1],
+            min_storage: 1,
+        };
+        let params = BlastParams { queries: 20, ..Default::default() };
+        let report = searcher.search(&space, &[], |cfg| blast(cfg.n_app, &params));
+        assert_eq!(report.pruned, 0);
+        assert!(report.candidates.iter().all(|c| c.refined.is_some()));
+        assert!(!report.pareto.is_empty());
+        // Best-time config is faster than the 1-app edge.
+        let edge = report.candidates.iter().find(|c| c.config.n_app == 1).unwrap();
+        assert!(report.candidates[report.best_time].time_s() <= edge.time_s());
+    }
+
+    #[test]
+    fn pareto_front_is_nondominated() {
+        let predictor = Predictor::new(Platform::paper_testbed());
+        let searcher = Searcher::new(&predictor);
+        let space = SearchSpace::elastic(vec![6, 10], vec![Bytes::mb(1)]);
+        let params = BlastParams { queries: 20, ..Default::default() };
+        let report = searcher.search(&space, &[], |cfg| blast(cfg.n_app, &params));
+        for &i in &report.pareto {
+            for &j in &report.pareto {
+                if i != j {
+                    let dom = report.candidates[j].time_s() < report.candidates[i].time_s()
+                        && report.candidates[j].cost_node_s() < report.candidates[i].cost_node_s();
+                    assert!(!dom, "pareto member dominated");
+                }
+            }
+        }
+    }
+}

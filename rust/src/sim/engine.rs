@@ -1,0 +1,222 @@
+//! Virtual clock + event queue.
+//!
+//! Events are an application-defined type `Ev`; the application state
+//! implements [`SimState::handle`], which receives each event in
+//! timestamp order (FIFO among equal timestamps, enforced by a sequence
+//! number) together with a [`Scheduler`] for scheduling follow-up events.
+
+use crate::util::units::SimTime;
+use std::collections::BinaryHeap;
+
+/// An event queue entry: min-heap by (time, seq).
+struct Entry<Ev> {
+    time: SimTime,
+    seq: u64,
+    ev: Ev,
+}
+
+impl<Ev> PartialEq for Entry<Ev> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<Ev> Eq for Entry<Ev> {}
+impl<Ev> PartialOrd for Entry<Ev> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<Ev> Ord for Entry<Ev> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // BinaryHeap is a max-heap: reverse for earliest-first.
+        other.time.cmp(&self.time).then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Schedules future events; handed to [`SimState::handle`].
+pub struct Scheduler<Ev> {
+    heap: BinaryHeap<Entry<Ev>>,
+    now: SimTime,
+    seq: u64,
+    processed: u64,
+}
+
+impl<Ev> Scheduler<Ev> {
+    pub fn new() -> Self {
+        Scheduler { heap: BinaryHeap::new(), now: SimTime::ZERO, seq: 0, processed: 0 }
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Total events processed so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Events currently pending.
+    pub fn pending(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Schedule `ev` at absolute time `t` (must not be in the past).
+    pub fn at(&mut self, t: SimTime, ev: Ev) {
+        debug_assert!(t >= self.now, "scheduling into the past: {t} < {}", self.now);
+        self.seq += 1;
+        self.heap.push(Entry { time: t.max(self.now), seq: self.seq, ev });
+    }
+
+    /// Schedule `ev` after a delay `dt`.
+    pub fn after(&mut self, dt: SimTime, ev: Ev) {
+        self.at(SimTime(self.now.0 + dt.0), ev);
+    }
+
+    /// Schedule `ev` immediately (at the current time, after already
+    /// pending same-time events).
+    pub fn immediately(&mut self, ev: Ev) {
+        self.at(self.now, ev);
+    }
+
+    fn pop(&mut self) -> Option<(SimTime, Ev)> {
+        self.heap.pop().map(|e| {
+            debug_assert!(e.time >= self.now, "event queue went backwards");
+            self.now = e.time;
+            self.processed += 1;
+            (e.time, e.ev)
+        })
+    }
+}
+
+impl<Ev> Default for Scheduler<Ev> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Application state driven by the engine.
+pub trait SimState {
+    type Ev;
+    /// Handle one event at virtual time `now`. Follow-ups go through `sched`.
+    fn handle(&mut self, sched: &mut Scheduler<Self::Ev>, now: SimTime, ev: Self::Ev);
+}
+
+/// The engine: owns the scheduler and the application state.
+pub struct Simulation<S: SimState> {
+    pub sched: Scheduler<S::Ev>,
+    pub state: S,
+}
+
+impl<S: SimState> Simulation<S> {
+    pub fn new(state: S) -> Self {
+        Simulation { sched: Scheduler::new(), state }
+    }
+
+    /// Run until the event queue drains (or `max_events` is hit, as a
+    /// runaway guard). Returns the final virtual time.
+    pub fn run(&mut self) -> SimTime {
+        self.run_capped(u64::MAX)
+    }
+
+    pub fn run_capped(&mut self, max_events: u64) -> SimTime {
+        let mut n = 0u64;
+        while let Some((t, ev)) = self.sched.pop() {
+            self.state.handle(&mut self.sched, t, ev);
+            n += 1;
+            if n >= max_events {
+                panic!("simulation exceeded {max_events} events — livelock?");
+            }
+        }
+        self.sched.now()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Recorder {
+        seen: Vec<(u64, u32)>,
+        chain_left: u32,
+    }
+
+    impl SimState for Recorder {
+        type Ev = u32;
+        fn handle(&mut self, sched: &mut Scheduler<u32>, now: SimTime, ev: u32) {
+            self.seen.push((now.as_ns(), ev));
+            if ev == 99 && self.chain_left > 0 {
+                self.chain_left -= 1;
+                sched.after(SimTime::from_ns(10), 99);
+            }
+        }
+    }
+
+    #[test]
+    fn events_fire_in_time_order() {
+        let mut sim = Simulation::new(Recorder { seen: vec![], chain_left: 0 });
+        sim.sched.at(SimTime::from_ns(30), 3);
+        sim.sched.at(SimTime::from_ns(10), 1);
+        sim.sched.at(SimTime::from_ns(20), 2);
+        let end = sim.run();
+        assert_eq!(sim.state.seen, vec![(10, 1), (20, 2), (30, 3)]);
+        assert_eq!(end.as_ns(), 30);
+        assert_eq!(sim.sched.processed(), 3);
+    }
+
+    #[test]
+    fn equal_timestamps_are_fifo() {
+        let mut sim = Simulation::new(Recorder { seen: vec![], chain_left: 0 });
+        for i in 0..100u32 {
+            sim.sched.at(SimTime::from_ns(5), i);
+        }
+        sim.run();
+        let evs: Vec<u32> = sim.state.seen.iter().map(|&(_, e)| e).collect();
+        assert_eq!(evs, (0..100).collect::<Vec<u32>>(), "same-time events keep schedule order");
+    }
+
+    #[test]
+    fn chained_events_advance_clock() {
+        let mut sim = Simulation::new(Recorder { seen: vec![], chain_left: 5 });
+        sim.sched.at(SimTime::ZERO, 99);
+        let end = sim.run();
+        assert_eq!(end.as_ns(), 50);
+        assert_eq!(sim.state.seen.len(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "livelock")]
+    fn runaway_guard_trips() {
+        struct Forever;
+        impl SimState for Forever {
+            type Ev = ();
+            fn handle(&mut self, sched: &mut Scheduler<()>, _now: SimTime, _ev: ()) {
+                sched.immediately(());
+            }
+        }
+        let mut sim = Simulation::new(Forever);
+        sim.sched.at(SimTime::ZERO, ());
+        sim.run_capped(1000);
+    }
+
+    #[test]
+    fn immediately_runs_at_now_in_order() {
+        struct S {
+            log: Vec<&'static str>,
+        }
+        impl SimState for S {
+            type Ev = &'static str;
+            fn handle(&mut self, sched: &mut Scheduler<&'static str>, _now: SimTime, ev: &'static str) {
+                self.log.push(ev);
+                if ev == "first" {
+                    sched.immediately("second");
+                }
+            }
+        }
+        let mut sim = Simulation::new(S { log: vec![] });
+        sim.sched.at(SimTime::from_ns(7), "first");
+        sim.run();
+        assert_eq!(sim.state.log, vec!["first", "second"]);
+        assert_eq!(sim.sched.now().as_ns(), 7);
+    }
+}

@@ -1,0 +1,18 @@
+//! Discrete-event simulation core.
+//!
+//! The paper's predictor is "a discrete-event simulator" instantiating "a
+//! queue-based storage system model" (§2.3–2.4). This module provides the
+//! domain-independent machinery: a virtual clock and event queue
+//! ([`engine`]) and FIFO single-server service stations ([`station`]) —
+//! the "queues" every system component (manager, storage, client, NIC
+//! in/out) is modeled as.
+//!
+//! Both the coarse predictor (`model/`) and the high-fidelity testbed
+//! (`testbed/`) run on this engine; they differ only in the protocol
+//! detail of their event handlers (DESIGN.md §4).
+
+pub mod engine;
+pub mod station;
+
+pub use engine::{Scheduler, SimState, Simulation};
+pub use station::Station;

@@ -1,0 +1,204 @@
+//! FIFO single-server service station — the "queue" of the queue-based model.
+//!
+//! Every system component in the paper's model (manager, storage, client,
+//! and each NIC's in/out side) "is modeled as a service that takes
+//! requests from its queue". [`Station`] implements that: items arrive
+//! with a service time; at most one is in service; the rest wait FIFO.
+//!
+//! The station does not own the clock — the caller schedules a completion
+//! event at the time `arrive`/`complete` return, keeping the station
+//! reusable across event types. Utilization and queueing statistics are
+//! tracked for reports and model debugging (the paper's §5 "detect
+//! performance anomalies" use case).
+
+use crate::util::units::SimTime;
+use std::collections::VecDeque;
+
+/// Accumulated station statistics.
+#[derive(Clone, Debug, Default)]
+pub struct StationStats {
+    pub arrivals: u64,
+    pub departures: u64,
+    /// Integral of busy state over time (ns of busy time).
+    pub busy_ns: u64,
+    /// Integral of queue length over time (ns·items), excluding in-service.
+    pub qlen_ns: u128,
+    /// Max queue length observed.
+    pub max_qlen: usize,
+    last_change_ns: u64,
+}
+
+impl StationStats {
+    #[inline(always)]
+    fn advance(&mut self, now: SimTime, busy: bool, qlen: usize) {
+        let dt = now.as_ns().saturating_sub(self.last_change_ns);
+        if dt != 0 {
+            if busy {
+                self.busy_ns += dt;
+            }
+            if qlen != 0 {
+                self.qlen_ns += dt as u128 * qlen as u128;
+            }
+            self.last_change_ns = now.as_ns();
+        }
+        if qlen > self.max_qlen {
+            self.max_qlen = qlen;
+        }
+    }
+
+    /// Utilization over `[0, horizon]`.
+    pub fn utilization(&self, horizon: SimTime) -> f64 {
+        if horizon.as_ns() == 0 {
+            0.0
+        } else {
+            self.busy_ns as f64 / horizon.as_ns() as f64
+        }
+    }
+
+    /// Time-averaged waiting-queue length over `[0, horizon]`.
+    pub fn mean_qlen(&self, horizon: SimTime) -> f64 {
+        if horizon.as_ns() == 0 {
+            0.0
+        } else {
+            self.qlen_ns as f64 / horizon.as_ns() as f64
+        }
+    }
+}
+
+/// A FIFO single-server queue of items `T`.
+#[derive(Debug)]
+pub struct Station<T> {
+    in_service: Option<T>,
+    waiting: VecDeque<(T, SimTime)>,
+    pub stats: StationStats,
+}
+
+impl<T> Default for Station<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Station<T> {
+    pub fn new() -> Self {
+        Station { in_service: None, waiting: VecDeque::new(), stats: StationStats::default() }
+    }
+
+    pub fn is_busy(&self) -> bool {
+        self.in_service.is_some()
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    /// An item arrives needing `svc` service time. If the server is idle
+    /// it enters service and the completion time is returned — the caller
+    /// must schedule a completion event for it. Otherwise it waits.
+    #[must_use = "schedule a completion event when Some(t) is returned"]
+    #[inline]
+    pub fn arrive(&mut self, now: SimTime, item: T, svc: SimTime) -> Option<SimTime> {
+        self.stats.advance(now, self.is_busy(), self.waiting.len());
+        self.stats.arrivals += 1;
+        if self.in_service.is_none() {
+            self.in_service = Some(item);
+            Some(now + svc)
+        } else {
+            self.waiting.push_back((item, svc));
+            None
+        }
+    }
+
+    /// The in-service item completes. Returns it, plus the completion time
+    /// of the next item if one starts service (caller schedules it).
+    #[must_use = "schedule the next completion when the second field is Some"]
+    #[inline]
+    pub fn complete(&mut self, now: SimTime) -> (T, Option<SimTime>) {
+        self.stats.advance(now, true, self.waiting.len());
+        self.stats.departures += 1;
+        let done = self.in_service.take().expect("complete() on idle station");
+        let next = self.waiting.pop_front().map(|(item, svc)| {
+            self.in_service = Some(item);
+            now + svc
+        });
+        (done, next)
+    }
+
+    /// Finalize stats bookkeeping at the end of a run.
+    pub fn finish(&mut self, now: SimTime) {
+        self.stats.advance(now, self.is_busy(), self.waiting.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ns(x: u64) -> SimTime {
+        SimTime::from_ns(x)
+    }
+
+    #[test]
+    fn idle_arrival_starts_service() {
+        let mut st: Station<&str> = Station::new();
+        let done = st.arrive(ns(100), "a", ns(50));
+        assert_eq!(done, Some(ns(150)));
+        assert!(st.is_busy());
+        assert_eq!(st.queue_len(), 0);
+    }
+
+    #[test]
+    fn busy_arrival_queues_fifo() {
+        let mut st: Station<u32> = Station::new();
+        assert!(st.arrive(ns(0), 1, ns(10)).is_some());
+        assert!(st.arrive(ns(1), 2, ns(10)).is_none());
+        assert!(st.arrive(ns(2), 3, ns(5)).is_none());
+        assert_eq!(st.queue_len(), 2);
+
+        let (done, next) = st.complete(ns(10));
+        assert_eq!(done, 1);
+        assert_eq!(next, Some(ns(20))); // item 2, svc 10, starting at 10
+        let (done, next) = st.complete(ns(20));
+        assert_eq!(done, 2);
+        assert_eq!(next, Some(ns(25))); // item 3, svc 5
+        let (done, next) = st.complete(ns(25));
+        assert_eq!(done, 3);
+        assert_eq!(next, None);
+        assert!(!st.is_busy());
+    }
+
+    #[test]
+    #[should_panic(expected = "idle station")]
+    fn completing_idle_station_panics() {
+        let mut st: Station<u32> = Station::new();
+        let _ = st.complete(ns(1));
+    }
+
+    #[test]
+    fn utilization_accounts_busy_time() {
+        let mut st: Station<u32> = Station::new();
+        // busy [0,10) and [20,30), idle elsewhere, horizon 40.
+        let t = st.arrive(ns(0), 1, ns(10)).unwrap();
+        let _ = st.complete(t);
+        let t = st.arrive(ns(20), 2, ns(10)).unwrap();
+        let _ = st.complete(t);
+        st.finish(ns(40));
+        assert!((st.stats.utilization(ns(40)) - 0.5).abs() < 1e-9);
+        assert_eq!(st.stats.arrivals, 2);
+        assert_eq!(st.stats.departures, 2);
+    }
+
+    #[test]
+    fn queue_length_integral() {
+        let mut st: Station<u32> = Station::new();
+        let _ = st.arrive(ns(0), 1, ns(100)).unwrap();
+        assert!(st.arrive(ns(0), 2, ns(100)).is_none()); // waits [0,100)
+        let (_, next) = st.complete(ns(100));
+        assert!(next.is_some());
+        let _ = st.complete(ns(200));
+        st.finish(ns(200));
+        // one waiter for 100ns over a 200ns horizon -> mean qlen 0.5
+        assert!((st.stats.mean_qlen(ns(200)) - 0.5).abs() < 1e-9);
+        assert_eq!(st.stats.max_qlen, 1);
+    }
+}

@@ -1,0 +1,47 @@
+//! Spawn a whole store (manager + storage nodes) in-process on loopback —
+//! the deployment harness for tests, system identification, and the
+//! end-to-end example.
+
+use crate::store::client::StoreClient;
+use crate::store::manager::Manager;
+use crate::store::node::StorageNode;
+use anyhow::Result;
+
+/// A running cluster. Dropping it shuts everything down.
+pub struct Cluster {
+    pub manager: Manager,
+    pub nodes: Vec<StorageNode>,
+}
+
+impl Cluster {
+    /// Start a manager and `n` storage nodes.
+    pub fn start(n: usize) -> Result<Cluster> {
+        let manager = Manager::start()?;
+        let nodes: Result<Vec<StorageNode>> =
+            (0..n).map(|_| StorageNode::start(&manager.addr)).collect();
+        Ok(Cluster { manager, nodes: nodes? })
+    }
+
+    /// A new client connected to this cluster.
+    pub fn client(&self) -> Result<StoreClient> {
+        StoreClient::connect(&self.manager.addr)
+    }
+
+    /// Total bytes stored across all nodes.
+    pub fn stored_total(&self) -> u64 {
+        self.nodes.iter().map(|n| n.stored_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cluster_starts_and_registers() {
+        let cl = Cluster::start(4).unwrap();
+        assert_eq!(cl.manager.node_count(), 4);
+        let c = cl.client().unwrap();
+        assert_eq!(c.n_nodes(), 4);
+    }
+}

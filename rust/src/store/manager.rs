@@ -1,0 +1,250 @@
+//! The metadata manager: "maintains the stored files' metadata and system
+//! state … implements data placement policies by returning free chunks
+//! when requested by write operations, and keeps track of file to chunk
+//! mapping and chunk placement" (paper §2.4).
+
+use crate::store::wire::{self, op, Dec, Enc};
+use anyhow::Result;
+use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Metadata of one file.
+#[derive(Clone, Debug, Default)]
+struct FileMeta {
+    size: u64,
+    chunk_size: u64,
+    /// Replica group (node ids) per chunk.
+    chunks: Vec<Vec<u32>>,
+    committed: bool,
+}
+
+#[derive(Default)]
+struct State {
+    nodes: Vec<String>, // node_id -> addr
+    files: HashMap<String, FileMeta>,
+    rr_cursor: usize,
+}
+
+/// Handle to a running manager server.
+pub struct Manager {
+    pub addr: String,
+    state: Arc<Mutex<State>>,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl Manager {
+    /// Start a manager on an ephemeral loopback port.
+    pub fn start() -> Result<Manager> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?.to_string();
+        let state = Arc::new(Mutex::new(State::default()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let (state2, stop2) = (state.clone(), stop.clone());
+        let accept_thread = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stop2.load(Ordering::Relaxed) {
+                    break;
+                }
+                match conn {
+                    Ok(stream) => {
+                        let st = state2.clone();
+                        std::thread::spawn(move || serve_conn(stream, st));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(Manager { addr, state, stop, accept_thread: Some(accept_thread) })
+    }
+
+    /// Number of registered storage nodes.
+    pub fn node_count(&self) -> usize {
+        self.state.lock().unwrap().nodes.len()
+    }
+
+    /// Stored-file names (diagnostics).
+    pub fn file_names(&self) -> Vec<String> {
+        self.state.lock().unwrap().files.keys().cloned().collect()
+    }
+}
+
+impl Drop for Manager {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Poke the listener so accept() returns.
+        let _ = TcpStream::connect(&self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn serve_conn(mut stream: TcpStream, state: Arc<Mutex<State>>) {
+    let _ = stream.set_nodelay(true);
+    loop {
+        let msg = match wire::read_msg(&mut stream) {
+            Ok(m) => m,
+            Err(_) => return, // peer closed
+        };
+        let resp = handle(&msg, &state).unwrap_or_else(|e| wire::err_resp(&e.to_string()));
+        if wire::write_msg(&mut stream, &resp).is_err() {
+            return;
+        }
+    }
+}
+
+fn handle(msg: &[u8], state: &Arc<Mutex<State>>) -> Result<Vec<u8>> {
+    let opcode = msg[0];
+    let mut d = Dec::new(&msg[1..]);
+    let mut st = state.lock().unwrap();
+    match opcode {
+        op::REGISTER => {
+            let addr = d.str()?;
+            let id = st.nodes.len() as u32;
+            st.nodes.push(addr);
+            Ok(Enc::new(op::REGISTER).u32(id).finish())
+        }
+        op::NODES => {
+            let mut e = Enc::new(op::NODES).u32(st.nodes.len() as u32);
+            for a in &st.nodes {
+                e = e.str(a);
+            }
+            Ok(e.finish())
+        }
+        op::ALLOC => {
+            // file, size, chunk_size, replication, placement{0:rr stripe | 1:onnode node}
+            let file = d.str()?;
+            let size = d.u64()?;
+            let chunk_size = d.u64()?;
+            let repl = d.u32()?.max(1);
+            let ptag = d.u8()?;
+            let parg = d.u32()?;
+            let n = st.nodes.len() as u32;
+            anyhow::ensure!(n > 0, "no storage nodes registered");
+            anyhow::ensure!(repl <= n, "replication {repl} exceeds {n} nodes");
+            if let Some(f) = st.files.get(&file) {
+                anyhow::ensure!(!f.committed, "file {file} already committed (single-writer)");
+            }
+            let n_chunks = if size == 0 { 1 } else { size.div_ceil(chunk_size.max(1)) };
+            let stripe: Vec<u32> = match ptag {
+                0 => {
+                    let w = parg.clamp(1, n);
+                    let start = st.rr_cursor as u32 % n;
+                    st.rr_cursor += 1;
+                    (0..w).map(|k| (start + k) % n).collect()
+                }
+                1 => vec![parg % n],
+                t => anyhow::bail!("bad placement tag {t}"),
+            };
+            let chunks: Vec<Vec<u32>> = (0..n_chunks)
+                .map(|i| {
+                    let primary = stripe[(i % stripe.len() as u64) as usize];
+                    (0..repl).map(|k| (primary + k) % n).collect()
+                })
+                .collect();
+            let meta = FileMeta { size, chunk_size, chunks: chunks.clone(), committed: false };
+            st.files.insert(file, meta);
+            let mut e = Enc::new(op::ALLOC).u32(chunks.len() as u32);
+            for g in &chunks {
+                e = e.u32_list(g);
+            }
+            Ok(e.finish())
+        }
+        op::COMMIT => {
+            let file = d.str()?;
+            let f = st.files.get_mut(&file).ok_or_else(|| anyhow::anyhow!("unknown file {file}"))?;
+            f.committed = true;
+            Ok(Enc::new(op::COMMIT).finish())
+        }
+        op::LOOKUP => {
+            let file = d.str()?;
+            let f = st.files.get(&file).ok_or_else(|| anyhow::anyhow!("unknown file {file}"))?;
+            anyhow::ensure!(f.committed, "file {file} not committed");
+            let mut e = Enc::new(op::LOOKUP).u64(f.size).u64(f.chunk_size).u32(f.chunks.len() as u32);
+            for g in &f.chunks {
+                e = e.u32_list(g);
+            }
+            Ok(e.finish())
+        }
+        o => anyhow::bail!("manager: bad opcode {o}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::wire::call;
+
+    #[test]
+    fn register_and_alloc_roundrobin() {
+        let m = Manager::start().unwrap();
+        let mut c = TcpStream::connect(&m.addr).unwrap();
+        for i in 0..3 {
+            let r = call(&mut c, Enc::new(op::REGISTER).str(&format!("127.0.0.1:{}", 9000 + i)).finish()).unwrap();
+            assert_eq!(Dec::new(&r[1..]).u32().unwrap(), i);
+        }
+        assert_eq!(m.node_count(), 3);
+
+        // Alloc 5 chunks, stripe 2, repl 2.
+        let r = call(
+            &mut c,
+            Enc::new(op::ALLOC).str("f").u64(5 << 20).u64(1 << 20).u32(2).u8(0).u32(2).finish(),
+        )
+        .unwrap();
+        let mut d = Dec::new(&r[1..]);
+        let n_chunks = d.u32().unwrap();
+        assert_eq!(n_chunks, 5);
+        let g0 = d.u32_list().unwrap();
+        assert_eq!(g0.len(), 2, "replica group size");
+        let g1 = d.u32_list().unwrap();
+        assert_ne!(g0[0], g1[0], "stripe alternates primaries");
+    }
+
+    #[test]
+    fn lookup_requires_commit() {
+        let m = Manager::start().unwrap();
+        let mut c = TcpStream::connect(&m.addr).unwrap();
+        call(&mut c, Enc::new(op::REGISTER).str("x").finish()).unwrap();
+        call(&mut c, Enc::new(op::ALLOC).str("f").u64(10).u64(1 << 20).u32(1).u8(0).u32(1).finish()).unwrap();
+        assert!(call(&mut c, Enc::new(op::LOOKUP).str("f").finish()).is_err());
+        call(&mut c, Enc::new(op::COMMIT).str("f").finish()).unwrap();
+        let r = call(&mut c, Enc::new(op::LOOKUP).str("f").finish()).unwrap();
+        let mut d = Dec::new(&r[1..]);
+        assert_eq!(d.u64().unwrap(), 10);
+    }
+
+    #[test]
+    fn double_write_rejected() {
+        let m = Manager::start().unwrap();
+        let mut c = TcpStream::connect(&m.addr).unwrap();
+        call(&mut c, Enc::new(op::REGISTER).str("x").finish()).unwrap();
+        let alloc =
+            || Enc::new(op::ALLOC).str("f").u64(10).u64(1 << 20).u32(1).u8(0).u32(1).finish();
+        call(&mut c, alloc()).unwrap();
+        call(&mut c, Enc::new(op::COMMIT).str("f").finish()).unwrap();
+        assert!(call(&mut c, alloc()).is_err(), "single-writer discipline");
+    }
+
+    #[test]
+    fn onnode_placement_pins_chunks() {
+        let m = Manager::start().unwrap();
+        let mut c = TcpStream::connect(&m.addr).unwrap();
+        for i in 0..4 {
+            call(&mut c, Enc::new(op::REGISTER).str(&format!("n{i}")).finish()).unwrap();
+        }
+        let r = call(
+            &mut c,
+            Enc::new(op::ALLOC).str("f").u64(3 << 20).u64(1 << 20).u32(1).u8(1).u32(2).finish(),
+        )
+        .unwrap();
+        let mut d = Dec::new(&r[1..]);
+        let n = d.u32().unwrap();
+        for _ in 0..n {
+            assert_eq!(d.u32_list().unwrap(), vec![2]);
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! A real distributed object store — the architecture of §2.2 over actual
+//! TCP sockets.
+//!
+//! This is the in-tree stand-in for MosaStore: a centralized metadata
+//! **manager**, RAM-backed **storage nodes**, and a client-side system
+//! access interface (**SAI**) that stripes files into chunks, replicates
+//! them (chained), and implements exactly the read/write protocols the
+//! model simulates (alloc → chunk puts → commit; lookup → chunk gets).
+//!
+//! It exists for three reasons:
+//! 1. **System identification** (paper §2.5) needs a real system to probe:
+//!    `ident/` runs its throughput/0-size/read-write benchmarks against
+//!    this store over loopback.
+//! 2. **Protocol credibility**: the simulated protocol is the same state
+//!    machine that demonstrably works over real sockets (`store_e2e`
+//!    integration tests move real bytes).
+//! 3. **End-to-end driver**: `examples/blast_provisioning.rs` replays a
+//!    scaled-down BLAST workload against this store and compares wallclock
+//!    against the predictor (§3.3's 200×–2000× resource claim).
+//!
+//! Deliberately synchronous: one OS thread per connection (tokio is not
+//! available offline, and at 20-node scale threads are simpler and as
+//! fast over loopback).
+
+pub mod wire;
+pub mod manager;
+pub mod node;
+pub mod client;
+pub mod cluster;
+
+pub use client::StoreClient;
+pub use cluster::Cluster;
+
+/// Placement policy requested by the client at alloc time (mirrors
+/// [`crate::workload::FileHint`] + the system-wide default).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StorePlacement {
+    /// Round-robin stripe of the given width.
+    RoundRobin { stripe: u32 },
+    /// All chunks on one node.
+    OnNode { node: u32 },
+}

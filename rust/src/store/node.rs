@@ -1,0 +1,186 @@
+//! A storage node: stores chunks in RAM (the paper's RAMdisk-backed
+//! deployment) and implements chained replication — "the storage component
+//! is responsible for storing and replicating data chunks" (§2.3).
+
+use crate::store::wire::{self, op, Dec, Enc};
+use anyhow::Result;
+use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type ChunkKey = (String, u32);
+
+#[derive(Default)]
+struct Store {
+    chunks: HashMap<ChunkKey, Vec<u8>>,
+    bytes: u64,
+}
+
+/// Handle to a running storage node.
+pub struct StorageNode {
+    pub addr: String,
+    pub id: u32,
+    store: Arc<Mutex<Store>>,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl StorageNode {
+    /// Start a node on an ephemeral port and register with the manager.
+    pub fn start(manager_addr: &str) -> Result<StorageNode> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?.to_string();
+
+        // Register with the manager.
+        let mut m = TcpStream::connect(manager_addr)?;
+        m.set_nodelay(true)?;
+        let resp = wire::call(&mut m, Enc::new(op::REGISTER).str(&addr).finish())?;
+        let id = Dec::new(&resp[1..]).u32()?;
+
+        let store = Arc::new(Mutex::new(Store::default()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let (store2, stop2) = (store.clone(), stop.clone());
+        let accept_thread = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stop2.load(Ordering::Relaxed) {
+                    break;
+                }
+                match conn {
+                    Ok(stream) => {
+                        let st = store2.clone();
+                        std::thread::spawn(move || serve_conn(stream, st));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(StorageNode { addr, id, store, stop, accept_thread: Some(accept_thread) })
+    }
+
+    /// Bytes currently stored (the §2.4 "storage used" report).
+    pub fn stored_bytes(&self) -> u64 {
+        self.store.lock().unwrap().bytes
+    }
+
+    pub fn chunk_count(&self) -> usize {
+        self.store.lock().unwrap().chunks.len()
+    }
+}
+
+impl Drop for StorageNode {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(&self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn serve_conn(mut stream: TcpStream, store: Arc<Mutex<Store>>) {
+    let _ = stream.set_nodelay(true);
+    loop {
+        let msg = match wire::read_msg(&mut stream) {
+            Ok(m) => m,
+            Err(_) => return,
+        };
+        let resp = handle(&msg, &store).unwrap_or_else(|e| wire::err_resp(&e.to_string()));
+        if wire::write_msg(&mut stream, &resp).is_err() {
+            return;
+        }
+    }
+}
+
+fn handle(msg: &[u8], store: &Arc<Mutex<Store>>) -> Result<Vec<u8>> {
+    let opcode = msg[0];
+    let mut d = Dec::new(&msg[1..]);
+    match opcode {
+        op::PUT => {
+            // file, chunk_idx, chain (addrs of remaining replicas), data
+            let file = d.str()?;
+            let chunk = d.u32()?;
+            let n_chain = d.u32()? as usize;
+            let chain: Vec<String> = (0..n_chain).map(|_| d.str()).collect::<Result<_>>()?;
+            let data = d.bytes()?.to_vec();
+            {
+                let mut st = store.lock().unwrap();
+                st.bytes += data.len() as u64;
+                st.chunks.insert((file.clone(), chunk), data.clone());
+            }
+            // Chained replication: forward before acking, so the ack means
+            // the whole chain stored (same semantics the model simulates).
+            if let Some((next, rest)) = chain.split_first() {
+                let mut s = TcpStream::connect(next)?;
+                s.set_nodelay(true)?;
+                let mut e = Enc::new(op::PUT).str(&file).u32(chunk).u32(rest.len() as u32);
+                for r in rest {
+                    e = e.str(r);
+                }
+                wire::call(&mut s, e.bytes(&data).finish())?;
+            }
+            Ok(Enc::new(op::PUT).finish())
+        }
+        op::GET => {
+            let file = d.str()?;
+            let chunk = d.u32()?;
+            let st = store.lock().unwrap();
+            let data = st
+                .chunks
+                .get(&(file.clone(), chunk))
+                .ok_or_else(|| anyhow::anyhow!("no chunk {chunk} of {file}"))?;
+            Ok(Enc::new(op::GET).bytes(data).finish())
+        }
+        op::PING => {
+            let payload = d.bytes()?;
+            Ok(Enc::new(op::PING).bytes(payload).finish())
+        }
+        o => anyhow::bail!("storage: bad opcode {o}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::manager::Manager;
+    use crate::store::wire::call;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let m = Manager::start().unwrap();
+        let n = StorageNode::start(&m.addr).unwrap();
+        let mut c = TcpStream::connect(&n.addr).unwrap();
+        let data = vec![42u8; 1 << 16];
+        call(&mut c, Enc::new(op::PUT).str("f").u32(0).u32(0).bytes(&data).finish()).unwrap();
+        let r = call(&mut c, Enc::new(op::GET).str("f").u32(0).finish()).unwrap();
+        assert_eq!(Dec::new(&r[1..]).bytes().unwrap(), &data[..]);
+        assert_eq!(n.stored_bytes(), 1 << 16);
+    }
+
+    #[test]
+    fn chained_replication_stores_on_all() {
+        let m = Manager::start().unwrap();
+        let n1 = StorageNode::start(&m.addr).unwrap();
+        let n2 = StorageNode::start(&m.addr).unwrap();
+        let n3 = StorageNode::start(&m.addr).unwrap();
+        let mut c = TcpStream::connect(&n1.addr).unwrap();
+        let data = vec![7u8; 1000];
+        call(
+            &mut c,
+            Enc::new(op::PUT).str("f").u32(3).u32(2).str(&n2.addr).str(&n3.addr).bytes(&data).finish(),
+        )
+        .unwrap();
+        assert_eq!(n1.stored_bytes(), 1000);
+        assert_eq!(n2.stored_bytes(), 1000);
+        assert_eq!(n3.stored_bytes(), 1000);
+    }
+
+    #[test]
+    fn missing_chunk_errors() {
+        let m = Manager::start().unwrap();
+        let n = StorageNode::start(&m.addr).unwrap();
+        let mut c = TcpStream::connect(&n.addr).unwrap();
+        assert!(call(&mut c, Enc::new(op::GET).str("ghost").u32(0).finish()).is_err());
+    }
+}

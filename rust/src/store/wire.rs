@@ -1,0 +1,210 @@
+//! Wire protocol: length-prefixed binary messages with hand-rolled
+//! encoding (no serde offline).
+//!
+//! Frame layout: `[u32 big-endian length][u8 opcode][body …]`.
+//! Bodies are built/parsed with [`Enc`]/[`Dec`]; all integers big-endian,
+//! strings and blobs length-prefixed.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+/// Opcodes. Requests and responses share the numbering; a response to op
+/// X carries opcode X with `ok`/payload in the body.
+pub mod op {
+    // manager
+    pub const REGISTER: u8 = 1; // storage node announces itself
+    pub const ALLOC: u8 = 2; // client requests write targets
+    pub const COMMIT: u8 = 3; // client commits a write
+    pub const LOOKUP: u8 = 4; // client resolves a file's chunk map
+    pub const NODES: u8 = 5; // client fetches node_id → addr table
+    // storage
+    pub const PUT: u8 = 16; // store one chunk (with replica chain)
+    pub const GET: u8 = 17; // fetch one chunk
+    pub const PING: u8 = 18; // echo (network probe)
+    // generic
+    pub const ERR: u8 = 255;
+}
+
+/// Max message size we accept (1 GB guards against corrupt frames).
+pub const MAX_MSG: u32 = 1 << 30;
+
+/// Append-only body encoder.
+#[derive(Default)]
+pub struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new(opcode: u8) -> Enc {
+        Enc { buf: vec![opcode] }
+    }
+    pub fn u8(mut self, x: u8) -> Enc {
+        self.buf.push(x);
+        self
+    }
+    pub fn u32(mut self, x: u32) -> Enc {
+        self.buf.extend_from_slice(&x.to_be_bytes());
+        self
+    }
+    pub fn u64(mut self, x: u64) -> Enc {
+        self.buf.extend_from_slice(&x.to_be_bytes());
+        self
+    }
+    pub fn str(self, s: &str) -> Enc {
+        self.bytes(s.as_bytes())
+    }
+    pub fn bytes(mut self, b: &[u8]) -> Enc {
+        self.buf.extend_from_slice(&(b.len() as u32).to_be_bytes());
+        self.buf.extend_from_slice(b);
+        self
+    }
+    pub fn u32_list(mut self, xs: &[u32]) -> Enc {
+        self.buf.extend_from_slice(&(xs.len() as u32).to_be_bytes());
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_be_bytes());
+        }
+        self
+    }
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Cursor-based body decoder.
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated message: want {n} bytes at {}, have {}", self.pos, self.buf.len());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_be_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_be_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    pub fn bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.u32()? as usize;
+        self.take(n)
+    }
+    pub fn str(&mut self) -> Result<String> {
+        Ok(String::from_utf8(self.bytes()?.to_vec()).context("non-utf8 string")?)
+    }
+    pub fn u32_list(&mut self) -> Result<Vec<u32>> {
+        let n = self.u32()? as usize;
+        (0..n).map(|_| self.u32()).collect()
+    }
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+/// Write one framed message.
+pub fn write_msg(stream: &mut TcpStream, body: &[u8]) -> Result<()> {
+    let len = body.len() as u32;
+    debug_assert!(len <= MAX_MSG);
+    stream.write_all(&len.to_be_bytes())?;
+    stream.write_all(body)?;
+    Ok(())
+}
+
+/// Read one framed message.
+pub fn read_msg(stream: &mut TcpStream) -> Result<Vec<u8>> {
+    let mut len_buf = [0u8; 4];
+    stream.read_exact(&mut len_buf).context("reading frame length")?;
+    let len = u32::from_be_bytes(len_buf);
+    if len > MAX_MSG {
+        bail!("frame too large: {len}");
+    }
+    let mut body = vec![0u8; len as usize];
+    stream.read_exact(&mut body).context("reading frame body")?;
+    Ok(body)
+}
+
+/// Round-trip a request and parse the response; checks the opcode echoes.
+pub fn call(stream: &mut TcpStream, body: Vec<u8>) -> Result<Vec<u8>> {
+    let opcode = body[0];
+    write_msg(stream, &body)?;
+    let resp = read_msg(stream)?;
+    if resp.is_empty() {
+        bail!("empty response");
+    }
+    if resp[0] == op::ERR {
+        let mut d = Dec::new(&resp[1..]);
+        bail!("remote error: {}", d.str().unwrap_or_else(|_| "<garbled>".into()));
+    }
+    if resp[0] != opcode {
+        bail!("opcode mismatch: sent {opcode}, got {}", resp[0]);
+    }
+    Ok(resp)
+}
+
+/// Build an error response.
+pub fn err_resp(msg: &str) -> Vec<u8> {
+    Enc::new(op::ERR).str(msg).finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enc_dec_roundtrip() {
+        let body = Enc::new(op::ALLOC)
+            .str("file.dat")
+            .u64(123456789)
+            .u32(7)
+            .bytes(&[1, 2, 3])
+            .u32_list(&[10, 20, 30])
+            .finish();
+        assert_eq!(body[0], op::ALLOC);
+        let mut d = Dec::new(&body[1..]);
+        assert_eq!(d.str().unwrap(), "file.dat");
+        assert_eq!(d.u64().unwrap(), 123456789);
+        assert_eq!(d.u32().unwrap(), 7);
+        assert_eq!(d.bytes().unwrap(), &[1, 2, 3]);
+        assert_eq!(d.u32_list().unwrap(), vec![10, 20, 30]);
+        assert_eq!(d.remaining(), 0);
+    }
+
+    #[test]
+    fn dec_rejects_truncation() {
+        let body = Enc::new(op::GET).u64(1).finish();
+        let mut d = Dec::new(&body[1..5]);
+        assert!(d.u64().is_err());
+    }
+
+    #[test]
+    fn framed_messages_over_socket() {
+        use std::net::TcpListener;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let m = read_msg(&mut s).unwrap();
+            write_msg(&mut s, &m).unwrap(); // echo
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        let sent = Enc::new(op::PING).bytes(&vec![7u8; 100_000]).finish();
+        let got = call(&mut c, sent.clone()).unwrap();
+        assert_eq!(got, sent);
+        server.join().unwrap();
+    }
+}

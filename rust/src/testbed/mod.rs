@@ -1,0 +1,179 @@
+//! The "actual system": a high-fidelity emulator standing in for the
+//! paper's 20-node MosaStore deployment (DESIGN.md §3–4).
+//!
+//! Every experiment figure compares *actual* (this module: detailed
+//! fidelity, stochastic, N trials, mean ± std error bars) against
+//! *predicted* (the coarse deterministic model). The fidelity gap —
+//! multi-round control paths, connection SYN loss with 3 s retries,
+//! launch stagger, jitter, heterogeneity, manager contention — is exactly
+//! the set of mechanisms the paper names as its own sources of prediction
+//! error (§5), so the error we measure is structural, not circular.
+//!
+//! Trial counts follow the paper: "the average turnaround time and
+//! standard deviation for 15 trials … enough to guarantee a 95%" CI; we
+//! additionally run Jain's procedure to extend noisy campaigns.
+
+use crate::model::{simulate_fid, Config, Fidelity, Platform, SimReport};
+use crate::util::stats::{Campaign, Summary};
+use crate::workload::Workload;
+
+/// Aggregated results of a testbed measurement campaign.
+#[derive(Clone, Debug)]
+pub struct TrialStats {
+    pub config_label: String,
+    /// Turnaround seconds across trials.
+    pub turnaround: Summary,
+    /// Per-stage makespan seconds across trials.
+    pub stages: Vec<Summary>,
+    /// Mean connection SYN retries per trial (diagnostic).
+    pub mean_conn_retries: f64,
+    /// Wallclock seconds spent running all trials (for §3.3 speedup).
+    pub wallclock_secs: f64,
+    /// A representative report (last trial).
+    pub sample: SimReport,
+}
+
+impl TrialStats {
+    pub fn mean(&self) -> f64 {
+        self.turnaround.mean()
+    }
+    pub fn std(&self) -> f64 {
+        self.turnaround.std()
+    }
+}
+
+/// The emulated testbed.
+#[derive(Clone, Debug)]
+pub struct Testbed {
+    pub platform: Platform,
+    /// Base fidelity (seed is overridden per trial).
+    pub fidelity: Fidelity,
+    /// Minimum trials (paper: 15 synthetic / 20 BLAST).
+    pub min_trials: u64,
+    pub max_trials: u64,
+    /// Base seed; trial `i` runs with `base_seed + i`.
+    pub base_seed: u64,
+}
+
+impl Testbed {
+    pub fn new(platform: Platform) -> Testbed {
+        Testbed {
+            platform,
+            fidelity: Fidelity::detailed(0),
+            min_trials: 15,
+            max_trials: 40,
+            base_seed: 0x7E57_BED0,
+        }
+    }
+
+    pub fn with_trials(mut self, min: u64, max: u64) -> Testbed {
+        self.min_trials = min;
+        self.max_trials = max.max(min);
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Testbed {
+        self.base_seed = seed;
+        self
+    }
+
+    /// Run one trial with an explicit seed.
+    pub fn trial(&self, wl: &Workload, cfg: &Config, seed: u64) -> SimReport {
+        let fid = Fidelity { seed, ..self.fidelity.clone() };
+        simulate_fid(wl, cfg, &self.platform, fid)
+    }
+
+    /// Run a measurement campaign: trials until the 95% CI is within ±5%
+    /// of the mean (Jain's procedure), bounded by [min_trials, max_trials].
+    pub fn run(&self, wl: &Workload, cfg: &Config) -> TrialStats {
+        let t0 = std::time::Instant::now();
+        let n_stages = wl.n_stages();
+        let mut stages: Vec<Summary> = (0..n_stages).map(|_| Summary::new()).collect();
+        let mut retries = 0u64;
+        let mut sample: Option<SimReport> = None;
+
+        let campaign = Campaign {
+            rel_accuracy: 0.05,
+            min_samples: self.min_trials,
+            max_samples: self.max_trials,
+        };
+        let turnaround = campaign.run(|i| {
+            let rep = self.trial(wl, cfg, self.base_seed + i);
+            for (s, summ) in stages.iter_mut().enumerate() {
+                summ.add(rep.stage_time(s as u32).as_secs_f64());
+            }
+            retries += rep.conn_retries;
+            let t = rep.turnaround.as_secs_f64();
+            sample = Some(rep);
+            t
+        });
+
+        TrialStats {
+            config_label: cfg.label.clone(),
+            mean_conn_retries: retries as f64 / turnaround.n().max(1) as f64,
+            turnaround,
+            stages,
+            wallclock_secs: t0.elapsed().as_secs_f64(),
+            sample: sample.expect("at least one trial"),
+        }
+    }
+
+    /// Total emulated node-seconds consumed by the campaign — the
+    /// "resources" side of the paper's §3.3 comparison (actual runs burn
+    /// `nodes × turnaround` per trial; the predictor burns one machine's
+    /// wallclock).
+    pub fn node_seconds(&self, stats: &TrialStats, cfg: &Config) -> f64 {
+        stats.turnaround.mean() * stats.turnaround.n() as f64 * cfg.n_hosts() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::patterns::{pipeline, PatternScale};
+
+    fn quick_testbed() -> Testbed {
+        Testbed::new(Platform::paper_testbed()).with_trials(3, 5)
+    }
+
+    #[test]
+    fn trials_vary_but_reproduce_with_seed() {
+        let tb = quick_testbed();
+        let wl = pipeline(4, PatternScale::Small, false);
+        let cfg = Config::dss(4);
+        let a = tb.trial(&wl, &cfg, 7);
+        let b = tb.trial(&wl, &cfg, 7);
+        let c = tb.trial(&wl, &cfg, 8);
+        assert_eq!(a.turnaround, b.turnaround, "same seed ⇒ identical trial");
+        assert_ne!(a.turnaround, c.turnaround, "different seed ⇒ different trial");
+    }
+
+    #[test]
+    fn campaign_reports_spread() {
+        let tb = quick_testbed();
+        let wl = pipeline(4, PatternScale::Small, false);
+        let stats = tb.run(&wl, &Config::dss(4));
+        assert!(stats.turnaround.n() >= 3);
+        assert!(stats.mean() > 0.0);
+        assert!(stats.std() >= 0.0);
+        assert_eq!(stats.stages.len(), 3);
+        assert!(stats.wallclock_secs > 0.0);
+    }
+
+    #[test]
+    fn detailed_is_slower_than_coarse() {
+        // The detailed protocol adds control rounds, connections and
+        // stagger: an actual run must take longer than the prediction.
+        let tb = quick_testbed();
+        let wl = pipeline(4, PatternScale::Small, false);
+        let cfg = Config::dss(4);
+        let actual = tb.trial(&wl, &cfg, 1);
+        let predicted = crate::model::simulate(&wl, &cfg, &tb.platform);
+        assert!(
+            actual.turnaround > predicted.turnaround,
+            "actual {} ≤ predicted {}",
+            actual.turnaround,
+            predicted.turnaround
+        );
+    }
+}

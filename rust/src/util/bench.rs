@@ -1,0 +1,91 @@
+//! Hand-rolled benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` invokes the `[[bench]]` binaries (declared with
+//! `harness = false`); each uses [`BenchRunner`] for wallclock timing with
+//! warmup, repetition, and summary statistics, and writes machine-readable
+//! results under `results/`.
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Measures a closure's wallclock time over warmup + measured iterations.
+pub struct BenchRunner {
+    pub warmup_iters: u32,
+    pub iters: u32,
+}
+
+impl Default for BenchRunner {
+    fn default() -> Self {
+        BenchRunner { warmup_iters: 2, iters: 10 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Seconds per iteration.
+    pub secs: Summary,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>12.6}s/iter  ±{:>10.6}  (n={})",
+            self.name,
+            self.secs.mean(),
+            self.secs.std(),
+            self.secs.n()
+        )
+    }
+}
+
+impl BenchRunner {
+    pub fn new(warmup_iters: u32, iters: u32) -> Self {
+        BenchRunner { warmup_iters, iters }
+    }
+
+    /// Time `f`, returning per-iteration stats. `f` receives the iteration
+    /// index so benchmarks can vary seeds without timing setup code.
+    pub fn run(&self, name: &str, mut f: impl FnMut(u32)) -> BenchResult {
+        for i in 0..self.warmup_iters {
+            f(i);
+        }
+        let mut s = Summary::new();
+        for i in 0..self.iters {
+            let t0 = Instant::now();
+            f(self.warmup_iters + i);
+            s.add(t0.elapsed().as_secs_f64());
+        }
+        let r = BenchResult { name: name.to_string(), secs: s };
+        println!("{}", r.line());
+        r
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Write a results file under `results/`, creating the directory.
+pub fn write_results(name: &str, contents: &str) {
+    let dir = std::path::Path::new("results");
+    let _ = std::fs::create_dir_all(dir);
+    let path = dir.join(name);
+    std::fs::write(&path, contents).unwrap_or_else(|e| panic!("write {path:?}: {e}"));
+    println!("[results written to {}]", path.display());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_expected_iterations() {
+        let mut calls = 0u32;
+        let r = BenchRunner { warmup_iters: 3, iters: 5 }.run("t", |_| calls += 1);
+        assert_eq!(calls, 8);
+        assert_eq!(r.secs.n(), 5);
+        assert!(r.secs.mean() >= 0.0);
+    }
+}

@@ -1,0 +1,180 @@
+//! Minimal command-line flag parser (clap is unavailable offline).
+//!
+//! Supports `--name value`, `--name=value`, boolean `--flag`, positional
+//! arguments, and generates a usage string. Typed getters parse on access
+//! and report errors with the flag name.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_bool: bool,
+}
+
+/// Parsed command line for one (sub)command.
+#[derive(Debug, Default)]
+pub struct Flags {
+    program: String,
+    specs: Vec<FlagSpec>,
+    values: BTreeMap<String, String>,
+    pub positionals: Vec<String>,
+}
+
+impl Flags {
+    pub fn new(program: &str) -> Self {
+        Flags { program: program.to_string(), ..Default::default() }
+    }
+
+    pub fn flag(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.specs.push(FlagSpec { name, help, default: Some(default), is_bool: false });
+        self
+    }
+
+    pub fn flag_req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(FlagSpec { name, help, default: None, is_bool: false });
+        self
+    }
+
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(FlagSpec { name, help, default: Some("false"), is_bool: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("usage: {} [flags] [args]\n", self.program);
+        for f in &self.specs {
+            let d = f.default.map(|d| format!(" (default: {d})")).unwrap_or_default();
+            let _ = writeln!(s, "  --{:<20} {}{}", f.name, f.help, d);
+        }
+        s
+    }
+
+    /// Parse `args` (not including argv[0]). Unknown flags are errors.
+    pub fn parse(mut self, args: &[String]) -> Result<Self, String> {
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(body) = a.strip_prefix("--") {
+                if body == "help" {
+                    return Err(self.usage());
+                }
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}\n{}", self.usage()))?
+                    .clone();
+                let value = if spec.is_bool {
+                    inline.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    i += 1;
+                    args.get(i).cloned().ok_or_else(|| format!("--{name} needs a value"))?
+                };
+                self.values.insert(name.to_string(), value);
+            } else {
+                self.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        // Check required flags are present.
+        for s in &self.specs {
+            if s.default.is_none() && !self.values.contains_key(s.name) {
+                return Err(format!("missing required flag --{}\n{}", s.name, self.usage()));
+            }
+        }
+        Ok(self)
+    }
+
+    fn raw(&self, name: &str) -> &str {
+        if let Some(v) = self.values.get(name) {
+            return v;
+        }
+        self.specs
+            .iter()
+            .find(|s| s.name == name)
+            .and_then(|s| s.default)
+            .unwrap_or_else(|| panic!("flag --{name} was never declared"))
+    }
+
+    pub fn get(&self, name: &str) -> String {
+        self.raw(name).to_string()
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.raw(name).parse().unwrap_or_else(|_| panic!("--{name}: expected integer, got {:?}", self.raw(name)))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.raw(name).parse().unwrap_or_else(|_| panic!("--{name}: expected float, got {:?}", self.raw(name)))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.raw(name), "true" | "1" | "yes")
+    }
+
+    /// Comma-separated u64 list, e.g. `--chunks 256,1024,4096`.
+    pub fn get_u64_list(&self, name: &str) -> Vec<u64> {
+        self.raw(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("--{name}: bad list item {s:?}")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_and_defaults() {
+        let f = Flags::new("t")
+            .flag("nodes", "20", "node count")
+            .flag("chunk", "1048576", "chunk size")
+            .switch("verbose", "chatty")
+            .parse(&argv(&["--nodes", "11", "--verbose", "pos1"]))
+            .unwrap();
+        assert_eq!(f.get_u64("nodes"), 11);
+        assert_eq!(f.get_u64("chunk"), 1048576);
+        assert!(f.get_bool("verbose"));
+        assert_eq!(f.positionals, vec!["pos1"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let f = Flags::new("t").flag("x", "0", "x").parse(&argv(&["--x=3.5"])).unwrap();
+        assert_eq!(f.get_f64("x"), 3.5);
+    }
+
+    #[test]
+    fn unknown_flag_is_error() {
+        assert!(Flags::new("t").parse(&argv(&["--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn required_flag_enforced() {
+        assert!(Flags::new("t").flag_req("must", "m").parse(&argv(&[])).is_err());
+        let f = Flags::new("t").flag_req("must", "m").parse(&argv(&["--must", "v"])).unwrap();
+        assert_eq!(f.get("must"), "v");
+    }
+
+    #[test]
+    fn list_parsing() {
+        let f = Flags::new("t").flag("cs", "1,2,3", "sizes").parse(&argv(&[])).unwrap();
+        assert_eq!(f.get_u64_list("cs"), vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,193 @@
+//! Tiny JSON writer (serde is unavailable offline).
+//!
+//! Results files (`results/*.json`) are emitted through this writer so
+//! downstream tooling can consume bench output. Writing only — the crate's
+//! own interchange formats (traces, platform files) are line-oriented text
+//! with their own parsers.
+
+use std::fmt::Write;
+
+/// A JSON value under construction.
+#[derive(Debug, Clone)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn obj() -> Json {
+        Json::Obj(Vec::new())
+    }
+    pub fn arr() -> Json {
+        Json::Arr(Vec::new())
+    }
+
+    pub fn set(mut self, key: &str, v: impl Into<Json>) -> Json {
+        if let Json::Obj(ref mut kv) = self {
+            kv.push((key.to_string(), v.into()));
+        } else {
+            panic!("set() on non-object");
+        }
+        self
+    }
+
+    pub fn push(&mut self, v: impl Into<Json>) {
+        if let Json::Arr(ref mut xs) = self {
+            xs.push(v.into());
+        } else {
+            panic!("push() on non-array");
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, 0);
+        s
+    }
+
+    fn write(&self, out: &mut String, indent: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => {
+                let _ = write!(out, "{b}");
+            }
+            Json::Num(x) => {
+                if x.is_finite() {
+                    if *x == x.trunc() && x.abs() < 1e15 {
+                        let _ = write!(out, "{}", *x as i64);
+                    } else {
+                        let _ = write!(out, "{x}");
+                    }
+                } else {
+                    out.push_str("null"); // JSON has no inf/nan
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        '\r' => out.push_str("\\r"),
+                        c if (c as u32) < 0x20 => {
+                            let _ = write!(out, "\\u{:04x}", c as u32);
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(xs) => {
+                if xs.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(", ");
+                    }
+                    x.write(out, indent);
+                }
+                out.push(']');
+            }
+            Json::Obj(kv) => {
+                if kv.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push_str("{\n");
+                let pad = "  ".repeat(indent + 1);
+                for (i, (k, v)) in kv.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    let _ = write!(out, "{pad}\"{k}\": ");
+                    v.write(out, indent + 1);
+                }
+                out.push('\n');
+                out.push_str(&"  ".repeat(indent));
+                out.push('}');
+            }
+        }
+    }
+}
+
+impl From<f64> for Json {
+    fn from(x: f64) -> Json {
+        Json::Num(x)
+    }
+}
+impl From<u64> for Json {
+    fn from(x: u64) -> Json {
+        Json::Num(x as f64)
+    }
+}
+impl From<usize> for Json {
+    fn from(x: usize) -> Json {
+        Json::Num(x as f64)
+    }
+}
+impl From<i64> for Json {
+    fn from(x: i64) -> Json {
+        Json::Num(x as f64)
+    }
+}
+impl From<bool> for Json {
+    fn from(x: bool) -> Json {
+        Json::Bool(x)
+    }
+}
+impl From<&str> for Json {
+    fn from(x: &str) -> Json {
+        Json::Str(x.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(x: String) -> Json {
+        Json::Str(x)
+    }
+}
+impl<T: Into<Json>> From<Vec<T>> for Json {
+    fn from(xs: Vec<T>) -> Json {
+        Json::Arr(xs.into_iter().map(Into::into).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_nested() {
+        let j = Json::obj()
+            .set("name", "fig4")
+            .set("n", 19u64)
+            .set("ok", true)
+            .set("vals", vec![1.0, 2.5])
+            .set("inner", Json::obj().set("x", 1u64));
+        let s = j.render();
+        assert!(s.contains("\"name\": \"fig4\""));
+        assert!(s.contains("\"vals\": [1, 2.5]"));
+        assert!(s.contains("\"x\": 1"));
+    }
+
+    #[test]
+    fn escapes_strings() {
+        let s = Json::Str("a\"b\\c\nd".into()).render();
+        assert_eq!(s, "\"a\\\"b\\\\c\\nd\"");
+    }
+
+    #[test]
+    fn integers_render_clean() {
+        assert_eq!(Json::Num(3.0).render(), "3");
+        assert_eq!(Json::Num(3.25).render(), "3.25");
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
+    }
+}

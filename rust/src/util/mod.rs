@@ -1,0 +1,14 @@
+//! Self-contained substrates used across the crate.
+//!
+//! The build environment is fully offline and only `xla` + `anyhow` are
+//! vendored, so the usual ecosystem crates (rand, serde, clap, criterion,
+//! proptest) are re-implemented here at the scale this project needs.
+
+pub mod rng;
+pub mod stats;
+pub mod units;
+pub mod flags;
+pub mod jsonw;
+pub mod table;
+pub mod prop;
+pub mod bench;

@@ -1,0 +1,130 @@
+//! Minimal property-based testing harness (proptest is unavailable offline).
+//!
+//! A property is a closure over a [`Gen`] — a seeded random generator with
+//! convenience draws. [`check`] runs it for a configurable number of cases
+//! and, on failure, re-runs with the failing seed to confirm and reports
+//! the seed so the case can be replayed deterministically:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries don't inherit the xla rpath rustflags)
+//! use wfpred::util::prop::{check, Gen};
+//! check("addition commutes", 256, |g: &mut Gen| {
+//!     let a = g.u64(0, 1000);
+//!     let b = g.u64(0, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Random-case generator handed to properties.
+pub struct Gen {
+    rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed), seed }
+    }
+
+    /// Uniform u64 in `[lo, hi]` (inclusive).
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    /// Uniform usize in `[lo, hi]` (inclusive).
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.u64(lo as u64, hi as u64) as usize
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Pick one element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+
+    /// A vector of `n` draws.
+    pub fn vec<T>(&mut self, n: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Access the underlying RNG for anything fancier.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` for `cases` random cases. Panics (with the failing seed in
+/// the message) if any case panics. Base seed is fixed for reproducibility;
+/// override with env `WFPRED_PROP_SEED`.
+pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    let base: u64 = std::env::var("WFPRED_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    for i in 0..cases {
+        let seed = base.wrapping_add(i).wrapping_mul(0x9E3779B97F4A7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed);
+            prop(&mut g);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property {name:?} failed at case {i} (replay: WFPRED_PROP_SEED with seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("u64 bounds respected", 200, |g| {
+            let x = g.u64(10, 20);
+            assert!((10..=20).contains(&x));
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check("always fails", 3, |_| panic!("boom"));
+        });
+        let err = r.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap();
+        assert!(msg.contains("replay"), "message should carry the seed: {msg}");
+    }
+
+    #[test]
+    fn gen_choose_and_vec() {
+        let mut g = Gen::new(1);
+        let xs = [1, 2, 3];
+        for _ in 0..50 {
+            assert!(xs.contains(g.choose(&xs)));
+        }
+        let v = g.vec(10, |g| g.f64(0.0, 1.0));
+        assert_eq!(v.len(), 10);
+        assert!(v.iter().all(|x| (0.0..1.0).contains(x)));
+    }
+}

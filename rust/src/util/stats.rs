@@ -1,0 +1,231 @@
+//! Sample statistics and Jain's confidence-interval-driven sample counts.
+//!
+//! The paper (§2.5, §3) sizes every measurement campaign "to achieve 95%
+//! confidence intervals with ±5% accuracy according to the procedure
+//! described in [Jain, *The Art of Computer Systems Performance
+//! Analysis*]". [`Campaign`] implements exactly that loop: keep adding
+//! samples until the half-width of the CI is within the requested
+//! fraction of the mean (with floor/ceiling sample counts).
+
+/// Running sample statistics (Welford's algorithm — numerically stable).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn from_slice(xs: &[f64]) -> Self {
+        let mut s = Summary::new();
+        for &x in xs {
+            s.add(x);
+        }
+        s
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    /// Standard error of the mean.
+    pub fn sem(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.std() / (self.n as f64).sqrt()
+        }
+    }
+
+    /// Half-width of the 95% confidence interval for the mean
+    /// (Student-t for small n, normal beyond the table).
+    pub fn ci95_half(&self) -> f64 {
+        t_value_95(self.n.saturating_sub(1)) * self.sem()
+    }
+
+    /// Relative CI half-width (half-width / mean); `inf` when mean is 0.
+    pub fn ci95_rel(&self) -> f64 {
+        if self.mean.abs() < f64::EPSILON {
+            f64::INFINITY
+        } else {
+            self.ci95_half() / self.mean.abs()
+        }
+    }
+}
+
+/// Two-sided 95% Student-t critical values by degrees of freedom.
+/// Exact table entries for df ≤ 30, 1.96 asymptote beyond.
+pub fn t_value_95(df: u64) -> f64 {
+    const TABLE: [f64; 31] = [
+        f64::INFINITY, // df = 0 (undefined; forces "keep sampling")
+        12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228,
+        2.201, 2.179, 2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086,
+        2.080, 2.074, 2.069, 2.064, 2.060, 2.056, 2.052, 2.048, 2.045, 2.042,
+    ];
+    if (df as usize) < TABLE.len() {
+        TABLE[df as usize]
+    } else {
+        1.96
+    }
+}
+
+/// Jain's procedure: run `sample()` until the 95% CI half-width is within
+/// `rel_accuracy` of the mean, bounded by `[min_samples, max_samples]`.
+pub struct Campaign {
+    pub rel_accuracy: f64,
+    pub min_samples: u64,
+    pub max_samples: u64,
+}
+
+impl Default for Campaign {
+    fn default() -> Self {
+        // Paper: 95% CI, ±5%; 15–20 trials in practice. We keep a small
+        // floor so the CI is meaningful and a generous ceiling.
+        Campaign { rel_accuracy: 0.05, min_samples: 5, max_samples: 200 }
+    }
+}
+
+impl Campaign {
+    pub fn run(&self, mut sample: impl FnMut(u64) -> f64) -> Summary {
+        let mut s = Summary::new();
+        for i in 0..self.max_samples {
+            s.add(sample(i));
+            if s.n() >= self.min_samples && s.ci95_rel() <= self.rel_accuracy {
+                break;
+            }
+        }
+        s
+    }
+}
+
+/// Relative error |a-b| / |b| (b is the reference). `inf` when b == 0 ≠ a.
+pub fn rel_err(a: f64, b: f64) -> f64 {
+    if b.abs() < f64::EPSILON {
+        if a.abs() < f64::EPSILON {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        (a - b).abs() / b.abs()
+    }
+}
+
+/// Percentile (nearest-rank) of an unsorted slice; p in [0,100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * v.len() as f64).ceil().max(1.0) as usize;
+    v[rank.min(v.len()) - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn summary_matches_naive() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let s = Summary::from_slice(&xs);
+        assert_eq!(s.n(), 8);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        // naive sample variance = 32/7
+        assert!((s.var() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn ci_shrinks_with_samples() {
+        let mut r = Rng::new(3);
+        let mut small = Summary::new();
+        let mut big = Summary::new();
+        for i in 0..10_000 {
+            let x = r.normal(10.0, 1.0);
+            if i < 10 {
+                small.add(x);
+            }
+            big.add(x);
+        }
+        assert!(big.ci95_half() < small.ci95_half() / 10.0);
+    }
+
+    #[test]
+    fn campaign_stops_when_tight() {
+        // Deterministic constant sample: CI collapses immediately at the floor.
+        let c = Campaign::default();
+        let s = c.run(|_| 42.0);
+        assert_eq!(s.n(), c.min_samples);
+        assert_eq!(s.mean(), 42.0);
+    }
+
+    #[test]
+    fn campaign_keeps_sampling_when_noisy() {
+        let mut r = Rng::new(5);
+        let c = Campaign { rel_accuracy: 0.02, min_samples: 5, max_samples: 500 };
+        let s = c.run(|_| r.normal(100.0, 30.0));
+        assert!(s.n() > 10, "30% noise should need far more than the floor, got {}", s.n());
+        assert!(s.ci95_rel() <= 0.02 || s.n() == 500);
+    }
+
+    #[test]
+    fn t_table_sane() {
+        assert!(t_value_95(1) > t_value_95(5));
+        assert!(t_value_95(5) > t_value_95(30));
+        assert_eq!(t_value_95(1000), 1.96);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 90.0), 90.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert_eq!(percentile(&xs, 1.0), 1.0);
+    }
+
+    #[test]
+    fn rel_err_basics() {
+        assert_eq!(rel_err(110.0, 100.0), 0.1_f64);
+        assert_eq!(rel_err(0.0, 0.0), 0.0);
+        assert!(rel_err(1.0, 0.0).is_infinite());
+    }
+}

@@ -1,0 +1,104 @@
+//! ASCII table rendering for bench/report output.
+//!
+//! Every figure bench prints its series as a table whose rows mirror what
+//! the paper plots, so `cargo bench` output is directly comparable to the
+//! paper's figures.
+
+/// A simple column-aligned table.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut w = vec![0usize; ncols];
+        let width = |s: &str| s.chars().count();
+        for (i, h) in self.header.iter().enumerate() {
+            w[i] = width(h);
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(width(c));
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                out.push_str("| ");
+                out.push_str(c);
+                out.push_str(&" ".repeat(w[i] - c.chars().count() + 1));
+            }
+            out.push_str("|\n");
+        };
+        line(&mut out, &self.header);
+        let mut sep = String::new();
+        for wi in &w {
+            sep.push('|');
+            sep.push_str(&"-".repeat(wi + 2));
+        }
+        sep.push_str("|\n");
+        out.push_str(&sep);
+        for r in &self.rows {
+            line(&mut out, r);
+        }
+        out
+    }
+}
+
+/// Format seconds with 2 decimals, e.g. "12.34s".
+pub fn secs(x: f64) -> String {
+    format!("{x:.2}s")
+}
+
+/// Format a mean ± std pair.
+pub fn pm(mean: f64, std: f64) -> String {
+    format!("{mean:.2} ± {std:.2}")
+}
+
+/// Format a ratio as a percentage with sign, e.g. "-16.0%".
+pub fn pct(x: f64) -> String {
+    format!("{:+.1}%", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["config", "actual", "predicted"]);
+        t.row(&["DSS".into(), "100.00".into(), "84.00".into()]);
+        t.row(&["WASS".into(), "60.00".into(), "59.50".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()), "all lines same width");
+        assert!(s.contains("WASS"));
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(secs(1.234), "1.23s");
+        assert_eq!(pm(5.0, 0.25), "5.00 ± 0.25");
+        assert_eq!(pct(-0.16), "-16.0%");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

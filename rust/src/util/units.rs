@@ -1,0 +1,232 @@
+//! Byte and virtual-time units.
+//!
+//! Virtual time is `u64` **nanoseconds** wrapped in [`SimTime`]; byte
+//! counts are `u64` wrapped in [`Bytes`]. Both are plain newtypes with
+//! arithmetic, ordering and human-readable display — enough type safety
+//! to keep "seconds" and "bytes" from mixing, without an `uom`-style tower.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Div, Mul, Sub, SubAssign};
+
+/// Virtual simulation time in nanoseconds.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+    pub const MAX: SimTime = SimTime(u64::MAX);
+
+    pub fn from_ns(ns: u64) -> Self {
+        SimTime(ns)
+    }
+    pub fn from_us(us: u64) -> Self {
+        SimTime(us * 1_000)
+    }
+    pub fn from_ms(ms: u64) -> Self {
+        SimTime(ms * 1_000_000)
+    }
+    pub fn from_secs_f64(s: f64) -> Self {
+        debug_assert!(s >= 0.0, "negative time: {s}");
+        SimTime((s.max(0.0) * 1e9).round() as u64)
+    }
+    pub fn as_ns(self) -> u64 {
+        self.0
+    }
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+    pub fn as_ms_f64(self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+    pub fn saturating_sub(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(rhs.0))
+    }
+}
+
+impl Add for SimTime {
+    type Output = SimTime;
+    fn add(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0 + rhs.0)
+    }
+}
+impl AddAssign for SimTime {
+    fn add_assign(&mut self, rhs: SimTime) {
+        self.0 += rhs.0;
+    }
+}
+impl Sub for SimTime {
+    type Output = SimTime;
+    fn sub(self, rhs: SimTime) -> SimTime {
+        debug_assert!(self.0 >= rhs.0, "time underflow");
+        SimTime(self.0 - rhs.0)
+    }
+}
+impl SubAssign for SimTime {
+    fn sub_assign(&mut self, rhs: SimTime) {
+        *self = *self - rhs;
+    }
+}
+impl Mul<u64> for SimTime {
+    type Output = SimTime;
+    fn mul(self, rhs: u64) -> SimTime {
+        SimTime(self.0 * rhs)
+    }
+}
+impl Div<u64> for SimTime {
+    type Output = SimTime;
+    fn div(self, rhs: u64) -> SimTime {
+        SimTime(self.0 / rhs)
+    }
+}
+
+impl fmt::Debug for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self}")
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let ns = self.0;
+        if ns >= 1_000_000_000 {
+            write!(f, "{:.3}s", ns as f64 / 1e9)
+        } else if ns >= 1_000_000 {
+            write!(f, "{:.3}ms", ns as f64 / 1e6)
+        } else if ns >= 1_000 {
+            write!(f, "{:.3}us", ns as f64 / 1e3)
+        } else {
+            write!(f, "{ns}ns")
+        }
+    }
+}
+
+/// A byte count.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Bytes(pub u64);
+
+pub const KB: u64 = 1 << 10;
+pub const MB: u64 = 1 << 20;
+pub const GB: u64 = 1 << 30;
+
+impl Bytes {
+    pub const ZERO: Bytes = Bytes(0);
+    pub fn kb(n: u64) -> Self {
+        Bytes(n * KB)
+    }
+    pub fn mb(n: u64) -> Self {
+        Bytes(n * MB)
+    }
+    pub fn gb(n: u64) -> Self {
+        Bytes(n * GB)
+    }
+    pub fn as_u64(self) -> u64 {
+        self.0
+    }
+    pub fn as_f64(self) -> f64 {
+        self.0 as f64
+    }
+    /// Number of `chunk`-sized chunks needed to hold `self` (ceiling);
+    /// zero-byte files still occupy one (empty) chunk entry.
+    pub fn chunks(self, chunk: Bytes) -> u64 {
+        if self.0 == 0 {
+            1
+        } else {
+            self.0.div_ceil(chunk.0.max(1))
+        }
+    }
+}
+
+impl Add for Bytes {
+    type Output = Bytes;
+    fn add(self, rhs: Bytes) -> Bytes {
+        Bytes(self.0 + rhs.0)
+    }
+}
+impl AddAssign for Bytes {
+    fn add_assign(&mut self, rhs: Bytes) {
+        self.0 += rhs.0;
+    }
+}
+impl Sub for Bytes {
+    type Output = Bytes;
+    fn sub(self, rhs: Bytes) -> Bytes {
+        Bytes(self.0 - rhs.0)
+    }
+}
+impl Mul<u64> for Bytes {
+    type Output = Bytes;
+    fn mul(self, rhs: u64) -> Bytes {
+        Bytes(self.0 * rhs)
+    }
+}
+
+impl fmt::Debug for Bytes {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self}")
+    }
+}
+
+impl fmt::Display for Bytes {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let b = self.0;
+        if b >= GB {
+            write!(f, "{:.2}GB", b as f64 / GB as f64)
+        } else if b >= MB {
+            write!(f, "{:.2}MB", b as f64 / MB as f64)
+        } else if b >= KB {
+            write!(f, "{:.2}KB", b as f64 / KB as f64)
+        } else {
+            write!(f, "{b}B")
+        }
+    }
+}
+
+/// Time to move `bytes` at `bytes_per_sec` (exact, rounds to ns).
+pub fn transfer_time(bytes: Bytes, bytes_per_sec: f64) -> SimTime {
+    debug_assert!(bytes_per_sec > 0.0);
+    SimTime::from_secs_f64(bytes.as_f64() / bytes_per_sec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_display_scales() {
+        assert_eq!(SimTime::from_ns(5).to_string(), "5ns");
+        assert_eq!(SimTime::from_us(5).to_string(), "5.000us");
+        assert_eq!(SimTime::from_ms(5).to_string(), "5.000ms");
+        assert_eq!(SimTime::from_secs_f64(5.0).to_string(), "5.000s");
+    }
+
+    #[test]
+    fn bytes_display_scales() {
+        assert_eq!(Bytes(10).to_string(), "10B");
+        assert_eq!(Bytes::kb(2).to_string(), "2.00KB");
+        assert_eq!(Bytes::mb(100).to_string(), "100.00MB");
+        assert_eq!(Bytes::gb(1).to_string(), "1.00GB");
+    }
+
+    #[test]
+    fn chunk_count_ceiling() {
+        assert_eq!(Bytes::mb(100).chunks(Bytes::mb(1)), 100);
+        assert_eq!(Bytes(1).chunks(Bytes::mb(1)), 1);
+        assert_eq!(Bytes(MB + 1).chunks(Bytes::mb(1)), 2);
+        assert_eq!(Bytes(0).chunks(Bytes::mb(1)), 1, "zero-size files hold one chunk entry");
+    }
+
+    #[test]
+    fn transfer_time_at_1gbps() {
+        // 1 Gbps = 125 MB/s; 125 MB should take exactly 1 s.
+        let t = transfer_time(Bytes(125_000_000), 125e6);
+        assert_eq!(t, SimTime::from_secs_f64(1.0));
+    }
+
+    #[test]
+    fn arithmetic_roundtrip() {
+        let a = SimTime::from_ms(3) + SimTime::from_us(500);
+        assert_eq!(a.as_ns(), 3_500_000);
+        assert_eq!((a - SimTime::from_us(500)).as_ns(), 3_000_000);
+        assert_eq!((Bytes::mb(1) * 3).as_u64(), 3 * MB);
+    }
+}

@@ -1,0 +1,18 @@
+//! Workload descriptions (paper §2.6).
+//!
+//! A workload is a set of files and a set of tasks whose file
+//! reads/writes induce a dependency DAG. The paper's simulator consumes
+//! "per client I/O operations trace … and a files' dependency graph";
+//! [`spec`] is that structure, [`trace`] is the on-disk text format,
+//! [`patterns`] generates the synthetic pipeline / reduce / broadcast
+//! benchmarks, and [`blast`]/[`montage`] generate the real-application
+//! workloads used in the paper's evaluation.
+
+pub mod spec;
+pub mod patterns;
+pub mod blast;
+pub mod montage;
+pub mod modftdock;
+pub mod trace;
+
+pub use spec::{FileHint, FileId, FileSpec, TaskId, TaskSpec, Workload};

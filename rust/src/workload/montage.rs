@@ -1,0 +1,81 @@
+//! Montage-like workload (paper Fig 1): the astronomy mosaic workflow the
+//! paper ran on Grid'5000 to demonstrate that "different storage system
+//! configurations deliver different performance and the choice of the
+//! optimal configuration point is not intuitive".
+//!
+//! We model Montage's characteristic I/O structure at reduced scale:
+//! a projection fan (per-tile reprojection), an overlap-fitting stage that
+//! reads *neighboring* tiles (cross-node traffic), and a final mosaic
+//! stage that gathers everything (reduce-like). What matters for Fig 1 is
+//! the mix of parallel medium-size writes and a wide gather — the mix that
+//! makes low stripe widths congest storage nodes and high stripe widths
+//! pay connection-handling/metadata overheads.
+
+use crate::util::units::Bytes;
+use crate::workload::spec::{FileSpec, TaskSpec, Workload};
+
+/// Build a Montage-like mosaic workload over `tiles` input tiles.
+pub fn montage(tiles: usize) -> Workload {
+    assert!(tiles >= 2);
+    let mut w = Workload::new(format!("montage-{tiles}"));
+    let mut projected = Vec::with_capacity(tiles);
+    // Stage 0 — mProject: reproject each raw tile (read 20 MB, write 25 MB).
+    for i in 0..tiles {
+        let raw = w.add_file(FileSpec::new(format!("raw.{i}"), Bytes::mb(20)).prestaged());
+        let proj = w.add_file(FileSpec::new(format!("proj.{i}"), Bytes::mb(25)));
+        w.add_task(TaskSpec::new(format!("mProject.{i}"), 0).reads(raw).writes(proj));
+        projected.push(proj);
+    }
+    // Stage 1 — mDiffFit: fit each overlapping pair (ring topology).
+    let mut fits = Vec::with_capacity(tiles);
+    for i in 0..tiles {
+        let j = (i + 1) % tiles;
+        let fit = w.add_file(FileSpec::new(format!("fit.{i}"), Bytes::mb(5)));
+        w.add_task(
+            TaskSpec::new(format!("mDiffFit.{i}"), 1)
+                .reads(projected[i])
+                .reads(projected[j])
+                .writes(fit),
+        );
+        fits.push(fit);
+    }
+    // Stage 2 — mConcatFit + mAdd: gather all fits and projections into
+    // the mosaic (a wide reduce).
+    let mosaic = w.add_file(FileSpec::new("mosaic.fits", Bytes::mb(50)));
+    let mut add = TaskSpec::new("mAdd", 2).writes(mosaic);
+    for &f in fits.iter().chain(projected.iter()) {
+        add = add.reads(f);
+    }
+    w.add_task(add);
+    debug_assert!(w.validate().is_ok());
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn structure() {
+        let w = montage(19);
+        assert_eq!(w.n_stages(), 3);
+        assert_eq!(w.tasks.len(), 19 + 19 + 1);
+        assert!(w.validate().is_ok());
+    }
+
+    #[test]
+    fn diff_fit_reads_neighbors() {
+        let w = montage(4);
+        let t = w.tasks.iter().find(|t| t.name == "mDiffFit.3").unwrap();
+        // Reads proj.3 and proj.0 (ring wrap-around).
+        let names: Vec<&str> = t.reads.iter().map(|&f| w.files[f].name.as_str()).collect();
+        assert_eq!(names, vec!["proj.3", "proj.0"]);
+    }
+
+    #[test]
+    fn mosaic_gathers_everything() {
+        let w = montage(10);
+        let add = w.tasks.iter().find(|t| t.name == "mAdd").unwrap();
+        assert_eq!(add.reads.len(), 20, "all fits + all projections");
+    }
+}

@@ -1,0 +1,222 @@
+//! On-disk workload description (paper §2.6): a line-oriented text format
+//! carrying the file set (with placement hints), the task set (with
+//! compute times), and the read/write edges that form the file dependency
+//! graph. "The client traces can be obtained by running and profiling the
+//! application" — `store/` and `testbed/` runs can be exported here and
+//! replayed through the predictor.
+//!
+//! Format (one record per line, `#` comments):
+//! ```text
+//! wfpred-trace v1
+//! workload <name>
+//! file <name> <bytes> <hint> <replicas|-> <prestaged|->
+//! task <name> <stage> <compute_ns> <pin|-> [release_ns]
+//! read <task> <file>
+//! write <task> <file>
+//! ```
+//! Hints: `default`, `local`, `striped`, `node:<k>`.
+
+use crate::util::units::{Bytes, SimTime};
+use crate::workload::spec::{FileHint, FileSpec, TaskSpec, Workload};
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+/// Serialize a workload to the trace text format.
+pub fn to_text(w: &Workload) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "wfpred-trace v1");
+    let _ = writeln!(s, "workload {}", escape(&w.name));
+    for f in &w.files {
+        let hint = match f.hint {
+            FileHint::Default => "default".to_string(),
+            FileHint::Local => "local".to_string(),
+            FileHint::OnNode(k) => format!("node:{k}"),
+            FileHint::Striped => "striped".to_string(),
+        };
+        let repl = f.replication.map(|r| r.to_string()).unwrap_or_else(|| "-".into());
+        let pre = if f.prestaged { "prestaged" } else { "-" };
+        let _ = writeln!(s, "file {} {} {hint} {repl} {pre}", escape(&f.name), f.size.as_u64());
+    }
+    for t in &w.tasks {
+        let pin = t.pin_client.map(|p| p.to_string()).unwrap_or_else(|| "-".into());
+        let _ = writeln!(
+            s,
+            "task {} {} {} {pin} {}",
+            escape(&t.name),
+            t.stage,
+            t.compute.as_ns(),
+            t.release.as_ns()
+        );
+    }
+    for t in &w.tasks {
+        for &f in &t.reads {
+            let _ = writeln!(s, "read {} {}", escape(&t.name), escape(&w.files[f].name));
+        }
+        for &f in &t.writes {
+            let _ = writeln!(s, "write {} {}", escape(&t.name), escape(&w.files[f].name));
+        }
+    }
+    s
+}
+
+/// Parse the trace text format back into a workload.
+pub fn from_text(text: &str) -> Result<Workload, String> {
+    let mut lines = text.lines().enumerate().filter(|(_, l)| {
+        let l = l.trim();
+        !l.is_empty() && !l.starts_with('#')
+    });
+    let (_, first) = lines.next().ok_or("empty trace")?;
+    if first.trim() != "wfpred-trace v1" {
+        return Err(format!("bad header {first:?} (want \"wfpred-trace v1\")"));
+    }
+    let mut w = Workload::new("unnamed");
+    let mut file_ids: HashMap<String, usize> = HashMap::new();
+    let mut task_ids: HashMap<String, usize> = HashMap::new();
+
+    for (ln, raw) in lines {
+        let line = raw.trim();
+        let mut it = line.split_whitespace();
+        let kind = it.next().unwrap();
+        let ctx = |e: &str| format!("line {}: {e}: {raw:?}", ln + 1);
+        match kind {
+            "workload" => {
+                w.name = unescape(it.next().ok_or_else(|| ctx("missing name"))?);
+            }
+            "file" => {
+                let name = unescape(it.next().ok_or_else(|| ctx("missing name"))?);
+                let size: u64 =
+                    it.next().ok_or_else(|| ctx("missing size"))?.parse().map_err(|_| ctx("bad size"))?;
+                let hint_s = it.next().ok_or_else(|| ctx("missing hint"))?;
+                let hint = match hint_s {
+                    "default" => FileHint::Default,
+                    "local" => FileHint::Local,
+                    "striped" => FileHint::Striped,
+                    h => {
+                        let k = h
+                            .strip_prefix("node:")
+                            .ok_or_else(|| ctx("bad hint"))?
+                            .parse()
+                            .map_err(|_| ctx("bad node hint"))?;
+                        FileHint::OnNode(k)
+                    }
+                };
+                let repl_s = it.next().ok_or_else(|| ctx("missing replicas"))?;
+                let pre_s = it.next().ok_or_else(|| ctx("missing prestaged"))?;
+                let mut f = FileSpec::new(name.clone(), Bytes(size)).hint(hint);
+                if repl_s != "-" {
+                    f = f.replicas(repl_s.parse().map_err(|_| ctx("bad replicas"))?);
+                }
+                if pre_s == "prestaged" {
+                    f = f.prestaged();
+                }
+                if file_ids.insert(name.clone(), w.add_file(f)).is_some() {
+                    return Err(ctx(&format!("duplicate file {name:?}")));
+                }
+            }
+            "task" => {
+                let name = unescape(it.next().ok_or_else(|| ctx("missing name"))?);
+                let stage: u32 =
+                    it.next().ok_or_else(|| ctx("missing stage"))?.parse().map_err(|_| ctx("bad stage"))?;
+                let comp: u64 =
+                    it.next().ok_or_else(|| ctx("missing compute"))?.parse().map_err(|_| ctx("bad compute"))?;
+                let pin_s = it.next().ok_or_else(|| ctx("missing pin"))?;
+                let mut t = TaskSpec::new(name.clone(), stage).compute(SimTime::from_ns(comp));
+                if pin_s != "-" {
+                    t = t.pin(pin_s.parse().map_err(|_| ctx("bad pin"))?);
+                }
+                if let Some(rel) = it.next() {
+                    t = t.release_at(SimTime::from_ns(rel.parse().map_err(|_| ctx("bad release"))?));
+                }
+                if task_ids.insert(name.clone(), w.add_task(t)).is_some() {
+                    return Err(ctx(&format!("duplicate task {name:?}")));
+                }
+            }
+            "read" | "write" => {
+                let tname = unescape(it.next().ok_or_else(|| ctx("missing task"))?);
+                let fname = unescape(it.next().ok_or_else(|| ctx("missing file"))?);
+                let &ti = task_ids.get(&tname).ok_or_else(|| ctx("unknown task"))?;
+                let &fi = file_ids.get(&fname).ok_or_else(|| ctx("unknown file"))?;
+                if kind == "read" {
+                    w.tasks[ti].reads.push(fi);
+                } else {
+                    w.tasks[ti].writes.push(fi);
+                }
+            }
+            k => return Err(ctx(&format!("unknown record {k:?}"))),
+        }
+    }
+    w.validate()?;
+    Ok(w)
+}
+
+/// Names may not contain whitespace; escape it.
+fn escape(s: &str) -> String {
+    s.replace(' ', "\\s")
+}
+
+fn unescape(s: &str) -> String {
+    s.replace("\\s", " ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::patterns::{pipeline, PatternScale};
+    use crate::workload::blast::{blast, BlastParams};
+
+    fn assert_roundtrip(w: &Workload) {
+        let text = to_text(w);
+        let back = from_text(&text).expect("parse back");
+        assert_eq!(back.name, w.name);
+        assert_eq!(back.files.len(), w.files.len());
+        assert_eq!(back.tasks.len(), w.tasks.len());
+        for (a, b) in w.files.iter().zip(back.files.iter()) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.size, b.size);
+            assert_eq!(a.hint, b.hint);
+            assert_eq!(a.replication, b.replication);
+            assert_eq!(a.prestaged, b.prestaged);
+        }
+        for (a, b) in w.tasks.iter().zip(back.tasks.iter()) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.stage, b.stage);
+            assert_eq!(a.compute, b.compute);
+            assert_eq!(a.reads, b.reads);
+            assert_eq!(a.writes, b.writes);
+            assert_eq!(a.pin_client, b.pin_client);
+            assert_eq!(a.release, b.release);
+        }
+    }
+
+    #[test]
+    fn roundtrip_pipeline() {
+        assert_roundtrip(&pipeline(5, PatternScale::Medium, true));
+    }
+
+    #[test]
+    fn roundtrip_blast() {
+        assert_roundtrip(&blast(14, &BlastParams::default()));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(from_text("").is_err());
+        assert!(from_text("not-a-trace").is_err());
+        assert!(from_text("wfpred-trace v1\nbogus line here").is_err());
+        assert!(from_text("wfpred-trace v1\nread ghost ghost").is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_file() {
+        let t = "wfpred-trace v1\nworkload x\nfile a 10 default - -\nfile a 10 default - -";
+        assert!(from_text(t).unwrap_err().contains("duplicate"));
+    }
+
+    #[test]
+    fn names_with_spaces_survive() {
+        let mut w = Workload::new("has space");
+        let f = w.add_file(FileSpec::new("my file", Bytes::mb(1)).prestaged());
+        w.add_task(TaskSpec::new("my task", 0).reads(f));
+        assert_roundtrip(&w);
+    }
+}

@@ -1,0 +1,194 @@
+//! Accuracy of the predictor against the emulated testbed — the paper's
+//! §3.1 headline: "errors of 6% on average, lower than 9% in 90% of the
+//! studied scenarios, and within 20% in the worst case", and — most
+//! importantly — "the mechanism correctly differentiates between the
+//! different configurations".
+//!
+//! These tests enforce the same *structure* of claims at slightly relaxed
+//! thresholds (our testbed is itself an emulator; see DESIGN.md §3):
+//! every synthetic scenario predicts within 25%, the mean error is well
+//! under 15%, and every best-configuration choice the paper highlights is
+//! ranked correctly by the predictor.
+
+use wfpred::model::{simulate, Config, Placement, Platform};
+use wfpred::testbed::Testbed;
+use wfpred::util::stats::rel_err;
+use wfpred::workload::patterns::{broadcast, pipeline, reduce, PatternScale};
+
+struct Scenario {
+    name: String,
+    actual: f64,
+    predicted: f64,
+}
+
+fn measure(tb: &Testbed, wl: &wfpred::workload::Workload, cfg: &Config) -> (f64, f64) {
+    let actual = tb.run(wl, cfg);
+    let predicted = simulate(wl, cfg, &tb.platform);
+    (actual.mean(), predicted.turnaround.as_secs_f64())
+}
+
+/// All synthetic scenarios from §3.1 at medium scale (large for reduce,
+/// as the paper also reports it).
+fn synthetic_scenarios(tb: &Testbed) -> Vec<Scenario> {
+    let mut out = Vec::new();
+    let n = 19;
+
+    for (name, wl, cfg) in [
+        ("pipeline-medium-dss", pipeline(n, PatternScale::Medium, false), Config::dss(n)),
+        ("pipeline-medium-wass", pipeline(n, PatternScale::Medium, true), Config::wass(n)),
+        ("reduce-medium-dss", reduce(n, PatternScale::Medium, false), Config::dss(n)),
+        ("reduce-medium-wass", reduce(n, PatternScale::Medium, true), Config::wass(n)),
+        ("reduce-large-dss", reduce(n, PatternScale::Large, false), Config::dss(n)),
+        ("reduce-large-wass", reduce(n, PatternScale::Large, true), Config::wass(n)),
+    ] {
+        let (a, p) = measure(tb, &wl, &cfg);
+        out.push(Scenario { name: name.into(), actual: a, predicted: p });
+    }
+    for r in [1u32, 2, 4] {
+        let mut cfg = Config::wass(n).with_label(format!("bcast-r{r}"));
+        cfg.placement = Placement::RoundRobin;
+        let wl = broadcast(n, PatternScale::Medium, r);
+        let (a, p) = measure(tb, &wl, &cfg);
+        out.push(Scenario { name: format!("broadcast-medium-r{r}"), actual: a, predicted: p });
+    }
+    out
+}
+
+#[test]
+fn synthetic_accuracy_bands() {
+    let tb = Testbed::new(Platform::paper_testbed()).with_trials(8, 15);
+    let scenarios = synthetic_scenarios(&tb);
+    let mut errs = Vec::new();
+    for s in &scenarios {
+        let e = rel_err(s.predicted, s.actual);
+        println!(
+            "{:<24} actual={:>8.2}s predicted={:>8.2}s err={:>5.1}%",
+            s.name,
+            s.actual,
+            s.predicted,
+            e * 100.0
+        );
+        errs.push(e);
+    }
+    let mean_err = errs.iter().sum::<f64>() / errs.len() as f64;
+    let worst = errs.iter().cloned().fold(0.0, f64::max);
+    println!("mean err {:.1}%  worst {:.1}%", mean_err * 100.0, worst * 100.0);
+    assert!(mean_err < 0.15, "mean error {:.1}% too high", mean_err * 100.0);
+    assert!(worst < 0.25, "worst error {:.1}% too high", worst * 100.0);
+}
+
+#[test]
+fn predictor_picks_correct_configs() {
+    // The decision-support claim: relative ordering must be right even
+    // where absolute error isn't zero.
+    let tb = Testbed::new(Platform::paper_testbed()).with_trials(6, 10);
+    let n = 19;
+
+    // pipeline medium: WASS < DSS in both actual and predicted.
+    let (a_dss, p_dss) = measure(&tb, &pipeline(n, PatternScale::Medium, false), &Config::dss(n));
+    let (a_wass, p_wass) = measure(&tb, &pipeline(n, PatternScale::Medium, true), &Config::wass(n));
+    assert!(a_wass < a_dss, "testbed: WASS should win pipeline");
+    assert!(p_wass < p_dss, "predictor: WASS should win pipeline");
+
+    // reduce medium: collocation wins in both.
+    let (a_dss, p_dss) = measure(&tb, &reduce(n, PatternScale::Medium, false), &Config::dss(n));
+    let (a_wass, p_wass) = measure(&tb, &reduce(n, PatternScale::Medium, true), &Config::wass(n));
+    assert!(a_wass < a_dss, "testbed: collocation should win reduce-medium");
+    assert!(p_wass < p_dss, "predictor: collocation should win reduce-medium");
+
+    // broadcast: all replication levels equivalent (within noise) in both.
+    let mut actual = Vec::new();
+    let mut pred = Vec::new();
+    for r in [1u32, 2, 4] {
+        let mut cfg = Config::wass(n).with_label(format!("r{r}"));
+        cfg.placement = Placement::RoundRobin;
+        let wl = broadcast(n, PatternScale::Medium, r);
+        let (a, p) = measure(&tb, &wl, &cfg);
+        actual.push(a);
+        pred.push(p);
+    }
+    let spread = |xs: &[f64]| {
+        let mx = xs.iter().cloned().fold(f64::MIN, f64::max);
+        let mn = xs.iter().cloned().fold(f64::MAX, f64::min);
+        (mx - mn) / mn
+    };
+    assert!(spread(&actual) < 0.4, "actual broadcast spread {actual:?}");
+    assert!(spread(&pred) < 0.4, "predicted broadcast spread {pred:?}");
+}
+
+#[test]
+fn dss_pipeline_underpredicts_like_paper() {
+    // Fig 4 note: "for no optimization (DSS), the prediction is 16%
+    // smaller" — congestion retries the coarse model does not capture.
+    // We require the same sign (under-prediction) for DSS-pipeline.
+    let tb = Testbed::new(Platform::paper_testbed()).with_trials(8, 12);
+    let (a, p) = measure(&tb, &pipeline(19, PatternScale::Medium, false), &Config::dss(19));
+    println!("dss pipeline: actual {a:.2}s predicted {p:.2}s");
+    assert!(p < a, "coarse model should under-predict the congested DSS pipeline");
+}
+
+#[test]
+fn hdd_lower_accuracy_but_correct_choice() {
+    // Fig 10: "although prediction accuracy is lower, predictions are good
+    // enough to make the correct choice between DSS and WASS".
+    let tb = Testbed::new(Platform::paper_testbed_hdd()).with_trials(6, 10);
+    let n = 19;
+    for scale in [PatternScale::Medium, PatternScale::Large] {
+        let (a_dss, p_dss) = measure(&tb, &reduce(n, scale, false), &Config::dss(n));
+        let (a_wass, p_wass) = measure(&tb, &reduce(n, scale, true), &Config::wass(n));
+        let actual_says_wass = a_wass < a_dss;
+        let pred_says_wass = p_wass < p_dss;
+        println!(
+            "reduce {scale} HDD: actual dss={a_dss:.1} wass={a_wass:.1} | pred dss={p_dss:.1} wass={p_wass:.1}"
+        );
+        assert_eq!(
+            actual_says_wass, pred_says_wass,
+            "predictor must agree with testbed on the DSS/WASS choice at {scale}"
+        );
+    }
+}
+
+#[test]
+fn richer_workload_description_improves_accuracy() {
+    // §5: "the application driver uses an idealized image of the workflow
+    // application (e.g., all pipelines are launched in the simulation
+    // exactly at the same time while in the experiments on real hardware
+    // coordination overheads make them slightly staggered). We believe
+    // [this] is the main reason of current inaccuracies … and should be
+    // addressed by a richer workload description."
+    //
+    // Our extension: per-task release times in the workload description.
+    // Feed the predictor the *measured* launch times from one actual run
+    // and the WASS-pipeline prediction error must shrink.
+    let tb = Testbed::new(Platform::paper_testbed()).with_trials(8, 12);
+    let wl = pipeline(19, PatternScale::Medium, true);
+    let cfg = Config::wass(19);
+
+    let actual = tb.run(&wl, &cfg).mean();
+    let naive = simulate(&wl, &cfg, &tb.platform).turnaround.as_secs_f64();
+
+    // Profile one actual trial: stage-0 task start times are the observed
+    // launch stagger (what a workflow engine's logs would record).
+    let profile = tb.trial(&wl, &cfg, 424242);
+    let mut enriched = wl.clone();
+    for rec in &profile.tasks {
+        if rec.stage == 0 {
+            enriched.tasks[rec.task].release = rec.start;
+        }
+    }
+    let informed = simulate(&enriched, &cfg, &tb.platform).turnaround.as_secs_f64();
+
+    let err_naive = (naive - actual).abs() / actual;
+    let err_informed = (informed - actual).abs() / actual;
+    println!(
+        "wass pipeline: actual {actual:.2}s | naive {naive:.2}s ({:.1}%) | informed {informed:.2}s ({:.1}%)",
+        err_naive * 100.0,
+        err_informed * 100.0
+    );
+    assert!(
+        err_informed < err_naive,
+        "measured release times should shrink the error: {:.1}% -> {:.1}%",
+        err_naive * 100.0,
+        err_informed * 100.0
+    );
+}

@@ -1,0 +1,233 @@
+//! Property-based tests over the predictor's invariants, using the
+//! in-tree `util::prop` harness (replay any failure with the reported
+//! seed via `WFPRED_PROP_SEED`).
+
+use wfpred::model::{simulate, simulate_fid, Config, Fidelity, Placement, Platform};
+use wfpred::util::prop::{check, Gen};
+use wfpred::util::units::{Bytes, SimTime};
+use wfpred::workload::patterns::{broadcast, pipeline, reduce, PatternScale};
+use wfpred::workload::{trace, FileHint, FileSpec, TaskSpec, Workload};
+
+/// A random but valid (acyclic, single-writer) workload.
+fn random_workload(g: &mut Gen, max_stage_tasks: usize) -> Workload {
+    let mut wl = Workload::new("prop");
+    let stages = g.usize(1, 3);
+    let mut prev_outputs: Vec<usize> = Vec::new();
+    for s in 0..stages {
+        let tasks = g.usize(1, max_stage_tasks);
+        let mut outs = Vec::new();
+        for t in 0..tasks {
+            let mut task = TaskSpec::new(format!("t{s}.{t}"), s as u32);
+            // Read 0-2 files from the previous stage (or prestaged inputs).
+            if prev_outputs.is_empty() {
+                let f = wl.add_file(
+                    FileSpec::new(format!("in{s}.{t}"), Bytes::mb(g.u64(0, 64))).prestaged(),
+                );
+                task = task.reads(f);
+            } else {
+                for _ in 0..g.usize(1, 2.min(prev_outputs.len())) {
+                    let f = *g.choose(&prev_outputs);
+                    if !task.reads.contains(&f) {
+                        task = task.reads(f);
+                    }
+                }
+            }
+            let hint = match g.u64(0, 2) {
+                0 => FileHint::Default,
+                1 => FileHint::Local,
+                _ => FileHint::OnNode(g.usize(0, 3)),
+            };
+            let out =
+                wl.add_file(FileSpec::new(format!("f{s}.{t}"), Bytes::mb(g.u64(0, 64))).hint(hint));
+            task = task.writes(out).compute(SimTime::from_ms(g.u64(0, 500)));
+            outs.push(out);
+            wl.add_task(task);
+        }
+        prev_outputs = outs;
+    }
+    wl
+}
+
+fn random_config(g: &mut Gen) -> Config {
+    let n = g.usize(2, 8);
+    let mut cfg = if g.bool() { Config::dss(n) } else { Config::wass(n) };
+    cfg.stripe_width = g.usize(1, n);
+    cfg.replication = g.u64(1, 2.min(n as u64)) as u32;
+    cfg.chunk_size = Bytes::kb(*g.choose(&[64, 256, 1024, 4096]));
+    cfg.io_window = g.usize(1, 16);
+    if g.bool() {
+        cfg.placement = Placement::RoundRobin;
+    }
+    cfg
+}
+
+#[test]
+fn prop_simulation_terminates_and_accounts_bytes() {
+    check("termination + conservation", 60, |g| {
+        let wl = random_workload(g, 4);
+        if wl.validate().is_err() {
+            return; // generator produced a degenerate case; skip
+        }
+        let cfg = random_config(g);
+        let plat = Platform::paper_testbed();
+        let rep = simulate(&wl, &cfg, &plat);
+        // All tasks completed.
+        assert_eq!(rep.tasks.len(), wl.tasks.len());
+        // Conservation: stored bytes = Σ file size × replication for every
+        // materialized file (prestaged + written).
+        let mut expect = 0u64;
+        for (fid, f) in wl.files.iter().enumerate() {
+            let written = f.prestaged || wl.writer_of(fid).is_some();
+            if written {
+                let r = f.replication.unwrap_or(cfg.replication) as u64;
+                expect += f.size.as_u64() * r.min(cfg.n_storage as u64);
+            }
+        }
+        assert_eq!(rep.stored_total().as_u64(), expect, "stored-bytes conservation");
+        // Turnaround covers every op interval.
+        for op in &rep.ops {
+            assert!(op.end <= rep.turnaround);
+            assert!(op.start <= op.end);
+        }
+    });
+}
+
+#[test]
+fn prop_deterministic_same_inputs() {
+    check("determinism", 25, |g| {
+        let wl = random_workload(g, 3);
+        if wl.validate().is_err() {
+            return;
+        }
+        let cfg = random_config(g);
+        let plat = Platform::paper_testbed();
+        let a = simulate(&wl, &cfg, &plat);
+        let b = simulate(&wl, &cfg, &plat);
+        assert_eq!(a.turnaround, b.turnaround);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.net_bytes, b.net_bytes);
+    });
+}
+
+#[test]
+fn prop_testbed_seed_determinism() {
+    check("testbed seed determinism", 15, |g| {
+        let wl = random_workload(g, 3);
+        if wl.validate().is_err() {
+            return;
+        }
+        let cfg = random_config(g);
+        let plat = Platform::paper_testbed();
+        let seed = g.u64(0, 1 << 40);
+        let a = simulate_fid(&wl, &cfg, &plat, Fidelity::detailed(seed));
+        let b = simulate_fid(&wl, &cfg, &plat, Fidelity::detailed(seed));
+        assert_eq!(a.turnaround, b.turnaround, "same seed, same trial");
+    });
+}
+
+#[test]
+fn prop_more_data_never_faster() {
+    check("monotone in data size", 20, |g| {
+        let n = g.usize(3, 8);
+        let plat = Platform::paper_testbed();
+        let cfg = Config::dss(n);
+        let wl_s = pipeline(n, PatternScale::Small, false);
+        let wl_m = pipeline(n, PatternScale::Medium, false);
+        let t_s = simulate(&wl_s, &cfg, &plat).turnaround;
+        let t_m = simulate(&wl_m, &cfg, &plat).turnaround;
+        assert!(t_s <= t_m, "10x data finished faster: {t_s} vs {t_m}");
+    });
+}
+
+#[test]
+fn prop_faster_network_never_slower() {
+    check("monotone in bandwidth", 20, |g| {
+        let wl = random_workload(g, 3);
+        if wl.validate().is_err() {
+            return;
+        }
+        let cfg = random_config(g);
+        let slow = Platform::paper_testbed();
+        let mut fast = slow.clone();
+        fast.net_remote_bps *= 4.0;
+        fast.net_local_bps *= 4.0;
+        let t_slow = simulate(&wl, &cfg, &slow).turnaround;
+        let t_fast = simulate(&wl, &cfg, &fast).turnaround;
+        assert!(t_fast <= t_slow, "faster network slowed things down: {t_fast} vs {t_slow}");
+    });
+}
+
+#[test]
+fn prop_replication_never_shrinks_storage() {
+    check("replication storage cost", 20, |g| {
+        let n = g.usize(3, 8);
+        let plat = Platform::paper_testbed();
+        let wl1 = broadcast(n, PatternScale::Small, 1);
+        let wl2 = broadcast(n, PatternScale::Small, 2.min(n as u32));
+        let cfg = Config::dss(n);
+        let a = simulate(&wl1, &cfg, &plat);
+        let b = simulate(&wl2, &cfg, &plat);
+        assert!(b.stored_total() > a.stored_total());
+    });
+}
+
+#[test]
+fn prop_trace_roundtrip_random_workloads() {
+    check("trace round-trip", 40, |g| {
+        let wl = random_workload(g, 4);
+        if wl.validate().is_err() {
+            return;
+        }
+        let text = trace::to_text(&wl);
+        let back = trace::from_text(&text).expect("parse");
+        assert_eq!(back.files.len(), wl.files.len());
+        assert_eq!(back.tasks.len(), wl.tasks.len());
+        // Same simulation outcome from the round-tripped description.
+        let cfg = Config::dss(4);
+        let plat = Platform::paper_testbed();
+        assert_eq!(
+            simulate(&wl, &cfg, &plat).turnaround,
+            simulate(&back, &cfg, &plat).turnaround,
+            "round-tripped workload simulates identically"
+        );
+    });
+}
+
+#[test]
+fn prop_stripe_width_within_bounds_always_valid() {
+    check("stripe validity", 30, |g| {
+        let n = g.usize(2, 10);
+        let w = g.usize(1, n);
+        let cfg = Config::dss(n).with_stripe(w);
+        let wl = reduce(n, PatternScale::Small, false);
+        let rep = simulate(&wl, &cfg, &Platform::paper_testbed());
+        assert_eq!(rep.tasks.len(), wl.tasks.len());
+    });
+}
+
+#[test]
+fn prop_detailed_at_least_as_slow_as_coarse() {
+    // The detailed protocol only adds work (rounds, handshakes,
+    // mux overhead ≥ 0). Heterogeneity/jitter can make hosts faster and
+    // randomized placement or stagger can accidentally balance load
+    // better than the round-robin cursor — disable the perturbation
+    // knobs and compare pure added-work fidelity.
+    check("detail slower", 15, |g| {
+        let wl = random_workload(g, 3);
+        if wl.validate().is_err() {
+            return;
+        }
+        let cfg = random_config(g);
+        let plat = Platform::paper_testbed();
+        let coarse = simulate(&wl, &cfg, &plat).turnaround;
+        let fid = Fidelity {
+            hetero_sigma: 0.0,
+            jitter_sigma: 0.0,
+            random_placement: false,
+            stagger_mean: SimTime::ZERO,
+            ..Fidelity::detailed(g.u64(0, 1 << 30))
+        };
+        let detailed = simulate_fid(&wl, &cfg, &plat, fid).turnaround;
+        assert!(detailed >= coarse, "detailed {detailed} < coarse {coarse} — protocol removed work?");
+    });
+}

@@ -1,0 +1,136 @@
+//! Search-layer integration: the analytic prescreen (AOT artifact through
+//! PJRT) + discrete-event refinement must find the configuration the
+//! exhaustive DES sweep would find, and the pruning must be real.
+
+use wfpred::model::{Config, Platform};
+use wfpred::predict::Predictor;
+use wfpred::runtime::{ScorerRuntime, StageDesc};
+use wfpred::search::{ranking_agreement, SearchSpace, Searcher};
+use wfpred::util::units::Bytes;
+use wfpred::workload::blast::{blast, BlastParams};
+
+fn blast_stage(params: &BlastParams) -> Vec<StageDesc> {
+    vec![StageDesc {
+        tasks_per_app: true,
+        tasks_fixed: 0.0,
+        read_mb: params.db_size.as_f64() as f32 / (1u64 << 20) as f32,
+        read_local_frac: 0.0,
+        write_mb: params.output_file.as_f64() as f32 / (1u64 << 20) as f32,
+        fan_single: false,
+        compute_total_s: params.queries as f32 * params.per_query.as_secs_f64() as f32,
+    }]
+}
+
+#[test]
+fn prescreened_search_matches_exhaustive() {
+    if !std::path::Path::new("artifacts/predictor.hlo.txt").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let predictor = Predictor::new(Platform::paper_testbed());
+    let rt = ScorerRuntime::load_default().unwrap();
+    let params = BlastParams { queries: 60, ..Default::default() };
+    let space = SearchSpace::fixed_cluster(20, vec![Bytes::kb(256), Bytes::mb(1)]);
+
+    // Exhaustive: refine everything (no prescreen).
+    let exhaustive = Searcher::new(&predictor)
+        .with_top_k(usize::MAX)
+        .search(&space, &[], |cfg| blast(cfg.n_app, &params));
+    let best_exhaustive = exhaustive.candidates[exhaustive.best_time].config.label.clone();
+
+    // Prescreened: refine only the top candidates.
+    let pruned = Searcher::new(&predictor)
+        .with_runtime(&rt)
+        .with_top_k(8)
+        .search(&space, &blast_stage(&params), |cfg| blast(cfg.n_app, &params));
+    let best_pruned = pruned.candidates[pruned.best_time].config.label.clone();
+
+    assert!(pruned.pruned > 0, "prescreen should prune something");
+    assert_eq!(
+        best_exhaustive, best_pruned,
+        "prescreen must not lose the optimum (exhaustive {best_exhaustive} vs pruned {best_pruned})"
+    );
+
+    // Ranking agreement between analytic scores and DES refinement should
+    // be strong on the refined subset.
+    let tau = ranking_agreement(&pruned);
+    println!("prescreen/DES ranking agreement: {tau:.2}");
+    // Near-ties among the refined top-K order arbitrarily; what matters is
+    // that the prescreen never drops the optimum (asserted above) and the
+    // broad ordering tracks the DES.
+    assert!(tau > 0.55, "prescreen ranking too weak: {tau}");
+}
+
+#[test]
+fn scenario_one_answers_are_consistent() {
+    // Scenario I (Fig 8): fixed 20-node cluster. The best-time config
+    // must beat both edges by a wide margin (the paper's "up to 10x").
+    let predictor = Predictor::new(Platform::paper_testbed());
+    let params = BlastParams::default();
+    let space = SearchSpace::fixed_cluster(20, vec![Bytes::kb(256)]);
+    let report = Searcher::new(&predictor)
+        .with_top_k(usize::MAX)
+        .search(&space, &[], |cfg| blast(cfg.n_app, &params));
+
+    let best = &report.candidates[report.best_time];
+    let worst = report
+        .candidates
+        .iter()
+        .map(|c| c.time_s())
+        .fold(f64::MIN, f64::max);
+    println!(
+        "best {} = {:.0}s, worst = {:.0}s, spread {:.1}x",
+        best.config.label,
+        best.time_s(),
+        worst,
+        worst / best.time_s()
+    );
+    assert!(best.config.n_app >= 10 && best.config.n_app <= 17, "paper's optimum is app-heavy");
+    assert!(worst / best.time_s() > 5.0, "partitioning spread should be large");
+
+    // Cost question: lowest-cost config uses fewer nodes' worth of time.
+    let cheap = &report.candidates[report.best_cost];
+    assert!(cheap.cost_node_s() <= best.cost_node_s());
+}
+
+#[test]
+fn scenario_two_pareto_spans_allocations() {
+    // Scenario II (Fig 9): across 11/17/20-node allocations the pareto
+    // front should include more than one allocation size — the paper's
+    // point is that a bigger allocation buys speed at similar cost.
+    let predictor = Predictor::new(Platform::paper_testbed());
+    let params = BlastParams { queries: 100, ..Default::default() };
+    let space = SearchSpace::elastic(vec![11, 20], vec![Bytes::kb(256)]);
+    let report = Searcher::new(&predictor)
+        .with_top_k(usize::MAX)
+        .search(&space, &[], |cfg| blast(cfg.n_app, &params));
+    let sizes: std::collections::HashSet<usize> =
+        report.pareto.iter().map(|&i| report.candidates[i].config.n_hosts()).collect();
+    println!("pareto allocations: {sizes:?} ({} members)", report.pareto.len());
+    assert!(!report.pareto.is_empty());
+    // The fastest pareto point should come from the larger allocation.
+    let fastest = report.pareto[0];
+    assert_eq!(report.candidates[fastest].config.n_hosts(), 20);
+}
+
+#[test]
+fn what_if_ssd_and_10g_change_the_answer_sensibly() {
+    // §2.1 "new technology evaluation": faster hardware must not slow the
+    // predicted best configuration down, and 10 GbE should shift the
+    // optimum toward fewer storage nodes.
+    let params = BlastParams { queries: 100, ..Default::default() };
+    let space = SearchSpace::fixed_cluster(20, vec![Bytes::kb(256)]);
+    let base = Searcher::new(&Predictor::new(Platform::paper_testbed()))
+        .with_top_k(usize::MAX)
+        .search(&space, &[], |cfg| blast(cfg.n_app, &params));
+    let teng = Searcher::new(&Predictor::new(Platform::paper_testbed_10g()))
+        .with_top_k(usize::MAX)
+        .search(&space, &[], |cfg| blast(cfg.n_app, &params));
+    let t_base = base.candidates[base.best_time].time_s();
+    let t_10g = teng.candidates[teng.best_time].time_s();
+    println!("best: paper {t_base:.0}s vs 10g {t_10g:.0}s");
+    assert!(t_10g <= t_base * 1.01, "10 GbE should not hurt");
+    let app_base = base.candidates[base.best_time].config.n_app;
+    let app_10g = teng.candidates[teng.best_time].config.n_app;
+    assert!(app_10g >= app_base, "faster network frees nodes for compute");
+}

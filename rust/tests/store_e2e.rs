@@ -1,0 +1,159 @@
+//! End-to-end tests of the real TCP object store: a full workflow pattern
+//! executed with real bytes over loopback sockets, exercising the same
+//! protocol the model simulates, plus the system-identification path.
+
+use wfpred::ident::{identify, CampaignCfg, IdentConfig};
+use wfpred::store::{Cluster, StorePlacement};
+use wfpred::util::units::Bytes;
+
+/// Run a miniature pipeline workflow (3 pipelines × 2 stages) against the
+/// real store, with local-style placement, verifying content integrity
+/// end to end.
+#[test]
+fn pipeline_workflow_over_real_store() {
+    let cl = Cluster::start(3).unwrap();
+    let chunk = 64 * 1024;
+
+    // Stage 1: each "pipeline" writes an intermediate pinned to "its" node.
+    for p in 0..3u32 {
+        let mut c = cl
+            .client()
+            .unwrap()
+            .with_chunk_size(chunk)
+            .with_placement(StorePlacement::OnNode { node: p });
+        let data: Vec<u8> = (0..300_000u32).map(|i| ((i * (p + 1)) % 251) as u8).collect();
+        c.write(&format!("mid.{p}"), &data).unwrap();
+    }
+    // Each node holds exactly its pipeline's intermediate.
+    for (i, n) in cl.nodes.iter().enumerate() {
+        assert_eq!(n.stored_bytes(), 300_000, "node {i}");
+    }
+
+    // Stage 2: consumers read the intermediates back and write outputs
+    // striped over everything.
+    for p in 0..3u32 {
+        let mut c = cl.client().unwrap().with_chunk_size(chunk);
+        let data = c.read(&format!("mid.{p}")).unwrap();
+        assert_eq!(data.len(), 300_000);
+        assert_eq!(data[1], ((p + 1) % 251) as u8);
+        let out: Vec<u8> = data.iter().map(|b| b.wrapping_add(1)).collect();
+        c.write(&format!("out.{p}"), &out).unwrap();
+    }
+    assert_eq!(cl.stored_total(), 6 * 300_000);
+}
+
+/// A reduce workflow with collocation: all intermediates to one node,
+/// reducer gathers them.
+#[test]
+fn reduce_workflow_with_collocation() {
+    let cl = Cluster::start(4).unwrap();
+    let target = 2u32;
+    for p in 0..4u32 {
+        let mut c = cl
+            .client()
+            .unwrap()
+            .with_chunk_size(32 * 1024)
+            .with_placement(StorePlacement::OnNode { node: target });
+        c.write(&format!("part.{p}"), &vec![p as u8; 100_000]).unwrap();
+    }
+    assert_eq!(cl.nodes[target as usize].stored_bytes(), 400_000);
+
+    let mut reducer = cl.client().unwrap();
+    let mut total = 0usize;
+    for p in 0..4u32 {
+        let d = reducer.read(&format!("part.{p}")).unwrap();
+        assert!(d.iter().all(|&b| b == p as u8));
+        total += d.len();
+    }
+    assert_eq!(total, 400_000);
+}
+
+/// Broadcast with replication: one writer, several readers, replicas
+/// spread the chunks.
+#[test]
+fn broadcast_with_replication() {
+    let cl = Cluster::start(4).unwrap();
+    let mut w = cl.client().unwrap().with_chunk_size(16 * 1024).with_replication(2);
+    let data: Vec<u8> = (0..200_000u32).map(|i| (i % 256) as u8).collect();
+    w.write("shared", &data).unwrap();
+    assert_eq!(cl.stored_total(), 400_000, "2 replicas of every chunk");
+
+    for _ in 0..4 {
+        let mut r = cl.client().unwrap();
+        assert_eq!(r.read("shared").unwrap(), data);
+    }
+}
+
+/// Large-ish single file exercising many chunks and all nodes.
+#[test]
+fn many_chunk_file_integrity() {
+    let cl = Cluster::start(5).unwrap();
+    let mut c = cl.client().unwrap().with_chunk_size(8 * 1024);
+    let data: Vec<u8> =
+        (0..1_000_003u32).map(|i| (i.wrapping_mul(2654435761) >> 24) as u8).collect();
+    let groups = c.write("big", &data).unwrap();
+    assert_eq!(groups.len(), 1_000_003usize.div_ceil(8 * 1024));
+    assert_eq!(c.read("big").unwrap(), data);
+    // All 5 nodes hold something.
+    assert!(cl.nodes.iter().all(|n| n.stored_bytes() > 0));
+}
+
+/// The identification procedure runs end to end against the real store
+/// and produces a usable platform (quick settings; the thorough run is in
+/// the ident unit test and the CLI).
+#[test]
+fn identification_end_to_end() {
+    let cfg = IdentConfig {
+        file_size: Bytes::mb(1),
+        chunk_size: Bytes::kb(128),
+        probe_size: Bytes::mb(1),
+        campaign: CampaignCfg { rel_accuracy: 0.25, min_samples: 3, max_samples: 6 },
+    };
+    let id = identify(&cfg).unwrap();
+    let plat = id.to_platform();
+    assert!(plat.validate().is_ok());
+    // The derived platform can actually drive a prediction.
+    let wl = wfpred::workload::patterns::pipeline(
+        2,
+        wfpred::workload::patterns::PatternScale::Small,
+        false,
+    );
+    let cfg2 = wfpred::model::Config::dss(2);
+    let rep = wfpred::model::simulate(&wl, &cfg2, &plat);
+    assert!(rep.turnaround.as_secs_f64() > 0.0);
+}
+
+/// Failure injection: with replication 2, reads survive the loss of a
+/// storage node (replica failover in the SAI).
+#[test]
+fn read_survives_node_failure_with_replication() {
+    let mut cl = Cluster::start(3).unwrap();
+    let data: Vec<u8> = (0..300_000u32).map(|i| (i % 241) as u8).collect();
+    {
+        let mut w = cl.client().unwrap().with_chunk_size(32 * 1024).with_replication(2);
+        w.write("precious", &data).unwrap();
+    }
+    // Kill node 0 (drop shuts its listener down and joins its threads).
+    let dead = cl.nodes.remove(0);
+    drop(dead);
+
+    let mut r = cl.client().unwrap();
+    let back = r.read("precious").expect("failover read");
+    assert_eq!(back, data, "content intact after losing one replica");
+}
+
+/// Without replication, losing the only holder of a chunk is fatal — and
+/// the error says so instead of hanging or corrupting.
+#[test]
+fn read_fails_cleanly_without_replication() {
+    let mut cl = Cluster::start(2).unwrap();
+    {
+        let mut w = cl.client().unwrap().with_chunk_size(16 * 1024).with_replication(1);
+        w.write("fragile", &vec![5u8; 100_000]).unwrap();
+    }
+    let dead = cl.nodes.remove(0);
+    drop(dead);
+    let mut r = cl.client().unwrap();
+    let err = r.read("fragile").unwrap_err().to_string();
+    assert!(err.contains("replicas failed"), "clear diagnosis, got: {err}");
+}
