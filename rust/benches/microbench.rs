@@ -6,7 +6,10 @@
 //! cost, real-store loopback throughput, and AOT-artifact execution
 //! latency.
 
-use wfpred::model::{simulate, Config, Platform};
+use wfpred::coordinator;
+use wfpred::model::{simulate, simulate_fid, Config, Fidelity, Platform};
+use wfpred::predict::Predictor;
+use wfpred::search::{SearchSpace, Searcher};
 use wfpred::sim::{Scheduler, SimState, Simulation};
 use wfpred::store::{Cluster, StorePlacement};
 use wfpred::testbed::Testbed;
@@ -69,6 +72,93 @@ fn main() {
         });
         record(&format!("predict_{name}"), &r, events as f64, "sim-events");
     }
+
+    // Frame-path trajectory: the chunk-heavy acceptance workload (16-host
+    // BLAST-style stage, 1 MB chunks over 64 KB frames) under the bulk
+    // fast path vs the per-frame reference, plus the parallel refinement
+    // sweep — written to results/BENCH_frame_path.json so future PRs have
+    // a perf baseline to regress against (see PERF.md §Methodology).
+    println!("\n== frame path: bulk vs per-frame ==");
+    let fp_params = BlastParams { queries: 40, ..Default::default() };
+    let fp_wl = blast(10, &fp_params);
+    let fp_cfg = Config::partitioned(10, 5, Bytes::mb(1));
+    let mut fp = Vec::new(); // (label, wall_secs, events, sim_secs)
+    for (label, fid) in
+        [("bulk", Fidelity::coarse()), ("per_frame", Fidelity::coarse_per_frame())]
+    {
+        let mut events = 0u64;
+        let mut sim_secs = 0.0;
+        let r = BenchRunner::new(1, 5).run(&format!("frame-path[{label}]: blast-10/5 1MB"), |_| {
+            let rep = simulate_fid(&fp_wl, &fp_cfg, &plat, fid.clone());
+            events = rep.events;
+            sim_secs = rep.turnaround.as_secs_f64();
+            black_box(rep.net_bytes);
+        });
+        record(&format!("frame_path_{label}"), &r, events as f64, "sim-events");
+        fp.push((label, r.secs.mean(), events, sim_secs));
+    }
+    let (wall_b, ev_b, sim_b) = (fp[0].1, fp[0].2, fp[0].3);
+    let (wall_f, ev_f, sim_f) = (fp[1].1, fp[1].2, fp[1].3);
+    println!(
+        "    -> {:.1}x fewer events, {:.1}x wall-clock, turnaround delta {:.3}%",
+        ev_f as f64 / ev_b as f64,
+        wall_f / wall_b,
+        (sim_b - sim_f).abs() / sim_f * 100.0
+    );
+
+    println!("\n== parallel refinement sweep (Scenario I grid) ==");
+    let predictor = Predictor::new(Platform::paper_testbed());
+    let space = SearchSpace::fixed_cluster(20, vec![Bytes::kb(256)]);
+    let sweep_secs = |threads: usize| {
+        let t0 = std::time::Instant::now();
+        let rep = Searcher::new(&predictor)
+            .with_top_k(usize::MAX)
+            .with_threads(threads)
+            .search(&space, &[], |cfg| blast(cfg.n_app, &fp_params));
+        black_box(rep.best_time);
+        (t0.elapsed().as_secs_f64(), rep.candidates.len())
+    };
+    let (sweep_seq, grid_n) = sweep_secs(1);
+    let sweep_threads = coordinator::available_threads().clamp(4, 16);
+    let (sweep_par, _) = sweep_secs(sweep_threads);
+    println!(
+        "    -> {grid_n} candidates: {sweep_seq:.2}s sequential, {sweep_par:.2}s on {sweep_threads} threads ({:.1}x)",
+        sweep_seq / sweep_par
+    );
+
+    let frame_path_json = Json::obj()
+        .set("workload", "blast-10app-5sto-1MB-chunks-64KB-frames")
+        .set(
+            "bulk",
+            Json::obj()
+                .set("events", ev_b)
+                .set("events_per_sec", ev_b as f64 / wall_b)
+                .set("wall_secs", wall_b)
+                .set("wall_secs_per_sim_hour", wall_b / (sim_b / 3600.0))
+                .set("sim_turnaround_s", sim_b),
+        )
+        .set(
+            "per_frame",
+            Json::obj()
+                .set("events", ev_f)
+                .set("events_per_sec", ev_f as f64 / wall_f)
+                .set("wall_secs", wall_f)
+                .set("wall_secs_per_sim_hour", wall_f / (sim_f / 3600.0))
+                .set("sim_turnaround_s", sim_f),
+        )
+        .set("event_reduction_x", ev_f as f64 / ev_b as f64)
+        .set("wallclock_speedup_x", wall_f / wall_b)
+        .set("turnaround_rel_err", (sim_b - sim_f).abs() / sim_f)
+        .set(
+            "parallel_sweep",
+            Json::obj()
+                .set("grid_candidates", grid_n)
+                .set("threads", sweep_threads)
+                .set("sequential_secs", sweep_seq)
+                .set("parallel_secs", sweep_par)
+                .set("speedup_x", sweep_seq / sweep_par),
+        );
+    write_results("BENCH_frame_path.json", &frame_path_json.render());
 
     println!("\n== testbed trial ==");
     let tb = Testbed::new(Platform::paper_testbed());

@@ -1,1 +1,97 @@
-// paper's L3 coordination contribution
+//! Deterministic parallel coordination of independent simulations.
+//!
+//! The configuration-space search (paper §1/§3.2) evaluates many
+//! (workload, config) candidates, and every candidate's `World` is fully
+//! self-contained — the refinement sweep is embarrassingly parallel. This
+//! module is the one place that owns threads: a work-stealing indexed map
+//! over `0..n` built on `std::thread::scope`, returning results in input
+//! order so parallel runs are **byte-identical** to sequential ones
+//! (asserted by `tests/bulk_path.rs`). Both the grid `Searcher` and the
+//! multi-chain `Annealer` dispatch through here.
+//!
+//! Design constraints:
+//! * determinism — results are slotted by index, never by completion
+//!   order, and each work item derives any seed from its index alone;
+//! * zero dependencies — scoped threads + atomics from `std` only;
+//! * panic transparency — a panicking worker propagates through
+//!   `thread::scope`, so a failing candidate fails the sweep loudly
+//!   instead of silently dropping a result.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Worker threads to use by default: one per available core.
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Apply `f` to every index in `0..n` across up to `threads` scoped
+/// workers and return the results in index order.
+///
+/// `threads <= 1` (or `n <= 1`) runs inline on the caller's thread — the
+/// sequential reference path. Workers pull indices from a shared atomic
+/// counter (dynamic load balancing: candidate simulations vary wildly in
+/// cost), and each result lands in its own slot, so the output is
+/// identical to `(0..n).map(f).collect()` whenever `f` is deterministic.
+pub fn par_map_indexed<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                *slots[i].lock().unwrap() = Some(v);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("worker filled every slot"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_are_in_index_order() {
+        let xs = par_map_indexed(100, 8, |i| i * i);
+        assert_eq!(xs, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_matches_sequential() {
+        let work = |i: usize| {
+            // Uneven per-item cost to exercise the dynamic scheduler.
+            (0..(i % 7) * 1000).fold(i as u64, |a, b| a.wrapping_mul(31).wrapping_add(b as u64))
+        };
+        let seq = par_map_indexed(64, 1, work);
+        let par = par_map_indexed(64, 4, work);
+        assert_eq!(seq, par, "parallel sweep must be byte-identical to sequential");
+    }
+
+    #[test]
+    fn degenerate_sizes() {
+        assert_eq!(par_map_indexed(0, 4, |i| i), Vec::<usize>::new());
+        assert_eq!(par_map_indexed(1, 4, |i| i + 1), vec![1]);
+        assert!(available_threads() >= 1);
+    }
+
+    #[test]
+    fn more_threads_than_items_is_fine() {
+        assert_eq!(par_map_indexed(3, 64, |i| i), vec![0, 1, 2]);
+    }
+}

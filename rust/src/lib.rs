@@ -32,6 +32,9 @@
 //!   prescreen (`artifacts/predictor.hlo.txt`).
 //! * [`search`] — configuration-space exploration: analytic prescreen →
 //!   discrete-event refinement → pareto front / scenario reports.
+//! * [`coordinator`] — deterministic scoped-thread execution of
+//!   independent candidate simulations (the search layers fan out
+//!   through it; results stay byte-identical to sequential runs).
 //!
 //! ## Quickstart
 //!
@@ -53,6 +56,7 @@ pub mod store;
 pub mod ident;
 pub mod predict;
 pub mod runtime;
+pub mod coordinator;
 pub mod search;
 pub mod cli;
 

@@ -8,6 +8,21 @@
 //! components are FIFO single-server stations with service times from the
 //! [`Platform`] (system identification). The application driver
 //! (`driver.rs`) feeds client queues by replaying the workload DAG.
+//!
+//! ## Network fast path (bulk frame trains)
+//!
+//! Under [`Fidelity::frame_aggregation`] (the predictor's default) a
+//! message's whole frame train is serviced as **one** analytically-drained
+//! entry per NIC station — O(1) scheduler events per message instead of
+//! O(n_frames) — with the pipelined overlap between the two NICs
+//! preserved: the train "arrives" at the destination one frame-service
+//! after it starts transmitting (cut-through), exactly when the per-frame
+//! path would deliver its first frame, and the in-NIC then charges the
+//! full train service. Turnaround matches the per-frame path to within
+//! one frame service per message, and station busy/queue integrals are
+//! exact under the aggregation (see `sim::station` and PERF.md §Frame
+//! path). The per-frame path remains selectable for interleaving- or
+//! SYN-loss-sensitive runs (the detailed tier keeps it on).
 
 use crate::model::config::{Config, Placement};
 use crate::model::driver::DriverState;
@@ -34,6 +49,17 @@ pub(crate) enum ConnState {
     /// whose in-NIC congestion governs SYN loss.
     Pending { dst: usize, buf: Vec<MsgId> },
     Up,
+}
+
+/// Decomposed service times of one frame train (see `World::train_svc`).
+#[derive(Clone, Copy, Debug)]
+struct TrainSvc {
+    /// Exact sum of per-frame service times.
+    total: SimTime,
+    /// Leading frame's service time (cut-through offset).
+    first: SimTime,
+    /// Full-frame service time (analytic intra-train queueing unit).
+    unit: SimTime,
 }
 
 /// Committed file metadata at the manager: one replica group per chunk.
@@ -106,6 +132,8 @@ pub struct World<'a> {
     // Accounting.
     pub(crate) stored: Vec<u64>,
     pub(crate) net_bytes: u64,
+    /// Wire frames modeled (independent of whether they were aggregated).
+    pub(crate) net_frames: u64,
     pub(crate) op_records: Vec<OpRecord>,
     pub(crate) task_records: Vec<TaskRecord>,
 }
@@ -146,6 +174,7 @@ impl<'a> World<'a> {
             driver: DriverState::new(wl, cfg),
             stored: vec![0; cfg.n_storage],
             net_bytes: 0,
+            net_frames: 0,
             op_records: Vec::new(),
             task_records: Vec::new(),
         };
@@ -305,7 +334,41 @@ impl<'a> World<'a> {
         SimTime((bytes as f64 * nspb) as u64)
     }
 
-    /// Fragment a message into frames and enqueue at the source out-NIC.
+    /// Service-time decomposition of a whole frame train. `total` is the
+    /// exact sum of the per-frame service times (so aggregated busy
+    /// integrals match the per-frame path bit-for-bit), `first` is the
+    /// leading frame's service (cut-through offset), `unit` the full-frame
+    /// service used for analytic intra-train queueing.
+    #[inline(always)]
+    fn train_svc(&self, total_bytes: u64, n_frames: u64, local: bool) -> TrainSvc {
+        debug_assert!(n_frames >= 1);
+        let cap = self.plat.frame_size.as_u64();
+        let full = self.frame_svc(cap, local);
+        let last_bytes = total_bytes - (n_frames - 1) * cap;
+        let last = self.frame_svc(last_bytes, local);
+        let total = SimTime(full.0 * (n_frames - 1)) + last;
+        let first = if n_frames > 1 { full } else { last };
+        TrainSvc { total, first, unit: full }
+    }
+
+    /// Schedule a train's arrival at the destination in-NIC: one
+    /// frame-service after its out-NIC service *starts* (when the leading
+    /// frame lands), preserving the per-frame path's pipelined overlap.
+    fn schedule_train_arrival(
+        &self,
+        sched: &mut Scheduler<Ev>,
+        start: SimTime,
+        frame: Frame,
+        first_svc: SimTime,
+    ) {
+        let msg = &self.msgs[frame.msg];
+        let dst = self.host_of(msg.to);
+        let lat = if msg.local { self.plat.net_latency_local } else { self.plat.net_latency };
+        sched.at(start + first_svc + lat, Ev::FrameArrive(dst, frame));
+    }
+
+    /// Fragment a message into frames and enqueue at the source out-NIC —
+    /// either as one bulk train (fast path) or one entry per wire frame.
     fn transmit(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, msg_id: MsgId) {
         let msg = &self.msgs[msg_id];
         let src = self.host_of(msg.from);
@@ -316,14 +379,30 @@ impl<'a> World<'a> {
         let frame_cap = self.plat.frame_size.as_u64();
         let total = size.as_u64().max(1);
         let n_frames = total.div_ceil(frame_cap);
-        let mut left = total;
-        for i in 0..n_frames {
-            let b = left.min(frame_cap);
-            left -= b;
-            let frame = Frame { msg: msg_id, bytes: Bytes(b), last: i == n_frames - 1 };
-            let svc = self.frame_svc(b, local);
-            if let Some(t) = self.nic_out[src].arrive(now, frame, svc) {
+        self.net_frames += n_frames;
+
+        if self.fid.frame_aggregation {
+            let frame =
+                Frame { msg: msg_id, bytes: Bytes(total), frames: n_frames as u32, last: true };
+            let ts = self.train_svc(total, n_frames, local);
+            if let Some(t) = self.nic_out[src].arrive_train(now, frame, ts.total, n_frames, ts.unit)
+            {
                 sched.at(t, Ev::NicOutDone(src));
+                self.schedule_train_arrival(sched, now, frame, ts.first);
+            }
+            // Queued trains get their arrival scheduled when they reach
+            // the head of the out-NIC (see on_nic_out_done).
+        } else {
+            let mut left = total;
+            for i in 0..n_frames {
+                let b = left.min(frame_cap);
+                left -= b;
+                let frame =
+                    Frame { msg: msg_id, bytes: Bytes(b), frames: 1, last: i == n_frames - 1 };
+                let svc = self.frame_svc(b, local);
+                if let Some(t) = self.nic_out[src].arrive(now, frame, svc) {
+                    sched.at(t, Ev::NicOutDone(src));
+                }
             }
         }
     }
@@ -362,23 +441,45 @@ impl<'a> World<'a> {
         let (frame, next) = self.nic_out[host].complete(now);
         if let Some(t) = next {
             sched.at(t, Ev::NicOutDone(host));
+            if self.fid.frame_aggregation {
+                // The next train starts service now — schedule its
+                // cut-through arrival at the destination.
+                if let Some(&nf) = self.nic_out[host].in_service() {
+                    let local = self.msgs[nf.msg].local;
+                    let ts = self.train_svc(nf.bytes.as_u64(), nf.frames as u64, local);
+                    self.schedule_train_arrival(sched, now, nf, ts.first);
+                }
+            }
         }
-        let msg = &self.msgs[frame.msg];
-        let dst = self.host_of(msg.to);
-        let lat = if msg.local { self.plat.net_latency_local } else { self.plat.net_latency };
-        sched.at(now + lat, Ev::FrameArrive(dst, frame));
+        if !self.fid.frame_aggregation {
+            let msg = &self.msgs[frame.msg];
+            let dst = self.host_of(msg.to);
+            let lat = if msg.local { self.plat.net_latency_local } else { self.plat.net_latency };
+            sched.at(now + lat, Ev::FrameArrive(dst, frame));
+        }
+        // Bulk trains already had their arrival scheduled at service start.
     }
 
     fn on_frame_arrive(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, host: usize, frame: Frame) {
         let local = self.msgs[frame.msg].local;
-        let mut svc = self.frame_svc(frame.bytes.as_u64(), local);
+        let mut svc = if frame.frames > 1 {
+            self.train_svc(frame.bytes.as_u64(), frame.frames as u64, local).total
+        } else {
+            self.frame_svc(frame.bytes.as_u64(), local)
+        };
         // Detailed fidelity: concurrent-flow multiplexing overhead on
-        // remote receive under backlog (see Fidelity::mux_eta).
+        // remote receive under backlog (see Fidelity::mux_eta). On the
+        // bulk path the whole train is inflated once, using the backlog
+        // its leading frame sees.
         if self.fid.mux_eta > 0.0 && !local {
             let q = self.nic_in[host].queue_len() as f64;
             svc = SimTime((svc.0 as f64 * (1.0 + self.fid.mux_eta * (1.0 + q).ln())) as u64);
         }
-        if let Some(t) = self.nic_in[host].arrive(now, frame, svc) {
+        // Receive-side trains are paced by the sender (frames land at the
+        // service rate), so no analytic intra-train waiting accrues.
+        if let Some(t) =
+            self.nic_in[host].arrive_train(now, frame, svc, frame.frames as u64, SimTime::ZERO)
+        {
             sched.at(t, Ev::NicInDone(host));
         }
     }
@@ -773,6 +874,12 @@ impl<'a> World<'a> {
                 .zip(self.nic_in.iter())
                 .map(|(o, i)| (o.stats.utilization(end), i.stats.utilization(end)))
                 .collect(),
+            nic_qlen: self
+                .nic_out
+                .iter()
+                .zip(self.nic_in.iter())
+                .map(|(o, i)| (o.stats.mean_qlen(end), i.stats.mean_qlen(end)))
+                .collect(),
         };
         SimReport {
             config_label: self.cfg.label.clone(),
@@ -780,6 +887,7 @@ impl<'a> World<'a> {
             ops: self.op_records,
             tasks: self.task_records,
             net_bytes: Bytes(self.net_bytes),
+            net_frames: self.net_frames,
             stored: self.stored.iter().map(|&b| Bytes(b)).collect(),
             capacity_overflows: overflows,
             util,

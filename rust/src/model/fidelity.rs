@@ -27,9 +27,18 @@
 use crate::util::units::SimTime;
 
 /// Fidelity knobs. `coarse()` is the paper's predictor; `detailed(seed)`
-/// is the emulated testbed.
+/// is the emulated testbed; `coarse_per_frame()` is the predictor with
+/// the network fast path disabled (frame-level events), kept for
+/// equivalence testing and interleaving-sensitive studies.
 #[derive(Clone, Debug)]
 pub struct Fidelity {
+    /// Bulk network fast path: service a message's whole frame train as a
+    /// single analytically-drained entry at each NIC station (O(1) events
+    /// per message) instead of one event chain per wire frame
+    /// (O(n_frames)). Turnaround and station integrals are preserved (see
+    /// PERF.md §Frame path); turn it off for runs where frame-level
+    /// interleaving or SYN-loss dynamics matter (the detailed tier does).
+    pub frame_aggregation: bool,
     /// Extra control rounds: per-op open/close round trips plus one
     /// manager round per `alloc_batch` chunks.
     pub control_rounds: bool,
@@ -75,6 +84,7 @@ impl Fidelity {
     /// protocol — exactly the paper's model.
     pub fn coarse() -> Fidelity {
         Fidelity {
+            frame_aggregation: true,
             control_rounds: false,
             alloc_batch: u32::MAX,
             connections: false,
@@ -95,6 +105,9 @@ impl Fidelity {
     /// The testbed's fidelity: everything on. `seed` selects the trial.
     pub fn detailed(seed: u64) -> Fidelity {
         Fidelity {
+            // Frame-level events: SYN-loss probabilities and mux overhead
+            // are calibrated against frame-granularity queue depths.
+            frame_aggregation: false,
             control_rounds: true,
             alloc_batch: 16,
             connections: true,
@@ -114,6 +127,13 @@ impl Fidelity {
             random_placement: true,
             seed,
         }
+    }
+
+    /// The predictor's fidelity with the bulk network fast path disabled:
+    /// identical protocol, one event chain per wire frame. Used by the
+    /// equivalence tests and the frame-path microbench baseline.
+    pub fn coarse_per_frame() -> Fidelity {
+        Fidelity { frame_aggregation: false, ..Fidelity::coarse() }
     }
 
     /// Does any knob need an RNG?
@@ -147,6 +167,17 @@ mod tests {
         let f = Fidelity::coarse();
         assert!(!f.stochastic());
         assert_eq!(f.syn_drop_prob(10_000), 0.0);
+        assert!(f.frame_aggregation, "predictor defaults to the bulk fast path");
+    }
+
+    #[test]
+    fn coarse_per_frame_differs_only_in_frame_path() {
+        let a = Fidelity::coarse();
+        let b = Fidelity::coarse_per_frame();
+        assert!(!b.frame_aggregation);
+        assert!(!b.stochastic());
+        assert_eq!(a.control_rounds, b.control_rounds);
+        assert_eq!(a.connections, b.connections);
     }
 
     #[test]

@@ -107,11 +107,18 @@ pub struct Msg {
     pub local: bool,
 }
 
-/// A network frame: a fragment of one message traversing NIC queues.
+/// A network frame — or, on the bulk fast path, a whole frame *train*:
+/// every wire frame of one message traversing the NIC queues as a single
+/// analytically-drained entry (`frames > 1`).
 #[derive(Clone, Copy, Debug)]
 pub struct Frame {
     pub msg: MsgId,
+    /// Bytes carried: one frame's worth on the per-frame path, the whole
+    /// message's wire size on the bulk path.
     pub bytes: Bytes,
+    /// Number of wire frames this entry aggregates (1 on the per-frame
+    /// path).
+    pub frames: u32,
     /// Last frame of its message — delivery trigger (frames of one message
     /// traverse the same FIFO queues, so order within a message holds).
     pub last: bool,

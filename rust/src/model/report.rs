@@ -42,6 +42,14 @@ pub struct UtilReport {
     pub storage: Vec<(f64, f64)>,
     /// (out-NIC utilization, in-NIC utilization) per host.
     pub nic: Vec<(f64, f64)>,
+    /// (out-NIC, in-NIC) time-averaged queue length per host, in *frames*.
+    /// Trains are unit-weighted and intra-train waiting is accounted
+    /// analytically (see `sim::station`), so under bulk aggregation these
+    /// integrals match the per-frame path exactly at uncontended stations
+    /// (property-tested); at a backlogged in-NIC a queued train counts all
+    /// its frames as waiting while the per-frame path still paces them at
+    /// the sender, so depths can read higher there (see ROADMAP follow-ons).
+    pub nic_qlen: Vec<(f64, f64)>,
 }
 
 /// Full output of one simulated run.
@@ -54,6 +62,10 @@ pub struct SimReport {
     pub tasks: Vec<TaskRecord>,
     /// Bytes that crossed the network (both directions, data + control).
     pub net_bytes: Bytes,
+    /// Wire frames modeled — counted whether or not the frame path
+    /// aggregated them into bulk trains, so `events / net_frames` exposes
+    /// the aggregation factor.
+    pub net_frames: u64,
     /// Bytes stored per storage node at the end of the run.
     pub stored: Vec<Bytes>,
     /// Storage nodes whose stored bytes exceeded the platform capacity.
@@ -119,9 +131,16 @@ mod tests {
             ops: vec![],
             tasks,
             net_bytes: Bytes::ZERO,
+            net_frames: 0,
             stored: vec![Bytes::mb(1), Bytes::mb(3)],
             capacity_overflows: 0,
-            util: UtilReport { manager_util: 0.0, manager_mean_qlen: 0.0, storage: vec![], nic: vec![] },
+            util: UtilReport {
+                manager_util: 0.0,
+                manager_mean_qlen: 0.0,
+                storage: vec![],
+                nic: vec![],
+                nic_qlen: vec![],
+            },
             events: 0,
             conn_retries: 0,
         }

@@ -74,7 +74,12 @@ pub fn encode_platform(plat: &Platform) -> [f32; 8] {
 }
 
 /// A compiled, executable scorer.
+///
+/// Real PJRT execution needs the `xla` bindings, which are not vendored
+/// in the offline build; without the `pjrt` feature [`ScorerRuntime::load`]
+/// returns an error and callers fall back to pure DES refinement.
 pub struct ScorerRuntime {
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
     /// Static batch width of the artifact.
     pub batch: usize,
@@ -107,7 +112,11 @@ impl ScorerRuntime {
             }
         }
         anyhow::ensure!(batch > 0 && stages > 0, "bad meta file {meta_path}");
+        Self::compile_artifact(artifact, batch, stages)
+    }
 
+    #[cfg(feature = "pjrt")]
+    fn compile_artifact(artifact: &Path, batch: usize, stages: usize) -> Result<ScorerRuntime> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         let proto = xla::HloModuleProto::from_text_file(
             artifact.to_str().context("non-utf8 artifact path")?,
@@ -116,6 +125,15 @@ impl ScorerRuntime {
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = client.compile(&comp).context("compiling artifact")?;
         Ok(ScorerRuntime { exe, batch, stages })
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn compile_artifact(_artifact: &Path, _batch: usize, _stages: usize) -> Result<ScorerRuntime> {
+        anyhow::bail!(
+            "PJRT runtime not compiled in: vendor the xla bindings (add them as a \
+             path dependency in rust/Cargo.toml) and rebuild with `--features pjrt`; \
+             offline builds fall back to DES-only refinement"
+        )
     }
 
     /// Load from the default artifact location relative to the repo root.
@@ -145,6 +163,17 @@ impl ScorerRuntime {
         Ok(out)
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    fn score_one_batch(
+        &self,
+        _configs: &[[f32; 8]],
+        _stage_descs: &[StageDesc],
+        _platform: &[f32; 8],
+    ) -> Result<Vec<Score>> {
+        anyhow::bail!("PJRT runtime not compiled in")
+    }
+
+    #[cfg(feature = "pjrt")]
     fn score_one_batch(
         &self,
         configs: &[[f32; 8]],

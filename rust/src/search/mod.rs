@@ -11,6 +11,7 @@
 
 pub mod anneal;
 
+use crate::coordinator;
 use crate::model::Config;
 use crate::predict::{Prediction, Predictor};
 use crate::runtime::{encode_config, encode_platform, Score, ScorerRuntime, StageDesc};
@@ -118,11 +119,20 @@ pub struct Searcher<'a> {
     pub runtime: Option<&'a ScorerRuntime>,
     /// Candidates refined with the discrete-event predictor.
     pub refine_top_k: usize,
+    /// Worker threads for the refinement sweep (candidates are
+    /// independent `World`s; results are returned in enumeration order,
+    /// byte-identical to the `threads == 1` sequential path).
+    pub threads: usize,
 }
 
 impl<'a> Searcher<'a> {
     pub fn new(predictor: &'a Predictor) -> Searcher<'a> {
-        Searcher { predictor, runtime: None, refine_top_k: 12 }
+        Searcher {
+            predictor,
+            runtime: None,
+            refine_top_k: 12,
+            threads: coordinator::available_threads(),
+        }
     }
 
     pub fn with_runtime(mut self, rt: &'a ScorerRuntime) -> Searcher<'a> {
@@ -135,6 +145,12 @@ impl<'a> Searcher<'a> {
         self
     }
 
+    /// Bound the refinement sweep's parallelism (1 = sequential).
+    pub fn with_threads(mut self, t: usize) -> Searcher<'a> {
+        self.threads = t.max(1);
+        self
+    }
+
     /// Explore `space` for a workload family: `workload_for(config)`
     /// builds the concrete workload for a candidate (e.g. BLAST's task
     /// count follows the app-node count). `stage_descs` describes the
@@ -143,7 +159,7 @@ impl<'a> Searcher<'a> {
         &self,
         space: &SearchSpace,
         stage_descs: &[StageDesc],
-        workload_for: impl Fn(&Config) -> Workload,
+        workload_for: impl Fn(&Config) -> Workload + Sync,
     ) -> SearchReport {
         let t0 = std::time::Instant::now();
         let configs = space.enumerate();
@@ -183,17 +199,27 @@ impl<'a> Searcher<'a> {
             refine.iter_mut().for_each(|r| *r = true);
         }
 
-        // --- discrete-event refinement ---
+        // --- discrete-event refinement (parallel over candidates) ---
+        // Each candidate's simulation is deterministic and self-contained,
+        // so the sweep fans out across scoped threads; results come back
+        // in enumeration order, making the report byte-identical to the
+        // sequential path.
+        let predictor = self.predictor;
+        let refined: Vec<Option<Prediction>> =
+            coordinator::par_map_indexed(configs.len(), self.threads, |i| {
+                if refine[i] {
+                    let wl = workload_for(&configs[i]);
+                    Some(predictor.predict(&wl, &configs[i]))
+                } else {
+                    None
+                }
+            });
         let mut candidates: Vec<Candidate> = Vec::with_capacity(configs.len());
         let mut pruned = 0;
-        for (i, cfg) in configs.into_iter().enumerate() {
-            let refined = if refine[i] {
-                let wl = workload_for(&cfg);
-                Some(self.predictor.predict(&wl, &cfg))
-            } else {
+        for (i, (cfg, refined)) in configs.into_iter().zip(refined).enumerate() {
+            if refined.is_none() {
                 pruned += 1;
-                None
-            };
+            }
             candidates.push(Candidate { config: cfg, prescreen: prescreen[i], refined });
         }
 
@@ -300,6 +326,36 @@ mod tests {
         // Best-time config is faster than the 1-app edge.
         let edge = report.candidates.iter().find(|c| c.config.n_app == 1).unwrap();
         assert!(report.candidates[report.best_time].time_s() <= edge.time_s());
+    }
+
+    #[test]
+    fn parallel_sweep_matches_sequential_byte_for_byte() {
+        let predictor = Predictor::new(Platform::paper_testbed());
+        let space = SearchSpace::fixed_cluster(10, vec![Bytes::kb(256), Bytes::mb(1)]);
+        let params = BlastParams { queries: 20, ..Default::default() };
+        let seq = Searcher::new(&predictor)
+            .with_threads(1)
+            .search(&space, &[], |cfg| blast(cfg.n_app, &params));
+        let par = Searcher::new(&predictor)
+            .with_threads(4)
+            .search(&space, &[], |cfg| blast(cfg.n_app, &params));
+        assert_eq!(seq.candidates.len(), par.candidates.len());
+        assert_eq!(seq.best_time, par.best_time);
+        assert_eq!(seq.best_cost, par.best_cost);
+        assert_eq!(seq.best_efficiency, par.best_efficiency);
+        assert_eq!(seq.pareto, par.pareto);
+        for (a, b) in seq.candidates.iter().zip(&par.candidates) {
+            assert_eq!(a.config.label, b.config.label);
+            match (&a.refined, &b.refined) {
+                (Some(x), Some(y)) => {
+                    assert_eq!(x.turnaround, y.turnaround, "{}", a.config.label);
+                    assert_eq!(x.report.events, y.report.events);
+                    assert_eq!(x.report.net_bytes, y.report.net_bytes);
+                }
+                (None, None) => {}
+                _ => panic!("refinement sets differ between thread counts"),
+            }
+        }
     }
 
     #[test]

@@ -68,9 +68,11 @@ impl<Ev> Scheduler<Ev> {
         self.heap.push(Entry { time: t.max(self.now), seq: self.seq, ev });
     }
 
-    /// Schedule `ev` after a delay `dt`.
+    /// Schedule `ev` after a delay `dt`. Uses the same saturating
+    /// [`SimTime`] addition as `Station`, so far-future delays clamp at
+    /// `SimTime::MAX` instead of overflowing.
     pub fn after(&mut self, dt: SimTime, ev: Ev) {
-        self.at(SimTime(self.now.0 + dt.0), ev);
+        self.at(self.now + dt, ev);
     }
 
     /// Schedule `ev` immediately (at the current time, after already
@@ -197,6 +199,18 @@ mod tests {
         let mut sim = Simulation::new(Forever);
         sim.sched.at(SimTime::ZERO, ());
         sim.run_capped(1000);
+    }
+
+    #[test]
+    fn far_future_delays_saturate_instead_of_overflowing() {
+        let mut sim = Simulation::new(Recorder { seen: vec![], chain_left: 0 });
+        sim.sched.at(SimTime::from_ns(10), 1);
+        sim.run();
+        // now = 10ns; a MAX delay must clamp at SimTime::MAX, not wrap.
+        sim.sched.after(SimTime::MAX, 2);
+        let end = sim.run();
+        assert_eq!(end, SimTime::MAX);
+        assert_eq!(sim.state.seen.last(), Some(&(u64::MAX, 2)));
     }
 
     #[test]

@@ -10,6 +10,17 @@
 //! reusable across event types. Utilization and queueing statistics are
 //! tracked for reports and model debugging (the paper's §5 "detect
 //! performance anomalies" use case).
+//!
+//! ## Trains (bulk arrivals)
+//!
+//! The network fast path services a whole frame *train* (all frames of one
+//! message) as a single entry instead of one entry per frame
+//! ([`Station::arrive_train`]). Statistics stay exact under that
+//! aggregation: every entry carries a unit count (frames), so `arrivals`,
+//! `departures` and the queue-length integral are counted in frames in
+//! both modes, and a burst train entering service adds the intra-train
+//! waiting integral (`unit_svc · u(u−1)/2` — frame *i* of a burst waits
+//! `i · unit_svc` behind its siblings) analytically.
 
 use crate::util::units::SimTime;
 use std::collections::VecDeque;
@@ -17,20 +28,23 @@ use std::collections::VecDeque;
 /// Accumulated station statistics.
 #[derive(Clone, Debug, Default)]
 pub struct StationStats {
+    /// Units (frames for NIC stations, messages elsewhere) arrived.
     pub arrivals: u64,
+    /// Units departed.
     pub departures: u64,
     /// Integral of busy state over time (ns of busy time).
     pub busy_ns: u64,
-    /// Integral of queue length over time (ns·items), excluding in-service.
+    /// Integral of queue length over time (ns·units), excluding in-service.
     pub qlen_ns: u128,
-    /// Max queue length observed.
+    /// Max queue length observed (waiting units, including the instant a
+    /// burst train arrives).
     pub max_qlen: usize,
     last_change_ns: u64,
 }
 
 impl StationStats {
     #[inline(always)]
-    fn advance(&mut self, now: SimTime, busy: bool, qlen: usize) {
+    fn advance(&mut self, now: SimTime, busy: bool, qlen: u64) {
         let dt = now.as_ns().saturating_sub(self.last_change_ns);
         if dt != 0 {
             if busy {
@@ -41,8 +55,8 @@ impl StationStats {
             }
             self.last_change_ns = now.as_ns();
         }
-        if qlen > self.max_qlen {
-            self.max_qlen = qlen;
+        if qlen as usize > self.max_qlen {
+            self.max_qlen = qlen as usize;
         }
     }
 
@@ -65,11 +79,24 @@ impl StationStats {
     }
 }
 
+/// A waiting entry: the item, its service time, its unit count, and the
+/// per-unit service time used for the analytic intra-train wait when it
+/// eventually starts service.
+#[derive(Debug)]
+struct Waiter<T> {
+    item: T,
+    svc: SimTime,
+    units: u64,
+    unit_svc: SimTime,
+}
+
 /// A FIFO single-server queue of items `T`.
 #[derive(Debug)]
 pub struct Station<T> {
-    in_service: Option<T>,
-    waiting: VecDeque<(T, SimTime)>,
+    in_service: Option<(T, u64)>,
+    waiting: VecDeque<Waiter<T>>,
+    /// Total units across waiting entries (what `queue_len` reports).
+    waiting_units: u64,
     pub stats: StationStats,
 }
 
@@ -81,15 +108,38 @@ impl<T> Default for Station<T> {
 
 impl<T> Station<T> {
     pub fn new() -> Self {
-        Station { in_service: None, waiting: VecDeque::new(), stats: StationStats::default() }
+        Station {
+            in_service: None,
+            waiting: VecDeque::new(),
+            waiting_units: 0,
+            stats: StationStats::default(),
+        }
     }
 
     pub fn is_busy(&self) -> bool {
         self.in_service.is_some()
     }
 
+    /// Waiting units (frames for NIC stations; identical to the item count
+    /// when every entry is a single unit).
     pub fn queue_len(&self) -> usize {
-        self.waiting.len()
+        self.waiting_units as usize
+    }
+
+    /// The item currently in service, if any.
+    pub fn in_service(&self) -> Option<&T> {
+        self.in_service.as_ref().map(|(item, _)| item)
+    }
+
+    /// Intra-train waiting integral for a burst of `units` equal frames
+    /// entering service: frame `i` waits `i · unit_svc`.
+    #[inline(always)]
+    fn burst_wait_ns(units: u64, unit_svc: SimTime) -> u128 {
+        if units < 2 {
+            0
+        } else {
+            unit_svc.as_ns() as u128 * (units as u128 * (units as u128 - 1) / 2)
+        }
     }
 
     /// An item arrives needing `svc` service time. If the server is idle
@@ -98,13 +148,44 @@ impl<T> Station<T> {
     #[must_use = "schedule a completion event when Some(t) is returned"]
     #[inline]
     pub fn arrive(&mut self, now: SimTime, item: T, svc: SimTime) -> Option<SimTime> {
-        self.stats.advance(now, self.is_busy(), self.waiting.len());
-        self.stats.arrivals += 1;
+        self.arrive_train(now, item, svc, 1, SimTime::ZERO)
+    }
+
+    /// A train of `units` frames arrives as one analytically-drained entry
+    /// with aggregate service time `svc`. `unit_svc` is the per-unit
+    /// (full-frame) service time, used to account the intra-train waiting
+    /// the per-frame path would have measured when the units arrive as a
+    /// simultaneous burst; pass `SimTime::ZERO` for paced trains (e.g. the
+    /// receive side, where frames trickle in at the service rate and never
+    /// wait on each other).
+    #[must_use = "schedule a completion event when Some(t) is returned"]
+    #[inline]
+    pub fn arrive_train(
+        &mut self,
+        now: SimTime,
+        item: T,
+        svc: SimTime,
+        units: u64,
+        unit_svc: SimTime,
+    ) -> Option<SimTime> {
+        debug_assert!(units >= 1);
+        self.stats.advance(now, self.is_busy(), self.waiting_units);
+        self.stats.arrivals += units;
         if self.in_service.is_none() {
-            self.in_service = Some(item);
+            self.in_service = Some((item, units));
+            self.stats.qlen_ns += Self::burst_wait_ns(units, unit_svc);
+            // The instantaneous per-frame queue right after a burst.
+            if unit_svc > SimTime::ZERO {
+                let peak = (self.waiting_units + units - 1) as usize;
+                self.stats.max_qlen = self.stats.max_qlen.max(peak);
+            }
             Some(now + svc)
         } else {
-            self.waiting.push_back((item, svc));
+            self.waiting_units += units;
+            if unit_svc > SimTime::ZERO {
+                self.stats.max_qlen = self.stats.max_qlen.max(self.waiting_units as usize);
+            }
+            self.waiting.push_back(Waiter { item, svc, units, unit_svc });
             None
         }
     }
@@ -114,19 +195,21 @@ impl<T> Station<T> {
     #[must_use = "schedule the next completion when the second field is Some"]
     #[inline]
     pub fn complete(&mut self, now: SimTime) -> (T, Option<SimTime>) {
-        self.stats.advance(now, true, self.waiting.len());
-        self.stats.departures += 1;
-        let done = self.in_service.take().expect("complete() on idle station");
-        let next = self.waiting.pop_front().map(|(item, svc)| {
-            self.in_service = Some(item);
-            now + svc
+        self.stats.advance(now, true, self.waiting_units);
+        let (done, done_units) = self.in_service.take().expect("complete() on idle station");
+        self.stats.departures += done_units;
+        let next = self.waiting.pop_front().map(|w| {
+            self.waiting_units -= w.units;
+            self.stats.qlen_ns += Self::burst_wait_ns(w.units, w.unit_svc);
+            self.in_service = Some((w.item, w.units));
+            now + w.svc
         });
         (done, next)
     }
 
     /// Finalize stats bookkeeping at the end of a run.
     pub fn finish(&mut self, now: SimTime) {
-        self.stats.advance(now, self.is_busy(), self.waiting.len());
+        self.stats.advance(now, self.is_busy(), self.waiting_units);
     }
 }
 
@@ -145,6 +228,7 @@ mod tests {
         assert_eq!(done, Some(ns(150)));
         assert!(st.is_busy());
         assert_eq!(st.queue_len(), 0);
+        assert_eq!(st.in_service(), Some(&"a"));
     }
 
     #[test]
@@ -200,5 +284,64 @@ mod tests {
         // one waiter for 100ns over a 200ns horizon -> mean qlen 0.5
         assert!((st.stats.mean_qlen(ns(200)) - 0.5).abs() < 1e-9);
         assert_eq!(st.stats.max_qlen, 1);
+    }
+
+    #[test]
+    fn train_matches_per_frame_integrals() {
+        // 4 equal frames of 10ns arriving together at an idle station.
+        let mut per_frame: Station<u32> = Station::new();
+        for i in 0..4 {
+            let r = per_frame.arrive(ns(0), i, ns(10));
+            assert_eq!(r.is_some(), i == 0);
+        }
+        let mut t = ns(10);
+        loop {
+            let (_, next) = per_frame.complete(t);
+            match next {
+                Some(n) => t = n,
+                None => break,
+            }
+        }
+        per_frame.finish(ns(40));
+
+        let mut train: Station<u32> = Station::new();
+        let done = train.arrive_train(ns(0), 9, ns(40), 4, ns(10)).unwrap();
+        assert_eq!(done, ns(40));
+        let _ = train.complete(ns(40));
+        train.finish(ns(40));
+
+        assert_eq!(per_frame.stats.busy_ns, train.stats.busy_ns);
+        assert_eq!(per_frame.stats.qlen_ns, train.stats.qlen_ns, "intra-train wait integral");
+        assert_eq!(per_frame.stats.arrivals, train.stats.arrivals);
+        assert_eq!(per_frame.stats.departures, train.stats.departures);
+        assert_eq!(per_frame.stats.max_qlen, train.stats.max_qlen);
+    }
+
+    #[test]
+    fn queued_train_counts_units_while_waiting() {
+        let mut st: Station<u32> = Station::new();
+        let _ = st.arrive(ns(0), 1, ns(100)).unwrap();
+        // An 8-frame train queues behind: 8 units waiting for 100ns.
+        assert!(st.arrive_train(ns(0), 2, ns(80), 8, ns(10)).is_none());
+        assert_eq!(st.queue_len(), 8);
+        let (_, next) = st.complete(ns(100));
+        assert_eq!(next, Some(ns(180)));
+        assert_eq!(st.queue_len(), 0);
+        let _ = st.complete(ns(180));
+        st.finish(ns(180));
+        // Waiting integral: 8 units × 100ns (queued) + 10·(8·7/2) intra-train.
+        assert_eq!(st.stats.qlen_ns, 800 + 280);
+        assert_eq!(st.stats.arrivals, 9);
+        assert_eq!(st.stats.departures, 9);
+    }
+
+    #[test]
+    fn paced_train_adds_no_intra_wait() {
+        let mut st: Station<u32> = Station::new();
+        let done = st.arrive_train(ns(0), 1, ns(40), 4, SimTime::ZERO).unwrap();
+        let _ = st.complete(done);
+        st.finish(done);
+        assert_eq!(st.stats.qlen_ns, 0, "receive-side trains are paced, not bursty");
+        assert_eq!(st.stats.arrivals, 4);
     }
 }

@@ -1,8 +1,10 @@
 //! Self-contained substrates used across the crate.
 //!
-//! The build environment is fully offline and only `xla` + `anyhow` are
-//! vendored, so the usual ecosystem crates (rand, serde, clap, criterion,
-//! proptest) are re-implemented here at the scale this project needs.
+//! The build environment is fully offline; `anyhow` is shimmed in-tree
+//! (`vendor/anyhow`), the `xla` PJRT bindings are feature-gated (see
+//! PERF.md §Runtime), and the usual ecosystem crates (rand, serde, clap,
+//! criterion, proptest) are re-implemented here at the scale this
+//! project needs.
 
 pub mod rng;
 pub mod stats;

@@ -45,13 +45,16 @@ impl SimTime {
 
 impl Add for SimTime {
     type Output = SimTime;
+    /// Saturating: far-future times clamp at [`SimTime::MAX`] instead of
+    /// wrapping/panicking, so `now + huge_timeout` stays a valid (never
+    /// reached) event time.
     fn add(self, rhs: SimTime) -> SimTime {
-        SimTime(self.0 + rhs.0)
+        SimTime(self.0.saturating_add(rhs.0))
     }
 }
 impl AddAssign for SimTime {
     fn add_assign(&mut self, rhs: SimTime) {
-        self.0 += rhs.0;
+        *self = *self + rhs;
     }
 }
 impl Sub for SimTime {
@@ -228,5 +231,14 @@ mod tests {
         assert_eq!(a.as_ns(), 3_500_000);
         assert_eq!((a - SimTime::from_us(500)).as_ns(), 3_000_000);
         assert_eq!((Bytes::mb(1) * 3).as_u64(), 3 * MB);
+    }
+
+    #[test]
+    fn addition_saturates_at_max() {
+        assert_eq!(SimTime::MAX + SimTime::from_ns(1), SimTime::MAX);
+        assert_eq!(SimTime::from_ns(5) + SimTime::MAX, SimTime::MAX);
+        let mut t = SimTime::MAX;
+        t += SimTime::from_secs_f64(1.0);
+        assert_eq!(t, SimTime::MAX);
     }
 }

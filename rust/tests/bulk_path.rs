@@ -1,0 +1,147 @@
+//! Frame-path fidelity equivalence: the bulk network fast path
+//! (`Fidelity::coarse`, O(1) events per message) must agree with the
+//! per-frame reference path (`Fidelity::coarse_per_frame`, O(n_frames))
+//! on everything the predictor reports — turnaround within 1%, byte and
+//! frame accounting exactly, station busy integrals exactly — while
+//! processing several times fewer scheduler events.
+
+use wfpred::model::{simulate_fid, Config, Fidelity, Platform, SimReport};
+use wfpred::workload::blast::{blast, BlastParams};
+use wfpred::workload::patterns::{pipeline, reduce, PatternScale};
+use wfpred::workload::Workload;
+
+fn rel_diff(a: f64, b: f64) -> f64 {
+    if b == 0.0 {
+        a.abs()
+    } else {
+        (a - b).abs() / b.abs()
+    }
+}
+
+/// Run both frame paths on the same inputs.
+fn both(wl: &Workload, cfg: &Config, plat: &Platform) -> (SimReport, SimReport) {
+    let bulk = simulate_fid(wl, cfg, plat, Fidelity::coarse());
+    let frames = simulate_fid(wl, cfg, plat, Fidelity::coarse_per_frame());
+    (bulk, frames)
+}
+
+/// Shared invariants: identical work accounting, exact busy integrals
+/// (utilization × horizon), and an event reduction of at least `min_x`.
+fn assert_equivalent(bulk: &SimReport, frames: &SimReport, min_event_reduction: f64, label: &str) {
+    assert_eq!(bulk.net_bytes, frames.net_bytes, "{label}: bytes on the wire");
+    assert_eq!(bulk.net_frames, frames.net_frames, "{label}: wire frames modeled");
+    assert_eq!(bulk.tasks.len(), frames.tasks.len(), "{label}: tasks completed");
+    assert_eq!(bulk.stored, frames.stored, "{label}: stored bytes per node");
+
+    let t = rel_diff(bulk.turnaround.as_secs_f64(), frames.turnaround.as_secs_f64());
+    assert!(
+        t < 0.01,
+        "{label}: turnaround diverges {:.3}% (bulk {} vs per-frame {})",
+        t * 100.0,
+        bulk.turnaround,
+        frames.turnaround
+    );
+
+    // Busy time is conserved under aggregation: the train's service time
+    // is the exact sum of its per-frame services, so busy integrals match
+    // to float-recovery precision.
+    let (tb, tf) = (bulk.turnaround.as_ns() as f64, frames.turnaround.as_ns() as f64);
+    for (h, ((ob, ib), (of, if_))) in
+        bulk.util.nic.iter().zip(frames.util.nic.iter()).enumerate()
+    {
+        let (busy_ob, busy_of) = (ob * tb, of * tf);
+        let (busy_ib, busy_if) = (ib * tb, if_ * tf);
+        assert!(
+            rel_diff(busy_ob, busy_of) < 1e-6 || (busy_ob - busy_of).abs() < 10.0,
+            "{label}: host {h} out-NIC busy integral {busy_ob} vs {busy_of}"
+        );
+        assert!(
+            rel_diff(busy_ib, busy_if) < 1e-6 || (busy_ib - busy_if).abs() < 10.0,
+            "{label}: host {h} in-NIC busy integral {busy_ib} vs {busy_if}"
+        );
+    }
+
+    let reduction = frames.events as f64 / bulk.events as f64;
+    assert!(
+        reduction >= min_event_reduction,
+        "{label}: only {reduction:.2}x fewer events ({} vs {})",
+        bulk.events,
+        frames.events
+    );
+}
+
+#[test]
+fn pipeline_bulk_path_matches_per_frame_within_1pct() {
+    let plat = Platform::paper_testbed();
+    let wl = pipeline(19, PatternScale::Medium, false);
+    let cfg = Config::dss(19);
+    let (bulk, frames) = both(&wl, &cfg, &plat);
+    println!(
+        "pipeline: bulk {} / {} events, per-frame {} / {} events",
+        bulk.turnaround, bulk.events, frames.turnaround, frames.events
+    );
+    assert_equivalent(&bulk, &frames, 5.0, "pipeline-medium-dss");
+}
+
+#[test]
+fn chunk_heavy_blast_stage_event_reduction() {
+    // The acceptance workload: a 16-host BLAST-style stage with 1 MB
+    // chunks over 64 KB frames — each chunk message collapses from ~17
+    // frame event-chains into one train.
+    let plat = Platform::paper_testbed();
+    assert_eq!(plat.frame_size.as_u64(), 64 * 1024);
+    let params = BlastParams { queries: 40, ..Default::default() };
+    let wl = blast(10, &params);
+    let cfg = Config::partitioned(10, 5, wfpred::util::units::Bytes::mb(1));
+    assert_eq!(cfg.n_hosts(), 16);
+    let (bulk, frames) = both(&wl, &cfg, &plat);
+    println!(
+        "blast 10app/5sto: bulk {} events, per-frame {} events ({:.1}x)",
+        bulk.events,
+        frames.events,
+        frames.events as f64 / bulk.events as f64
+    );
+    assert_equivalent(&bulk, &frames, 5.0, "blast-16-host");
+}
+
+#[test]
+fn incast_reduce_stays_equivalent() {
+    // Reduce funnels 19 writers into one reader — the worst case for
+    // train serialization at a contended in-NIC. Work conservation keeps
+    // the busy period (and thus turnaround) aligned.
+    let plat = Platform::paper_testbed();
+    let wl = reduce(19, PatternScale::Medium, false);
+    let cfg = Config::dss(19);
+    let (bulk, frames) = both(&wl, &cfg, &plat);
+    assert_equivalent(&bulk, &frames, 4.0, "reduce-medium-dss");
+}
+
+#[test]
+fn detailed_tier_keeps_frame_level_events() {
+    // The testbed tier models SYN loss and mux against frame-granularity
+    // queues; it must keep the per-frame path by default.
+    assert!(!Fidelity::detailed(0).frame_aggregation);
+    let plat = Platform::paper_testbed();
+    let wl = pipeline(4, PatternScale::Small, false);
+    let cfg = Config::dss(4);
+    let coarse = simulate_fid(&wl, &cfg, &plat, Fidelity::coarse());
+    let detailed = simulate_fid(&wl, &cfg, &plat, Fidelity::detailed(7));
+    assert!(
+        detailed.events > coarse.events,
+        "detailed ({}) should process more events than the aggregated predictor ({})",
+        detailed.events,
+        coarse.events
+    );
+}
+
+#[test]
+fn aggregation_factor_is_visible_in_reports() {
+    let plat = Platform::paper_testbed();
+    let wl = pipeline(8, PatternScale::Small, false);
+    let cfg = Config::dss(8);
+    let (bulk, frames) = both(&wl, &cfg, &plat);
+    assert!(bulk.net_frames > 0);
+    // Per-frame path: ≥ 3 events per wire frame; bulk path: ~3 per message.
+    assert!(frames.events as f64 >= 3.0 * frames.net_frames as f64 * 0.9);
+    assert!((bulk.events as f64) < 3.0 * bulk.net_frames as f64);
+}

@@ -205,6 +205,104 @@ fn prop_stripe_width_within_bounds_always_valid() {
     });
 }
 
+/// A strictly sequential single-client/single-storage chain whose wire
+/// sizes are exact multiples of the 64 KB frame (chunk = k·64 KB − 1 KB of
+/// control header), so the bulk fast path's cut-through timing coincides
+/// with the per-frame path *exactly* — no partial-last-frame slack, no
+/// cross-message contention.
+fn frame_aligned_chain(g: &mut Gen) -> (Workload, Config) {
+    let frame = 64 * 1024u64;
+    let chunk = Bytes(frame * g.u64(2, 8) - 1024);
+    let mut wl = Workload::new("aligned-chain");
+    let mut prev =
+        wl.add_file(FileSpec::new("in", Bytes(chunk.as_u64() * g.u64(1, 5))).prestaged());
+    for i in 0..g.usize(1, 4) {
+        let out = wl.add_file(FileSpec::new(format!("f{i}"), Bytes(chunk.as_u64() * g.u64(1, 5))));
+        wl.add_task(TaskSpec::new(format!("t{i}"), i as u32).reads(prev).writes(out));
+        prev = out;
+    }
+    let cfg = Config::partitioned(1, 1, chunk).with_window(1);
+    (wl, cfg)
+}
+
+#[test]
+fn prop_frame_aligned_aggregation_is_exact() {
+    // Under frame-aligned wire sizes and zero contention, aggregation is
+    // not an approximation at all: turnaround and every station integral
+    // (busy time, queue-length, arrival/departure counts in frames) are
+    // identical, with several-fold fewer scheduler events.
+    check("aligned aggregation exact", 40, |g| {
+        let (wl, cfg) = frame_aligned_chain(g);
+        let plat = Platform::paper_testbed();
+        let bulk = simulate_fid(&wl, &cfg, &plat, Fidelity::coarse());
+        let frames = simulate_fid(&wl, &cfg, &plat, Fidelity::coarse_per_frame());
+
+        assert_eq!(bulk.turnaround, frames.turnaround, "aligned trains shift nothing");
+        assert_eq!(bulk.net_bytes, frames.net_bytes);
+        assert_eq!(bulk.net_frames, frames.net_frames);
+        assert!(bulk.events < frames.events, "aggregation must save events");
+
+        // Same horizon ⇒ utilization and mean-qlen integrals must agree
+        // bit-for-bit (busy_ns and qlen_ns are identical integers).
+        for (h, (a, b)) in bulk.util.nic.iter().zip(frames.util.nic.iter()).enumerate() {
+            assert!((a.0 - b.0).abs() < 1e-12, "host {h} out-NIC utilization");
+            assert!((a.1 - b.1).abs() < 1e-12, "host {h} in-NIC utilization");
+        }
+        for (h, (a, b)) in bulk.util.nic_qlen.iter().zip(frames.util.nic_qlen.iter()).enumerate()
+        {
+            assert!((a.0 - b.0).abs() < 1e-12, "host {h} out-NIC qlen integral");
+            assert!((a.1 - b.1).abs() < 1e-12, "host {h} in-NIC qlen integral");
+        }
+        assert!((bulk.util.manager_util - frames.util.manager_util).abs() < 1e-12);
+    });
+}
+
+#[test]
+fn prop_bulk_path_is_work_conserving() {
+    // On arbitrary workloads the bulk path may shift individual message
+    // completions (partial last frames, train serialization under
+    // incast), but it must conserve work exactly — identical bytes,
+    // frames, storage, busy integrals — and keep turnaround within the
+    // per-message cut-through slack.
+    check("bulk path work conservation", 30, |g| {
+        let wl = random_workload(g, 4);
+        if wl.validate().is_err() {
+            return;
+        }
+        let cfg = random_config(g);
+        let plat = Platform::paper_testbed();
+        let bulk = simulate(&wl, &cfg, &plat); // coarse = aggregated
+        let frames = simulate_fid(&wl, &cfg, &plat, Fidelity::coarse_per_frame());
+
+        assert_eq!(bulk.net_bytes, frames.net_bytes);
+        assert_eq!(bulk.net_frames, frames.net_frames);
+        assert_eq!(bulk.stored_total(), frames.stored_total());
+        assert_eq!(bulk.tasks.len(), frames.tasks.len());
+        assert!(bulk.events <= frames.events);
+
+        // Busy integrals are exact under aggregation (train service =
+        // exact sum of per-frame services).
+        let (tb, tf) = (bulk.turnaround.as_ns() as f64, frames.turnaround.as_ns() as f64);
+        for (h, (a, b)) in bulk.util.nic.iter().zip(frames.util.nic.iter()).enumerate() {
+            for (x, y, side) in [(a.0, b.0, "out"), (a.1, b.1, "in")] {
+                let (bx, by) = (x * tb, y * tf);
+                assert!(
+                    (bx - by).abs() < 10.0 + 1e-6 * by.abs(),
+                    "host {h} {side}-NIC busy integral {bx} vs {by}"
+                );
+            }
+        }
+
+        let diff = (tb - tf).abs();
+        assert!(
+            diff <= 0.05 * tf + 80e6,
+            "turnaround diverged: bulk {} vs per-frame {}",
+            bulk.turnaround,
+            frames.turnaround
+        );
+    });
+}
+
 #[test]
 fn prop_detailed_at_least_as_slow_as_coarse() {
     // The detailed protocol only adds work (rounds, handshakes,

@@ -1,0 +1,142 @@
+//! Offline shim for the `anyhow` crate (the build environment has no
+//! network access to crates.io). It implements exactly the subset of the
+//! real API this workspace uses: [`Error`], [`Result`], the [`Context`]
+//! extension trait on `Result`/`Option`, and the `anyhow!` / `bail!` /
+//! `ensure!` macros. Error values are a message plus an optional cause
+//! chain rendered as `context: cause`, which is all the callers format.
+//!
+//! Like the real crate, `Error` deliberately does **not** implement
+//! `std::error::Error`, so the blanket `From<E: std::error::Error>`
+//! conversion (what makes `?` work on `io::Error` etc.) cannot overlap
+//! with core's reflexive `From<T> for T`.
+
+use std::fmt;
+
+/// A catch-all error: rendered message with its cause chain flattened in.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything printable (what `anyhow!` expands to).
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Wrap with higher-level context, mirroring `anyhow::Error::context`.
+    pub fn context(self, c: impl fmt::Display) -> Error {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Include the source chain the way `{:#}` would print it.
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg = format!("{msg}: {s}");
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `Result` defaulting to [`Error`], as in the real crate.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attachment extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(c))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => { $crate::Error::msg(format!($($arg)*)) };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!(
+                "condition failed: {}",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u32> {
+        let n: u32 = s.parse()?; // From<ParseIntError>
+        ensure!(n < 100, "too big: {n}");
+        Ok(n)
+    }
+
+    #[test]
+    fn conversions_and_macros() {
+        assert_eq!(parse("7").unwrap(), 7);
+        assert!(parse("x").is_err());
+        assert!(parse("500").unwrap_err().to_string().contains("too big"));
+        let e: Error = anyhow!("code {}", 3);
+        assert_eq!(e.to_string(), "code 3");
+    }
+
+    #[test]
+    fn context_chains() {
+        let r: Result<()> = Err(anyhow!("inner")).context("outer");
+        assert_eq!(r.unwrap_err().to_string(), "outer: inner");
+        let o: Option<u32> = None;
+        assert!(o.context("missing").is_err());
+        let o2: Option<u32> = Some(1);
+        assert_eq!(o2.with_context(|| "unused").unwrap(), 1);
+    }
+}
