@@ -5,6 +5,18 @@
 //! event throughput, full-predictor latency per scenario, testbed trial
 //! cost, real-store loopback throughput, and AOT-artifact execution
 //! latency.
+//!
+//! CI modes (extra args after `--`):
+//!
+//! * `--frame-path-only` — run only the frame-path / scaling / campaign
+//!   sections (the ones that feed `results/BENCH_frame_path.json`).
+//! * `--check <baseline.json>` — after writing a fresh
+//!   `BENCH_frame_path.json`, enforce the absolute frame-path gates
+//!   (event reduction ≥ 5×, turnaround error ≤ 1%) and, when the
+//!   baseline is a real previous run (not the bootstrap marker), a ±10%
+//!   drift gate on the machine-independent metrics (simulated turnaround
+//!   and event counts — wallclock numbers are never gated). Exits
+//!   non-zero on violation; implies `--frame-path-only`.
 
 use wfpred::coordinator;
 use wfpred::model::{simulate, simulate_fid, Config, Fidelity, Platform};
@@ -13,11 +25,85 @@ use wfpred::search::{SearchSpace, Searcher};
 use wfpred::sim::{Scheduler, SimState, Simulation};
 use wfpred::store::{Cluster, StorePlacement};
 use wfpred::testbed::Testbed;
-use wfpred::util::bench::{black_box, write_results, BenchRunner};
+use wfpred::util::bench::{black_box, json_number_in, within_rel, write_results, BenchRunner};
 use wfpred::util::jsonw::Json;
 use wfpred::util::units::{Bytes, SimTime};
 use wfpred::workload::blast::{blast, BlastParams};
 use wfpred::workload::patterns::{pipeline, reduce, PatternScale};
+
+/// The frame-path regression gate (`--check`). Returns the process exit
+/// code: 0 when every gate holds.
+///
+/// Absolute gates (always enforced, from PERF.md §Regression discipline):
+/// `event_reduction_x ≥ 5` and `turnaround_rel_err ≤ 0.01` on the
+/// acceptance workload. Drift gates (enforced when the baseline is a real
+/// previous run rather than the `"bootstrap"` marker): simulated
+/// turnaround and event counts — deterministic, machine-independent
+/// metrics — must stay within ±10% of the committed baseline. Wallclock
+/// metrics are reported but never gated (they vary with the host).
+fn check_frame_path(path: &str, baseline: &str, fresh: &str) -> i32 {
+    let mut failures: Vec<String> = Vec::new();
+    let tol = 0.10;
+
+    let reduction = json_number_in(fresh, "", "event_reduction_x").unwrap_or(0.0);
+    if reduction < 5.0 {
+        failures.push(format!("event_reduction_x {reduction:.2} < 5"));
+    }
+    let rel_err = json_number_in(fresh, "", "turnaround_rel_err").unwrap_or(1.0);
+    if rel_err > 0.01 {
+        failures.push(format!("turnaround_rel_err {rel_err:.4} > 0.01"));
+    }
+
+    if baseline.is_empty() {
+        // A checked baseline is a committed file; its absence means a
+        // broken path or a deleted baseline, and must not pass silently.
+        failures.push(format!(
+            "baseline {path} missing or unreadable — commit results/BENCH_frame_path.json \
+             (the bootstrap marker at minimum)"
+        ));
+    } else if baseline.contains("\"bootstrap\"") {
+        println!("[bench-check] bootstrap baseline at {path}: absolute gates only");
+        println!("[bench-check] commit a fresh BENCH_frame_path.json to arm the drift gate");
+    } else {
+        let drift_keys: [(&str, &str); 10] = [
+            ("bulk", "events"),
+            ("bulk", "sim_turnaround_s"),
+            ("per_frame", "events"),
+            ("per_frame", "sim_turnaround_s"),
+            ("hosts_64", "events"),
+            ("hosts_64", "sim_turnaround_s"),
+            ("hosts_256", "events"),
+            ("hosts_256", "sim_turnaround_s"),
+            ("hosts_1024", "events"),
+            ("hosts_1024", "sim_turnaround_s"),
+        ];
+        for (scope, key) in drift_keys {
+            let (b, f) = (json_number_in(baseline, scope, key), json_number_in(fresh, scope, key));
+            match (b, f) {
+                (Some(b), Some(f)) => {
+                    if !within_rel(f, b, tol) {
+                        failures.push(format!(
+                            "{scope}.{key}: fresh {f} vs baseline {b} (> ±{:.0}%)",
+                            tol * 100.0
+                        ));
+                    }
+                }
+                (None, _) => println!("[bench-check] baseline lacks {scope}.{key}; skipped"),
+                (_, None) => failures.push(format!("fresh results lack {scope}.{key}")),
+            }
+        }
+    }
+
+    if failures.is_empty() {
+        println!("[bench-check] OK: frame-path gates hold against {path}");
+        0
+    } else {
+        for f in &failures {
+            println!("[bench-check] FAIL: {f}");
+        }
+        1
+    }
+}
 
 /// Raw engine throughput: a self-rescheduling event chain.
 struct Chain {
@@ -34,6 +120,23 @@ impl SimState for Chain {
 }
 
 fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let check_baseline: Option<(String, String)> = match args.iter().position(|a| a == "--check") {
+        None => None,
+        // A gate asked for but misconfigured must fail loudly, not
+        // silently run ungated (same philosophy as a missing baseline).
+        Some(i) => match args.get(i + 1) {
+            Some(path) if !path.starts_with("--") => {
+                Some((path.clone(), std::fs::read_to_string(path).unwrap_or_default()))
+            }
+            _ => {
+                eprintln!("[bench-check] --check requires a baseline path argument");
+                std::process::exit(2);
+            }
+        },
+    };
+    let frame_path_only = args.iter().any(|a| a == "--frame-path-only") || check_baseline.is_some();
+
     let mut results = Json::arr();
     let mut record = |name: &str, r: &wfpred::util::bench::BenchResult, per_iter_units: f64, unit: &str| {
         let rate = per_iter_units / r.secs.mean();
@@ -48,29 +151,31 @@ fn main() {
         );
     };
 
-    println!("== DES engine ==");
-    let n_events = 2_000_000u64;
-    let r = BenchRunner::new(1, 5).run("engine: 2M chained events", |_| {
-        let mut sim = Simulation::new(Chain { left: n_events });
-        sim.sched.at(SimTime::ZERO, 0);
-        black_box(sim.run());
-    });
-    record("engine_chain", &r, n_events as f64, "events");
-
-    println!("\n== predictor end-to-end ==");
     let plat = Platform::paper_testbed();
-    for (name, wl, cfg) in [
-        ("pipeline-medium-dss", pipeline(19, PatternScale::Medium, false), Config::dss(19)),
-        ("reduce-large-dss", reduce(19, PatternScale::Large, false), Config::dss(19)),
-        ("blast-14/5", blast(14, &BlastParams::default()), Config::partitioned(14, 5, Bytes::kb(256))),
-    ] {
-        let mut events = 0u64;
-        let r = BenchRunner::new(1, 5).run(&format!("predict: {name}"), |_| {
-            let rep = simulate(&wl, &cfg, &plat);
-            events = rep.events;
-            black_box(rep.turnaround);
+    if !frame_path_only {
+        println!("== DES engine ==");
+        let n_events = 2_000_000u64;
+        let r = BenchRunner::new(1, 5).run("engine: 2M chained events", |_| {
+            let mut sim = Simulation::new(Chain { left: n_events });
+            sim.sched.at(SimTime::ZERO, 0);
+            black_box(sim.run());
         });
-        record(&format!("predict_{name}"), &r, events as f64, "sim-events");
+        record("engine_chain", &r, n_events as f64, "events");
+
+        println!("\n== predictor end-to-end ==");
+        for (name, wl, cfg) in [
+            ("pipeline-medium-dss", pipeline(19, PatternScale::Medium, false), Config::dss(19)),
+            ("reduce-large-dss", reduce(19, PatternScale::Large, false), Config::dss(19)),
+            ("blast-14/5", blast(14, &BlastParams::default()), Config::partitioned(14, 5, Bytes::kb(256))),
+        ] {
+            let mut events = 0u64;
+            let r = BenchRunner::new(1, 5).run(&format!("predict: {name}"), |_| {
+                let rep = simulate(&wl, &cfg, &plat);
+                events = rep.events;
+                black_box(rep.turnaround);
+            });
+            record(&format!("predict_{name}"), &r, events as f64, "sim-events");
+        }
     }
 
     // Frame-path trajectory: the chunk-heavy acceptance workload (16-host
@@ -126,6 +231,57 @@ fn main() {
         sweep_seq / sweep_par
     );
 
+    // Cluster-size scaling curve (ROADMAP): the coarse predictor on
+    // 64/256/1024-host DSS deployments. Event counts and simulated
+    // turnaround are deterministic, so the CI gate can compare them
+    // across machines; wall-clock columns are informational only.
+    println!("\n== cluster-size scaling (64/256/1024 hosts) ==");
+    let mut scaling = Json::obj();
+    for hosts in [64usize, 256, 1024] {
+        let n = hosts - 1; // worker nodes; the manager takes host 0
+        let wl = pipeline(n, PatternScale::Small, false);
+        let cfg = Config::dss(n);
+        let mut events = 0u64;
+        let mut sim_secs = 0.0;
+        let name = format!("scale: pipeline-small dss ({hosts} hosts)");
+        let r = BenchRunner::new(1, 3).run(&name, |_| {
+            let rep = simulate(&wl, &cfg, &plat);
+            events = rep.events;
+            sim_secs = rep.turnaround.as_secs_f64();
+            black_box(rep.events);
+        });
+        record(&format!("scale_{hosts}"), &r, events as f64, "sim-events");
+        scaling = scaling.set(
+            &format!("hosts_{hosts}"),
+            Json::obj()
+                .set("hosts", hosts)
+                .set("events", events)
+                .set("wall_secs", r.secs.mean())
+                .set("events_per_sec", events as f64 / r.secs.mean())
+                .set("sim_turnaround_s", sim_secs),
+        );
+    }
+
+    // Parallel testbed campaign: same trials, slot-ordered reduction —
+    // byte-identical statistics, fraction of the wallclock.
+    println!("\n== parallel testbed campaign (8 fixed trials) ==");
+    let camp_wl = pipeline(8, PatternScale::Small, false);
+    let camp_cfg = Config::dss(8);
+    let campaign_secs = |threads: usize| {
+        let tb = Testbed::new(Platform::paper_testbed()).with_trials(8, 8).with_threads(threads);
+        let t0 = std::time::Instant::now();
+        let stats = tb.run(&camp_wl, &camp_cfg);
+        black_box(stats.mean());
+        t0.elapsed().as_secs_f64()
+    };
+    let camp_seq = campaign_secs(1);
+    let camp_threads = coordinator::campaign_threads().max(2);
+    let camp_par = campaign_secs(camp_threads);
+    println!(
+        "    -> {camp_seq:.2}s sequential, {camp_par:.2}s on {camp_threads} threads ({:.1}x)",
+        camp_seq / camp_par
+    );
+
     let frame_path_json = Json::obj()
         .set("workload", "blast-10app-5sto-1MB-chunks-64KB-frames")
         .set(
@@ -157,8 +313,26 @@ fn main() {
                 .set("sequential_secs", sweep_seq)
                 .set("parallel_secs", sweep_par)
                 .set("speedup_x", sweep_seq / sweep_par),
-        );
-    write_results("BENCH_frame_path.json", &frame_path_json.render());
+        )
+        .set(
+            "parallel_campaign",
+            Json::obj()
+                .set("trials", 8u64)
+                .set("threads", camp_threads)
+                .set("sequential_secs", camp_seq)
+                .set("parallel_secs", camp_par)
+                .set("speedup_x", camp_seq / camp_par),
+        )
+        .set("scaling", scaling);
+    let fresh = frame_path_json.render();
+    write_results("BENCH_frame_path.json", &fresh);
+
+    if let Some((path, baseline)) = check_baseline {
+        std::process::exit(check_frame_path(&path, &baseline, &fresh));
+    }
+    if frame_path_only {
+        return;
+    }
 
     println!("\n== testbed trial ==");
     let tb = Testbed::new(Platform::paper_testbed());

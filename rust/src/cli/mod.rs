@@ -121,6 +121,14 @@ fn build_workload(f: &Flags) -> Result<(Workload, Config), String> {
     Ok((wl, cfg))
 }
 
+/// Resolve a `--threads` flag: 0 means "all cores, capped".
+fn campaign_threads_flag(f: &Flags) -> usize {
+    match f.get_u64("threads") {
+        0 => crate::coordinator::campaign_threads(),
+        n => n as usize,
+    }
+}
+
 fn pattern_flags(f: Flags) -> Flags {
     f.flag("pattern", "pipeline", "pipeline|reduce|broadcast|montage|blast|modftdock")
         .flag("nodes", "19", "worker nodes (excl. manager)")
@@ -174,11 +182,14 @@ fn cmd_predict(args: &[String]) -> Result<(), String> {
 fn cmd_run(args: &[String]) -> Result<(), String> {
     let f = pattern_flags(Flags::new("wfpred run"))
         .flag("trials", "15", "minimum trials")
+        .flag("threads", "0", "campaign worker threads (0 = all cores; results identical)")
         .parse(args)?;
     let (wl, cfg) = build_workload(&f)?;
     let plat = platform_by_name(&f.get("platform"))?;
     let trials = f.get_u64("trials");
-    let tb = Testbed::new(plat).with_trials(trials, trials * 3);
+    let tb = Testbed::new(plat)
+        .with_trials(trials, trials * 3)
+        .with_threads(campaign_threads_flag(&f));
     let stats = tb.run(&wl, &cfg);
     println!("workload {:<24} config {} ({} trials)", wl.name, cfg.label, stats.turnaround.n());
     println!("actual turnaround: {:.3}s ± {:.3}s", stats.mean(), stats.std());
@@ -192,11 +203,14 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
 fn cmd_compare(args: &[String]) -> Result<(), String> {
     let f = pattern_flags(Flags::new("wfpred compare"))
         .flag("trials", "8", "minimum trials")
+        .flag("threads", "0", "campaign worker threads (0 = all cores; results identical)")
         .parse(args)?;
     let (wl, cfg) = build_workload(&f)?;
     let plat = platform_by_name(&f.get("platform"))?;
     let trials = f.get_u64("trials");
-    let tb = Testbed::new(plat.clone()).with_trials(trials, trials * 3);
+    let tb = Testbed::new(plat.clone())
+        .with_trials(trials, trials * 3)
+        .with_threads(campaign_threads_flag(&f));
     let stats = tb.run(&wl, &cfg);
     let pred = Predictor::new(plat).predict(&wl, &cfg);
     let pm = crate::model::PowerModel::xeon_e5345();

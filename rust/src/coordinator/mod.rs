@@ -6,8 +6,10 @@
 //! module is the one place that owns threads: a work-stealing indexed map
 //! over `0..n` built on `std::thread::scope`, returning results in input
 //! order so parallel runs are **byte-identical** to sequential ones
-//! (asserted by `tests/bulk_path.rs`). Both the grid `Searcher` and the
-//! multi-chain `Annealer` dispatch through here.
+//! (asserted by `tests/bulk_path.rs`). The grid `Searcher`, the
+//! multi-chain `Annealer`, and the testbed's trial campaigns
+//! (`Campaign::run_par` driving `Testbed::run`) all dispatch through
+//! here.
 //!
 //! Design constraints:
 //! * determinism — results are slotted by index, never by completion
@@ -23,6 +25,14 @@ use std::sync::Mutex;
 /// Worker threads to use by default: one per available core.
 pub fn available_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Worker threads for measurement campaigns (`Testbed::run`, CLI, bench
+/// drivers): all cores, capped — campaign trials are coarse-grained
+/// (whole simulations), so more workers than cores only adds scheduling
+/// noise to the wallclock numbers campaigns report.
+pub fn campaign_threads() -> usize {
+    available_threads().clamp(1, 16)
 }
 
 /// Apply `f` to every index in `0..n` across up to `threads` scoped

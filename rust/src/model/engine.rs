@@ -18,11 +18,24 @@
 //! preserved: the train "arrives" at the destination one frame-service
 //! after it starts transmitting (cut-through), exactly when the per-frame
 //! path would deliver its first frame, and the in-NIC then charges the
-//! full train service. Turnaround matches the per-frame path to within
-//! one frame service per message, and station busy/queue integrals are
-//! exact under the aggregation (see `sim::station` and PERF.md §Frame
-//! path). The per-frame path remains selectable for interleaving- or
-//! SYN-loss-sensitive runs (the detailed tier keeps it on).
+//! full train service. Two mechanisms make the aggregation *exact* rather
+//! than banded (see `sim::station` and PERF.md §Frame path):
+//!
+//! * **weighted-fair in-NIC service** — concurrent trains at a contended
+//!   receive queue share the server with byte-proportional rates
+//!   ([`FairStation`]) instead of serializing whole messages, matching
+//!   the frame interleaving the per-frame path produces under incast;
+//! * **exact leading/last-partial-frame bookkeeping** — the short last
+//!   frame of a non-frame-aligned message waits `full − last` behind its
+//!   siblings on the per-frame path, which the bulk path charges
+//!   analytically, so turnaround and every station integral agree for
+//!   arbitrary wire sizes on uncontended paths (property-tested).
+//!
+//! The per-frame path remains selectable as the equivalence reference;
+//! the detailed tier can run either per-frame (`Fidelity::detailed`) or
+//! aggregated with train-weighted SYN-drop/mux calibration
+//! (`Fidelity::detailed_aggregated`, ~an order of magnitude cheaper
+//! trials).
 
 use crate::model::config::{Config, Placement};
 use crate::model::driver::DriverState;
@@ -30,7 +43,7 @@ use crate::model::fidelity::Fidelity;
 use crate::model::platform::Platform;
 use crate::model::proto::*;
 use crate::model::report::{OpRecord, SimReport, TaskRecord, UtilReport};
-use crate::sim::{Scheduler, SimState, Simulation, Station};
+use crate::sim::{FairStation, Scheduler, SimState, Simulation, Station, StationStats};
 use crate::util::rng::Rng;
 use crate::util::units::{Bytes, SimTime};
 use crate::workload::{FileHint, Workload};
@@ -60,6 +73,42 @@ struct TrainSvc {
     first: SimTime,
     /// Full-frame service time (analytic intra-train queueing unit).
     unit: SimTime,
+    /// Final frame's service time (short when the wire size is not
+    /// frame-aligned; equals `unit` otherwise).
+    last: SimTime,
+}
+
+/// An in-NIC receive queue. The per-frame path keeps the strict FIFO of
+/// individual frames; the bulk path services concurrent trains
+/// weighted-fair ([`FairStation`]) so incast messages interleave like
+/// their frames would instead of serializing whole trains.
+pub(crate) enum NicIn {
+    Fifo(Station<Frame>),
+    Fair(FairStation<Frame>),
+}
+
+impl NicIn {
+    /// Waiting frames (the SYN-drop / mux laws observe this depth).
+    pub(crate) fn queue_len(&self) -> usize {
+        match self {
+            NicIn::Fifo(st) => st.queue_len(),
+            NicIn::Fair(fq) => fq.queue_len(),
+        }
+    }
+
+    pub(crate) fn stats(&self) -> &StationStats {
+        match self {
+            NicIn::Fifo(st) => &st.stats,
+            NicIn::Fair(fq) => &fq.stats,
+        }
+    }
+
+    fn finish(&mut self, now: SimTime) {
+        match self {
+            NicIn::Fifo(st) => st.finish(now),
+            NicIn::Fair(fq) => fq.finish(now),
+        }
+    }
 }
 
 /// Committed file metadata at the manager: one replica group per chunk.
@@ -73,8 +122,12 @@ pub struct FileMeta {
 pub enum Ev {
     /// A frame finished service at host's out-NIC.
     NicOutDone(usize),
-    /// A frame finished service at host's in-NIC.
+    /// A frame finished service at host's in-NIC (per-frame FIFO path).
     NicInDone(usize),
+    /// A train finished weighted-fair service at host's in-NIC (bulk
+    /// path). Carries the announcement epoch: a later arrival changes the
+    /// fair shares and re-announces, making this event stale.
+    NicInFairDone(usize, u64),
     /// A frame arrives at the destination host (post-latency).
     FrameArrive(usize, Frame),
     /// A component station finished serving a message.
@@ -108,9 +161,12 @@ pub struct World<'a> {
     ns_per_byte_remote: f64,
     ns_per_byte_local: f64,
 
-    // Per-host NIC stations.
+    // Per-host NIC stations. The out-NIC stays a FIFO in both modes (the
+    // per-frame path enqueues a message's frames as one contiguous burst,
+    // so message-FIFO is already exact there); the in-NIC discipline
+    // follows the fidelity's frame path.
     pub(crate) nic_out: Vec<Station<Frame>>,
-    pub(crate) nic_in: Vec<Station<Frame>>,
+    pub(crate) nic_in: Vec<NicIn>,
     // Component stations.
     pub(crate) manager_st: Station<MsgId>,
     pub(crate) storage_st: Vec<Station<MsgId>>,
@@ -151,6 +207,7 @@ impl<'a> World<'a> {
                 }
             })
             .collect();
+        let aggregated = fid.frame_aggregation;
         let mut w = World {
             cfg,
             plat,
@@ -163,7 +220,15 @@ impl<'a> World<'a> {
             ns_per_byte_remote: 1e9 / plat.net_remote_bps,
             ns_per_byte_local: 1e9 / plat.net_local_bps,
             nic_out: (0..h).map(|_| Station::new()).collect(),
-            nic_in: (0..h).map(|_| Station::new()).collect(),
+            nic_in: (0..h)
+                .map(|_| {
+                    if aggregated {
+                        NicIn::Fair(FairStation::new())
+                    } else {
+                        NicIn::Fifo(Station::new())
+                    }
+                })
+                .collect(),
             manager_st: Station::new(),
             storage_st: (0..cfg.n_storage).map(|_| Station::new()).collect(),
             client_st: (0..cfg.n_app).map(|_| Station::new()).collect(),
@@ -338,17 +403,21 @@ impl<'a> World<'a> {
     /// exact sum of the per-frame service times (so aggregated busy
     /// integrals match the per-frame path bit-for-bit), `first` is the
     /// leading frame's service (cut-through offset), `unit` the full-frame
-    /// service used for analytic intra-train queueing.
+    /// service used for analytic intra-train queueing, and `last` the
+    /// final (possibly short, see [`Frame::tail_frame_bytes`]) frame's
+    /// service — the per-frame path's last frame waits `unit − last`
+    /// behind its siblings at the receive queue, which the bulk path
+    /// charges analytically (exact for all wire sizes).
     #[inline(always)]
-    fn train_svc(&self, total_bytes: u64, n_frames: u64, local: bool) -> TrainSvc {
+    fn train_svc(&self, frame: &Frame, local: bool) -> TrainSvc {
+        let n_frames = frame.frames as u64;
         debug_assert!(n_frames >= 1);
         let cap = self.plat.frame_size.as_u64();
         let full = self.frame_svc(cap, local);
-        let last_bytes = total_bytes - (n_frames - 1) * cap;
-        let last = self.frame_svc(last_bytes, local);
+        let last = self.frame_svc(frame.tail_frame_bytes(cap), local);
         let total = SimTime(full.0 * (n_frames - 1)) + last;
         let first = if n_frames > 1 { full } else { last };
-        TrainSvc { total, first, unit: full }
+        TrainSvc { total, first, unit: full, last }
     }
 
     /// Schedule a train's arrival at the destination in-NIC: one
@@ -384,7 +453,7 @@ impl<'a> World<'a> {
         if self.fid.frame_aggregation {
             let frame =
                 Frame { msg: msg_id, bytes: Bytes(total), frames: n_frames as u32, last: true };
-            let ts = self.train_svc(total, n_frames, local);
+            let ts = self.train_svc(&frame, local);
             if let Some(t) = self.nic_out[src].arrive_train(now, frame, ts.total, n_frames, ts.unit)
             {
                 sched.at(t, Ev::NicOutDone(src));
@@ -416,7 +485,11 @@ impl<'a> World<'a> {
             Some(ConnState::Pending { dst, .. }) => *dst,
             _ => return, // already up (stale retry)
         };
-        let qlen = self.nic_in[dst].queue_len();
+        // Train-weighted calibration: under aggregation a cut-through
+        // train posts its whole frame count at once where per-frame
+        // pacing ramps the same backlog up gradually, so the observed
+        // depth is scaled before the (frame-calibrated) SYN-drop law.
+        let qlen = (self.nic_in[dst].queue_len() as f64 * self.fid.train_qlen_scale) as usize;
         let p = self.fid.syn_drop_prob(qlen);
         if p > 0.0 && self.rng.next_f64() < p {
             self.conn_retries += 1;
@@ -446,7 +519,7 @@ impl<'a> World<'a> {
                 // cut-through arrival at the destination.
                 if let Some(&nf) = self.nic_out[host].in_service() {
                     let local = self.msgs[nf.msg].local;
-                    let ts = self.train_svc(nf.bytes.as_u64(), nf.frames as u64, local);
+                    let ts = self.train_svc(&nf, local);
                     self.schedule_train_arrival(sched, now, nf, ts.first);
                 }
             }
@@ -462,32 +535,78 @@ impl<'a> World<'a> {
 
     fn on_frame_arrive(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, host: usize, frame: Frame) {
         let local = self.msgs[frame.msg].local;
-        let mut svc = if frame.frames > 1 {
-            self.train_svc(frame.bytes.as_u64(), frame.frames as u64, local).total
+        let ts = if frame.frames > 1 {
+            self.train_svc(&frame, local)
         } else {
-            self.frame_svc(frame.bytes.as_u64(), local)
+            let svc = self.frame_svc(frame.bytes.as_u64(), local);
+            TrainSvc { total: svc, first: svc, unit: svc, last: svc }
         };
+        let mut svc = ts.total;
         // Detailed fidelity: concurrent-flow multiplexing overhead on
         // remote receive under backlog (see Fidelity::mux_eta). On the
-        // bulk path the whole train is inflated once, using the backlog
-        // its leading frame sees.
+        // bulk path the whole train is inflated once, using the
+        // train-weighted (scaled) backlog its leading frame sees.
         if self.fid.mux_eta > 0.0 && !local {
-            let q = self.nic_in[host].queue_len() as f64;
+            let q = self.nic_in[host].queue_len() as f64 * self.fid.train_qlen_scale;
             svc = SimTime((svc.0 as f64 * (1.0 + self.fid.mux_eta * (1.0 + q).ln())) as u64);
         }
-        // Receive-side trains are paced by the sender (frames land at the
-        // service rate), so no analytic intra-train waiting accrues.
-        if let Some(t) =
-            self.nic_in[host].arrive_train(now, frame, svc, frame.frames as u64, SimTime::ZERO)
-        {
-            sched.at(t, Ev::NicInDone(host));
+        match &mut self.nic_in[host] {
+            NicIn::Fifo(st) => {
+                // Per-frame path: frames pace in at the service rate and
+                // never wait on their siblings.
+                if let Some(t) = st.arrive(now, frame, svc) {
+                    sched.at(t, Ev::NicInDone(host));
+                }
+            }
+            NicIn::Fair(fq) => {
+                // Bulk path: the train shares the in-NIC weighted by its
+                // wire bytes. Exact partial-frame bookkeeping: per-frame,
+                // a short last frame arrives early (it left the out-NIC
+                // after only `last` service) and waits `unit − last`
+                // behind its full-sized siblings — charged analytically so
+                // the waiting integral is exact for arbitrary wire sizes.
+                let tail_wait =
+                    if frame.frames > 1 { ts.unit.as_ns() - ts.last.as_ns() } else { 0 };
+                let weight = frame.bytes.as_u64().max(1);
+                let (t, epoch) =
+                    fq.arrive(now, frame, svc, frame.frames as u64, weight, tail_wait);
+                sched.at(t, Ev::NicInFairDone(host, epoch));
+            }
         }
     }
 
     fn on_nic_in_done(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, host: usize) {
-        let (frame, next) = self.nic_in[host].complete(now);
+        let st = match &mut self.nic_in[host] {
+            NicIn::Fifo(st) => st,
+            NicIn::Fair(_) => unreachable!("per-frame completion on a fair in-NIC"),
+        };
+        let (frame, next) = st.complete(now);
         if let Some(t) = next {
             sched.at(t, Ev::NicInDone(host));
+        }
+        if frame.last {
+            // Message fully assembled: hand to destination component queue.
+            let to = self.msgs[frame.msg].to;
+            self.comp_arrive(sched, now, to, frame.msg);
+        }
+    }
+
+    fn on_nic_in_fair_done(
+        &mut self,
+        sched: &mut Scheduler<Ev>,
+        now: SimTime,
+        host: usize,
+        epoch: u64,
+    ) {
+        let fq = match &mut self.nic_in[host] {
+            NicIn::Fair(fq) => fq,
+            NicIn::Fifo(_) => unreachable!("fair completion on a per-frame in-NIC"),
+        };
+        let Some((frame, next)) = fq.complete(now, epoch) else {
+            return; // stale: a later arrival re-announced the completion
+        };
+        if let Some((t, e)) = next {
+            sched.at(t, Ev::NicInFairDone(host, e));
         }
         if frame.last {
             // Message fully assembled: hand to destination component queue.
@@ -847,8 +966,11 @@ impl<'a> World<'a> {
     }
 
     fn finish_report(mut self, end: SimTime, events: u64) -> SimReport {
-        for st in self.nic_out.iter_mut().chain(self.nic_in.iter_mut()) {
+        for st in self.nic_out.iter_mut() {
             st.finish(end);
+        }
+        for q in self.nic_in.iter_mut() {
+            q.finish(end);
         }
         self.manager_st.finish(end);
         for st in self.storage_st.iter_mut().chain(self.client_st.iter_mut()) {
@@ -872,13 +994,13 @@ impl<'a> World<'a> {
                 .nic_out
                 .iter()
                 .zip(self.nic_in.iter())
-                .map(|(o, i)| (o.stats.utilization(end), i.stats.utilization(end)))
+                .map(|(o, i)| (o.stats.utilization(end), i.stats().utilization(end)))
                 .collect(),
             nic_qlen: self
                 .nic_out
                 .iter()
                 .zip(self.nic_in.iter())
-                .map(|(o, i)| (o.stats.mean_qlen(end), i.stats.mean_qlen(end)))
+                .map(|(o, i)| (o.stats.mean_qlen(end), i.stats().mean_qlen(end)))
                 .collect(),
         };
         SimReport {
@@ -904,6 +1026,7 @@ impl<'a> SimState for World<'a> {
         match ev {
             Ev::NicOutDone(h) => self.on_nic_out_done(sched, now, h),
             Ev::NicInDone(h) => self.on_nic_in_done(sched, now, h),
+            Ev::NicInFairDone(h, epoch) => self.on_nic_in_fair_done(sched, now, h, epoch),
             Ev::FrameArrive(h, f) => self.on_frame_arrive(sched, now, h, f),
             Ev::CompDone(c) => self.on_comp_done(sched, now, c),
             Ev::Release(t) => self.driver_release(sched, now, t),

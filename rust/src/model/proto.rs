@@ -124,6 +124,20 @@ pub struct Frame {
     pub last: bool,
 }
 
+impl Frame {
+    /// Bytes of this train's final wire frame under a `frame_cap`-byte
+    /// MTU: fragmentation fills frames in order, so only the last one can
+    /// be short. The bulk path uses this for exact leading/last-frame
+    /// bookkeeping — the per-frame path's short last frame waits
+    /// `full − last` service behind its full-sized siblings at the
+    /// receive queue, and that slack is charged analytically so the
+    /// aggregated integrals are exact for arbitrary wire sizes.
+    pub fn tail_frame_bytes(&self, frame_cap: u64) -> u64 {
+        debug_assert!(self.frames >= 1 && frame_cap > 0);
+        self.bytes.as_u64() - (self.frames as u64 - 1) * frame_cap
+    }
+}
+
 /// Client-side operation kind.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum OpKind {
@@ -201,6 +215,17 @@ mod tests {
         assert_eq!(op.chunk_bytes(0, cs), Bytes::mb(1));
         assert_eq!(op.chunk_bytes(1, cs), Bytes::mb(1));
         assert_eq!(op.chunk_bytes(2, cs), Bytes(2_500_000 - 2 * 1_048_576));
+    }
+
+    #[test]
+    fn tail_frame_bytes_only_last_is_short() {
+        let cap = 64 * 1024u64;
+        let aligned = Frame { msg: 0, bytes: Bytes(3 * cap), frames: 3, last: true };
+        assert_eq!(aligned.tail_frame_bytes(cap), cap);
+        let ragged = Frame { msg: 0, bytes: Bytes(2 * cap + 100), frames: 3, last: true };
+        assert_eq!(ragged.tail_frame_bytes(cap), 100);
+        let single = Frame { msg: 0, bytes: Bytes(999), frames: 1, last: true };
+        assert_eq!(single.tail_frame_bytes(cap), 999);
     }
 
     #[test]

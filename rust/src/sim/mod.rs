@@ -15,4 +15,4 @@ pub mod engine;
 pub mod station;
 
 pub use engine::{Scheduler, SimState, Simulation};
-pub use station::Station;
+pub use station::{FairStation, Station, StationStats};

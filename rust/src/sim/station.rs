@@ -21,6 +21,22 @@
 //! both modes, and a burst train entering service adds the intra-train
 //! waiting integral (`unit_svc · u(u−1)/2` — frame *i* of a burst waits
 //! `i · unit_svc` behind its siblings) analytically.
+//!
+//! ## Weighted-fair train service ([`FairStation`])
+//!
+//! A FIFO of whole trains serializes concurrent messages at a contended
+//! in-NIC, while the per-frame path interleaves their frames in arrival
+//! order — under heavy incast the two diverge on *per-message* completion
+//! times even though both are work-conserving. [`FairStation`] closes that
+//! gap without giving back the O(1) event count: concurrent trains share
+//! the server generalized-processor-sharing style with byte-proportional
+//! weights, so equal-sized trains arriving together finish together (as
+//! their interleaved frames would), a lone train gets the full rate (the
+//! uncontended path stays bit-exact), and the server is busy exactly when
+//! work is pending (busy integrals are conserved). Completion times change
+//! whenever membership changes, so announced completions carry an *epoch*:
+//! an event whose epoch is stale is simply ignored by the caller — at most
+//! one stale event per arrival, keeping events O(1) per train.
 
 use crate::util::units::SimTime;
 use std::collections::VecDeque;
@@ -213,6 +229,194 @@ impl<T> Station<T> {
     }
 }
 
+/// An entry in weighted-fair service: remaining dedicated-service time
+/// drains at `weight / Σ weights` of the server rate.
+#[derive(Debug)]
+struct FairEntry<T> {
+    item: T,
+    /// Remaining dedicated-service time in ns (exactly integer-valued at
+    /// arrival; fractional only while sharing).
+    rem: f64,
+    /// Service share weight (wire bytes of the train; ≥ 1).
+    weight: f64,
+    /// Frames aggregated in this entry (stats unit).
+    units: u64,
+    /// Arrival order — FIFO tie-break between equal finishers.
+    seq: u64,
+}
+
+/// A weighted-fair (GPS-style) shared server for frame trains.
+///
+/// While `m` entries are active, entry `i` is served at rate
+/// `w_i / Σ w` of the server capacity; with byte-proportional weights and
+/// service time proportional to bytes, every entry's `rem / weight` decays
+/// at the same rate, so completions keep arrival order among same-rate
+/// trains and a lone train is served at exactly the full rate — the
+/// uncontended case matches the FIFO station bit-for-bit.
+///
+/// The caller owns the clock: `arrive` and `complete` return the current
+/// head's completion time tagged with an epoch; any previously announced
+/// completion is stale (its epoch no longer matches) and must be ignored
+/// when its event fires.
+#[derive(Debug)]
+pub struct FairStation<T> {
+    active: Vec<FairEntry<T>>,
+    /// Monotone arrival counter (FIFO tie-break).
+    seq: u64,
+    /// Completion-schedule generation: bumped whenever membership changes,
+    /// invalidating previously announced completion times.
+    epoch: u64,
+    /// Time the shared service was last advanced to, in ns.
+    last_ns: u64,
+    pub stats: StationStats,
+}
+
+impl<T> Default for FairStation<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> FairStation<T> {
+    pub fn new() -> Self {
+        FairStation {
+            active: Vec::new(),
+            seq: 0,
+            epoch: 0,
+            last_ns: 0,
+            stats: StationStats::default(),
+        }
+    }
+
+    pub fn is_busy(&self) -> bool {
+        !self.active.is_empty()
+    }
+
+    /// Waiting units: every active train's frames except the head's — the
+    /// analogue of the FIFO station's waiting queue (the earliest finisher
+    /// plays the role of the in-service entry). Used both for reports and
+    /// as the train-weighted queue depth the SYN-drop/mux laws observe.
+    pub fn queue_len(&self) -> usize {
+        match self.head() {
+            None => 0,
+            Some(h) => {
+                let total: u64 = self.active.iter().map(|e| e.units).sum();
+                (total - self.active[h].units) as usize
+            }
+        }
+    }
+
+    fn total_weight(&self) -> f64 {
+        self.active.iter().map(|e| e.weight).sum()
+    }
+
+    /// Index of the earliest finisher under the current shares: minimal
+    /// `rem / weight` (compared cross-multiplied), ties to lowest seq.
+    fn head(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, e) in self.active.iter().enumerate() {
+            let better = match best {
+                None => true,
+                Some(b) => {
+                    let eb = &self.active[b];
+                    let (li, lb) = (e.rem * eb.weight, eb.rem * e.weight);
+                    li < lb || (li == lb && e.seq < eb.seq)
+                }
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        best
+    }
+
+    /// Advance the shared service to `now`, charging stats for the span.
+    fn drain(&mut self, now: SimTime) {
+        let now_ns = now.as_ns();
+        let dt = now_ns.saturating_sub(self.last_ns);
+        let busy = self.is_busy();
+        let qlen = self.queue_len() as u64;
+        self.stats.advance(now, busy, qlen);
+        if busy && dt != 0 {
+            let w = self.total_weight();
+            for e in &mut self.active {
+                e.rem = (e.rem - dt as f64 * e.weight / w).max(0.0);
+            }
+        }
+        self.last_ns = now_ns;
+    }
+
+    /// Completion time of the current head under the current membership.
+    /// Only valid immediately after `drain` (uses `last_ns` as "now").
+    fn head_completion(&self) -> Option<SimTime> {
+        let h = self.head()?;
+        let e = &self.active[h];
+        let dt = (e.rem * self.total_weight() / e.weight).ceil() as u64;
+        Some(SimTime::from_ns(self.last_ns.saturating_add(dt)))
+    }
+
+    /// A train of `units` frames arrives with aggregate dedicated service
+    /// `svc` and fair-share weight `weight` (wire bytes). `extra_wait_ns`
+    /// is charged to the waiting integral analytically — the caller passes
+    /// the per-frame path's partial-last-frame wait (`full − last` when
+    /// the train's final wire frame is short) so the aggregated integrals
+    /// stay exact for arbitrary wire sizes.
+    ///
+    /// Returns the head's completion time and the epoch to tag its event
+    /// with; any previously announced completion is stale from here on.
+    #[must_use = "schedule the returned completion event"]
+    pub fn arrive(
+        &mut self,
+        now: SimTime,
+        item: T,
+        svc: SimTime,
+        units: u64,
+        weight: u64,
+        extra_wait_ns: u64,
+    ) -> (SimTime, u64) {
+        debug_assert!(units >= 1 && weight >= 1);
+        self.drain(now);
+        self.stats.arrivals += units;
+        self.stats.qlen_ns += extra_wait_ns as u128;
+        self.seq += 1;
+        self.active.push(FairEntry {
+            item,
+            rem: svc.as_ns() as f64,
+            weight: weight as f64,
+            units,
+            seq: self.seq,
+        });
+        let q = self.queue_len();
+        if q > self.stats.max_qlen {
+            self.stats.max_qlen = q;
+        }
+        self.epoch += 1;
+        (self.head_completion().expect("just pushed an entry"), self.epoch)
+    }
+
+    /// The completion event tagged `epoch` fires. Returns `None` when the
+    /// event is stale (a later arrival re-announced the completion).
+    /// Otherwise pops the finished head and, if entries remain, returns
+    /// the next head's completion to schedule.
+    pub fn complete(&mut self, now: SimTime, epoch: u64) -> Option<(T, Option<(SimTime, u64)>)> {
+        if epoch != self.epoch {
+            return None;
+        }
+        self.drain(now);
+        let h = self.head().expect("complete() on idle fair station");
+        let e = self.active.swap_remove(h);
+        self.stats.departures += e.units;
+        self.epoch += 1;
+        let next = self.head_completion().map(|t| (t, self.epoch));
+        Some((e.item, next))
+    }
+
+    /// Finalize stats bookkeeping at the end of a run.
+    pub fn finish(&mut self, now: SimTime) {
+        self.drain(now);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -343,5 +547,95 @@ mod tests {
         st.finish(done);
         assert_eq!(st.stats.qlen_ns, 0, "receive-side trains are paced, not bursty");
         assert_eq!(st.stats.arrivals, 4);
+    }
+
+    #[test]
+    fn fair_lone_train_is_exact() {
+        // A single train gets the full service rate: completion and stats
+        // match the FIFO station bit-for-bit.
+        let mut fq: FairStation<u32> = FairStation::new();
+        let (t, e) = fq.arrive(ns(100), 7, ns(12_345), 4, 1_000, 0);
+        assert_eq!(t, ns(100 + 12_345));
+        assert!(fq.is_busy());
+        assert_eq!(fq.queue_len(), 0, "a lone train is all in service");
+        let (item, next) = fq.complete(t, e).expect("current epoch");
+        assert_eq!(item, 7);
+        assert!(next.is_none());
+        fq.finish(ns(20_000));
+        assert_eq!(fq.stats.busy_ns, 12_345);
+        assert_eq!(fq.stats.qlen_ns, 0);
+        assert_eq!(fq.stats.arrivals, 4);
+        assert_eq!(fq.stats.departures, 4);
+    }
+
+    #[test]
+    fn fair_equal_trains_finish_together() {
+        // Two equal-weight, equal-size trains arriving together split the
+        // server and finish at the same instant — the incast behavior the
+        // per-frame path's interleaving produces, where a FIFO of whole
+        // trains would finish them one full service apart.
+        let mut fq: FairStation<u32> = FairStation::new();
+        let (t1, e1) = fq.arrive(ns(0), 1, ns(100), 2, 500, 0);
+        assert_eq!(t1, ns(100));
+        let (t2, e2) = fq.arrive(ns(0), 2, ns(100), 2, 500, 0);
+        assert_eq!(t2, ns(200), "shared service: head now finishes at Σ svc");
+        // The first announcement became stale when the second train arrived.
+        assert!(fq.complete(t1, e1).is_none(), "stale epochs are ignored");
+        let (item, next) = fq.complete(t2, e2).expect("current epoch");
+        assert_eq!(item, 1, "ties complete in arrival order");
+        let (t3, e3) = next.expect("second train still active");
+        assert_eq!(t3, ns(200));
+        let (item, next) = fq.complete(t3, e3).expect("current epoch");
+        assert_eq!(item, 2);
+        assert!(next.is_none());
+        fq.finish(ns(200));
+        assert_eq!(fq.stats.busy_ns, 200, "work is conserved under sharing");
+        assert_eq!(fq.stats.departures, 4);
+    }
+
+    #[test]
+    fn fair_weights_are_byte_proportional() {
+        // A heavy train (3x the bytes, 3x the service) and a light one
+        // arriving together: byte-proportional shares mean both rem/weight
+        // ratios decay together, so the light train does not starve the
+        // heavy one — they finish at 400 in arrival order.
+        let mut fq: FairStation<u32> = FairStation::new();
+        let (_, _) = fq.arrive(ns(0), 1, ns(300), 3, 3_000, 0);
+        let (t, e) = fq.arrive(ns(0), 2, ns(100), 1, 1_000, 0);
+        assert_eq!(t, ns(400), "head completes when the shared backlog drains");
+        let (item, next) = fq.complete(t, e).expect("current epoch");
+        assert_eq!(item, 1);
+        let (t2, e2) = next.unwrap();
+        assert_eq!(t2, ns(400));
+        let (item, _) = fq.complete(t2, e2).expect("current epoch");
+        assert_eq!(item, 2);
+    }
+
+    #[test]
+    fn fair_staggered_arrival_delays_head() {
+        // B arrives halfway through A's lone service; A has drained half
+        // its work, the rest is served at half rate.
+        let mut fq: FairStation<u32> = FairStation::new();
+        let (t1, _) = fq.arrive(ns(0), 1, ns(100), 1, 100, 0);
+        assert_eq!(t1, ns(100));
+        let (t2, e2) = fq.arrive(ns(50), 2, ns(100), 1, 100, 0);
+        assert_eq!(t2, ns(150), "A: 50ns left, served at 1/2 rate");
+        let (item, next) = fq.complete(t2, e2).expect("current epoch");
+        assert_eq!(item, 1);
+        let (t3, e3) = next.unwrap();
+        assert_eq!(t3, ns(200), "B: 50ns left at full rate after A departs");
+        let (item, _) = fq.complete(t3, e3).expect("current epoch");
+        assert_eq!(item, 2);
+        fq.finish(ns(200));
+        assert_eq!(fq.stats.busy_ns, 200);
+    }
+
+    #[test]
+    fn fair_extra_wait_charges_the_integral() {
+        let mut fq: FairStation<u32> = FairStation::new();
+        let (t, e) = fq.arrive(ns(0), 1, ns(10), 2, 64, 7);
+        let _ = fq.complete(t, e).unwrap();
+        fq.finish(t);
+        assert_eq!(fq.stats.qlen_ns, 7, "analytic partial-frame wait only");
     }
 }

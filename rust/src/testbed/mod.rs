@@ -12,8 +12,19 @@
 //! Trial counts follow the paper: "the average turnaround time and
 //! standard deviation for 15 trials … enough to guarantee a 95%" CI; we
 //! additionally run Jain's procedure to extend noisy campaigns.
+//!
+//! Campaigns are embarrassingly parallel: every trial is keyed by a pure
+//! per-trial seed stream (`Rng::stream_seed(base_seed, i)`), so
+//! [`Testbed::with_threads`] fans trials out over scoped workers while
+//! Jain's stopping rule is applied to the results strictly in trial
+//! order — an N-thread campaign is **byte-identical** to the sequential
+//! one, just faster. `Testbed::aggregated()` additionally switches trials
+//! to [`Fidelity::detailed_aggregated`] (the bulk train path with
+//! train-weighted SYN/mux calibration), making each trial ~an order of
+//! magnitude cheaper on chunk-heavy workloads.
 
 use crate::model::{simulate_fid, Config, Fidelity, Platform, SimReport};
+use crate::util::rng::Rng;
 use crate::util::stats::{Campaign, Summary};
 use crate::workload::Workload;
 
@@ -51,8 +62,12 @@ pub struct Testbed {
     /// Minimum trials (paper: 15 synthetic / 20 BLAST).
     pub min_trials: u64,
     pub max_trials: u64,
-    /// Base seed; trial `i` runs with `base_seed + i`.
+    /// Base seed; trial `i` runs on seed stream
+    /// `Rng::stream_seed(base_seed, i)`.
     pub base_seed: u64,
+    /// Worker threads for `run` campaigns (1 = the sequential reference;
+    /// any value produces byte-identical statistics).
+    pub threads: usize,
 }
 
 impl Testbed {
@@ -63,6 +78,7 @@ impl Testbed {
             min_trials: 15,
             max_trials: 40,
             base_seed: 0x7E57_BED0,
+            threads: 1,
         }
     }
 
@@ -77,6 +93,34 @@ impl Testbed {
         self
     }
 
+    /// Fan `run` campaigns out over up to `threads` workers. Results are
+    /// byte-identical to `threads == 1`; only the wallclock changes.
+    pub fn with_threads(mut self, threads: usize) -> Testbed {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Replace the campaign fidelity (the per-trial seed is still
+    /// overridden for every trial).
+    pub fn with_fidelity(mut self, fidelity: Fidelity) -> Testbed {
+        self.fidelity = fidelity;
+        self
+    }
+
+    /// Switch trials to the detailed-with-aggregation tier
+    /// ([`Fidelity::detailed_aggregated`]): same stochastic mechanisms,
+    /// bulk train path, train-weighted SYN/mux calibration — ~an order of
+    /// magnitude cheaper per trial on chunk-heavy workloads.
+    pub fn aggregated(self) -> Testbed {
+        self.with_fidelity(Fidelity::detailed_aggregated(0))
+    }
+
+    /// Seed stream of trial `i` — a pure function of `(base_seed, i)`, so
+    /// trials can run on any worker in any order.
+    pub fn trial_seed(&self, i: u64) -> u64 {
+        Rng::stream_seed(self.base_seed, i)
+    }
+
     /// Run one trial with an explicit seed.
     pub fn trial(&self, wl: &Workload, cfg: &Config, seed: u64) -> SimReport {
         let fid = Fidelity { seed, ..self.fidelity.clone() };
@@ -85,6 +129,10 @@ impl Testbed {
 
     /// Run a measurement campaign: trials until the 95% CI is within ±5%
     /// of the mean (Jain's procedure), bounded by [min_trials, max_trials].
+    ///
+    /// Trials are generated in parallel waves across `self.threads`
+    /// workers and reduced strictly in trial order (slot-ordered), so the
+    /// returned statistics are byte-identical to a sequential campaign.
     pub fn run(&self, wl: &Workload, cfg: &Config) -> TrialStats {
         let t0 = std::time::Instant::now();
         let n_stages = wl.n_stages();
@@ -97,16 +145,19 @@ impl Testbed {
             min_samples: self.min_trials,
             max_samples: self.max_trials,
         };
-        let turnaround = campaign.run(|i| {
-            let rep = self.trial(wl, cfg, self.base_seed + i);
-            for (s, summ) in stages.iter_mut().enumerate() {
-                summ.add(rep.stage_time(s as u32).as_secs_f64());
-            }
-            retries += rep.conn_retries;
-            let t = rep.turnaround.as_secs_f64();
-            sample = Some(rep);
-            t
-        });
+        let turnaround = campaign.run_par(
+            self.threads,
+            |i| self.trial(wl, cfg, self.trial_seed(i)),
+            |rep| {
+                for (s, summ) in stages.iter_mut().enumerate() {
+                    summ.add(rep.stage_time(s as u32).as_secs_f64());
+                }
+                retries += rep.conn_retries;
+                let t = rep.turnaround.as_secs_f64();
+                sample = Some(rep);
+                t
+            },
+        );
 
         TrialStats {
             config_label: cfg.label.clone(),
@@ -158,6 +209,67 @@ mod tests {
         assert!(stats.std() >= 0.0);
         assert_eq!(stats.stages.len(), 3);
         assert!(stats.wallclock_secs > 0.0);
+    }
+
+    #[test]
+    fn parallel_campaign_is_byte_identical_to_sequential() {
+        let wl = pipeline(4, PatternScale::Small, false);
+        let cfg = Config::dss(4);
+        let seq = quick_testbed().run(&wl, &cfg);
+        for threads in [2usize, 4, 8] {
+            let par = quick_testbed().with_threads(threads).run(&wl, &cfg);
+            assert_eq!(seq.turnaround.n(), par.turnaround.n(), "{threads} threads");
+            assert_eq!(
+                seq.turnaround.mean().to_bits(),
+                par.turnaround.mean().to_bits(),
+                "{threads} threads: mean"
+            );
+            assert_eq!(
+                seq.turnaround.std().to_bits(),
+                par.turnaround.std().to_bits(),
+                "{threads} threads: std"
+            );
+            assert_eq!(
+                seq.mean_conn_retries.to_bits(),
+                par.mean_conn_retries.to_bits(),
+                "{threads} threads: retries"
+            );
+            assert_eq!(seq.sample.turnaround, par.sample.turnaround, "{threads} threads: sample");
+            assert_eq!(seq.stages.len(), par.stages.len());
+            for (a, b) in seq.stages.iter().zip(par.stages.iter()) {
+                assert_eq!(a.mean().to_bits(), b.mean().to_bits(), "{threads} threads: stages");
+            }
+        }
+    }
+
+    #[test]
+    fn aggregated_tier_matches_per_frame_statistics_and_is_cheaper() {
+        // The detailed-with-aggregation tier reruns the same stochastic
+        // mechanisms over the bulk train path with train-weighted SYN/mux
+        // calibration. It is a different (equally valid) stochastic
+        // realization, so we compare campaign *means*, loosely, and
+        // require the trials to be much cheaper in events.
+        let wl = pipeline(6, PatternScale::Small, false);
+        let cfg = Config::dss(6);
+        let per_frame = Testbed::new(Platform::paper_testbed()).with_trials(5, 5).run(&wl, &cfg);
+        let agg = Testbed::new(Platform::paper_testbed())
+            .aggregated()
+            .with_trials(5, 5)
+            .run(&wl, &cfg);
+        let drift = (agg.mean() - per_frame.mean()).abs() / per_frame.mean();
+        assert!(
+            drift < 0.25,
+            "aggregated tier drifted {:.1}% from per-frame (agg {:.2}s vs {:.2}s)",
+            drift * 100.0,
+            agg.mean(),
+            per_frame.mean()
+        );
+        assert!(
+            agg.sample.events < per_frame.sample.events,
+            "aggregation must cut events: {} vs {}",
+            agg.sample.events,
+            per_frame.sample.events
+        );
     }
 
     #[test]

@@ -67,6 +67,57 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Scoped numeric lookup in a results file: `"key": <number>` inside the
+/// object value of the first `"scope":` occurrence (empty scope searches
+/// the whole text). The scope's object is delimited by a balanced-brace
+/// scan, so a key absent from the scope is `None` rather than silently
+/// matching a later sibling object. Tailored to this crate's own
+/// [`crate::util::jsonw::Json`] writer (which never emits braces inside
+/// the strings of these files) — it is a baseline-file reader for the
+/// bench regression gate, not a general JSON parser.
+pub fn json_number_in(text: &str, scope: &str, key: &str) -> Option<f64> {
+    let region = if scope.is_empty() {
+        text
+    } else {
+        let needle = format!("\"{scope}\":");
+        let rest = &text[text.find(&needle)? + needle.len()..];
+        let open = rest.find('{')?;
+        let mut depth = 0usize;
+        let mut close = None;
+        for (i, c) in rest[open..].char_indices() {
+            match c {
+                '{' => depth += 1,
+                '}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        close = Some(open + i);
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        &rest[open..=close?]
+    };
+    let needle = format!("\"{key}\":");
+    let pos = region.find(&needle)? + needle.len();
+    let rest = region[pos..].trim_start();
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || matches!(c, '+' | '-' | '.' | 'e' | 'E')))
+        .unwrap_or(rest.len());
+    rest[..end].parse::<f64>().ok()
+}
+
+/// Relative-tolerance comparison for the regression gate:
+/// `|fresh − base| ≤ tol · |base|` (exact match required when base is 0).
+pub fn within_rel(fresh: f64, base: f64, tol: f64) -> bool {
+    if base == 0.0 {
+        fresh == 0.0
+    } else {
+        (fresh - base).abs() <= tol * base.abs()
+    }
+}
+
 /// Write a results file under `results/`, creating the directory.
 pub fn write_results(name: &str, contents: &str) {
     let dir = std::path::Path::new("results");
@@ -79,6 +130,7 @@ pub fn write_results(name: &str, contents: &str) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::jsonw::Json;
 
     #[test]
     fn runs_expected_iterations() {
@@ -87,5 +139,41 @@ mod tests {
         assert_eq!(calls, 8);
         assert_eq!(r.secs.n(), 5);
         assert!(r.secs.mean() >= 0.0);
+    }
+
+    #[test]
+    fn json_number_in_reads_own_writer_output() {
+        let text = Json::obj()
+            .set("workload", "blast")
+            .set("bulk", Json::obj().set("events", 1234u64).set("sim_turnaround_s", 17.25))
+            .set("per_frame", Json::obj().set("events", 9876u64).set("wall_secs", 3.5))
+            .set("event_reduction_x", 8.0)
+            .render();
+        assert_eq!(json_number_in(&text, "bulk", "events"), Some(1234.0));
+        assert_eq!(json_number_in(&text, "bulk", "sim_turnaround_s"), Some(17.25));
+        assert_eq!(json_number_in(&text, "per_frame", "events"), Some(9876.0));
+        assert_eq!(json_number_in(&text, "", "event_reduction_x"), Some(8.0));
+        assert_eq!(json_number_in(&text, "missing", "events"), None);
+        assert_eq!(json_number_in(&text, "bulk", "missing"), None);
+        // A key absent from the scope must NOT match a later sibling's key.
+        assert_eq!(json_number_in(&text, "bulk", "wall_secs"), None);
+        // Nested scopes stay within their own braces.
+        let nested = Json::obj()
+            .set("outer", Json::obj().set("inner", Json::obj().set("x", 1u64)).set("y", 2u64))
+            .set("x", 3u64)
+            .render();
+        assert_eq!(json_number_in(&nested, "outer", "x"), Some(1.0));
+        assert_eq!(json_number_in(&nested, "inner", "x"), Some(1.0));
+        assert_eq!(json_number_in(&nested, "outer", "y"), Some(2.0));
+        assert_eq!(json_number_in(&nested, "", "x"), Some(1.0));
+    }
+
+    #[test]
+    fn within_rel_bounds() {
+        assert!(within_rel(110.0, 100.0, 0.10));
+        assert!(!within_rel(110.1, 100.0, 0.10));
+        assert!(within_rel(90.0, 100.0, 0.10));
+        assert!(within_rel(0.0, 0.0, 0.10));
+        assert!(!within_rel(1.0, 0.0, 0.10));
     }
 }

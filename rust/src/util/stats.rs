@@ -133,6 +133,48 @@ impl Campaign {
         }
         s
     }
+
+    /// Jain's procedure with sample generation fanned out over `threads`
+    /// workers, reduced strictly in sample order.
+    ///
+    /// `gen(i)` produces sample `i`'s raw measurement (it must be a pure
+    /// function of `i` — e.g. a trial keyed by a per-index seed stream);
+    /// `consume` reduces each measurement to the tracked value and may
+    /// accumulate side statistics. Generation proceeds in waves
+    /// (`min_samples` first, then one wave per `threads`), but `consume`
+    /// always sees samples `0, 1, 2, …` in order and the stopping rule is
+    /// applied after each, exactly as in the sequential [`Campaign::run`]
+    /// — so the returned [`Summary`] (and everything `consume`
+    /// accumulates) is byte-identical regardless of thread count. Samples
+    /// speculatively generated beyond the stopping point are discarded.
+    pub fn run_par<T, F, G>(&self, threads: usize, gen: F, mut consume: G) -> Summary
+    where
+        T: Send,
+        F: Fn(u64) -> T + Sync,
+        G: FnMut(T) -> f64,
+    {
+        let mut s = Summary::new();
+        let mut next = 0u64;
+        'waves: while next < self.max_samples {
+            let wave = if next == 0 {
+                self.min_samples.clamp(1, self.max_samples)
+            } else {
+                (threads.max(1) as u64).min(self.max_samples - next)
+            };
+            let base = next;
+            let batch = crate::coordinator::par_map_indexed(wave as usize, threads, |k| {
+                gen(base + k as u64)
+            });
+            for x in batch {
+                s.add(consume(x));
+                next += 1;
+                if s.n() >= self.min_samples && s.ci95_rel() <= self.rel_accuracy {
+                    break 'waves;
+                }
+            }
+        }
+        s
+    }
 }
 
 /// Relative error |a-b| / |b| (b is the reference). `inf` when b == 0 ≠ a.
@@ -205,6 +247,38 @@ mod tests {
         let s = c.run(|_| r.normal(100.0, 30.0));
         assert!(s.n() > 10, "30% noise should need far more than the floor, got {}", s.n());
         assert!(s.ci95_rel() <= 0.02 || s.n() == 500);
+    }
+
+    #[test]
+    fn run_par_is_byte_identical_to_sequential() {
+        // A noisy sampler keyed purely by index: the parallel waves must
+        // reproduce the sequential stopping point and Summary bits.
+        let gen = |i: u64| {
+            let mut r = Rng::new(Rng::stream_seed(99, i));
+            r.normal(100.0, 20.0)
+        };
+        let c = Campaign { rel_accuracy: 0.04, min_samples: 5, max_samples: 60 };
+        let seq = c.run(gen);
+        for threads in [1usize, 2, 4, 7] {
+            let par = c.run_par(threads, gen, |x| x);
+            assert_eq!(seq.n(), par.n(), "{threads} threads");
+            assert_eq!(seq.mean().to_bits(), par.mean().to_bits(), "{threads} threads");
+            assert_eq!(seq.std().to_bits(), par.std().to_bits(), "{threads} threads");
+            assert_eq!(seq.min().to_bits(), par.min().to_bits(), "{threads} threads");
+            assert_eq!(seq.max().to_bits(), par.max().to_bits(), "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn run_par_consume_sees_samples_in_order() {
+        let c = Campaign { rel_accuracy: 0.0, min_samples: 9, max_samples: 9 };
+        let mut seen = Vec::new();
+        let s = c.run_par(3, |i| i as f64, |x| {
+            seen.push(x as u64);
+            x
+        });
+        assert_eq!(s.n(), 9);
+        assert_eq!(seen, (0..9).collect::<Vec<u64>>());
     }
 
     #[test]

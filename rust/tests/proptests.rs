@@ -257,6 +257,150 @@ fn prop_frame_aligned_aggregation_is_exact() {
     });
 }
 
+/// Like `frame_aligned_chain`, but with *arbitrary* chunk sizes, so wire
+/// sizes land anywhere relative to the 64 KB frame and messages end in
+/// partial wire frames. Still strictly sequential and uncontended: the
+/// single client holds each task until its commit ack is fully processed.
+fn any_size_chain(g: &mut Gen) -> (Workload, Config) {
+    let chunk = Bytes(g.u64(1, 512 * 1024));
+    let mut wl = Workload::new("any-size-chain");
+    let mut prev =
+        wl.add_file(FileSpec::new("in", Bytes(chunk.as_u64() * g.u64(1, 4))).prestaged());
+    for i in 0..g.usize(1, 4) {
+        let out =
+            wl.add_file(FileSpec::new(format!("f{i}"), Bytes(chunk.as_u64() * g.u64(1, 4))));
+        wl.add_task(TaskSpec::new(format!("t{i}"), i as u32).reads(prev).writes(out));
+        prev = out;
+    }
+    let cfg = Config::partitioned(1, 1, chunk).with_window(1);
+    (wl, cfg)
+}
+
+#[test]
+fn prop_bulk_path_exact_for_any_wire_size() {
+    // With exact leading/last-partial-frame bookkeeping the bulk path is
+    // exact — not banded — for arbitrary wire sizes on uncontended paths:
+    // a short last frame leaves the out-NIC early and waits `full − last`
+    // behind its siblings at the in-NIC, which the aggregated path
+    // charges analytically. Turnaround and every station integral
+    // (busy, queue-length) must be identical, not merely close.
+    check("partial-frame exactness", 40, |g| {
+        let (wl, cfg) = any_size_chain(g);
+        let plat = Platform::paper_testbed();
+        let bulk = simulate_fid(&wl, &cfg, &plat, Fidelity::coarse());
+        let frames = simulate_fid(&wl, &cfg, &plat, Fidelity::coarse_per_frame());
+
+        assert_eq!(bulk.turnaround, frames.turnaround, "partial frames shift nothing");
+        assert_eq!(bulk.net_bytes, frames.net_bytes);
+        assert_eq!(bulk.net_frames, frames.net_frames);
+        assert!(bulk.events <= frames.events, "aggregation never adds events");
+
+        for (h, (a, b)) in bulk.util.nic.iter().zip(frames.util.nic.iter()).enumerate() {
+            assert!((a.0 - b.0).abs() < 1e-12, "host {h} out-NIC utilization");
+            assert!((a.1 - b.1).abs() < 1e-12, "host {h} in-NIC utilization");
+        }
+        for (h, (a, b)) in
+            bulk.util.nic_qlen.iter().zip(frames.util.nic_qlen.iter()).enumerate()
+        {
+            assert!((a.0 - b.0).abs() < 1e-12, "host {h} out-NIC qlen integral");
+            assert!((a.1 - b.1).abs() < 1e-12, "host {h} in-NIC qlen integral");
+        }
+        assert!((bulk.util.manager_util - frames.util.manager_util).abs() < 1e-12);
+    });
+}
+
+#[test]
+fn prop_weighted_fair_station_conserves_work_and_bytes() {
+    // Drive the weighted-fair station directly with random concurrent
+    // trains: whatever the interleaving, (a) every frame that arrives
+    // departs, (b) the server's busy integral equals the total dedicated
+    // service (work conservation, within 1 ns rounding per train), and
+    // (c) no train finishes before its own dedicated service could.
+    check("weighted-fair conservation", 60, |g| {
+        use wfpred::sim::FairStation;
+        let n = g.usize(1, 12);
+        let mut trains: Vec<(u64, u64, u64, u64)> = (0..n)
+            .map(|_| {
+                (
+                    g.u64(0, 2_000_000),       // arrival ns
+                    g.u64(1, 40),              // units (frames)
+                    g.u64(1, 1_000_000),       // dedicated service ns
+                    g.u64(1, 4 * 1024 * 1024), // weight (bytes)
+                )
+            })
+            .collect();
+        trains.sort_unstable();
+
+        let mut fq: FairStation<usize> = FairStation::new();
+        let mut pending: Option<(SimTime, u64)> = None;
+        let mut completions: Vec<(usize, u64)> = Vec::new(); // (train, at ns)
+        let mut next_arrival = 0usize;
+        loop {
+            // Next event: the earlier of next arrival and announced
+            // completion (completions first on ties, like a scheduler
+            // firing the earlier-scheduled event).
+            let arr = trains.get(next_arrival).map(|t| t.0);
+            match (arr, pending) {
+                (Some(a), Some((c, epoch))) if SimTime::from_ns(a) >= c => {
+                    if let Some((item, next)) = fq.complete(c, epoch) {
+                        completions.push((item, c.as_ns()));
+                        pending = next;
+                    } else {
+                        pending = None; // stale announcement
+                    }
+                }
+                (Some(a), _) => {
+                    let (at, units, svc, weight) = trains[next_arrival];
+                    debug_assert_eq!(a, at);
+                    let (t, epoch) = fq.arrive(
+                        SimTime::from_ns(at),
+                        next_arrival,
+                        SimTime::from_ns(svc),
+                        units,
+                        weight,
+                        0,
+                    );
+                    pending = Some((t, epoch));
+                    next_arrival += 1;
+                }
+                (None, Some((c, epoch))) => {
+                    if let Some((item, next)) = fq.complete(c, epoch) {
+                        completions.push((item, c.as_ns()));
+                        pending = next;
+                    } else {
+                        pending = None;
+                    }
+                }
+                (None, None) => break,
+            }
+        }
+        let end = completions.iter().map(|&(_, t)| t).max().unwrap_or(0);
+        fq.finish(SimTime::from_ns(end));
+
+        let total_units: u64 = trains.iter().map(|t| t.1).sum();
+        let total_svc: u64 = trains.iter().map(|t| t.2).sum();
+        assert_eq!(fq.stats.arrivals, total_units, "every frame arrives");
+        assert_eq!(fq.stats.departures, total_units, "every frame departs");
+        assert_eq!(completions.len(), trains.len(), "every train completes");
+        let slack = trains.len() as u64 + 1;
+        assert!(
+            fq.stats.busy_ns >= total_svc.saturating_sub(slack)
+                && fq.stats.busy_ns <= total_svc + slack,
+            "work conservation: busy {} vs Σ svc {}",
+            fq.stats.busy_ns,
+            total_svc
+        );
+        for &(item, at) in &completions {
+            let (arrival, _, svc, _) = trains[item];
+            assert!(
+                at + 2 >= arrival + svc,
+                "train {item} finished at {at}, before its dedicated service \
+                 ({arrival} + {svc}) could"
+            );
+        }
+    });
+}
+
 #[test]
 fn prop_bulk_path_is_work_conserving() {
     // On arbitrary workloads the bulk path may shift individual message
@@ -278,7 +422,13 @@ fn prop_bulk_path_is_work_conserving() {
         assert_eq!(bulk.net_frames, frames.net_frames);
         assert_eq!(bulk.stored_total(), frames.stored_total());
         assert_eq!(bulk.tasks.len(), frames.tasks.len());
-        assert!(bulk.events <= frames.events);
+        // Weighted-fair completions re-announce on arrival, so a train
+        // arriving at a contended in-NIC can leave one stale event behind
+        // — at most one extra event per message (≤ net_frames covers it).
+        // On zero-data workloads (every message a single control frame)
+        // aggregation saves nothing, so allow that slack; any data frames
+        // at all put the bulk path far below the per-frame count.
+        assert!(bulk.events <= frames.events + bulk.net_frames);
 
         // Busy integrals are exact under aggregation (train service =
         // exact sum of per-frame services).
