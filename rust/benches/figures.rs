@@ -85,7 +85,18 @@ fn save(name: &str, title: &str, rows: &[Row], extra: Option<Json>) {
     write_results(&format!("{name}.json"), &j.render());
 }
 
+/// Campaign testbed: the detailed-with-aggregation tier (bulk trains +
+/// train-weighted SYN/mux calibration, ~10x fewer events per trial; see
+/// PERF.md §Fidelity tiers). Fig 4 stays on the per-frame detailed tier
+/// as the fidelity sentinel ([`testbed_sentinel`]).
 fn testbed() -> Testbed {
+    Testbed::new(Platform::paper_testbed()).aggregated().with_trials(8, 15)
+}
+
+/// The per-frame detailed reference tier, kept on one scenario (Fig 4,
+/// the headline pipeline figure) so any aggregated-tier drift against
+/// the reference stays visible in every figure regeneration.
+fn testbed_sentinel() -> Testbed {
     Testbed::new(Platform::paper_testbed()).with_trials(8, 15)
 }
 
@@ -115,9 +126,10 @@ fn fig1() {
     save("fig1", "Fig 1: Montage vs stripe width (testbed)", &rows, Some(Json::obj().set("best", best)));
 }
 
-/// Fig 4 — pipeline benchmark, medium workload, DSS vs WASS.
+/// Fig 4 — pipeline benchmark, medium workload, DSS vs WASS. Runs on the
+/// per-frame detailed tier (the fidelity sentinel).
 fn fig4() {
-    let tb = testbed();
+    let tb = testbed_sentinel();
     let rows = vec![
         measure(&tb, &pipeline(19, PatternScale::Medium, false), &Config::dss(19), "DSS"),
         measure(&tb, &pipeline(19, PatternScale::Medium, true), &Config::wass(19), "WASS"),
@@ -131,7 +143,7 @@ fn fig5() {
     // Fig 5b used "a faster machine with a larger RAMDisk" for the reduce
     // node: mirror the heterogeneity on the collocation target's host.
     let plat_hetero = Platform::paper_testbed().with_host_speed(1, 1.5);
-    let tb_hetero = Testbed::new(plat_hetero).with_trials(8, 15);
+    let tb_hetero = Testbed::new(plat_hetero).aggregated().with_trials(8, 15);
 
     let rows = vec![
         measure(&tb, &reduce(19, PatternScale::Medium, false), &Config::dss(19), "medium DSS"),
@@ -226,7 +238,7 @@ fn summary() {
 /// Fig 8 — BLAST scenario I: fixed 20-node cluster, partitioning sweep ×
 /// chunk size, log-scale runtime; optimum at 14 app / 5 storage @ 256 KB.
 fn fig8() {
-    let tb = Testbed::new(Platform::paper_testbed()).with_trials(4, 6);
+    let tb = Testbed::new(Platform::paper_testbed()).aggregated().with_trials(4, 6);
     let params = BlastParams::default();
     let mut rows = Vec::new();
     for chunk_kb in [256u64, 1024, 4096] {
@@ -250,7 +262,7 @@ fn fig8() {
 /// Fig 9 — BLAST scenario II: allocation sizes 11/17/20, cost (node-secs)
 /// and time per partitioning/chunk.
 fn fig9() {
-    let tb = Testbed::new(Platform::paper_testbed()).with_trials(4, 6);
+    let tb = Testbed::new(Platform::paper_testbed()).aggregated().with_trials(4, 6);
     let params = BlastParams::default();
     let mut rows = Vec::new();
     let mut cost_rows = Json::arr();
@@ -304,7 +316,7 @@ fn alloc_of(label: &str) -> f64 {
 /// Fig 10 — reduce on spinning disks: lower accuracy, but the DSS/WASS
 /// choice is still called correctly.
 fn fig10() {
-    let tb = Testbed::new(Platform::paper_testbed_hdd()).with_trials(6, 10);
+    let tb = Testbed::new(Platform::paper_testbed_hdd()).aggregated().with_trials(6, 10);
     let rows = vec![
         measure(&tb, &reduce(19, PatternScale::Medium, false), &Config::dss(19), "medium DSS (HDD)"),
         measure(&tb, &reduce(19, PatternScale::Medium, true), &Config::wass(19), "medium WASS (HDD)"),
@@ -329,7 +341,7 @@ fn fig10() {
 fn speedup() {
     let plat = Platform::paper_testbed();
     let predictor = Predictor::new(plat.clone());
-    let tb = Testbed::new(plat).with_trials(4, 6);
+    let tb = Testbed::new(plat).aggregated().with_trials(4, 6);
     println!("\n=== §3.3: predictor cost vs actual runs ===");
     let mut t = Table::new(&[
         "scenario",

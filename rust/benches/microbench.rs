@@ -12,16 +12,20 @@
 //!   sections (the ones that feed `results/BENCH_frame_path.json`).
 //! * `--check <baseline.json>` — after writing a fresh
 //!   `BENCH_frame_path.json`, enforce the absolute frame-path gates
-//!   (event reduction ≥ 5×, turnaround error ≤ 1%) and, when the
-//!   baseline is a real previous run (not the bootstrap marker), a ±10%
-//!   drift gate on the machine-independent metrics (simulated turnaround
-//!   and event counts — wallclock numbers are never gated). Exits
-//!   non-zero on violation; implies `--frame-path-only`.
+//!   (event reduction ≥ 5×, turnaround error ≤ 1%), the served-query
+//!   invariants (warm-hit latency ≪ cold simulation, dedup factor ≥
+//!   concurrent duplicate clients, surrogate answers always carry an
+//!   error estimate) and, when the baseline is a real previous run (not
+//!   the bootstrap marker), a ±10% drift gate on the machine-independent
+//!   metrics (simulated turnaround and event counts — wallclock numbers
+//!   are never gated). Exits non-zero on violation; implies
+//!   `--frame-path-only`.
 
 use wfpred::coordinator;
 use wfpred::model::{simulate, simulate_fid, Config, Fidelity, Platform};
 use wfpred::predict::Predictor;
 use wfpred::search::{SearchSpace, Searcher};
+use wfpred::service::{GridCoord, Service};
 use wfpred::sim::{Scheduler, SimState, Simulation};
 use wfpred::store::{Cluster, StorePlacement};
 use wfpred::testbed::Testbed;
@@ -52,6 +56,27 @@ fn check_frame_path(path: &str, baseline: &str, fresh: &str) -> i32 {
     let rel_err = json_number_in(fresh, "", "turnaround_rel_err").unwrap_or(1.0);
     if rel_err > 0.01 {
         failures.push(format!("turnaround_rel_err {rel_err:.4} > 0.01"));
+    }
+
+    // Served-query invariants (absolute; the service section always runs
+    // under --frame-path-only). A warm cache hit must be far cheaper than
+    // a cold simulation, single-flight must collapse concurrent duplicate
+    // clients onto one simulation (dedup factor ≥ client count), and
+    // surrogate answers must carry an error estimate.
+    let warm_speedup = json_number_in(fresh, "service", "warm_speedup_x").unwrap_or(0.0);
+    if warm_speedup < 10.0 {
+        failures.push(format!("service.warm_speedup_x {warm_speedup:.1} < 10"));
+    }
+    let ded_clients = json_number_in(fresh, "service", "dedup_clients").unwrap_or(f64::INFINITY);
+    let ded_factor = json_number_in(fresh, "service", "dedup_factor_x").unwrap_or(0.0);
+    if ded_factor < ded_clients {
+        failures.push(format!(
+            "service.dedup_factor_x {ded_factor:.1} < dedup_clients {ded_clients}"
+        ));
+    }
+    let sur_answers = json_number_in(fresh, "service", "surrogate_answers").unwrap_or(0.0);
+    if sur_answers > 0.0 && json_number_in(fresh, "service", "surrogate_max_est_err").is_none() {
+        failures.push("surrogate answers reported without an error estimate".into());
     }
 
     if baseline.is_empty() {
@@ -282,6 +307,84 @@ fn main() {
         camp_seq / camp_par
     );
 
+    // Prediction service: served-query throughput on the acceptance
+    // workload — cold (one full simulation), warm (sharded-LRU hit),
+    // dedup'd (concurrent duplicate clients through single-flight), and
+    // the gated surrogate fast-path. The absolute invariants here feed
+    // `--check` (see PERF.md §The prediction service).
+    println!("\n== prediction service: cold / warm / dedup / surrogate ==");
+    let svc_wl = blast(10, &fp_params);
+    let svc_cfg = Config::partitioned(10, 5, Bytes::mb(1));
+    let cold_s = {
+        let mut sum = wfpred::util::stats::Summary::new();
+        for _ in 0..3 {
+            let svc = Service::new(Predictor::new(Platform::paper_testbed()));
+            let t0 = std::time::Instant::now();
+            black_box(svc.evaluate(&svc_wl, &svc_cfg).turnaround);
+            sum.add(t0.elapsed().as_secs_f64());
+        }
+        sum.mean()
+    };
+    println!("service cold evaluate (fresh cache):          {cold_s:>12.6}s/query");
+    let warm_svc = Service::new(Predictor::new(Platform::paper_testbed()));
+    let _ = warm_svc.evaluate(&svc_wl, &svc_cfg);
+    let warm_iters = 200u32;
+    let t0 = std::time::Instant::now();
+    for _ in 0..warm_iters {
+        black_box(warm_svc.evaluate(&svc_wl, &svc_cfg).turnaround);
+    }
+    let warm_s = t0.elapsed().as_secs_f64() / warm_iters as f64;
+    println!(
+        "service warm hit:                             {warm_s:>12.9}s/query ({:.0}x vs cold)",
+        cold_s / warm_s
+    );
+    let dedup_clients = 8usize;
+    let queries_per_client = 4usize;
+    let dedup_svc = Service::new(Predictor::new(Platform::paper_testbed()));
+    let t0 = std::time::Instant::now();
+    coordinator::par_map_indexed(dedup_clients, dedup_clients, |_| {
+        for _ in 0..queries_per_client {
+            black_box(dedup_svc.evaluate(&svc_wl, &svc_cfg).turnaround);
+        }
+    });
+    let dedup_wall = t0.elapsed().as_secs_f64();
+    let dedup_sims = dedup_svc.stats().misses;
+    let dedup_factor = (dedup_clients * queries_per_client) as f64 / dedup_sims.max(1) as f64;
+    println!(
+        "    -> {dedup_clients} clients x {queries_per_client} duplicate queries: \
+         {dedup_sims} simulation(s), dedup factor {dedup_factor:.0}x"
+    );
+    let sur_svc = Service::new(Predictor::new(Platform::paper_testbed()));
+    let sur_family = 0xFA57_11E5u64;
+    let seed_apps = [1usize, 4, 7, 10, 13, 14];
+    for &n_app in &seed_apps {
+        let cfg = Config::partitioned(n_app, 15 - n_app, Bytes::kb(256));
+        let wl = blast(n_app, &fp_params);
+        let p = sur_svc.evaluate(&wl, &cfg);
+        sur_svc.note_sample(sur_family, GridCoord::of(&cfg), p.turnaround.as_secs_f64());
+    }
+    let mut sur_queries = 0u64;
+    let mut sur_answers = 0u64;
+    let mut sur_max_err = 0.0f64;
+    let t0 = std::time::Instant::now();
+    for n_app in 1..=14usize {
+        if seed_apps.contains(&n_app) {
+            continue;
+        }
+        sur_queries += 1;
+        let cfg = Config::partitioned(n_app, 15 - n_app, Bytes::kb(256));
+        if let Some(est) = sur_svc.interpolate(sur_family, GridCoord::of(&cfg), f64::MAX) {
+            sur_answers += 1;
+            sur_max_err = sur_max_err.max(est.est_err);
+            black_box(est.time_s);
+        }
+    }
+    let sur_s = t0.elapsed().as_secs_f64() / sur_queries.max(1) as f64;
+    println!(
+        "    -> surrogate answered {sur_answers}/{sur_queries} off-grid queries, \
+         max est_err {sur_max_err:.3}, {sur_s:.2e}s/query"
+    );
+
     let frame_path_json = Json::obj()
         .set("workload", "blast-10app-5sto-1MB-chunks-64KB-frames")
         .set(
@@ -322,6 +425,22 @@ fn main() {
                 .set("sequential_secs", camp_seq)
                 .set("parallel_secs", camp_par)
                 .set("speedup_x", camp_seq / camp_par),
+        )
+        .set(
+            "service",
+            Json::obj()
+                .set("cold_secs", cold_s)
+                .set("warm_secs", warm_s)
+                .set("warm_speedup_x", cold_s / warm_s)
+                .set("dedup_clients", dedup_clients)
+                .set("dedup_queries", dedup_clients * queries_per_client)
+                .set("dedup_sims", dedup_sims)
+                .set("dedup_factor_x", dedup_factor)
+                .set("dedup_wall_secs", dedup_wall)
+                .set("surrogate_queries", sur_queries)
+                .set("surrogate_answers", sur_answers)
+                .set("surrogate_max_est_err", sur_max_err)
+                .set("surrogate_secs_per_query", sur_s),
         )
         .set("scaling", scaling);
     let fresh = frame_path_json.render();

@@ -5,6 +5,8 @@
 //! wfpred predict  --pattern P [--scale S --wass ...]   one prediction (coarse model)
 //! wfpred run      --pattern P [--trials N ...]         "actual" testbed campaign
 //! wfpred search   [--allocations 11,17,20 ...]         configuration-space search
+//! wfpred batch    [--in FILE --store FILE ...]         serve query JSON in bulk
+//! wfpred serve    [--store FILE ...]                   line-protocol serving loop
 //! wfpred trace    --emit P --out FILE | --show FILE    workload trace tools
 //! ```
 
@@ -13,8 +15,11 @@ use crate::model::{Config, Placement, Platform};
 use crate::predict::Predictor;
 use crate::runtime::{ScorerRuntime, StageDesc};
 use crate::search::{SearchSpace, Searcher};
+use crate::service::{Answer, Query, Service};
 use crate::testbed::Testbed;
 use crate::util::flags::Flags;
+use crate::util::hash::Fnv64;
+use crate::util::jsonw::{self, Json, Scalar};
 use crate::util::table::Table;
 use crate::util::units::Bytes;
 use crate::workload::blast::{blast, BlastParams};
@@ -41,6 +46,8 @@ pub fn run(args: &[String]) -> i32 {
         "run" => cmd_run(rest),
         "compare" => cmd_compare(rest),
         "search" => cmd_search(rest),
+        "batch" => cmd_batch(rest),
+        "serve" => cmd_serve(rest),
         "trace" => cmd_trace(rest),
         "--help" | "help" => {
             println!("{USAGE}");
@@ -65,6 +72,8 @@ commands:
   run        measure a workload on the emulated testbed (mean ± std over trials)
   compare    actual vs predicted side by side, with energy estimates
   search     explore the provisioning/partitioning/configuration space (BLAST)
+  batch      answer newline-delimited prediction queries through the service layer
+  serve      read queries from stdin, stream one answer line per query
   trace      emit or inspect workload trace files
 
 run `wfpred <command> --help` for flags.";
@@ -94,6 +103,12 @@ fn build_workload(f: &Flags) -> Result<(Workload, Config), String> {
     let wass = f.get_bool("wass");
     let scale = scale_by_name(&f.get("scale"))?;
     let chunk = Bytes::kb(f.get_u64("chunk-kb"));
+    if f.get("pattern") == "blast" {
+        let n_app = f.get_u64("app-nodes") as usize;
+        if n_app == 0 || n_app >= n {
+            return Err(format!("--app-nodes {n_app} must be in [1, nodes-1] (nodes = {n})"));
+        }
+    }
     let wl = match f.get("pattern").as_str() {
         "pipeline" => pipeline(n, scale, wass),
         "reduce" => reduce(n, scale, wass),
@@ -242,6 +257,7 @@ fn cmd_search(args: &[String]) -> Result<(), String> {
         .flag("top-k", "12", "candidates refined with the DES predictor")
         .flag("platform", "paper", "paper|hdd|ssd|10g")
         .flag("artifact", "artifacts/predictor.hlo.txt", "AOT scorer (empty to disable)")
+        .flag("surrogate", "0", "surrogate error gate, e.g. 0.3 (0 = off: refine exactly)")
         .parse(args)?;
     let plat = platform_by_name(&f.get("platform"))?;
     let chunks: Vec<Bytes> = f.get_u64_list("chunks-kb").into_iter().map(Bytes::kb).collect();
@@ -251,7 +267,13 @@ fn cmd_search(args: &[String]) -> Result<(), String> {
     );
     let params = BlastParams { queries: f.get_u64("queries") as u32, ..Default::default() };
     let predictor = Predictor::new(plat);
+    let surrogate_gate = f.get_f64("surrogate");
     let rt = if f.get("artifact").is_empty() {
+        None
+    } else if surrogate_gate > 0.0 {
+        // The surrogate-gated search replaces the analytic prescreen as
+        // the pruner; don't pay for an artifact that won't be consulted.
+        eprintln!("note: --surrogate replaces the analytic prescreen; artifact not loaded");
         None
     } else {
         match ScorerRuntime::load(f.get("artifact")) {
@@ -266,6 +288,9 @@ fn cmd_search(args: &[String]) -> Result<(), String> {
     if let Some(rt) = rt.as_ref() {
         searcher = searcher.with_runtime(rt);
     }
+    if surrogate_gate > 0.0 {
+        searcher = searcher.with_surrogate(surrogate_gate);
+    }
     let stages = vec![StageDesc {
         tasks_per_app: true,
         tasks_fixed: 0.0,
@@ -277,8 +302,13 @@ fn cmd_search(args: &[String]) -> Result<(), String> {
     }];
     let report = searcher.search(&space, &stages, |cfg| blast(cfg.n_app, &params));
 
+    let pruned_by = if surrogate_gate > 0.0 {
+        "answered by the gated surrogate"
+    } else {
+        "pruned by the analytic prescreen"
+    };
     println!(
-        "searched {} configurations ({} pruned by the analytic prescreen) in {:.2}s\n",
+        "searched {} configurations ({} {pruned_by}) in {:.2}s\n",
         report.candidates.len(),
         report.pruned,
         report.wallclock_secs
@@ -295,6 +325,17 @@ fn cmd_search(args: &[String]) -> Result<(), String> {
     show("best performance:", report.best_time);
     show("lowest cost:", report.best_cost);
     show("most cost-efficient:", report.best_efficiency);
+    if surrogate_gate > 0.0 {
+        let n_sur = report
+            .candidates
+            .iter()
+            .filter(|c| c.refined.is_none() && c.surrogate.is_some())
+            .count();
+        println!(
+            "surrogate answered {n_sur} off-frontier candidates (est_err <= {surrogate_gate}); \
+             frontier refined exactly"
+        );
+    }
     println!("\npareto front (time vs cost):");
     let mut t = Table::new(&["config", "time (s)", "cost (node-s)"]);
     for &i in &report.pareto {
@@ -302,6 +343,172 @@ fn cmd_search(args: &[String]) -> Result<(), String> {
         t.row(&[c.config.label.clone(), format!("{:.1}", c.time_s()), format!("{:.0}", c.cost_node_s())]);
     }
     print!("{}", t.render());
+    Ok(())
+}
+
+/// One line of the batch/serve query protocol: a flat JSON object whose
+/// keys are the shared pattern flags (hyphenated), e.g.
+/// `{"pattern": "blast", "app-nodes": 14, "nodes": 19, "chunk-kb": 256}`.
+/// Values are rewritten as `--key=value` tokens and run through the same
+/// flag parser as `wfpred predict`, so the two surfaces cannot drift.
+fn parse_query(line: &str) -> Result<Flags, String> {
+    let kv = jsonw::parse_flat(line).map_err(|e| format!("bad query JSON: {e}"))?;
+    let mut argv = Vec::new();
+    for (k, v) in kv {
+        let val = match v {
+            Scalar::Str(s) => s,
+            Scalar::Num(x) if x == x.trunc() && x.abs() < 1e15 => (x as i64).to_string(),
+            Scalar::Num(x) => x.to_string(),
+            Scalar::Bool(b) => b.to_string(),
+            Scalar::Null => continue,
+            Scalar::NumArr(_) => return Err(format!("array value for {k:?} unsupported")),
+        };
+        argv.push(format!("--{k}={val}"));
+    }
+    pattern_flags(Flags::new("query")).parse(&argv)
+}
+
+/// Surrogate-family key of one query: everything that identifies the
+/// workload family *except* the grid coordinate axes (partitioning,
+/// allocation, chunk, replication), which vary inside a family.
+fn query_family(f: &Flags, plat: &Platform) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_str(&f.get("pattern"));
+    h.write_str(&f.get("scale"));
+    h.write_bool(f.get_bool("wass"));
+    h.write_u64(f.get_u64("queries"));
+    h.write_u64(f.get_u64("replicas"));
+    h.write_str(&plat.label);
+    h.finish()
+}
+
+fn query_to_service(line: &str, plat: &Platform) -> Result<Query, String> {
+    let qf = parse_query(line)?;
+    // Flag getters panic on type mismatches — fine for a developer's own
+    // command line, not for untrusted query input. Convert panics from
+    // malformed values (e.g. "queries": 2.5) into per-line errors so one
+    // bad query cannot kill a serving loop.
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let (workload, config) = build_workload(&qf)?;
+        Ok(Query { family: query_family(&qf, plat), workload, config })
+    }))
+    .unwrap_or_else(|e| {
+        let msg = e
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_else(|| "invalid query".into());
+        Err(format!("bad query: {msg}"))
+    })
+}
+
+fn answer_json(a: &Answer) -> Json {
+    match a {
+        Answer::Exact { fp, turnaround_s, cost_node_s, source } => Json::obj()
+            .set("fp", fp.to_string())
+            .set("kind", "exact")
+            .set("turnaround_s", *turnaround_s)
+            .set("cost_node_s", *cost_node_s)
+            .set("source", source.as_str()),
+        Answer::Surrogate { fp, turnaround_s, cost_node_s, est_err } => Json::obj()
+            .set("fp", fp.to_string())
+            .set("kind", "surrogate")
+            .set("turnaround_s", *turnaround_s)
+            .set("cost_node_s", *cost_node_s)
+            .set("est_err", *est_err),
+    }
+}
+
+fn service_flags(f: Flags) -> Flags {
+    f.flag("platform", "paper", "paper|hdd|ssd|10g")
+        .flag("store", "", "append-only JSONL prediction store (warm-starts across runs)")
+        .flag("surrogate", "0", "surrogate error gate, e.g. 0.3 (0 = off: always exact)")
+}
+
+fn open_service(f: &Flags, plat: &Platform) -> Result<Service, String> {
+    let service = Service::new(Predictor::new(plat.clone()));
+    if f.get("store").is_empty() {
+        Ok(service)
+    } else {
+        service.with_disk_store(f.get("store"))
+    }
+}
+
+fn cmd_batch(args: &[String]) -> Result<(), String> {
+    let f = service_flags(Flags::new("wfpred batch"))
+        .flag("in", "", "newline-delimited query JSON file (empty = read stdin)")
+        .flag("threads", "0", "worker threads (0 = all cores; answers stay in input order)")
+        .parse(args)?;
+    let plat = platform_by_name(&f.get("platform"))?;
+    let text = if f.get("in").is_empty() {
+        let mut s = String::new();
+        std::io::Read::read_to_string(&mut std::io::stdin(), &mut s).map_err(|e| e.to_string())?;
+        s
+    } else {
+        std::fs::read_to_string(f.get("in")).map_err(|e| e.to_string())?
+    };
+    let service = open_service(&f, &plat)?;
+    let mut queries = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        queries.push(query_to_service(line, &plat)?);
+    }
+    if queries.is_empty() {
+        return Err("no queries in input".into());
+    }
+    let answers = service.serve_batch(&queries, campaign_threads_flag(&f), f.get_f64("surrogate"));
+    for a in &answers {
+        println!("{}", answer_json(a).render_compact());
+    }
+    let s = service.stats();
+    eprintln!(
+        "[service] {} queries: {} simulated, {} memory hits, {} disk hits, {} deduped, \
+         {} surrogate",
+        queries.len(),
+        s.misses,
+        s.hits,
+        s.disk_hits,
+        s.dedup_waits,
+        s.surrogate_answers
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<(), String> {
+    let f = service_flags(Flags::new("wfpred serve")).parse(args)?;
+    let plat = platform_by_name(&f.get("platform"))?;
+    let service = open_service(&f, &plat)?;
+    let gate = f.get_f64("surrogate");
+    let stdin = std::io::stdin();
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = stdin.read_line(&mut line).map_err(|e| e.to_string())?;
+        if n == 0 {
+            break; // EOF
+        }
+        let l = line.trim();
+        if l.is_empty() {
+            continue;
+        }
+        if l == "quit" {
+            break;
+        }
+        let out = match query_to_service(l, &plat) {
+            Ok(q) => {
+                let answers = service.serve_batch(std::slice::from_ref(&q), 1, gate);
+                answer_json(&answers[0])
+            }
+            Err(e) => Json::obj().set("error", e),
+        };
+        println!("{}", out.render_compact());
+        // stdout is block-buffered on pipes; answers must stream.
+        use std::io::Write as _;
+        let _ = std::io::stdout().flush();
+    }
     Ok(())
 }
 
@@ -388,5 +595,59 @@ mod tests {
     #[test]
     fn predict_rejects_bad_pattern() {
         assert_eq!(run(&argv(&["predict", "--pattern", "nope"])), 2);
+    }
+
+    #[test]
+    fn batch_serves_query_file_and_warm_starts_from_store() {
+        let dir = std::env::temp_dir();
+        let qpath = dir.join(format!("wfpred_cli_batch_{}.jsonl", std::process::id()));
+        let spath = dir.join(format!("wfpred_cli_store_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&spath);
+        let queries = "\
+{\"pattern\": \"blast\", \"queries\": 20, \"app-nodes\": 4, \"nodes\": 8, \"chunk-kb\": 256}\n\
+{\"pattern\": \"blast\", \"queries\": 20, \"app-nodes\": 5, \"nodes\": 8, \"chunk-kb\": 256}\n\
+{\"pattern\": \"blast\", \"queries\": 20, \"app-nodes\": 4, \"nodes\": 8, \"chunk-kb\": 256}\n";
+        std::fs::write(&qpath, queries).unwrap();
+        let q = qpath.to_str().unwrap();
+        let s = spath.to_str().unwrap();
+        assert_eq!(run(&argv(&["batch", "--in", q, "--threads", "2", "--store", s])), 0);
+        // Second run warm-starts from the JSONL store (answers come from
+        // disk; exercised for exit status here, byte-level assertions live
+        // in tests/service_layer.rs).
+        assert_eq!(run(&argv(&["batch", "--in", q, "--store", s])), 0);
+        assert_eq!(std::fs::read_to_string(&spath).unwrap().lines().count(), 2);
+        let _ = std::fs::remove_file(&qpath);
+        let _ = std::fs::remove_file(&spath);
+    }
+
+    #[test]
+    fn batch_rejects_bad_queries() {
+        let dir = std::env::temp_dir();
+        let qpath = dir.join(format!("wfpred_cli_badq_{}.jsonl", std::process::id()));
+        std::fs::write(&qpath, "{\"pattern\": \"nope\"}\n").unwrap();
+        assert_eq!(run(&argv(&["batch", "--in", qpath.to_str().unwrap()])), 2);
+        std::fs::write(&qpath, "not json\n").unwrap();
+        assert_eq!(run(&argv(&["batch", "--in", qpath.to_str().unwrap()])), 2);
+        let _ = std::fs::remove_file(&qpath);
+    }
+
+    #[test]
+    fn search_with_surrogate_runs() {
+        assert_eq!(
+            run(&argv(&[
+                "search",
+                "--allocations",
+                "10",
+                "--chunks-kb",
+                "256",
+                "--queries",
+                "20",
+                "--artifact",
+                "",
+                "--surrogate",
+                "0.4",
+            ])),
+            0
+        );
     }
 }

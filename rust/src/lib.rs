@@ -30,8 +30,15 @@
 //! * [`predict`] — the user-facing predictor façade.
 //! * [`runtime`] — PJRT loader/executor for the AOT-compiled analytic
 //!   prescreen (`artifacts/predictor.hlo.txt`).
+//! * [`service`] — the prediction-serving subsystem every evaluation
+//!   flows through: canonical fingerprints, a sharded in-memory LRU of
+//!   predictions, an append-only on-disk store for cross-process warm
+//!   starts, single-flight deduplication of concurrent identical
+//!   requests, and a gated surrogate fast-path (grid interpolation with
+//!   per-answer error estimates).
 //! * [`search`] — configuration-space exploration: analytic prescreen →
-//!   discrete-event refinement → pareto front / scenario reports.
+//!   discrete-event refinement (through the service) → pareto front /
+//!   scenario reports.
 //! * [`coordinator`] — deterministic scoped-thread execution of
 //!   independent candidate simulations (the search layers fan out
 //!   through it; results stay byte-identical to sequential runs).
@@ -57,6 +64,7 @@ pub mod ident;
 pub mod predict;
 pub mod runtime;
 pub mod coordinator;
+pub mod service;
 pub mod search;
 pub mod cli;
 
@@ -65,6 +73,7 @@ pub mod prelude {
     pub use crate::model::config::{Config, Placement};
     pub use crate::model::platform::{Platform, DiskKind};
     pub use crate::predict::{Predictor, Prediction};
+    pub use crate::service::{Answer, Service};
     pub use crate::testbed::{Testbed, TrialStats};
     pub use crate::workload::{patterns, patterns::PatternScale, Workload};
     pub use crate::util::units::{Bytes, SimTime};

@@ -4,22 +4,31 @@
 //! nodes × chunk sizes × replication levels the grid explodes, and a
 //! local-search solver with the DES predictor as its objective gets
 //! within a few percent of the optimum at a fraction of the evaluations.
+//!
+//! Evaluation flows through a [`Service`] handle: chains share its
+//! memoization, so a point any chain has visited is never simulated
+//! twice, and concurrent chains hitting the same fresh point collapse
+//! onto one in-flight simulation (single-flight). With
+//! [`Annealer::exchange_every`] set, chains periodically exchange their
+//! best state (parallel-tempering-style broadcast) at a deterministic
+//! barrier — cheap now that the service cache absorbs the revisits an
+//! adopted state causes.
 
 use crate::coordinator;
 use crate::model::Config;
 use crate::predict::Predictor;
 use crate::search::SearchSpace;
+use crate::service::Service;
 use crate::util::rng::Rng;
 use crate::workload::Workload;
-use std::collections::HashMap;
 
 /// Result of an annealing run.
 #[derive(Clone, Debug)]
 pub struct AnnealResult {
     pub best: Config,
     pub best_time_s: f64,
-    /// Distinct DES evaluations performed (cache hits excluded; summed
-    /// across chains).
+    /// Distinct DES simulations issued through the service. Chains share
+    /// the cache, so a point visited by several chains counts once.
     pub evaluations: usize,
     /// (time_s per accepted step) — the winning chain's descent trace.
     pub trace: Vec<f64>,
@@ -35,20 +44,36 @@ pub struct Annealer {
     /// (each chain derives its RNG from `seed` + chain index, so any
     /// chain count is deterministic). 1 = the classic sequential run.
     pub chains: u32,
+    /// Steps between best-state exchanges across chains. 0 (default)
+    /// keeps chains fully independent — chain 0 then reproduces the
+    /// single-chain run bit-for-bit. When set, every chain whose current
+    /// state is worse than the global best-so-far adopts it at the
+    /// exchange barrier; the barrier operates on slot-ordered chain
+    /// states with ties broken to the lowest chain index, and each chain
+    /// keeps its own RNG stream and temperature, so the outcome is
+    /// deterministic at any thread count.
+    pub exchange_every: u32,
 }
 
 impl Default for Annealer {
     fn default() -> Self {
-        Annealer { steps: 60, t0: 0.3, cooling: 0.93, seed: 0xA11EA1, chains: 1 }
+        Annealer { steps: 60, t0: 0.3, cooling: 0.93, seed: 0xA11EA1, chains: 1, exchange_every: 0 }
     }
 }
 
-impl Annealer {
-    /// Key for the evaluation cache.
-    fn key(cfg: &Config) -> (usize, usize, u64, u32) {
-        (cfg.n_app, cfg.n_storage, cfg.chunk_size.as_u64(), cfg.replication)
-    }
+/// One chain's mutable state between segments.
+#[derive(Clone)]
+struct ChainState {
+    rng: Rng,
+    cur: Config,
+    cur_t: f64,
+    best: Config,
+    best_t: f64,
+    trace: Vec<f64>,
+    temp: f64,
+}
 
+impl Annealer {
     /// Random neighbor: perturb one axis within the space.
     fn neighbor(&self, rng: &mut Rng, space: &SearchSpace, cfg: &Config) -> Config {
         let total = cfg.n_hosts();
@@ -73,19 +98,38 @@ impl Annealer {
             }
         }
         let n_storage = (alloc - 1) - n_app;
-        let repl = repl.min(n_storage as u32).max(1);
+        // n_storage can be 0 when `min_storage == 0`; keep repl
+        // well-formed (clamp panics on an empty range) and let the
+        // caller's validate() reject the candidate.
+        let repl = repl.clamp(1, (n_storage as u32).max(1));
         Config::partitioned(n_app, n_storage, chunk).with_replication(repl)
     }
 
-    /// Minimize predicted turnaround over `space` for the workload family.
-    ///
-    /// Runs [`Annealer::chains`] independent chains in parallel (the DES
-    /// objective dominates the cost and every chain is self-contained) and
-    /// returns the best, breaking ties by chain index so the result is
-    /// deterministic regardless of thread scheduling.
+    /// Minimize predicted turnaround over `space` for the workload family
+    /// through a private cold service.
     pub fn minimize(
         &self,
         predictor: &Predictor,
+        space: &SearchSpace,
+        workload_for: impl Fn(&Config) -> Workload + Sync,
+    ) -> AnnealResult {
+        let service = Service::new(predictor.clone());
+        self.minimize_with(&service, space, workload_for)
+    }
+
+    /// Minimize through an external service handle — chains share its
+    /// cache with each other and with any other caller (a warm handle
+    /// from a previous search skips re-simulating visited points, which
+    /// only shows up in `evaluations`, never in the trajectory).
+    ///
+    /// Runs [`Annealer::chains`] independent chains in parallel (the DES
+    /// objective dominates the cost and every chain is self-contained
+    /// between exchange barriers) and returns the best, breaking ties by
+    /// chain index so the result is deterministic regardless of thread
+    /// scheduling.
+    pub fn minimize_with(
+        &self,
+        service: &Service,
         space: &SearchSpace,
         workload_for: impl Fn(&Config) -> Workload + Sync,
     ) -> AnnealResult {
@@ -94,77 +138,134 @@ impl Annealer {
         // Cap workers at the core count; slot-by-index results make the
         // outcome independent of how many threads actually run.
         let workers = coordinator::available_threads().min(chains);
-        let mut results = coordinator::par_map_indexed(chains, workers, |i| {
+        let misses0 = service.stats().misses;
+
+        let mut states = coordinator::par_map_indexed(chains, workers, |i| {
             // Chain 0 reproduces the single-chain run bit-for-bit.
             let seed = self.seed.wrapping_add(i as u64 * 0x9E37_79B9_7F4A_7C15);
-            self.minimize_chain(predictor, space, &workload_for, seed)
+            self.chain_init(service, space, &workload_for, seed)
         });
-        let total_evals: usize = results.iter().map(|r| r.evaluations).sum();
+
+        let mut done = 0u32;
+        while done < self.steps {
+            let segment = if self.exchange_every == 0 {
+                self.steps - done
+            } else {
+                self.exchange_every.min(self.steps - done)
+            };
+            let snapshot = states;
+            states = coordinator::par_map_indexed(chains, workers, |i| {
+                let mut st = snapshot[i].clone();
+                self.chain_run(service, space, &workload_for, &mut st, segment);
+                st
+            });
+            done += segment;
+            if self.exchange_every > 0 && done < self.steps {
+                Self::exchange(&mut states);
+            }
+        }
+
         let mut best_idx = 0;
-        for i in 1..results.len() {
+        for i in 1..states.len() {
             // Strict `<` keeps the lowest chain index on ties.
-            if results[i].best_time_s < results[best_idx].best_time_s {
+            if states[i].best_t < states[best_idx].best_t {
                 best_idx = i;
             }
         }
-        let mut best = results.swap_remove(best_idx);
-        best.evaluations = total_evals;
-        best
+        let winner = states.swap_remove(best_idx);
+        AnnealResult {
+            best: winner.best,
+            best_time_s: winner.best_t,
+            evaluations: (service.stats().misses - misses0) as usize,
+            trace: winner.trace,
+        }
     }
 
-    /// One annealing chain (sequential; the unit of parallelism).
-    fn minimize_chain(
+    fn eval(
+        service: &Service,
+        workload_for: &(impl Fn(&Config) -> Workload + Sync),
+        cfg: &Config,
+    ) -> f64 {
+        let wl = workload_for(cfg);
+        service.evaluate(&wl, cfg).turnaround.as_secs_f64()
+    }
+
+    /// Start a chain from the balanced middle point.
+    fn chain_init(
         &self,
-        predictor: &Predictor,
+        service: &Service,
         space: &SearchSpace,
         workload_for: &(impl Fn(&Config) -> Workload + Sync),
         seed: u64,
-    ) -> AnnealResult {
-        let mut rng = Rng::new(seed);
-        let mut cache: HashMap<(usize, usize, u64, u32), f64> = HashMap::new();
-        let mut evals = 0usize;
-        let mut eval = |cfg: &Config, evals: &mut usize| -> f64 {
-            let k = Self::key(cfg);
-            if let Some(&t) = cache.get(&k) {
-                return t;
-            }
-            let wl = workload_for(cfg);
-            let t = predictor.predict(&wl, cfg).turnaround.as_secs_f64();
-            cache.insert(k, t);
-            *evals += 1;
-            t
-        };
-
-        // Start from a balanced middle point.
+    ) -> ChainState {
+        let rng = Rng::new(seed);
         let alloc0 = space.allocations[space.allocations.len() / 2];
         let w0 = alloc0 - 1;
-        let mut cur = Config::partitioned(w0 / 2, w0 - w0 / 2, space.chunk_sizes[0]);
-        let mut cur_t = eval(&cur, &mut evals);
-        let mut best = cur.clone();
-        let mut best_t = cur_t;
-        let mut trace = vec![cur_t];
-        let mut temp = self.t0;
+        let cur = Config::partitioned(w0 / 2, w0 - w0 / 2, space.chunk_sizes[0]);
+        let cur_t = Self::eval(service, workload_for, &cur);
+        ChainState {
+            rng,
+            best: cur.clone(),
+            best_t: cur_t,
+            trace: vec![cur_t],
+            temp: self.t0,
+            cur,
+            cur_t,
+        }
+    }
 
-        for _ in 0..self.steps {
-            let cand = self.neighbor(&mut rng, space, &cur);
+    /// Advance one chain by `steps` annealing steps (the unit of
+    /// parallelism between exchange barriers).
+    fn chain_run(
+        &self,
+        service: &Service,
+        space: &SearchSpace,
+        workload_for: &(impl Fn(&Config) -> Workload + Sync),
+        st: &mut ChainState,
+        steps: u32,
+    ) {
+        for _ in 0..steps {
+            let cand = self.neighbor(&mut st.rng, space, &st.cur);
             if cand.validate().is_err() {
                 continue;
             }
-            let cand_t = eval(&cand, &mut evals);
-            let rel = (cand_t - cur_t) / cur_t;
-            if rel <= 0.0 || rng.next_f64() < (-rel / temp).exp() {
-                cur = cand;
-                cur_t = cand_t;
-                trace.push(cur_t);
-                if cur_t < best_t {
-                    best_t = cur_t;
-                    best = cur.clone();
+            let cand_t = Self::eval(service, workload_for, &cand);
+            let rel = (cand_t - st.cur_t) / st.cur_t;
+            if rel <= 0.0 || st.rng.next_f64() < (-rel / st.temp).exp() {
+                st.cur = cand;
+                st.cur_t = cand_t;
+                st.trace.push(st.cur_t);
+                if st.cur_t < st.best_t {
+                    st.best_t = st.cur_t;
+                    st.best = st.cur.clone();
                 }
             }
-            temp *= self.cooling;
+            st.temp *= self.cooling;
         }
+    }
 
-        AnnealResult { best, best_time_s: best_t, evaluations: evals, trace }
+    /// Exchange barrier: broadcast the global best-so-far state to every
+    /// chain whose *current* state is worse. Chains keep their own RNG
+    /// streams and temperatures; adoption is recorded in the trace.
+    fn exchange(states: &mut [ChainState]) {
+        let mut b = 0;
+        for i in 1..states.len() {
+            if states[i].best_t < states[b].best_t {
+                b = i;
+            }
+        }
+        let (best_cfg, best_t) = (states[b].best.clone(), states[b].best_t);
+        for st in states.iter_mut() {
+            if best_t < st.cur_t {
+                st.cur = best_cfg.clone();
+                st.cur_t = best_t;
+                st.trace.push(best_t);
+                if best_t < st.best_t {
+                    st.best = best_cfg.clone();
+                    st.best_t = best_t;
+                }
+            }
+        }
     }
 }
 
@@ -243,5 +344,52 @@ mod tests {
             .minimize(&predictor, &space, |cfg| blast(cfg.n_app, &params));
         assert_eq!(a.best_time_s, b.best_time_s);
         assert_eq!(a.evaluations, b.evaluations);
+    }
+
+    #[test]
+    fn chains_share_the_service_cache() {
+        let predictor = Predictor::new(Platform::paper_testbed());
+        let space = SearchSpace::fixed_cluster(10, vec![Bytes::kb(256), Bytes::mb(1)]);
+        let params = BlastParams { queries: 30, ..Default::default() };
+        let svc = Service::new(predictor.clone());
+        let r = Annealer { steps: 12, chains: 4, ..Default::default() }
+            .minimize_with(&svc, &space, |cfg| blast(cfg.n_app, &params));
+        let s = svc.stats();
+        assert_eq!(r.evaluations as u64, s.misses, "evaluations = simulations issued");
+        assert!(
+            s.hits > 0,
+            "chains revisit points; the shared cache must serve them ({s:?})"
+        );
+    }
+
+    #[test]
+    fn tempering_exchange_is_deterministic_and_near_optimal() {
+        let predictor = Predictor::new(Platform::paper_testbed());
+        let space = SearchSpace::fixed_cluster(10, vec![Bytes::kb(256), Bytes::mb(1)]);
+        let params = BlastParams { queries: 30, ..Default::default() };
+        let wl = |cfg: &Config| blast(cfg.n_app, &params);
+        let run = || {
+            Annealer { steps: 18, chains: 3, exchange_every: 6, ..Default::default() }
+                .minimize(&predictor, &space, wl)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.best_time_s, b.best_time_s, "exchange must stay deterministic");
+        assert_eq!(a.evaluations, b.evaluations);
+        // Exchange never loses the best-ever state, so on this small grid
+        // the tempered run should land on the exhaustive optimum's
+        // neighborhood.
+        let exhaustive_best = space
+            .enumerate()
+            .iter()
+            .map(|cfg| predictor.predict(&wl(cfg), cfg).turnaround.as_secs_f64())
+            .fold(f64::MAX, f64::min);
+        assert!(
+            a.best_time_s <= exhaustive_best * 1.05,
+            "tempered best {:.1}s vs exhaustive {exhaustive_best:.1}s",
+            a.best_time_s
+        );
+        // Adopted states appear in the winner's trace; it still descends.
+        assert!(a.trace.last().unwrap() <= a.trace.first().unwrap());
     }
 }

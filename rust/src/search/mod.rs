@@ -8,6 +8,13 @@
 //! answers to the paper's four user questions: best-performance
 //! configuration, lowest-cost allocation, best partitioning, and most
 //! cost-efficient point — plus the time/cost pareto front of Scenario II.
+//!
+//! All discrete-event refinement flows through a [`Service`] handle
+//! (memoized, deduplicated; see `crate::service`). Without an external
+//! handle the searcher uses a private cold one, so results are
+//! byte-identical to direct prediction; with [`Searcher::with_surrogate`]
+//! the interior of the grid can instead be answered by gated
+//! interpolation, paying full simulation only near the frontier.
 
 pub mod anneal;
 
@@ -15,8 +22,11 @@ use crate::coordinator;
 use crate::model::Config;
 use crate::predict::{Prediction, Predictor};
 use crate::runtime::{encode_config, encode_platform, Score, ScorerRuntime, StageDesc};
+use crate::service::{Estimate, GridCoord, Service};
 use crate::util::units::Bytes;
 use crate::workload::Workload;
+use std::collections::HashMap;
+use std::sync::Arc;
 
 /// The decision space (paper §1 "The Problem"): provisioning ×
 /// partitioning × configuration.
@@ -72,17 +82,25 @@ pub struct Candidate {
     pub config: Config,
     /// Analytic prescreen score (None when no artifact is available).
     pub prescreen: Option<Score>,
-    /// Discrete-event refinement (None if pruned).
-    pub refined: Option<Prediction>,
+    /// Discrete-event refinement (None if pruned). Shared with the
+    /// service's cache — an `Arc`, so a big sweep holds one copy of each
+    /// `SimReport`, not two.
+    pub refined: Option<Arc<Prediction>>,
+    /// Surrogate interpolation, when the candidate was answered by the
+    /// service's gated fast-path instead of a full simulation. Always
+    /// carries its error estimate; None whenever the gate is off.
+    pub surrogate: Option<Estimate>,
 }
 
 impl Candidate {
-    /// Best available time estimate (refined preferred).
+    /// Best available time estimate (refined preferred, then surrogate,
+    /// then prescreen).
     pub fn time_s(&self) -> f64 {
         self.refined
             .as_ref()
             .map(|p| p.turnaround.as_secs_f64())
-            .or(self.prescreen.map(|s| s.time_s as f64))
+            .or_else(|| self.surrogate.map(|e| e.time_s))
+            .or_else(|| self.prescreen.map(|s| s.time_s as f64))
             .unwrap_or(f64::INFINITY)
     }
 
@@ -90,7 +108,8 @@ impl Candidate {
         self.refined
             .as_ref()
             .map(|p| p.cost_node_secs)
-            .or(self.prescreen.map(|s| s.cost_node_s as f64))
+            .or_else(|| self.surrogate.map(|e| e.time_s * self.config.n_hosts() as f64))
+            .or_else(|| self.prescreen.map(|s| s.cost_node_s as f64))
             .unwrap_or(f64::INFINITY)
     }
 }
@@ -123,6 +142,18 @@ pub struct Searcher<'a> {
     /// independent `World`s; results are returned in enumeration order,
     /// byte-identical to the `threads == 1` sequential path).
     pub threads: usize,
+    /// External service handle. When None, a private cold service is
+    /// created per search — all evaluation traffic still flows through a
+    /// `Service`, and a cold cache reproduces direct prediction
+    /// byte-for-byte. Supplying a handle shares its cache (a warm handle
+    /// makes a rescore free) and its single-flight table.
+    service: Option<&'a Service>,
+    /// Surrogate error gate: when set, grid-interior candidates whose
+    /// interpolation error fits the bound are answered by the service's
+    /// surrogate instead of a full simulation (the frontier is always
+    /// simulated exactly). None — the default — refines exactly, and the
+    /// surrogate is never consulted.
+    surrogate: Option<f64>,
 }
 
 impl<'a> Searcher<'a> {
@@ -132,6 +163,8 @@ impl<'a> Searcher<'a> {
             runtime: None,
             refine_top_k: 12,
             threads: coordinator::available_threads(),
+            service: None,
+            surrogate: None,
         }
     }
 
@@ -151,6 +184,20 @@ impl<'a> Searcher<'a> {
         self
     }
 
+    /// Evaluate through `service` (shared memoization across searches and
+    /// with other callers) instead of a private cold service.
+    pub fn with_service(mut self, service: &'a Service) -> Searcher<'a> {
+        self.service = Some(service);
+        self
+    }
+
+    /// Enable the surrogate fast-path with relative error gate `max_err`.
+    pub fn with_surrogate(mut self, max_err: f64) -> Searcher<'a> {
+        assert!(max_err > 0.0, "surrogate gate must be positive");
+        self.surrogate = Some(max_err);
+        self
+    }
+
     /// Explore `space` for a workload family: `workload_for(config)`
     /// builds the concrete workload for a candidate (e.g. BLAST's task
     /// count follows the app-node count). `stage_descs` describes the
@@ -162,6 +209,20 @@ impl<'a> Searcher<'a> {
         workload_for: impl Fn(&Config) -> Workload + Sync,
     ) -> SearchReport {
         let t0 = std::time::Instant::now();
+        // All evaluation traffic flows through a service: the caller's
+        // handle when given, a private cold one otherwise (which makes
+        // this path byte-identical to direct prediction).
+        let owned_service;
+        let service = match self.service {
+            Some(s) => s,
+            None => {
+                owned_service = Service::new(self.predictor.clone());
+                &owned_service
+            }
+        };
+        if let Some(bound) = self.surrogate {
+            return self.search_surrogate(space, bound, service, &workload_for, t0);
+        }
         let configs = space.enumerate();
         assert!(!configs.is_empty(), "empty search space");
 
@@ -204,12 +265,11 @@ impl<'a> Searcher<'a> {
         // so the sweep fans out across scoped threads; results come back
         // in enumeration order, making the report byte-identical to the
         // sequential path.
-        let predictor = self.predictor;
-        let refined: Vec<Option<Prediction>> =
+        let refined: Vec<Option<Arc<Prediction>>> =
             coordinator::par_map_indexed(configs.len(), self.threads, |i| {
                 if refine[i] {
                     let wl = workload_for(&configs[i]);
-                    Some(predictor.predict(&wl, &configs[i]))
+                    Some(service.evaluate(&wl, &configs[i]))
                 } else {
                     None
                 }
@@ -220,47 +280,198 @@ impl<'a> Searcher<'a> {
             if refined.is_none() {
                 pruned += 1;
             }
-            candidates.push(Candidate { config: cfg, prescreen: prescreen[i], refined });
-        }
-
-        // --- answers ---
-        let refined_idx: Vec<usize> =
-            (0..candidates.len()).filter(|&i| candidates[i].refined.is_some()).collect();
-        let best_by = |f: &dyn Fn(&Candidate) -> f64| {
-            *refined_idx
-                .iter()
-                .min_by(|&&a, &&b| f(&candidates[a]).partial_cmp(&f(&candidates[b])).unwrap())
-                .unwrap()
-        };
-        let best_time = best_by(&|c| c.time_s());
-        let best_cost = best_by(&|c| c.cost_node_s());
-        let best_efficiency = best_by(&|c| c.time_s() * c.cost_node_s());
-
-        // Pareto front over refined candidates.
-        let mut front: Vec<usize> = Vec::new();
-        for &i in &refined_idx {
-            let (t, c) = (candidates[i].time_s(), candidates[i].cost_node_s());
-            let dominated = refined_idx.iter().any(|&j| {
-                j != i
-                    && candidates[j].time_s() <= t
-                    && candidates[j].cost_node_s() <= c
-                    && (candidates[j].time_s() < t || candidates[j].cost_node_s() < c)
+            candidates.push(Candidate {
+                config: cfg,
+                prescreen: prescreen[i],
+                refined,
+                surrogate: None,
             });
-            if !dominated {
-                front.push(i);
+        }
+        assemble_report(candidates, pruned, t0)
+    }
+
+    /// The surrogate-gated search: exact seed evaluations pin each
+    /// (allocation, chunk, replication) line of the grid, the interior is
+    /// answered by gated interpolation, estimates outside the gate fall
+    /// back to full simulation, and the apparent frontier (top-K by time
+    /// and by cost) is always re-evaluated exactly. Every stage is a
+    /// slot-ordered parallel map, so the report is deterministic at any
+    /// thread count.
+    fn search_surrogate(
+        &self,
+        space: &SearchSpace,
+        bound: f64,
+        service: &Service,
+        workload_for: &(impl Fn(&Config) -> Workload + Sync),
+        t0: std::time::Instant,
+    ) -> SearchReport {
+        const SEED_STRIDE: usize = 3;
+        let configs = space.enumerate();
+        assert!(!configs.is_empty(), "empty search space");
+        // Surrogate-grid namespace for this search's workload family:
+        // the canonical fingerprint of the first evaluation point, so two
+        // searches sharing a warm service mix their grids only when
+        // workload *content* (not just its name) and space agree —
+        // parameters a workload name omits still separate families.
+        let family = {
+            let wl0 = workload_for(&configs[0]);
+            service.fingerprint(&wl0, &configs[0]).hi
+        };
+
+        // Seed pass: every SEED_STRIDE-th n_app (plus the last) of each
+        // (allocation, chunk, replication) line is evaluated exactly.
+        let mut lines: HashMap<(usize, u64, u32), Vec<usize>> = HashMap::new();
+        for (i, cfg) in configs.iter().enumerate() {
+            lines
+                .entry((cfg.n_hosts(), cfg.chunk_size.as_u64(), cfg.replication))
+                .or_default()
+                .push(i);
+        }
+        let mut is_seed = vec![false; configs.len()];
+        for idx in lines.values_mut() {
+            idx.sort_by_key(|&i| configs[i].n_app);
+            for (k, &i) in idx.iter().enumerate() {
+                if k % SEED_STRIDE == 0 || k == idx.len() - 1 {
+                    is_seed[i] = true;
+                }
             }
         }
-        front.sort_by(|&a, &b| candidates[a].time_s().partial_cmp(&candidates[b].time_s()).unwrap());
-
-        SearchReport {
-            candidates,
-            best_time,
-            best_cost,
-            best_efficiency,
-            pareto: front,
-            pruned,
-            wallclock_secs: t0.elapsed().as_secs_f64(),
+        let eval = |i: usize| -> Arc<Prediction> {
+            let wl = workload_for(&configs[i]);
+            service.evaluate(&wl, &configs[i])
+        };
+        let mut refined: Vec<Option<Arc<Prediction>>> =
+            coordinator::par_map_indexed(configs.len(), self.threads, |i| {
+                if is_seed[i] {
+                    Some(eval(i))
+                } else {
+                    None
+                }
+            });
+        for (i, p) in refined.iter().enumerate() {
+            if let Some(p) = p {
+                service.note_sample(family, GridCoord::of(&configs[i]), p.turnaround.as_secs_f64());
+            }
         }
+
+        // Interior pass: interpolate; estimates outside the gate pay a
+        // full simulation immediately.
+        let mut surrogate: Vec<Option<Estimate>> = vec![None; configs.len()];
+        let need_exact: Vec<usize> = (0..configs.len())
+            .filter(|&i| refined[i].is_none())
+            .filter(|&i| match service.interpolate(family, GridCoord::of(&configs[i]), bound) {
+                Some(est) => {
+                    surrogate[i] = Some(est);
+                    false
+                }
+                None => true,
+            })
+            .collect();
+        let extra: Vec<Arc<Prediction>> =
+            coordinator::par_map_indexed(need_exact.len(), self.threads, |k| eval(need_exact[k]));
+        for (&i, p) in need_exact.iter().zip(extra) {
+            service.note_sample(family, GridCoord::of(&configs[i]), p.turnaround.as_secs_f64());
+            refined[i] = Some(p);
+        }
+
+        // Frontier pass: the top-K by estimated time and by estimated
+        // cost must be exact — only the flat interior stays surrogate.
+        {
+            let time_est = |i: usize| {
+                refined[i]
+                    .as_ref()
+                    .map(|p| p.turnaround.as_secs_f64())
+                    .or_else(|| surrogate[i].map(|e| e.time_s))
+                    .unwrap_or(f64::INFINITY)
+            };
+            let cost_est = |i: usize| time_est(i) * configs[i].n_hosts() as f64;
+            let k = self.refine_top_k.min(configs.len());
+            let mut by_time: Vec<usize> = (0..configs.len()).collect();
+            let mut by_cost = by_time.clone();
+            by_time.sort_by(|&a, &b| time_est(a).partial_cmp(&time_est(b)).unwrap());
+            by_cost.sort_by(|&a, &b| cost_est(a).partial_cmp(&cost_est(b)).unwrap());
+            let mut frontier: Vec<usize> = by_time
+                .iter()
+                .take(k)
+                .chain(by_cost.iter().take(k))
+                .copied()
+                .filter(|&i| refined[i].is_none())
+                .collect();
+            frontier.sort_unstable();
+            frontier.dedup();
+            let exact: Vec<Arc<Prediction>> =
+                coordinator::par_map_indexed(frontier.len(), self.threads, |k2| eval(frontier[k2]));
+            for (&i, p) in frontier.iter().zip(exact) {
+                service.note_sample(family, GridCoord::of(&configs[i]), p.turnaround.as_secs_f64());
+                refined[i] = Some(p);
+                // The exact answer supersedes the interpolation; keep the
+                // invariant that `surrogate` is set only on candidates the
+                // fast-path actually answered.
+                surrogate[i] = None;
+            }
+        }
+
+        let mut candidates: Vec<Candidate> = Vec::with_capacity(configs.len());
+        let mut pruned = 0;
+        for (i, (cfg, refined)) in configs.into_iter().zip(refined).enumerate() {
+            if refined.is_none() {
+                pruned += 1;
+            }
+            candidates.push(Candidate {
+                config: cfg,
+                prescreen: None,
+                refined,
+                surrogate: surrogate[i],
+            });
+        }
+        assemble_report(candidates, pruned, t0)
+    }
+}
+
+/// Rank the answered candidates and assemble the report (shared by the
+/// exact and surrogate search paths). Best-of answers and the pareto
+/// front are computed over exactly-refined candidates only.
+fn assemble_report(
+    candidates: Vec<Candidate>,
+    pruned: usize,
+    t0: std::time::Instant,
+) -> SearchReport {
+    let refined_idx: Vec<usize> =
+        (0..candidates.len()).filter(|&i| candidates[i].refined.is_some()).collect();
+    let best_by = |f: &dyn Fn(&Candidate) -> f64| {
+        *refined_idx
+            .iter()
+            .min_by(|&&a, &&b| f(&candidates[a]).partial_cmp(&f(&candidates[b])).unwrap())
+            .unwrap()
+    };
+    let best_time = best_by(&|c| c.time_s());
+    let best_cost = best_by(&|c| c.cost_node_s());
+    let best_efficiency = best_by(&|c| c.time_s() * c.cost_node_s());
+
+    // Pareto front over refined candidates.
+    let mut front: Vec<usize> = Vec::new();
+    for &i in &refined_idx {
+        let (t, c) = (candidates[i].time_s(), candidates[i].cost_node_s());
+        let dominated = refined_idx.iter().any(|&j| {
+            j != i
+                && candidates[j].time_s() <= t
+                && candidates[j].cost_node_s() <= c
+                && (candidates[j].time_s() < t || candidates[j].cost_node_s() < c)
+        });
+        if !dominated {
+            front.push(i);
+        }
+    }
+    front.sort_by(|&a, &b| candidates[a].time_s().partial_cmp(&candidates[b].time_s()).unwrap());
+
+    SearchReport {
+        candidates,
+        best_time,
+        best_cost,
+        best_efficiency,
+        pareto: front,
+        pruned,
+        wallclock_secs: t0.elapsed().as_secs_f64(),
     }
 }
 
@@ -354,6 +565,102 @@ mod tests {
                 }
                 (None, None) => {}
                 _ => panic!("refinement sets differ between thread counts"),
+            }
+        }
+    }
+
+    #[test]
+    fn cold_service_matches_direct_search() {
+        let predictor = Predictor::new(Platform::paper_testbed());
+        let space = SearchSpace::fixed_cluster(10, vec![Bytes::kb(256), Bytes::mb(1)]);
+        let params = BlastParams { queries: 20, ..Default::default() };
+        let direct = Searcher::new(&predictor)
+            .with_threads(2)
+            .search(&space, &[], |cfg| blast(cfg.n_app, &params));
+        let svc = Service::new(predictor.clone());
+        let via = Searcher::new(&predictor)
+            .with_service(&svc)
+            .with_threads(2)
+            .search(&space, &[], |cfg| blast(cfg.n_app, &params));
+        assert_eq!(direct.best_time, via.best_time);
+        assert_eq!(direct.best_cost, via.best_cost);
+        assert_eq!(direct.pareto, via.pareto);
+        for (a, b) in direct.candidates.iter().zip(&via.candidates) {
+            let (x, y) = (a.refined.as_ref().unwrap(), b.refined.as_ref().unwrap());
+            assert_eq!(x.turnaround, y.turnaround, "{}", a.config.label);
+            assert_eq!(x.report.events, y.report.events);
+            assert!(b.surrogate.is_none(), "gate off must never answer by surrogate");
+        }
+        assert_eq!(svc.stats().misses as usize, via.candidates.len());
+    }
+
+    #[test]
+    fn surrogate_prunes_interior_and_keeps_frontier_exact() {
+        let predictor = Predictor::new(Platform::paper_testbed());
+        let space = SearchSpace::fixed_cluster(16, vec![Bytes::kb(256), Bytes::mb(1)]);
+        let params = BlastParams { queries: 40, ..Default::default() };
+        let exhaustive = Searcher::new(&predictor)
+            .with_top_k(usize::MAX)
+            .search(&space, &[], |cfg| blast(cfg.n_app, &params));
+        let best_exact = exhaustive.candidates[exhaustive.best_time].time_s();
+
+        let svc = Service::new(predictor.clone());
+        let report = Searcher::new(&predictor)
+            .with_service(&svc)
+            .with_top_k(8)
+            .with_surrogate(0.5)
+            .search(&space, &[], |cfg| blast(cfg.n_app, &params));
+        assert_eq!(report.candidates.len(), exhaustive.candidates.len());
+        // Every candidate is answered one way or the other; surrogate
+        // answers always carry an error estimate within the gate.
+        for c in &report.candidates {
+            assert!(c.refined.is_some() || c.surrogate.is_some(), "{}", c.config.label);
+            if let (None, Some(e)) = (&c.refined, &c.surrogate) {
+                assert!(e.est_err >= 0.0 && e.est_err <= 0.5, "{}", e.est_err);
+            }
+        }
+        assert!(report.pruned > 0, "the flat interior should be answered by the surrogate");
+        assert!(
+            (svc.stats().misses as usize) < report.candidates.len(),
+            "surrogate must save simulations"
+        );
+        // The frontier answers are exact and near the exhaustive optimum.
+        for i in [report.best_time, report.best_cost, report.best_efficiency] {
+            assert!(report.candidates[i].refined.is_some(), "frontier must be exact");
+        }
+        let best = report.candidates[report.best_time].time_s();
+        assert!(
+            best <= best_exact * 1.05,
+            "surrogate search lost the optimum: {best:.1}s vs {best_exact:.1}s"
+        );
+    }
+
+    #[test]
+    fn surrogate_search_is_deterministic_across_thread_counts() {
+        let predictor = Predictor::new(Platform::paper_testbed());
+        let space = SearchSpace::fixed_cluster(12, vec![Bytes::kb(256)]);
+        let params = BlastParams { queries: 20, ..Default::default() };
+        let run = |threads: usize| {
+            let svc = Service::new(predictor.clone());
+            Searcher::new(&predictor)
+                .with_service(&svc)
+                .with_threads(threads)
+                .with_surrogate(0.4)
+                .search(&space, &[], |cfg| blast(cfg.n_app, &params))
+        };
+        let a = run(1);
+        let b = run(4);
+        assert_eq!(a.best_time, b.best_time);
+        assert_eq!(a.pruned, b.pruned);
+        for (x, y) in a.candidates.iter().zip(&b.candidates) {
+            assert_eq!(x.refined.is_some(), y.refined.is_some(), "{}", x.config.label);
+            match (&x.refined, &y.refined) {
+                (Some(p), Some(q)) => assert_eq!(p.turnaround, q.turnaround),
+                _ => {
+                    let (e, f) = (x.surrogate.unwrap(), y.surrogate.unwrap());
+                    assert_eq!(e.time_s.to_bits(), f.time_s.to_bits());
+                    assert_eq!(e.est_err.to_bits(), f.est_err.to_bits());
+                }
             }
         }
     }

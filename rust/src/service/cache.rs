@@ -1,0 +1,141 @@
+//! Sharded in-memory LRU cache of full [`Prediction`]s.
+//!
+//! Shards bound lock contention when many serving threads hit the cache
+//! concurrently (the fingerprint's mixed high word picks the shard, so
+//! shard load is uniform). Within a shard, recency is a monotonic tick
+//! per access and eviction scans for the minimum — O(shard size), which
+//! at the default capacity (a few hundred entries per shard) is far
+//! cheaper than the simulations the cache is saving, and avoids an
+//! intrusive-list implementation the crate would have to maintain.
+
+use super::fingerprint::Fingerprint;
+use crate::predict::Prediction;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+pub const DEFAULT_SHARDS: usize = 16;
+
+struct Entry {
+    value: Arc<Prediction>,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct Shard {
+    map: HashMap<Fingerprint, Entry>,
+    tick: u64,
+}
+
+/// The sharded LRU.
+pub struct ShardedLru {
+    shards: Vec<Mutex<Shard>>,
+    per_shard_capacity: usize,
+}
+
+impl ShardedLru {
+    /// `capacity` is the total entry budget, split evenly across
+    /// [`DEFAULT_SHARDS`] shards.
+    pub fn new(capacity: usize) -> ShardedLru {
+        ShardedLru::with_shards(capacity, DEFAULT_SHARDS)
+    }
+
+    pub fn with_shards(capacity: usize, shards: usize) -> ShardedLru {
+        let shards = shards.max(1);
+        ShardedLru {
+            per_shard_capacity: capacity.div_ceil(shards).max(1),
+            shards: (0..shards).map(|_| Mutex::new(Shard::default())).collect(),
+        }
+    }
+
+    fn shard(&self, fp: &Fingerprint) -> &Mutex<Shard> {
+        &self.shards[fp.shard(self.shards.len())]
+    }
+
+    pub fn get(&self, fp: &Fingerprint) -> Option<Arc<Prediction>> {
+        let mut s = self.shard(fp).lock().unwrap();
+        s.tick += 1;
+        let tick = s.tick;
+        let e = s.map.get_mut(fp)?;
+        e.last_used = tick;
+        Some(e.value.clone())
+    }
+
+    pub fn insert(&self, fp: Fingerprint, value: Arc<Prediction>) {
+        let mut s = self.shard(&fp).lock().unwrap();
+        s.tick += 1;
+        let tick = s.tick;
+        if !s.map.contains_key(&fp) && s.map.len() >= self.per_shard_capacity {
+            let victim = s.map.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| *k);
+            if let Some(victim) = victim {
+                s.map.remove(&victim);
+            }
+        }
+        s.map.insert(fp, Entry { value, last_used: tick });
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Config, Platform};
+    use crate::predict::Predictor;
+    use crate::util::units::Bytes;
+    use crate::workload::{FileSpec, TaskSpec, Workload};
+
+    fn pred() -> Arc<Prediction> {
+        let mut w = Workload::new("c");
+        let a = w.add_file(FileSpec::new("in", Bytes::mb(1)).prestaged());
+        let b = w.add_file(FileSpec::new("out", Bytes::mb(1)));
+        w.add_task(TaskSpec::new("t", 0).reads(a).writes(b));
+        Arc::new(Predictor::new(Platform::paper_testbed()).predict(&w, &Config::dss(3)))
+    }
+
+    fn fp(i: u64) -> Fingerprint {
+        Fingerprint { hi: i, lo: !i }
+    }
+
+    #[test]
+    fn get_after_insert() {
+        let c = ShardedLru::new(8);
+        assert!(c.is_empty());
+        assert!(c.get(&fp(1)).is_none());
+        let p = pred();
+        c.insert(fp(1), p.clone());
+        assert_eq!(c.len(), 1);
+        let got = c.get(&fp(1)).unwrap();
+        assert_eq!(got.turnaround, p.turnaround);
+    }
+
+    #[test]
+    fn evicts_least_recently_used_within_a_shard() {
+        // One shard so every key contends for the same capacity.
+        let c = ShardedLru::with_shards(2, 1);
+        let p = pred();
+        c.insert(fp(1), p.clone());
+        c.insert(fp(2), p.clone());
+        assert!(c.get(&fp(1)).is_some(), "touch 1 so 2 becomes the LRU victim");
+        c.insert(fp(3), p.clone());
+        assert_eq!(c.len(), 2);
+        assert!(c.get(&fp(1)).is_some());
+        assert!(c.get(&fp(2)).is_none(), "2 was least recently used");
+        assert!(c.get(&fp(3)).is_some());
+    }
+
+    #[test]
+    fn reinsert_does_not_evict() {
+        let c = ShardedLru::with_shards(2, 1);
+        let p = pred();
+        c.insert(fp(1), p.clone());
+        c.insert(fp(2), p.clone());
+        c.insert(fp(2), p.clone());
+        assert_eq!(c.len(), 2, "overwriting an existing key must not evict a neighbor");
+    }
+}

@@ -1,0 +1,348 @@
+//! Canonical fingerprints for `(Workload, Config, Platform, Fidelity)`
+//! evaluation points.
+//!
+//! The fingerprint is the cache key of the whole serving layer, so it has
+//! to be (a) **stable across runs and processes** — it keys the on-disk
+//! store — and (b) **canonical over workload structure**: two workload
+//! descriptions that differ only in the order their files and tasks were
+//! appended (a trace emitted by a different front-end, say) are the same
+//! evaluation point. Files and tasks are therefore hashed individually —
+//! task read/write lists reference per-file hashes, never positional
+//! `FileId`s — and combined with an order-invariant wrapping sum (each
+//! item hash diffused through [`mix64`] first so structured values do not
+//! cancel). Everything else — every `Config` knob, every `Platform`
+//! service time, every `Fidelity` switch — feeds the hash directly: any
+//! single knob change must produce a distinct fingerprint
+//! (property-tested in `tests/proptests.rs`).
+//!
+//! 128 bits (two independently-seeded FNV-1a streams over the same byte
+//! sequence) keeps the accidental-collision probability negligible at
+//! millions of stored predictions.
+
+use crate::model::{Config, DiskKind, Fidelity, Placement, Platform};
+use crate::util::hash::{mix64, Fnv64};
+use crate::workload::{FileSpec, TaskSpec, Workload};
+use std::fmt;
+
+/// 128-bit canonical fingerprint of one evaluation point.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Fingerprint {
+    pub hi: u64,
+    pub lo: u64,
+}
+
+impl Fingerprint {
+    /// Shard index for an `n`-way sharded structure.
+    pub fn shard(&self, n: usize) -> usize {
+        (mix64(self.hi) % n.max(1) as u64) as usize
+    }
+
+    /// Parse the 32-hex-digit form produced by `Display`.
+    pub fn parse(s: &str) -> Option<Fingerprint> {
+        if s.len() != 32 || !s.is_ascii() {
+            return None;
+        }
+        let hi = u64::from_str_radix(&s[..16], 16).ok()?;
+        let lo = u64::from_str_radix(&s[16..], 16).ok()?;
+        Some(Fingerprint { hi, lo })
+    }
+}
+
+impl fmt::Display for Fingerprint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:016x}{:016x}", self.hi, self.lo)
+    }
+}
+
+impl fmt::Debug for Fingerprint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Fingerprint({self})")
+    }
+}
+
+/// Two independently-seeded FNV-1a streams fed the same byte sequence.
+struct H2 {
+    a: Fnv64,
+    b: Fnv64,
+}
+
+impl H2 {
+    fn new() -> H2 {
+        H2 { a: Fnv64::with_seed(0x5EED_0001), b: Fnv64::with_seed(0x5EED_0002) }
+    }
+
+    fn u32(&mut self, x: u32) {
+        self.a.write_u32(x);
+        self.b.write_u32(x);
+    }
+
+    fn u64(&mut self, x: u64) {
+        self.a.write_u64(x);
+        self.b.write_u64(x);
+    }
+
+    fn usize(&mut self, x: usize) {
+        self.u64(x as u64);
+    }
+
+    fn f64(&mut self, x: f64) {
+        self.u64(x.to_bits());
+    }
+
+    fn bool(&mut self, x: bool) {
+        self.a.write_bool(x);
+        self.b.write_bool(x);
+    }
+
+    fn str(&mut self, s: &str) {
+        self.a.write_str(s);
+        self.b.write_str(s);
+    }
+
+    fn finish(&self) -> (u64, u64) {
+        (self.a.finish(), self.b.finish())
+    }
+
+    fn fp(&self) -> Fingerprint {
+        Fingerprint { hi: self.a.finish(), lo: self.b.finish() }
+    }
+}
+
+/// Position-free token of one file: the identity a task reference hashes.
+fn file_token(f: &FileSpec) -> (u64, u64) {
+    let mut h = H2::new();
+    h.str(&f.name);
+    h.u64(f.size.as_u64());
+    match f.hint {
+        crate::workload::FileHint::Default => h.u32(0),
+        crate::workload::FileHint::Local => h.u32(1),
+        crate::workload::FileHint::OnNode(n) => {
+            h.u32(2);
+            h.usize(n);
+        }
+        crate::workload::FileHint::Striped => h.u32(3),
+    }
+    match f.replication {
+        None => h.u32(0),
+        Some(r) => {
+            h.u32(1);
+            h.u32(r);
+        }
+    }
+    h.bool(f.prestaged);
+    h.finish()
+}
+
+/// Position-free token of one task: file references are the referenced
+/// files' tokens (order within a task's read/write lists is semantic and
+/// kept), so permuting the workload's file array leaves this unchanged.
+fn task_token(t: &TaskSpec, file_tok: &[(u64, u64)]) -> (u64, u64) {
+    let mut h = H2::new();
+    h.str(&t.name);
+    h.u32(t.stage);
+    h.u64(t.compute.as_ns());
+    h.u64(t.release.as_ns());
+    match t.pin_client {
+        None => h.u32(0),
+        Some(c) => {
+            h.u32(1);
+            h.usize(c);
+        }
+    }
+    h.u64(t.reads.len() as u64);
+    for &f in &t.reads {
+        let (a, b) = file_tok[f];
+        h.u64(a);
+        h.u64(b);
+    }
+    h.u64(t.writes.len() as u64);
+    for &f in &t.writes {
+        let (a, b) = file_tok[f];
+        h.u64(a);
+        h.u64(b);
+    }
+    h.finish()
+}
+
+fn hash_config(h: &mut H2, cfg: &Config) {
+    // The label is part of the key: it flows verbatim into
+    // `SimReport::config_label`, and a cache hit must reproduce the
+    // direct prediction byte-for-byte.
+    h.str(&cfg.label);
+    h.usize(cfg.n_app);
+    h.usize(cfg.n_storage);
+    h.bool(cfg.collocated);
+    h.usize(cfg.stripe_width);
+    h.u32(cfg.replication);
+    h.u64(cfg.chunk_size.as_u64());
+    h.u32(match cfg.placement {
+        Placement::RoundRobin => 0,
+        Placement::Local => 1,
+    });
+    h.bool(cfg.location_aware);
+    h.usize(cfg.io_window);
+}
+
+fn hash_platform(h: &mut H2, p: &Platform) {
+    h.str(&p.label);
+    h.f64(p.net_remote_bps);
+    h.f64(p.net_local_bps);
+    h.u64(p.net_latency.as_ns());
+    h.u64(p.net_latency_local.as_ns());
+    h.u64(p.frame_size.as_u64());
+    h.f64(p.storage_ns_per_byte_write);
+    h.f64(p.storage_ns_per_byte_read);
+    h.u64(p.storage_op.as_ns());
+    h.u64(p.manager_op.as_ns());
+    h.u64(p.client_op.as_ns());
+    h.u64(p.hdd_seek.as_ns());
+    h.u64(p.host_speed.len() as u64);
+    for &s in &p.host_speed {
+        h.f64(s);
+    }
+    h.u64(p.node_capacity.as_u64());
+    h.u32(match p.disk {
+        DiskKind::Ram => 0,
+        DiskKind::Hdd => 1,
+        DiskKind::Ssd => 2,
+    });
+}
+
+fn hash_fidelity(h: &mut H2, f: &Fidelity) {
+    h.bool(f.frame_aggregation);
+    h.bool(f.control_rounds);
+    h.u32(f.alloc_batch);
+    h.bool(f.connections);
+    h.u64(f.conn_timeout.as_ns());
+    h.usize(f.syn_drop_qlen);
+    h.usize(f.syn_drop_full);
+    h.u64(f.stagger_mean.as_ns());
+    h.f64(f.jitter_sigma);
+    h.f64(f.manager_contention);
+    h.f64(f.hetero_sigma);
+    h.f64(f.mux_eta);
+    h.u64(f.per_target_setup.as_ns());
+    h.f64(f.train_qlen_scale);
+    h.bool(f.random_placement);
+    h.u64(f.seed);
+}
+
+/// The canonical fingerprint of one evaluation point.
+pub fn fingerprint(wl: &Workload, cfg: &Config, plat: &Platform, fid: &Fidelity) -> Fingerprint {
+    let file_tok: Vec<(u64, u64)> = wl.files.iter().map(file_token).collect();
+    let (mut fa, mut fb) = (0u64, 0u64);
+    for &(a, b) in &file_tok {
+        fa = fa.wrapping_add(mix64(a));
+        fb = fb.wrapping_add(mix64(b));
+    }
+    let (mut ta, mut tb) = (0u64, 0u64);
+    for t in &wl.tasks {
+        let (a, b) = task_token(t, &file_tok);
+        ta = ta.wrapping_add(mix64(a));
+        tb = tb.wrapping_add(mix64(b));
+    }
+    let mut h = H2::new();
+    h.str("wfpred.fingerprint.v1");
+    h.str(&wl.name);
+    h.u64(wl.files.len() as u64);
+    h.u64(fa);
+    h.u64(fb);
+    h.u64(wl.tasks.len() as u64);
+    h.u64(ta);
+    h.u64(tb);
+    hash_config(&mut h, cfg);
+    hash_platform(&mut h, plat);
+    hash_fidelity(&mut h, fid);
+    h.fp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::Bytes;
+    use crate::workload::{FileSpec, TaskSpec};
+
+    fn wl() -> Workload {
+        let mut w = Workload::new("fp-test");
+        let a = w.add_file(FileSpec::new("in", Bytes::mb(4)).prestaged());
+        let b = w.add_file(FileSpec::new("mid", Bytes::mb(2)));
+        let c = w.add_file(FileSpec::new("out", Bytes::mb(1)));
+        w.add_task(TaskSpec::new("t1", 0).reads(a).writes(b));
+        w.add_task(TaskSpec::new("t2", 1).reads(b).writes(c));
+        w
+    }
+
+    fn fp_of(w: &Workload) -> Fingerprint {
+        fingerprint(w, &Config::dss(4), &Platform::paper_testbed(), &Fidelity::coarse())
+    }
+
+    #[test]
+    fn stable_across_calls_and_clones() {
+        let w = wl();
+        assert_eq!(fp_of(&w), fp_of(&w.clone()));
+    }
+
+    #[test]
+    fn invariant_under_file_and_task_reorder() {
+        let w = wl();
+        // Reverse the file array and remap references; reverse tasks.
+        let mut r = Workload::new("fp-test");
+        let n = w.files.len();
+        for f in w.files.iter().rev() {
+            r.add_file(f.clone());
+        }
+        for t in w.tasks.iter().rev() {
+            let mut t2 = t.clone();
+            t2.reads = t.reads.iter().map(|&f| n - 1 - f).collect();
+            t2.writes = t.writes.iter().map(|&f| n - 1 - f).collect();
+            r.add_task(t2);
+        }
+        assert_eq!(fp_of(&w), fp_of(&r));
+    }
+
+    #[test]
+    fn sensitive_to_workload_content() {
+        let w = wl();
+        let base = fp_of(&w);
+        let mut bigger = w.clone();
+        bigger.files[1].size = Bytes::mb(3);
+        assert_ne!(base, fp_of(&bigger));
+        let mut renamed = w.clone();
+        renamed.tasks[0].name = "t1x".into();
+        assert_ne!(base, fp_of(&renamed));
+        let mut other_name = w.clone();
+        other_name.name = "fp-test-2".into();
+        assert_ne!(base, fp_of(&other_name));
+    }
+
+    #[test]
+    fn sensitive_to_config_platform_and_fidelity() {
+        let w = wl();
+        let base = fp_of(&w);
+        let cfg = Config::dss(4).with_chunk(Bytes::kb(256));
+        assert_ne!(base, fingerprint(&w, &cfg, &Platform::paper_testbed(), &Fidelity::coarse()));
+        assert_ne!(
+            base,
+            fingerprint(&w, &Config::dss(4), &Platform::paper_testbed_10g(), &Fidelity::coarse())
+        );
+        assert_ne!(
+            base,
+            fingerprint(
+                &w,
+                &Config::dss(4),
+                &Platform::paper_testbed(),
+                &Fidelity::coarse_per_frame()
+            )
+        );
+    }
+
+    #[test]
+    fn display_parse_roundtrip() {
+        let fp = fp_of(&wl());
+        let s = fp.to_string();
+        assert_eq!(s.len(), 32);
+        assert_eq!(Fingerprint::parse(&s), Some(fp));
+        assert_eq!(Fingerprint::parse("zz"), None);
+        assert_eq!(Fingerprint::parse(&"g".repeat(32)), None);
+    }
+}

@@ -1,0 +1,504 @@
+//! The prediction-serving subsystem: all evaluation traffic flows
+//! through a [`Service`].
+//!
+//! The paper's value proposition is answering many what-if configuration
+//! queries orders of magnitude cheaper than running the application
+//! (§3.3). A predictor that re-simulates every `predict` call from
+//! scratch leaves most of that value on the table the moment two callers
+//! — a grid sweep and an annealing chain, two annealing chains, two
+//! `batch` invocations — ask about the same point. This module turns the
+//! predictor into a serving system:
+//!
+//! * **Fingerprints** ([`fingerprint`]) — a canonical, process-stable
+//!   128-bit key over `(Workload, Config, Platform, Fidelity)`,
+//!   order-invariant over workload file/task layout.
+//! * **Memoization** ([`cache`]) — a sharded in-memory LRU of full
+//!   [`Prediction`]s; a warm hit reproduces the direct
+//!   `Predictor::predict` result byte-for-byte (minus the wallclock it
+//!   did not spend).
+//! * **Warm starts** ([`store`]) — an optional append-only JSONL store
+//!   of prediction summaries, replayed on open, so batch campaigns
+//!   warm-start across processes.
+//! * **Single-flight deduplication** — concurrent requests for one
+//!   fingerprint block on the one in-flight simulation (a condvar per
+//!   entry) instead of duplicating work; batches fan out over
+//!   [`coordinator::par_map_indexed`].
+//! * **Surrogate fast-path** ([`surrogate`]) — multilinear interpolation
+//!   over already-evaluated grid neighbors, gated by a per-answer error
+//!   estimate and always attributed ([`Answer::Surrogate`] vs
+//!   [`Answer::Exact`]); with the gate off it is never consulted.
+//!
+//! The `Searcher` and `Annealer` evaluate through a service handle
+//! (creating a private cold one when the caller does not supply a handle,
+//! so results stay byte-identical to direct prediction), and the
+//! `wfpred batch` / `wfpred serve` commands expose the same layer as a
+//! newline-delimited query protocol.
+
+pub mod cache;
+pub mod fingerprint;
+pub mod store;
+pub mod surrogate;
+
+pub use fingerprint::{fingerprint, Fingerprint};
+pub use store::{DiskStore, StoredAnswer};
+pub use surrogate::{Estimate, GridCoord, SurrogateGrid};
+
+use crate::coordinator;
+use crate::model::{Config, Fidelity};
+use crate::predict::{Prediction, Predictor};
+use crate::workload::Workload;
+use cache::ShardedLru;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Default in-memory cache budget (whole `Prediction`s, LRU-evicted).
+pub const DEFAULT_CACHE_CAPACITY: usize = 4096;
+
+/// Where an exact answer came from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Source {
+    Simulated,
+    Memory,
+    Disk,
+}
+
+impl Source {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Source::Simulated => "simulated",
+            Source::Memory => "memory",
+            Source::Disk => "disk",
+        }
+    }
+}
+
+/// A served answer. Exact answers are attributed to their source;
+/// surrogate answers always carry their error estimate.
+#[derive(Clone, Debug)]
+pub enum Answer {
+    Exact { fp: Fingerprint, turnaround_s: f64, cost_node_s: f64, source: Source },
+    Surrogate { fp: Fingerprint, turnaround_s: f64, cost_node_s: f64, est_err: f64 },
+}
+
+impl Answer {
+    pub fn fp(&self) -> Fingerprint {
+        match self {
+            Answer::Exact { fp, .. } | Answer::Surrogate { fp, .. } => *fp,
+        }
+    }
+
+    pub fn turnaround_s(&self) -> f64 {
+        match self {
+            Answer::Exact { turnaround_s, .. } | Answer::Surrogate { turnaround_s, .. } => {
+                *turnaround_s
+            }
+        }
+    }
+
+    pub fn cost_node_s(&self) -> f64 {
+        match self {
+            Answer::Exact { cost_node_s, .. } | Answer::Surrogate { cost_node_s, .. } => {
+                *cost_node_s
+            }
+        }
+    }
+
+    pub fn is_exact(&self) -> bool {
+        matches!(self, Answer::Exact { .. })
+    }
+
+    /// `Some` only for surrogate answers — exact answers have no model
+    /// error to estimate.
+    pub fn est_err(&self) -> Option<f64> {
+        match self {
+            Answer::Surrogate { est_err, .. } => Some(*est_err),
+            Answer::Exact { .. } => None,
+        }
+    }
+}
+
+/// One query of the batch/serve protocol. `family` namespaces the
+/// surrogate grid: queries that interpolate against each other must share
+/// it (same workload family and platform; the grid coordinate axes —
+/// allocation, partitioning, chunk, replication — are what vary inside a
+/// family).
+#[derive(Clone, Debug)]
+pub struct Query {
+    pub workload: Workload,
+    pub config: Config,
+    pub family: u64,
+}
+
+#[derive(Default, Debug)]
+struct Counters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    dedup_waits: AtomicU64,
+    disk_hits: AtomicU64,
+    surrogate_answers: AtomicU64,
+}
+
+/// Monotonic service counters (a snapshot; see [`Service::stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    /// In-memory cache hits.
+    pub hits: u64,
+    /// Simulations actually executed.
+    pub misses: u64,
+    /// Requests that blocked on another caller's in-flight simulation.
+    pub dedup_waits: u64,
+    /// Summary answers served from the on-disk store.
+    pub disk_hits: u64,
+    /// Surrogate interpolations that passed their error gate.
+    pub surrogate_answers: u64,
+}
+
+/// Per-fingerprint single-flight rendezvous.
+#[derive(Default)]
+struct FlightState {
+    /// The leader is gone (normally or by panic); no further progress
+    /// will happen on this flight.
+    finished: bool,
+    result: Option<Arc<Prediction>>,
+}
+
+struct Flight {
+    state: Mutex<FlightState>,
+    done: Condvar,
+}
+
+/// The prediction service.
+pub struct Service {
+    predictor: Predictor,
+    fidelity: Fidelity,
+    cache: ShardedLru,
+    disk: Option<DiskStore>,
+    inflight: Mutex<HashMap<Fingerprint, Arc<Flight>>>,
+    grids: Mutex<HashMap<u64, SurrogateGrid>>,
+    counters: Counters,
+}
+
+impl Service {
+    pub fn new(predictor: Predictor) -> Service {
+        Service::with_capacity(predictor, DEFAULT_CACHE_CAPACITY)
+    }
+
+    pub fn with_capacity(predictor: Predictor, capacity: usize) -> Service {
+        Service {
+            predictor,
+            fidelity: Fidelity::coarse(),
+            cache: ShardedLru::new(capacity),
+            disk: None,
+            inflight: Mutex::new(HashMap::new()),
+            grids: Mutex::new(HashMap::new()),
+            counters: Counters::default(),
+        }
+    }
+
+    /// Attach (and replay) the append-only JSONL store at `path`.
+    pub fn with_disk_store(mut self, path: impl AsRef<std::path::Path>) -> Result<Service, String> {
+        self.disk = Some(DiskStore::open(path)?);
+        Ok(self)
+    }
+
+    pub fn predictor(&self) -> &Predictor {
+        &self.predictor
+    }
+
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+
+    pub fn disk_len(&self) -> usize {
+        self.disk.as_ref().map(|d| d.len()).unwrap_or(0)
+    }
+
+    pub fn stats(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            hits: self.counters.hits.load(Ordering::Relaxed),
+            misses: self.counters.misses.load(Ordering::Relaxed),
+            dedup_waits: self.counters.dedup_waits.load(Ordering::Relaxed),
+            disk_hits: self.counters.disk_hits.load(Ordering::Relaxed),
+            surrogate_answers: self.counters.surrogate_answers.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The canonical fingerprint of `(workload, config)` under this
+    /// service's platform and fidelity.
+    pub fn fingerprint(&self, workload: &Workload, config: &Config) -> Fingerprint {
+        fingerprint(workload, config, &self.predictor.platform, &self.fidelity)
+    }
+
+    /// Exact evaluation: memoized and deduplicated; on a miss the result
+    /// is exactly `Predictor::predict`'s.
+    pub fn evaluate(&self, workload: &Workload, config: &Config) -> Arc<Prediction> {
+        let fp = self.fingerprint(workload, config);
+        self.evaluate_fp(fp, workload, config)
+    }
+
+    fn evaluate_fp(&self, fp: Fingerprint, workload: &Workload, config: &Config) -> Arc<Prediction> {
+        if let Some(p) = self.cache.get(&fp) {
+            self.counters.hits.fetch_add(1, Ordering::Relaxed);
+            return p;
+        }
+        let (flight, leader) = {
+            let mut inflight = self.inflight.lock().unwrap();
+            // Re-check under the map lock: a leader that finished after
+            // our cache probe has already moved its result to the cache
+            // and removed its flight entry.
+            if let Some(p) = self.cache.get(&fp) {
+                self.counters.hits.fetch_add(1, Ordering::Relaxed);
+                return p;
+            }
+            match inflight.get(&fp) {
+                Some(f) => (f.clone(), false),
+                None => {
+                    let f = Arc::new(Flight {
+                        state: Mutex::new(FlightState::default()),
+                        done: Condvar::new(),
+                    });
+                    inflight.insert(fp, f.clone());
+                    (f, true)
+                }
+            }
+        };
+        if leader {
+            // Finish the flight even if the simulation panics: the drop
+            // guard removes the inflight entry and wakes every follower,
+            // so they retry (and surface the failure on their own
+            // threads) instead of deadlocking on a condvar forever.
+            struct FinishFlight<'a> {
+                service: &'a Service,
+                fp: Fingerprint,
+                flight: &'a Arc<Flight>,
+            }
+            impl Drop for FinishFlight<'_> {
+                fn drop(&mut self) {
+                    self.service.inflight.lock().unwrap().remove(&self.fp);
+                    self.flight.state.lock().unwrap().finished = true;
+                    self.flight.done.notify_all();
+                }
+            }
+            let finish = FinishFlight { service: self, fp, flight: &flight };
+            // Simulate outside every lock; followers wait on the flight.
+            let pred = Arc::new(self.predictor.predict(workload, config));
+            self.counters.misses.fetch_add(1, Ordering::Relaxed);
+            self.cache.insert(fp, pred.clone());
+            if let Some(disk) = &self.disk {
+                disk.put(fp, &StoredAnswer::of(&pred));
+            }
+            finish.flight.state.lock().unwrap().result = Some(pred.clone());
+            drop(finish);
+            pred
+        } else {
+            self.counters.dedup_waits.fetch_add(1, Ordering::Relaxed);
+            let mut state = flight.state.lock().unwrap();
+            while !state.finished {
+                state = flight.done.wait(state).unwrap();
+            }
+            match state.result.clone() {
+                Some(p) => p,
+                None => {
+                    // The leader died without producing a result; its
+                    // inflight entry is gone, so retry from the top.
+                    drop(state);
+                    self.evaluate_fp(fp, workload, config)
+                }
+            }
+        }
+    }
+
+    /// Memory- or disk-hit answer for a known point, if any (one probe
+    /// of each layer, counted).
+    fn lookup(&self, fp: Fingerprint) -> Option<Answer> {
+        if let Some(p) = self.cache.get(&fp) {
+            self.counters.hits.fetch_add(1, Ordering::Relaxed);
+            return Some(Answer::Exact {
+                fp,
+                turnaround_s: p.turnaround.as_secs_f64(),
+                cost_node_s: p.cost_node_secs,
+                source: Source::Memory,
+            });
+        }
+        let a = self.disk.as_ref().and_then(|d| d.get(&fp))?;
+        self.counters.disk_hits.fetch_add(1, Ordering::Relaxed);
+        Some(Answer::Exact {
+            fp,
+            turnaround_s: a.turnaround.as_secs_f64(),
+            cost_node_s: a.cost_node_s,
+            source: Source::Disk,
+        })
+    }
+
+    fn simulate_answer(&self, fp: Fingerprint, workload: &Workload, config: &Config) -> Answer {
+        let p = self.evaluate_fp(fp, workload, config);
+        Answer::Exact {
+            fp,
+            turnaround_s: p.turnaround.as_secs_f64(),
+            cost_node_s: p.cost_node_secs,
+            source: Source::Simulated,
+        }
+    }
+
+    /// Summary-level query for the batch/serve path: memory cache →
+    /// on-disk store → fresh simulation, attributed.
+    pub fn query(&self, workload: &Workload, config: &Config) -> Answer {
+        let fp = self.fingerprint(workload, config);
+        match self.lookup(fp) {
+            Some(a) => a,
+            None => self.simulate_answer(fp, workload, config),
+        }
+    }
+
+    /// Serve a batch. With `max_est_err <= 0` (the gate off) every query
+    /// is answered exactly, fanned out over the worker pool
+    /// ([`coordinator::par_map_indexed`]); duplicate fingerprints collapse
+    /// onto one simulation via single-flight, and answers come back in
+    /// input order. With the gate on, queries are answered in stream
+    /// order so each exact answer seeds the surrogate grid for later ones
+    /// — an unmemoized query whose interpolation error fits the gate is
+    /// served by the surrogate (and attributed as such); a memoized one is
+    /// always served exactly, since the truth is already paid for.
+    pub fn serve_batch(&self, queries: &[Query], threads: usize, max_est_err: f64) -> Vec<Answer> {
+        if max_est_err <= 0.0 {
+            return coordinator::par_map_indexed(queries.len(), threads, |i| {
+                self.query(&queries[i].workload, &queries[i].config)
+            });
+        }
+        queries
+            .iter()
+            .map(|q| {
+                let coord = GridCoord::of(&q.config);
+                let fp = self.fingerprint(&q.workload, &q.config);
+                // A memoized point is always served exactly — the truth
+                // is already paid for; surrogate only covers fresh ones.
+                if let Some(a) = self.lookup(fp) {
+                    self.note_sample(q.family, coord, a.turnaround_s());
+                    return a;
+                }
+                if let Some(est) = self.interpolate(q.family, coord, max_est_err) {
+                    return Answer::Surrogate {
+                        fp,
+                        turnaround_s: est.time_s,
+                        cost_node_s: est.time_s * q.config.n_hosts() as f64,
+                        est_err: est.est_err,
+                    };
+                }
+                let a = self.simulate_answer(fp, &q.workload, &q.config);
+                self.note_sample(q.family, coord, a.turnaround_s());
+                a
+            })
+            .collect()
+    }
+
+    /// Record an exact sample into workload family `family`'s surrogate
+    /// grid.
+    pub fn note_sample(&self, family: u64, coord: GridCoord, time_s: f64) {
+        self.grids.lock().unwrap().entry(family).or_default().note(coord, time_s);
+    }
+
+    /// Surrogate fast-path: an interpolated estimate for `coord` within
+    /// `family`, only when its error bound fits `max_est_err`. Counted in
+    /// [`StatsSnapshot::surrogate_answers`] when it answers.
+    pub fn interpolate(&self, family: u64, coord: GridCoord, max_est_err: f64) -> Option<Estimate> {
+        let grids = self.grids.lock().unwrap();
+        let est = grids.get(&family)?.interpolate(coord)?;
+        if est.est_err <= max_est_err {
+            self.counters.surrogate_answers.fetch_add(1, Ordering::Relaxed);
+            Some(est)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Platform;
+    use crate::util::units::Bytes;
+    use crate::workload::blast::{blast, BlastParams};
+
+    fn service() -> Service {
+        Service::new(Predictor::new(Platform::paper_testbed()))
+    }
+
+    fn point() -> (Workload, Config) {
+        let params = BlastParams { queries: 20, ..Default::default() };
+        (blast(4, &params), Config::partitioned(4, 3, Bytes::kb(256)))
+    }
+
+    #[test]
+    fn memoizes_and_counts() {
+        let svc = service();
+        let (wl, cfg) = point();
+        let a = svc.evaluate(&wl, &cfg);
+        let b = svc.evaluate(&wl, &cfg);
+        assert_eq!(a.turnaround, b.turnaround);
+        assert!(Arc::ptr_eq(&a, &b), "warm hit returns the cached prediction itself");
+        let s = svc.stats();
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.hits, 1);
+        assert_eq!(svc.cache_len(), 1);
+    }
+
+    #[test]
+    fn distinct_points_do_not_collide() {
+        let svc = service();
+        let (wl, cfg) = point();
+        let other = Config::partitioned(4, 3, Bytes::mb(1));
+        let a = svc.evaluate(&wl, &cfg);
+        let b = svc.evaluate(&wl, &other);
+        assert_eq!(svc.stats().misses, 2);
+        assert_ne!(a.report.config_label, b.report.config_label);
+    }
+
+    #[test]
+    fn concurrent_duplicates_single_flight() {
+        let svc = service();
+        let (wl, cfg) = point();
+        let results = coordinator::par_map_indexed(8, 8, |_| svc.evaluate(&wl, &cfg));
+        let s = svc.stats();
+        assert_eq!(s.misses, 1, "one simulation for 8 concurrent duplicates");
+        assert_eq!(s.hits + s.dedup_waits + s.misses, 8, "every call classified exactly once");
+        for r in &results {
+            assert_eq!(r.turnaround, results[0].turnaround);
+        }
+        assert!(svc.inflight.lock().unwrap().is_empty(), "flight table drains");
+    }
+
+    #[test]
+    fn query_attributes_sources() {
+        let svc = service();
+        let (wl, cfg) = point();
+        let a = svc.query(&wl, &cfg);
+        let b = svc.query(&wl, &cfg);
+        match (&a, &b) {
+            (
+                Answer::Exact { source: Source::Simulated, turnaround_s: ta, .. },
+                Answer::Exact { source: Source::Memory, turnaround_s: tb, .. },
+            ) => assert_eq!(ta, tb),
+            other => panic!("unexpected attribution {other:?}"),
+        }
+        assert_eq!(a.fp(), b.fp());
+        assert!(a.is_exact() && a.est_err().is_none());
+    }
+
+    #[test]
+    fn gate_off_never_answers_surrogate() {
+        let svc = service();
+        let params = BlastParams { queries: 20, ..Default::default() };
+        let queries: Vec<Query> = (2..=6)
+            .map(|n| Query {
+                workload: blast(n, &params),
+                config: Config::partitioned(n, 7 - n, Bytes::kb(256)),
+                family: 1,
+            })
+            .collect();
+        let answers = svc.serve_batch(&queries, 2, 0.0);
+        assert_eq!(answers.len(), 5);
+        assert!(answers.iter().all(Answer::is_exact));
+        assert_eq!(svc.stats().surrogate_answers, 0);
+    }
+}

@@ -1,0 +1,266 @@
+//! Append-only on-disk prediction store (JSONL), so campaigns warm-start
+//! across processes.
+//!
+//! Each line is one flat record keyed by the canonical
+//! [`Fingerprint`](super::fingerprint::Fingerprint): the summary of a
+//! prediction that is worth persisting — turnaround, cost, per-stage
+//! times, event/byte accounting. The full `SimReport` (per-op records,
+//! utilization) stays in the in-memory cache only: it is large, and the
+//! cross-process consumers (batch scoring, surrogate seeding, `serve`)
+//! need the summary. Records are written through
+//! [`Json::render_compact`](crate::util::jsonw::Json::render_compact) and
+//! read back with [`jsonw::parse_flat`](crate::util::jsonw::parse_flat);
+//! appends are flushed per record so a killed campaign still seeds its
+//! successor.
+
+use super::fingerprint::Fingerprint;
+use crate::predict::Prediction;
+use crate::util::jsonw::{self, Json, Scalar};
+use crate::util::units::{Bytes, SimTime};
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write as _};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// The persisted summary of one prediction.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StoredAnswer {
+    pub turnaround: SimTime,
+    pub cost_node_s: f64,
+    pub stage_times: Vec<SimTime>,
+    pub events: u64,
+    pub net_bytes: Bytes,
+}
+
+impl StoredAnswer {
+    pub fn of(p: &Prediction) -> StoredAnswer {
+        StoredAnswer {
+            turnaround: p.turnaround,
+            cost_node_s: p.cost_node_secs,
+            stage_times: p.stage_times.clone(),
+            events: p.report.events,
+            net_bytes: p.report.net_bytes,
+        }
+    }
+}
+
+/// The store: a replayed in-memory index plus an append-only writer.
+pub struct DiskStore {
+    path: PathBuf,
+    writer: Mutex<BufWriter<File>>,
+    loaded: Mutex<HashMap<Fingerprint, StoredAnswer>>,
+}
+
+impl DiskStore {
+    /// Open `path` (creating it if needed) and replay existing records.
+    /// A corrupt interior record is an error, not a silent skip: the
+    /// store is the warm-start substrate and half-read state would be
+    /// confusing. A corrupt *final* record is what a crash or full disk
+    /// mid-append leaves behind, so it is dropped with a warning and the
+    /// rest of the store is recovered.
+    pub fn open(path: impl AsRef<Path>) -> Result<DiskStore, String> {
+        let path = path.as_ref().to_path_buf();
+        let mut loaded = HashMap::new();
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            let lines: Vec<&str> = text.lines().collect();
+            for (idx, raw) in lines.iter().enumerate() {
+                let line = raw.trim();
+                if line.is_empty() {
+                    continue;
+                }
+                match Self::parse_line(line) {
+                    Some((fp, ans)) => {
+                        loaded.insert(fp, ans);
+                    }
+                    None if idx + 1 == lines.len() => {
+                        eprintln!(
+                            "[service] dropping truncated final record in {}",
+                            path.display()
+                        );
+                    }
+                    None => {
+                        return Err(format!("corrupt record in {}: {line:?}", path.display()));
+                    }
+                }
+            }
+        }
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .map_err(|e| format!("open {}: {e}", path.display()))?;
+        Ok(DiskStore { path, writer: Mutex::new(BufWriter::new(file)), loaded: Mutex::new(loaded) })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn len(&self) -> usize {
+        self.loaded.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn get(&self, fp: &Fingerprint) -> Option<StoredAnswer> {
+        self.loaded.lock().unwrap().get(fp).cloned()
+    }
+
+    /// Record one answer (idempotent per fingerprint) and flush. An
+    /// append failure (disk full, permissions) is surfaced on stderr and
+    /// the record is dropped from the in-memory index too, so what the
+    /// index claims and what the next `open` replays stay consistent.
+    pub fn put(&self, fp: Fingerprint, ans: &StoredAnswer) {
+        {
+            let mut m = self.loaded.lock().unwrap();
+            if m.contains_key(&fp) {
+                return;
+            }
+            m.insert(fp, ans.clone());
+        }
+        let stages: Vec<Json> =
+            ans.stage_times.iter().map(|t| Json::Num(t.as_ns() as f64)).collect();
+        let line = Json::obj()
+            .set("fp", fp.to_string())
+            .set("turnaround_ns", ans.turnaround.as_ns())
+            .set("cost_node_s", ans.cost_node_s)
+            .set("stages_ns", Json::Arr(stages))
+            .set("events", ans.events)
+            .set("net_bytes", ans.net_bytes.as_u64())
+            .render_compact();
+        let mut w = self.writer.lock().unwrap();
+        let wrote = writeln!(w, "{line}").and_then(|_| w.flush());
+        drop(w);
+        if let Err(e) = wrote {
+            eprintln!("[service] failed to append to {}: {e}", self.path.display());
+            self.loaded.lock().unwrap().remove(&fp);
+        }
+    }
+
+    fn parse_line(line: &str) -> Option<(Fingerprint, StoredAnswer)> {
+        let kv = jsonw::parse_flat(line).ok()?;
+        let get = |k: &str| kv.iter().find(|(key, _)| key == k).map(|(_, v)| v);
+        let num = |k: &str| match get(k) {
+            Some(Scalar::Num(x)) => Some(*x),
+            _ => None,
+        };
+        let fp = match get("fp")? {
+            Scalar::Str(s) => Fingerprint::parse(s)?,
+            _ => return None,
+        };
+        let stage_times = match get("stages_ns")? {
+            Scalar::NumArr(xs) => xs.iter().map(|&x| SimTime::from_ns(x as u64)).collect(),
+            _ => return None,
+        };
+        Some((
+            fp,
+            StoredAnswer {
+                turnaround: SimTime::from_ns(num("turnaround_ns")? as u64),
+                cost_node_s: num("cost_node_s")?,
+                stage_times,
+                events: num("events")? as u64,
+                net_bytes: Bytes(num("net_bytes")? as u64),
+            },
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("wfpred_store_{}_{name}.jsonl", std::process::id()))
+    }
+
+    fn sample(i: u64) -> (Fingerprint, StoredAnswer) {
+        (
+            Fingerprint { hi: i, lo: i.wrapping_mul(31) },
+            StoredAnswer {
+                turnaround: SimTime::from_ms(100 + i),
+                cost_node_s: 10.5 * (i + 1) as f64,
+                stage_times: vec![SimTime::from_ms(40), SimTime::from_ms(60 + i)],
+                events: 1000 + i,
+                net_bytes: Bytes::mb(i + 1),
+            },
+        )
+    }
+
+    #[test]
+    fn roundtrips_across_reopen() {
+        let path = tmp("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        {
+            let store = DiskStore::open(&path).unwrap();
+            assert!(store.is_empty());
+            for i in 0..3 {
+                let (fp, ans) = sample(i);
+                store.put(fp, &ans);
+            }
+            assert_eq!(store.len(), 3);
+        }
+        let reopened = DiskStore::open(&path).unwrap();
+        assert_eq!(reopened.len(), 3);
+        for i in 0..3 {
+            let (fp, ans) = sample(i);
+            assert_eq!(reopened.get(&fp), Some(ans), "record {i}");
+        }
+        assert_eq!(reopened.get(&Fingerprint { hi: 99, lo: 99 }), None);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn put_is_idempotent_per_fingerprint() {
+        let path = tmp("idem");
+        let _ = std::fs::remove_file(&path);
+        let store = DiskStore::open(&path).unwrap();
+        let (fp, ans) = sample(7);
+        store.put(fp, &ans);
+        store.put(fp, &ans);
+        drop(store);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 1, "duplicate puts must not append");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_interior_record_is_an_error() {
+        let path = tmp("corrupt");
+        let (fp, ans) = sample(1);
+        let good = {
+            let _ = std::fs::remove_file(&path);
+            let store = DiskStore::open(&path).unwrap();
+            store.put(fp, &ans);
+            drop(store);
+            std::fs::read_to_string(&path).unwrap()
+        };
+        std::fs::write(&path, format!("{{\"fp\": \"nope\"}}\n{good}")).unwrap();
+        let err = DiskStore::open(&path).unwrap_err();
+        assert!(err.contains("corrupt"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn truncated_final_record_is_recovered_from() {
+        // A crash mid-append leaves a partial last line; the store must
+        // recover every complete record and drop only the tail.
+        let path = tmp("truncated");
+        let _ = std::fs::remove_file(&path);
+        {
+            let store = DiskStore::open(&path).unwrap();
+            let (fp, ans) = sample(3);
+            store.put(fp, &ans);
+        }
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("{\"fp\": \"0123\", \"turnaro");
+        std::fs::write(&path, text).unwrap();
+        let store = DiskStore::open(&path).unwrap();
+        assert_eq!(store.len(), 1, "complete records survive a truncated tail");
+        let (fp, ans) = sample(3);
+        assert_eq!(store.get(&fp), Some(ans));
+        let _ = std::fs::remove_file(&path);
+    }
+}

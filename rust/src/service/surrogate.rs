@@ -1,0 +1,192 @@
+//! Surrogate fast-path: multilinear interpolation of turnaround over
+//! already-evaluated neighbor configurations in a `SearchSpace`-style
+//! grid.
+//!
+//! QoSFlow-style observation (PAPERS.md): once a few exact evaluations
+//! pin down a workload family's response surface, an interpretable local
+//! model can answer the *flat* interior of a configuration sweep, leaving
+//! full simulation for the frontier. The grid here is the search layer's
+//! decision space — (total allocation, replication) are exact-match axes,
+//! (n_app, chunk size) interpolate (linearly in `n_app`, linearly in
+//! `log2(chunk)`). Every estimate carries its own error bound, derived
+//! from the relative spread of the bracketing samples: the interpolant
+//! cannot be trusted beyond how much the function moves across its
+//! bracket, so steep regions (where the search frontier lives) report
+//! large `est_err` and get kicked back to exact simulation by the
+//! caller's gate.
+//!
+//! Collocated deployments vary `total` together with `n_app`, so they
+//! never bracket and always fall through to exact evaluation — the
+//! surrogate serves the paper's partitioned (BLAST-style) sweeps, which
+//! are exactly the batch "score a whole config space" queries.
+
+use crate::model::Config;
+use std::collections::{BTreeMap, HashMap};
+
+/// Grid coordinate of one configuration within a workload family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct GridCoord {
+    pub total_hosts: usize,
+    pub n_app: usize,
+    pub chunk: u64,
+    pub replication: u32,
+}
+
+impl GridCoord {
+    pub fn of(cfg: &Config) -> GridCoord {
+        GridCoord {
+            total_hosts: cfg.n_hosts(),
+            n_app: cfg.n_app,
+            chunk: cfg.chunk_size.as_u64(),
+            replication: cfg.replication,
+        }
+    }
+}
+
+/// A surrogate answer: the estimate and its error bound, always together.
+#[derive(Clone, Copy, Debug)]
+pub struct Estimate {
+    pub time_s: f64,
+    /// Relative error bound from the local bracket spread (0 for an exact
+    /// grid point). Callers gate on this; it is never absent.
+    pub est_err: f64,
+}
+
+/// Exact samples of one workload family, keyed for interpolation.
+#[derive(Default, Debug)]
+pub struct SurrogateGrid {
+    /// (total hosts, replication) → chunk bytes → (n_app → time_s).
+    lines: HashMap<(usize, u32), BTreeMap<u64, BTreeMap<usize, f64>>>,
+}
+
+impl SurrogateGrid {
+    pub fn new() -> SurrogateGrid {
+        SurrogateGrid::default()
+    }
+
+    /// Record one exact evaluation.
+    pub fn note(&mut self, c: GridCoord, time_s: f64) {
+        self.lines
+            .entry((c.total_hosts, c.replication))
+            .or_default()
+            .entry(c.chunk)
+            .or_default()
+            .insert(c.n_app, time_s);
+    }
+
+    /// Total samples held.
+    pub fn samples(&self) -> usize {
+        self.lines.values().flat_map(|m| m.values()).map(|l| l.len()).sum()
+    }
+
+    /// Linear interpolation along `n_app` within one chunk line.
+    fn interp_line(line: &BTreeMap<usize, f64>, n_app: usize) -> Option<Estimate> {
+        if let Some(&t) = line.get(&n_app) {
+            return Some(Estimate { time_s: t, est_err: 0.0 });
+        }
+        let (&lo, &t_lo) = line.range(..n_app).next_back()?;
+        let (&hi, &t_hi) = line.range(n_app + 1..).next()?;
+        let x = (n_app - lo) as f64 / (hi - lo) as f64;
+        let time_s = t_lo + (t_hi - t_lo) * x;
+        if time_s <= 0.0 {
+            return None;
+        }
+        let est_err = (t_hi - t_lo).abs() / t_lo.min(t_hi).max(f64::MIN_POSITIVE);
+        Some(Estimate { time_s, est_err })
+    }
+
+    /// Multilinear interpolation at `c`: exact match on (total hosts,
+    /// replication), linear in `n_app`, linear in `log2(chunk)` between
+    /// the nearest sampled chunk lines when the chunk is unsampled.
+    /// `None` when the point is not bracketed by samples.
+    pub fn interpolate(&self, c: GridCoord) -> Option<Estimate> {
+        let chunks = self.lines.get(&(c.total_hosts, c.replication))?;
+        if let Some(line) = chunks.get(&c.chunk) {
+            if let Some(e) = Self::interp_line(line, c.n_app) {
+                return Some(e);
+            }
+        }
+        let (&c_lo, lo_line) = chunks.range(..c.chunk).next_back()?;
+        let (&c_hi, hi_line) = chunks.range(c.chunk + 1..).next()?;
+        let a = Self::interp_line(lo_line, c.n_app)?;
+        let b = Self::interp_line(hi_line, c.n_app)?;
+        let x = ((c.chunk as f64).log2() - (c_lo as f64).log2())
+            / ((c_hi as f64).log2() - (c_lo as f64).log2());
+        let time_s = a.time_s + (b.time_s - a.time_s) * x;
+        if time_s <= 0.0 {
+            return None;
+        }
+        let spread = (b.time_s - a.time_s).abs() / a.time_s.min(b.time_s).max(f64::MIN_POSITIVE);
+        Some(Estimate { time_s, est_err: a.est_err.max(b.est_err) + spread })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn coord(n_app: usize, chunk: u64) -> GridCoord {
+        GridCoord { total_hosts: 20, n_app, chunk, replication: 1 }
+    }
+
+    #[test]
+    fn linear_in_n_app() {
+        let mut g = SurrogateGrid::new();
+        g.note(coord(2, 1024), 100.0);
+        g.note(coord(8, 1024), 40.0);
+        assert_eq!(g.samples(), 2);
+        let e = g.interpolate(coord(5, 1024)).unwrap();
+        assert!((e.time_s - 70.0).abs() < 1e-9, "{}", e.time_s);
+        assert!((e.est_err - 60.0 / 40.0).abs() < 1e-9, "{}", e.est_err);
+        // Exact grid point: zero error.
+        let x = g.interpolate(coord(8, 1024)).unwrap();
+        assert_eq!(x.time_s, 40.0);
+        assert_eq!(x.est_err, 0.0);
+    }
+
+    #[test]
+    fn refuses_unbracketed_points() {
+        let mut g = SurrogateGrid::new();
+        g.note(coord(2, 1024), 100.0);
+        g.note(coord(8, 1024), 40.0);
+        assert!(g.interpolate(coord(1, 1024)).is_none(), "below the bracket");
+        assert!(g.interpolate(coord(9, 1024)).is_none(), "above the bracket");
+        assert!(g.interpolate(coord(5, 512)).is_none(), "chunk not bracketed");
+        // Other exact-match axes must match exactly.
+        assert!(g
+            .interpolate(GridCoord { total_hosts: 16, n_app: 5, chunk: 1024, replication: 1 })
+            .is_none());
+        assert!(g
+            .interpolate(GridCoord { total_hosts: 20, n_app: 5, chunk: 1024, replication: 2 })
+            .is_none());
+    }
+
+    #[test]
+    fn bilinear_across_chunk_lines() {
+        let mut g = SurrogateGrid::new();
+        g.note(coord(2, 256), 120.0);
+        g.note(coord(8, 256), 60.0);
+        g.note(coord(2, 4096), 100.0);
+        g.note(coord(8, 4096), 40.0);
+        // Chunk 1024 is the log-midpoint of 256..4096.
+        let e = g.interpolate(coord(5, 1024)).unwrap();
+        let lo = 90.0; // midpoint of the 256 line at n_app 5
+        let hi = 70.0; // midpoint of the 4096 line at n_app 5
+        assert!((e.time_s - (lo + hi) / 2.0).abs() < 1e-9, "{}", e.time_s);
+        assert!(e.est_err > 0.0);
+    }
+
+    #[test]
+    fn flat_lines_report_small_error_steep_lines_large() {
+        let mut g = SurrogateGrid::new();
+        g.note(coord(2, 1024), 50.0);
+        g.note(coord(8, 1024), 51.0);
+        let flat = g.interpolate(coord(5, 1024)).unwrap();
+        assert!(flat.est_err < 0.05, "{}", flat.est_err);
+        let mut s = SurrogateGrid::new();
+        s.note(coord(2, 1024), 500.0);
+        s.note(coord(8, 1024), 50.0);
+        let steep = s.interpolate(coord(5, 1024)).unwrap();
+        assert!(steep.est_err > 1.0, "{}", steep.est_err);
+    }
+}

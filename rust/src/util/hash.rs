@@ -1,0 +1,135 @@
+//! Small vendored-style hashing substrate (FNV-1a, 64-bit).
+//!
+//! The prediction service needs fingerprints that are **stable across
+//! runs and processes** — std's `DefaultHasher` is seeded per process
+//! (`RandomState`), so it cannot key an on-disk store. FNV-1a is tiny,
+//! dependency-free, and byte-order-explicit; the service's 128-bit
+//! fingerprint runs two independently-seeded streams over the same
+//! canonical byte sequence (see `service::fingerprint`).
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Incremental FNV-1a 64-bit hasher.
+#[derive(Clone, Debug)]
+pub struct Fnv64 {
+    state: u64,
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Fnv64::new()
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Fnv64 {
+        Fnv64 { state: FNV_OFFSET }
+    }
+
+    /// Start an independent stream: the seed is absorbed as the first
+    /// word, so distinct seeds give decorrelated hashes of equal input.
+    pub fn with_seed(seed: u64) -> Fnv64 {
+        let mut h = Fnv64::new();
+        h.write_u64(seed);
+        h
+    }
+
+    pub fn write_bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= b as u64;
+            self.state = self.state.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    pub fn write_u8(&mut self, x: u8) {
+        self.write_bytes(&[x]);
+    }
+
+    pub fn write_u32(&mut self, x: u32) {
+        self.write_bytes(&x.to_le_bytes());
+    }
+
+    pub fn write_u64(&mut self, x: u64) {
+        self.write_bytes(&x.to_le_bytes());
+    }
+
+    pub fn write_usize(&mut self, x: usize) {
+        self.write_u64(x as u64);
+    }
+
+    /// Bit pattern, so -0.0 and 0.0 (and every NaN payload) stay distinct
+    /// and the hash is exactly reproducible.
+    pub fn write_f64(&mut self, x: f64) {
+        self.write_u64(x.to_bits());
+    }
+
+    pub fn write_bool(&mut self, x: bool) {
+        self.write_u8(x as u8);
+    }
+
+    /// Length-prefixed, so `("ab", "c")` never collides with `("a", "bc")`.
+    pub fn write_str(&mut self, s: &str) {
+        self.write_u64(s.len() as u64);
+        self.write_bytes(s.as_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+/// SplitMix64 finalizer: diffuses per-item hashes before an
+/// order-invariant (wrapping-sum) combination, so structured item hashes
+/// do not cancel each other.
+pub fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_fnv1a_reference_vectors() {
+        // Published FNV-1a 64 test vectors.
+        assert_eq!(Fnv64::new().finish(), FNV_OFFSET);
+        let mut h = Fnv64::new();
+        h.write_bytes(b"a");
+        assert_eq!(h.finish(), 0xaf63_dc4c_8601_ec8c);
+        let mut h = Fnv64::new();
+        h.write_bytes(b"foobar");
+        assert_eq!(h.finish(), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn length_prefix_prevents_concat_collisions() {
+        let mut a = Fnv64::new();
+        a.write_str("ab");
+        a.write_str("c");
+        let mut b = Fnv64::new();
+        b.write_str("a");
+        b.write_str("bc");
+        assert_ne!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn seeded_streams_differ() {
+        let mut a = Fnv64::with_seed(1);
+        let mut b = Fnv64::with_seed(2);
+        a.write_str("same input");
+        b.write_str("same input");
+        assert_ne!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn mix64_diffuses_small_differences() {
+        assert_ne!(mix64(1), mix64(2));
+        // Neighboring inputs should differ in many bits after mixing.
+        let d = (mix64(41) ^ mix64(42)).count_ones();
+        assert!(d > 16, "only {d} bits differ");
+    }
+}

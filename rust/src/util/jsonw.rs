@@ -1,9 +1,13 @@
-//! Tiny JSON writer (serde is unavailable offline).
+//! Tiny JSON writer plus a flat-object reader (serde is unavailable
+//! offline).
 //!
 //! Results files (`results/*.json`) are emitted through this writer so
-//! downstream tooling can consume bench output. Writing only — the crate's
-//! own interchange formats (traces, platform files) are line-oriented text
-//! with their own parsers.
+//! downstream tooling can consume bench output. The prediction service
+//! additionally round-trips **flat** single-line objects — the JSONL
+//! on-disk store and the `batch`/`serve` query protocol — through
+//! [`Json::render_compact`] and [`parse_flat`]. Nested objects stay
+//! write-only; the crate's other interchange formats (traces, platform
+//! files) are line-oriented text with their own parsers.
 
 use std::fmt::Write;
 
@@ -47,6 +51,41 @@ impl Json {
         let mut s = String::new();
         self.write(&mut s, 0);
         s
+    }
+
+    /// Single-line rendering for JSONL records (`render` pretty-prints).
+    pub fn render_compact(&self) -> String {
+        let mut s = String::new();
+        self.write_compact(&mut s);
+        s
+    }
+
+    fn write_compact(&self, out: &mut String) {
+        match self {
+            Json::Obj(kv) => {
+                out.push('{');
+                for (i, (k, v)) in kv.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(", ");
+                    }
+                    Json::Str(k.clone()).write(out, 0);
+                    out.push_str(": ");
+                    v.write_compact(out);
+                }
+                out.push('}');
+            }
+            Json::Arr(xs) => {
+                out.push('[');
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(", ");
+                    }
+                    x.write_compact(out);
+                }
+                out.push(']');
+            }
+            other => other.write(out, 0),
+        }
     }
 
     fn write(&self, out: &mut String, indent: usize) {
@@ -160,6 +199,191 @@ impl<T: Into<Json>> From<Vec<T>> for Json {
     }
 }
 
+/// A scalar (or flat numeric array) read back from one line of this
+/// writer's compact output. The service layer's JSONL store and the
+/// `batch`/`serve` query protocol need flat objects only; nested objects
+/// are rejected by [`parse_flat`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Scalar {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    NumArr(Vec<f64>),
+}
+
+/// Parse one flat JSON object (`{"k": v, …}`) into key/value pairs in
+/// source order. Values may be strings, numbers, booleans, null, or
+/// arrays of numbers — exactly what [`Json::render_compact`] emits for
+/// the service's records.
+pub fn parse_flat(text: &str) -> Result<Vec<(String, Scalar)>, String> {
+    let mut p = Parser { s: text.as_bytes(), i: 0 };
+    p.ws();
+    p.expect(b'{')?;
+    p.ws();
+    let mut out = Vec::new();
+    if p.peek() == Some(b'}') {
+        p.i += 1;
+    } else {
+        loop {
+            p.ws();
+            let key = p.string()?;
+            p.ws();
+            p.expect(b':')?;
+            p.ws();
+            let val = p.value()?;
+            out.push((key, val));
+            p.ws();
+            match p.next() {
+                Some(b',') => continue,
+                Some(b'}') => break,
+                other => return Err(format!("expected ',' or '}}', got {other:?}")),
+            }
+        }
+    }
+    p.ws();
+    if p.i != p.s.len() {
+        return Err("trailing content after object".into());
+    }
+    Ok(out)
+}
+
+struct Parser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn ws(&mut self) {
+        while self.i < self.s.len() && self.s[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.s.get(self.i).copied()
+    }
+
+    fn next(&mut self) -> Option<u8> {
+        let c = self.peek()?;
+        self.i += 1;
+        Some(c)
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        match self.next() {
+            Some(x) if x == c => Ok(()),
+            other => Err(format!("expected {:?}, got {other:?}", c as char)),
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            // Strings may hold multi-byte UTF-8, but both structural bytes
+            // ('"' and '\\') are single-byte in UTF-8, so a byte scan that
+            // copies everything else through verbatim is safe.
+            let start = self.i;
+            while self.i < self.s.len() && self.s[self.i] != b'"' && self.s[self.i] != b'\\' {
+                self.i += 1;
+            }
+            out.push_str(std::str::from_utf8(&self.s[start..self.i]).map_err(|e| e.to_string())?);
+            match self.next() {
+                Some(b'"') => return Ok(out),
+                Some(b'\\') => match self.next() {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'u') => {
+                        let mut code = 0u32;
+                        for _ in 0..4 {
+                            let d = self.next().ok_or("truncated \\u escape")?;
+                            code = code * 16 + (d as char).to_digit(16).ok_or("bad \\u digit")?;
+                        }
+                        out.push(char::from_u32(code).ok_or("bad \\u codepoint")?);
+                    }
+                    other => return Err(format!("bad escape {other:?}")),
+                },
+                None => return Err("unterminated string".into()),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<f64, String> {
+        let start = self.i;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'+' | b'-' | b'.' | b'e' | b'E') {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.s[start..self.i]).map_err(|e| e.to_string())?;
+        text.parse::<f64>().map_err(|_| format!("bad number {text:?}"))
+    }
+
+    fn word(&mut self) -> String {
+        let start = self.i;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_alphabetic() {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        String::from_utf8_lossy(&self.s[start..self.i]).into_owned()
+    }
+
+    fn value(&mut self) -> Result<Scalar, String> {
+        match self.peek() {
+            Some(b'"') => Ok(Scalar::Str(self.string()?)),
+            Some(b'[') => {
+                self.i += 1;
+                self.ws();
+                let mut xs = Vec::new();
+                if self.peek() == Some(b']') {
+                    self.i += 1;
+                    return Ok(Scalar::NumArr(xs));
+                }
+                loop {
+                    self.ws();
+                    xs.push(self.number()?);
+                    self.ws();
+                    match self.next() {
+                        Some(b',') => continue,
+                        Some(b']') => break,
+                        other => return Err(format!("expected ',' or ']', got {other:?}")),
+                    }
+                }
+                Ok(Scalar::NumArr(xs))
+            }
+            Some(b't') | Some(b'f') => match self.word().as_str() {
+                "true" => Ok(Scalar::Bool(true)),
+                "false" => Ok(Scalar::Bool(false)),
+                w => Err(format!("bad literal {w:?}")),
+            },
+            Some(b'n') => {
+                let w = self.word();
+                if w == "null" {
+                    Ok(Scalar::Null)
+                } else {
+                    Err(format!("bad literal {w:?}"))
+                }
+            }
+            Some(c) if c.is_ascii_digit() || c == b'-' || c == b'+' => {
+                Ok(Scalar::Num(self.number()?))
+            }
+            other => Err(format!("unexpected value start {other:?}")),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -189,5 +413,56 @@ mod tests {
         assert_eq!(Json::Num(3.0).render(), "3");
         assert_eq!(Json::Num(3.25).render(), "3.25");
         assert_eq!(Json::Num(f64::NAN).render(), "null");
+    }
+
+    #[test]
+    fn compact_rendering_is_single_line() {
+        let j = Json::obj()
+            .set("name", "x")
+            .set("n", 3u64)
+            .set("xs", vec![1.0, 2.5])
+            .set("ok", true);
+        let s = j.render_compact();
+        assert!(!s.contains('\n'), "{s}");
+        assert_eq!(s, "{\"name\": \"x\", \"n\": 3, \"xs\": [1, 2.5], \"ok\": true}");
+    }
+
+    #[test]
+    fn parse_flat_roundtrips_compact_output() {
+        let j = Json::obj()
+            .set("fp", "00ff00ff00ff00ff00ff00ff00ff00ff")
+            .set("turnaround_ns", 123_456_789u64)
+            .set("cost_node_s", 12.5)
+            .set("stages_ns", vec![1.0, 2.0, 3.0])
+            .set("exact", true)
+            .set("note", "a\"b\\c\nd");
+        let kv = parse_flat(&j.render_compact()).unwrap();
+        assert_eq!(kv[0], ("fp".into(), Scalar::Str("00ff00ff00ff00ff00ff00ff00ff00ff".into())));
+        assert_eq!(kv[1], ("turnaround_ns".into(), Scalar::Num(123_456_789.0)));
+        assert_eq!(kv[2], ("cost_node_s".into(), Scalar::Num(12.5)));
+        assert_eq!(kv[3], ("stages_ns".into(), Scalar::NumArr(vec![1.0, 2.0, 3.0])));
+        assert_eq!(kv[4], ("exact".into(), Scalar::Bool(true)));
+        assert_eq!(kv[5], ("note".into(), Scalar::Str("a\"b\\c\nd".into())));
+    }
+
+    #[test]
+    fn parse_flat_accepts_hand_written_queries() {
+        let kv =
+            parse_flat(" { \"pattern\": \"blast\", \"app-nodes\": 14, \"wass\": false } ").unwrap();
+        assert_eq!(kv.len(), 3);
+        assert_eq!(kv[0].1, Scalar::Str("blast".into()));
+        assert_eq!(kv[1].1, Scalar::Num(14.0));
+        assert_eq!(kv[2].1, Scalar::Bool(false));
+        assert_eq!(parse_flat("{}").unwrap(), Vec::new());
+        assert_eq!(parse_flat("{\"x\": null}").unwrap()[0].1, Scalar::Null);
+    }
+
+    #[test]
+    fn parse_flat_rejects_nesting_and_garbage() {
+        assert!(parse_flat("{\"a\": {\"b\": 1}}").is_err(), "nested objects are out of scope");
+        assert!(parse_flat("{\"a\": 1} trailing").is_err());
+        assert!(parse_flat("{\"a\" 1}").is_err());
+        assert!(parse_flat("not json").is_err());
+        assert!(parse_flat("{\"a\": [1, \"x\"]}").is_err(), "only numeric arrays");
     }
 }

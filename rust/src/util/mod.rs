@@ -6,6 +6,7 @@
 //! criterion, proptest) are re-implemented here at the scale this
 //! project needs.
 
+pub mod hash;
 pub mod rng;
 pub mod stats;
 pub mod units;

@@ -9,6 +9,13 @@
 //! every synthetic scenario predicts within 25%, the mean error is well
 //! under 15%, and every best-configuration choice the paper highlights is
 //! ranked correctly by the predictor.
+//!
+//! Campaigns run on the detailed-with-aggregation tier
+//! (`Testbed::aggregated()`, ~10x fewer events per trial; PERF.md
+//! §Fidelity tiers). Two scenarios deliberately stay on the per-frame
+//! detailed tier: `dss_pipeline_underpredicts_like_paper` is the fidelity
+//! sentinel, and the release-time profiling test reads per-task launch
+//! times from a reference-tier trial.
 
 use wfpred::model::{simulate, Config, Placement, Platform};
 use wfpred::testbed::Testbed;
@@ -56,7 +63,7 @@ fn synthetic_scenarios(tb: &Testbed) -> Vec<Scenario> {
 
 #[test]
 fn synthetic_accuracy_bands() {
-    let tb = Testbed::new(Platform::paper_testbed()).with_trials(8, 15);
+    let tb = Testbed::new(Platform::paper_testbed()).aggregated().with_trials(8, 15);
     let scenarios = synthetic_scenarios(&tb);
     let mut errs = Vec::new();
     for s in &scenarios {
@@ -81,7 +88,7 @@ fn synthetic_accuracy_bands() {
 fn predictor_picks_correct_configs() {
     // The decision-support claim: relative ordering must be right even
     // where absolute error isn't zero.
-    let tb = Testbed::new(Platform::paper_testbed()).with_trials(6, 10);
+    let tb = Testbed::new(Platform::paper_testbed()).aggregated().with_trials(6, 10);
     let n = 19;
 
     // pipeline medium: WASS < DSS in both actual and predicted.
@@ -121,6 +128,10 @@ fn dss_pipeline_underpredicts_like_paper() {
     // Fig 4 note: "for no optimization (DSS), the prediction is 16%
     // smaller" — congestion retries the coarse model does not capture.
     // We require the same sign (under-prediction) for DSS-pipeline.
+    //
+    // Fidelity sentinel: this scenario stays on the per-frame detailed
+    // tier while the other campaigns run aggregated, so a calibration
+    // drift in the bulk-train tier cannot silently pass the whole suite.
     let tb = Testbed::new(Platform::paper_testbed()).with_trials(8, 12);
     let (a, p) = measure(&tb, &pipeline(19, PatternScale::Medium, false), &Config::dss(19));
     println!("dss pipeline: actual {a:.2}s predicted {p:.2}s");
@@ -131,7 +142,7 @@ fn dss_pipeline_underpredicts_like_paper() {
 fn hdd_lower_accuracy_but_correct_choice() {
     // Fig 10: "although prediction accuracy is lower, predictions are good
     // enough to make the correct choice between DSS and WASS".
-    let tb = Testbed::new(Platform::paper_testbed_hdd()).with_trials(6, 10);
+    let tb = Testbed::new(Platform::paper_testbed_hdd()).aggregated().with_trials(6, 10);
     let n = 19;
     for scale in [PatternScale::Medium, PatternScale::Large] {
         let (a_dss, p_dss) = measure(&tb, &reduce(n, scale, false), &Config::dss(n));

@@ -479,3 +479,118 @@ fn prop_detailed_at_least_as_slow_as_coarse() {
         assert!(detailed >= coarse, "detailed {detailed} < coarse {coarse} — protocol removed work?");
     });
 }
+
+#[test]
+fn prop_fingerprint_invariant_under_file_and_task_reorder() {
+    // The service cache key must be canonical over workload layout: a
+    // random permutation of the file array (with task references
+    // remapped) and of the task array is the same evaluation point.
+    use wfpred::service::fingerprint;
+    check("fingerprint reorder-invariant", 48, |g| {
+        let wl = random_workload(g, 4);
+        let cfg = random_config(g);
+        let plat = Platform::paper_testbed();
+        let fid = Fidelity::coarse();
+        let base = fingerprint(&wl, &cfg, &plat, &fid);
+
+        let nf = wl.files.len();
+        let mut new_index: Vec<usize> = (0..nf).collect();
+        g.rng().shuffle(&mut new_index);
+        let mut files2: Vec<Option<FileSpec>> = vec![None; nf];
+        for (old, f) in wl.files.iter().enumerate() {
+            files2[new_index[old]] = Some(f.clone());
+        }
+        let mut wl2 = Workload::new(wl.name.clone());
+        wl2.files = files2.into_iter().map(Option::unwrap).collect();
+        let mut tasks2: Vec<TaskSpec> = wl
+            .tasks
+            .iter()
+            .map(|t| {
+                let mut t2 = t.clone();
+                t2.reads = t.reads.iter().map(|&f| new_index[f]).collect();
+                t2.writes = t.writes.iter().map(|&f| new_index[f]).collect();
+                t2
+            })
+            .collect();
+        g.rng().shuffle(&mut tasks2);
+        wl2.tasks = tasks2;
+
+        assert_eq!(
+            base,
+            fingerprint(&wl2, &cfg, &plat, &fid),
+            "reordering files/tasks must not change the fingerprint"
+        );
+    });
+}
+
+#[test]
+fn prop_fingerprint_distinct_across_single_knob_changes() {
+    // Any single knob change — config axis, platform, fidelity, workload
+    // content — must move the fingerprint.
+    use wfpred::service::fingerprint;
+    check("fingerprint knob-sensitive", 48, |g| {
+        let wl = random_workload(g, 3);
+        let cfg = random_config(g);
+        let plat = Platform::paper_testbed();
+        let fid = Fidelity::coarse();
+        let base = fingerprint(&wl, &cfg, &plat, &fid);
+
+        let mut variants: Vec<Config> = Vec::new();
+        {
+            let mut c = cfg.clone();
+            c.chunk_size += Bytes::kb(1);
+            variants.push(c);
+        }
+        {
+            let mut c = cfg.clone();
+            c.replication += 1;
+            variants.push(c);
+        }
+        {
+            let mut c = cfg.clone();
+            c.io_window += 1;
+            variants.push(c);
+        }
+        {
+            let mut c = cfg.clone();
+            c.n_app += 1;
+            variants.push(c);
+        }
+        {
+            let mut c = cfg.clone();
+            c.n_storage += 1;
+            variants.push(c);
+        }
+        {
+            let mut c = cfg.clone();
+            c.location_aware = !c.location_aware;
+            variants.push(c);
+        }
+        {
+            let mut c = cfg.clone();
+            c.collocated = !c.collocated;
+            variants.push(c);
+        }
+        {
+            let mut c = cfg.clone();
+            c.placement = match c.placement {
+                Placement::RoundRobin => Placement::Local,
+                Placement::Local => Placement::RoundRobin,
+            };
+            variants.push(c);
+        }
+        for (k, v) in variants.iter().enumerate() {
+            assert_ne!(
+                base,
+                fingerprint(&wl, v, &plat, &fid),
+                "config knob {k} change must move the fingerprint"
+            );
+        }
+        assert_ne!(base, fingerprint(&wl, &cfg, &Platform::paper_testbed_10g(), &fid));
+        assert_ne!(base, fingerprint(&wl, &cfg, &plat, &Fidelity::coarse_per_frame()));
+        assert_ne!(base, fingerprint(&wl, &cfg, &plat, &Fidelity::detailed(1)));
+        let mut wl2 = wl.clone();
+        wl2.files[0].size += Bytes(1);
+        assert_ne!(base, fingerprint(&wl2, &cfg, &plat, &fid));
+    });
+}

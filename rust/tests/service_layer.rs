@@ -1,0 +1,197 @@
+//! Integration tests for the prediction-serving subsystem: warm-cache /
+//! single-flight answers are byte-identical to direct `Predictor::predict`,
+//! a warm rescore of a whole `SearchSpace` issues zero new simulations,
+//! the on-disk JSONL store warm-starts a fresh service, and surrogate
+//! answers are attributed with error estimates (never replacing exact
+//! answers when the gate is off).
+
+use wfpred::coordinator;
+use wfpred::model::{Config, Platform};
+use wfpred::predict::Predictor;
+use wfpred::search::anneal::Annealer;
+use wfpred::search::{SearchSpace, Searcher};
+use wfpred::service::{Answer, Query, Service, Source};
+use wfpred::util::units::Bytes;
+use wfpred::workload::blast::{blast, BlastParams};
+
+fn predictor() -> Predictor {
+    Predictor::new(Platform::paper_testbed())
+}
+
+#[test]
+fn warm_cache_and_single_flight_match_direct_predict() {
+    let p = predictor();
+    let svc = Service::new(p.clone());
+    let params = BlastParams { queries: 30, ..Default::default() };
+    let wl = blast(6, &params);
+    let cfg = Config::partitioned(6, 3, Bytes::kb(256));
+    let direct = p.predict(&wl, &cfg);
+
+    // Concurrent duplicate clients: one simulation, identical results.
+    let copies = coordinator::par_map_indexed(8, 8, |_| svc.evaluate(&wl, &cfg));
+    let s = svc.stats();
+    assert_eq!(s.misses, 1, "single-flight must collapse duplicates to one simulation");
+    assert_eq!(s.hits + s.dedup_waits + s.misses, 8);
+    for c in &copies {
+        assert_eq!(c.turnaround, direct.turnaround);
+        assert_eq!(c.stage_times, direct.stage_times);
+        assert_eq!(c.cost_node_secs.to_bits(), direct.cost_node_secs.to_bits());
+        assert_eq!(c.report.events, direct.report.events);
+        assert_eq!(c.report.net_bytes, direct.report.net_bytes);
+        assert_eq!(c.report.net_frames, direct.report.net_frames);
+        assert_eq!(c.report.config_label, direct.report.config_label);
+        assert_eq!(c.report.tasks.len(), direct.report.tasks.len());
+    }
+
+    // Warm hit: same answer, still one simulation.
+    let warm = svc.evaluate(&wl, &cfg);
+    assert_eq!(svc.stats().misses, 1);
+    assert_eq!(warm.turnaround, direct.turnaround);
+}
+
+#[test]
+fn warm_rescore_of_a_search_space_issues_zero_new_simulations() {
+    let p = predictor();
+    let svc = Service::new(p.clone());
+    let space = SearchSpace::fixed_cluster(10, vec![Bytes::kb(256), Bytes::mb(1)]);
+    let params = BlastParams { queries: 20, ..Default::default() };
+    let searcher = Searcher::new(&p).with_service(&svc).with_top_k(usize::MAX);
+
+    let first = searcher.search(&space, &[], |cfg| blast(cfg.n_app, &params));
+    let cold_misses = svc.stats().misses;
+    assert_eq!(
+        cold_misses as usize,
+        first.candidates.len(),
+        "cold full rescore simulates every candidate exactly once"
+    );
+
+    let second = searcher.search(&space, &[], |cfg| blast(cfg.n_app, &params));
+    assert_eq!(svc.stats().misses, cold_misses, "warm rescore must issue zero new simulations");
+    assert_eq!(first.best_time, second.best_time);
+    assert_eq!(first.best_cost, second.best_cost);
+    assert_eq!(first.pareto, second.pareto);
+    for (a, b) in first.candidates.iter().zip(&second.candidates) {
+        let (x, y) = (a.refined.as_ref().unwrap(), b.refined.as_ref().unwrap());
+        assert_eq!(x.turnaround, y.turnaround, "{}", a.config.label);
+        assert_eq!(x.report.events, y.report.events);
+    }
+
+    // The annealer shares the same cache: every grid point it visits is
+    // already memoized, so it issues zero new simulations too.
+    let r = Annealer { steps: 15, chains: 2, ..Default::default() }
+        .minimize_with(&svc, &space, |cfg| blast(cfg.n_app, &params));
+    assert_eq!(r.evaluations, 0, "annealing over a fully-scored space must be free");
+    assert_eq!(svc.stats().misses, cold_misses);
+}
+
+#[test]
+fn disk_store_warm_starts_across_service_instances() {
+    let path = std::env::temp_dir()
+        .join(format!("wfpred_service_layer_store_{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let params = BlastParams { queries: 20, ..Default::default() };
+    let query = || Query {
+        workload: blast(4, &params),
+        config: Config::partitioned(4, 3, Bytes::kb(256)),
+        family: 1,
+    };
+
+    let first_turnaround;
+    {
+        let svc = Service::new(predictor()).with_disk_store(&path).unwrap();
+        assert_eq!(svc.disk_len(), 0);
+        let answers = svc.serve_batch(&[query()], 1, 0.0);
+        match &answers[0] {
+            Answer::Exact { source: Source::Simulated, turnaround_s, .. } => {
+                first_turnaround = *turnaround_s;
+            }
+            other => panic!("expected a simulated answer, got {other:?}"),
+        }
+        assert_eq!(svc.disk_len(), 1);
+    }
+
+    // A fresh process (fresh service) replays the store and answers from
+    // disk without simulating.
+    let svc2 = Service::new(predictor()).with_disk_store(&path).unwrap();
+    assert_eq!(svc2.disk_len(), 1);
+    let answers = svc2.serve_batch(&[query()], 1, 0.0);
+    match &answers[0] {
+        Answer::Exact { source: Source::Disk, turnaround_s, .. } => {
+            assert_eq!(turnaround_s.to_bits(), first_turnaround.to_bits());
+        }
+        other => panic!("expected a disk answer, got {other:?}"),
+    }
+    assert_eq!(svc2.stats().misses, 0, "warm start must not simulate");
+    assert_eq!(svc2.stats().disk_hits, 1);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn surrogate_batch_answers_carry_estimates_and_save_simulations() {
+    let params = BlastParams { queries: 20, ..Default::default() };
+    let fam = 7u64;
+    let q = |n_app: usize| Query {
+        workload: blast(n_app, &params),
+        config: Config::partitioned(n_app, 9 - n_app, Bytes::kb(256)),
+        family: fam,
+    };
+    // Endpoints and midpoint first, so interior queries can interpolate.
+    let stream: Vec<Query> = [1usize, 8, 4, 2, 3, 5, 6, 7].iter().map(|&n| q(n)).collect();
+
+    // Gate off: every answer exact, the surrogate is never consulted.
+    let off = Service::new(predictor());
+    let answers = off.serve_batch(&stream, 2, 0.0);
+    assert!(answers.iter().all(Answer::is_exact));
+    assert_eq!(off.stats().surrogate_answers, 0);
+    assert_eq!(off.stats().misses, 8);
+
+    // Gate on (permissive): bracketed interior queries are answered by
+    // interpolation, attributed, and carry finite error estimates.
+    let on = Service::new(predictor());
+    let answers = on.serve_batch(&stream, 1, f64::INFINITY);
+    let n_surrogate = answers.iter().filter(|a| !a.is_exact()).count();
+    assert!(n_surrogate > 0, "interior queries should interpolate");
+    for a in &answers {
+        match a {
+            Answer::Exact { .. } => assert!(a.est_err().is_none()),
+            Answer::Surrogate { est_err, turnaround_s, cost_node_s, .. } => {
+                assert!(est_err.is_finite() && *est_err >= 0.0);
+                assert!(*turnaround_s > 0.0);
+                assert!(*cost_node_s > *turnaround_s, "cost = hosts x time");
+            }
+        }
+    }
+    assert!(
+        on.stats().misses < 8,
+        "surrogate must save simulations ({} issued)",
+        on.stats().misses
+    );
+    assert_eq!(on.stats().surrogate_answers as usize, n_surrogate);
+}
+
+#[test]
+fn exact_answers_always_beat_the_surrogate_once_memoized() {
+    // A point that is already memoized is served exactly even with the
+    // gate wide open — the surrogate never replaces known truth.
+    let params = BlastParams { queries: 20, ..Default::default() };
+    let fam = 9u64;
+    let q = |n_app: usize| Query {
+        workload: blast(n_app, &params),
+        config: Config::partitioned(n_app, 9 - n_app, Bytes::kb(256)),
+        family: fam,
+    };
+    let svc = Service::new(predictor());
+    // Seed the bracket, then ask for the interior point twice: first
+    // surrogate, then (after an exact evaluation) exact from memory.
+    let seed: Vec<Query> = vec![q(2), q(6)];
+    let _ = svc.serve_batch(&seed, 1, f64::INFINITY);
+    let interior = q(4);
+    let first = svc.serve_batch(std::slice::from_ref(&interior), 1, f64::INFINITY);
+    assert!(!first[0].is_exact(), "unmemoized interior point interpolates");
+    let _ = svc.evaluate(&interior.workload, &interior.config);
+    let second = svc.serve_batch(std::slice::from_ref(&interior), 1, f64::INFINITY);
+    match &second[0] {
+        Answer::Exact { source: Source::Memory, .. } => {}
+        other => panic!("memoized point must be served exactly, got {other:?}"),
+    }
+}
