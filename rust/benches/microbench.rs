@@ -15,11 +15,14 @@
 //!   (event reduction ≥ 5×, turnaround error ≤ 1%), the served-query
 //!   invariants (warm-hit latency ≪ cold simulation, dedup factor ≥
 //!   concurrent duplicate clients, surrogate answers always carry an
-//!   error estimate) and, when the baseline is a real previous run (not
-//!   the bootstrap marker), a ±10% drift gate on the machine-independent
-//!   metrics (simulated turnaround and event counts — wallclock numbers
-//!   are never gated). Exits non-zero on violation; implies
-//!   `--frame-path-only`.
+//!   error estimate), the incast stale-event accounting
+//!   (`stale_event_ratio` present and ≤ 0.5 for every `incast_*`
+//!   section) and, when the baseline is a real previous run (not the
+//!   bootstrap marker), a ±10% drift gate on the machine-independent
+//!   metrics (simulated turnaround and event counts, including the
+//!   64/256/1024-host scaling curve and the 256/1024/4096-host incast
+//!   curve — wallclock numbers are never gated). Exits non-zero on
+//!   violation; implies `--frame-path-only`.
 
 use wfpred::coordinator;
 use wfpred::model::{simulate, simulate_fid, Config, Fidelity, Platform};
@@ -79,6 +82,20 @@ fn check_frame_path(path: &str, baseline: &str, fresh: &str) -> i32 {
         failures.push("surrogate answers reported without an error estimate".into());
     }
 
+    // Stale-event accounting (absolute): every train arrival withdraws at
+    // most one superseded completion announcement, so cancelled events
+    // must stay a bounded fraction of the stream even under the deepest
+    // incast. A ratio creeping toward 1 means cancellation regressed into
+    // announcement churn; a missing ratio means the incast sections
+    // stopped reporting it.
+    for scope in ["incast_256", "incast_1024", "incast_4096"] {
+        match json_number_in(fresh, scope, "stale_event_ratio") {
+            Some(r) if (0.0..=0.5).contains(&r) => {}
+            Some(r) => failures.push(format!("{scope}.stale_event_ratio {r:.3} outside [0, 0.5]")),
+            None => failures.push(format!("fresh results lack {scope}.stale_event_ratio")),
+        }
+    }
+
     if baseline.is_empty() {
         // A checked baseline is a committed file; its absence means a
         // broken path or a deleted baseline, and must not pass silently.
@@ -90,7 +107,7 @@ fn check_frame_path(path: &str, baseline: &str, fresh: &str) -> i32 {
         println!("[bench-check] bootstrap baseline at {path}: absolute gates only");
         println!("[bench-check] commit a fresh BENCH_frame_path.json to arm the drift gate");
     } else {
-        let drift_keys: [(&str, &str); 10] = [
+        let drift_keys: [(&str, &str); 16] = [
             ("bulk", "events"),
             ("bulk", "sim_turnaround_s"),
             ("per_frame", "events"),
@@ -101,6 +118,12 @@ fn check_frame_path(path: &str, baseline: &str, fresh: &str) -> i32 {
             ("hosts_256", "sim_turnaround_s"),
             ("hosts_1024", "events"),
             ("hosts_1024", "sim_turnaround_s"),
+            ("incast_256", "events"),
+            ("incast_256", "sim_turnaround_s"),
+            ("incast_1024", "events"),
+            ("incast_1024", "sim_turnaround_s"),
+            ("incast_4096", "events"),
+            ("incast_4096", "sim_turnaround_s"),
         ];
         for (scope, key) in drift_keys {
             let (b, f) = (json_number_in(baseline, scope, key), json_number_in(fresh, scope, key));
@@ -287,6 +310,69 @@ fn main() {
         );
     }
 
+    // Incast scaling curve: an all-to-one reduce — every worker writes an
+    // intermediate, one reducer reads them all. Every protocol round
+    // (lookup, alloc, commit) lands ~n simultaneous control trains at the
+    // manager's in-NIC, so the concurrent-train count m scales with the
+    // cluster; the reduce sink adds a window-bounded data stream on top.
+    // This is the virtual-time FairStation's worst case: per-event cost
+    // must stay flat (within noise) in the concurrent-train count m
+    // (O(log m) tags; the old linear drain paid O(m) per event, O(m²) per
+    // busy period, which capped the curve near 256 hosts). The stripe is
+    // held at 64 so the curve isolates the event core rather than the
+    // O(n·stripe) placement vectors, which are a different axis. Event
+    // counts and simulated turnarounds are deterministic and drift-gated;
+    // the stale-event ratio (cancelled / (delivered + cancelled)) makes
+    // cancellation regressions visible and is gated ≤ 0.5 absolutely.
+    println!("\n== incast scaling (all-to-one reduce, 256/1024/4096 hosts) ==");
+    let mut incast = Json::obj();
+    let mut incast_curve: Vec<(usize, f64, f64)> = Vec::new(); // (hosts, ns/event, stale)
+    for hosts in [256usize, 1024, 4096] {
+        let n = hosts - 1; // workers; the manager takes host 0
+        let wl = reduce(n, PatternScale::Small, false);
+        let cfg = Config::dss(n).with_stripe(64.min(n));
+        let mut events = 0u64;
+        let mut cancelled = 0u64;
+        let mut sim_secs = 0.0;
+        let name = format!("incast: reduce-small dss ({hosts} hosts, all-to-one)");
+        let r = BenchRunner::new(1, 3).run(&name, |_| {
+            let rep = simulate(&wl, &cfg, &plat);
+            events = rep.events;
+            cancelled = rep.events_cancelled;
+            sim_secs = rep.turnaround.as_secs_f64();
+            black_box(rep.events);
+        });
+        record(&format!("incast_{hosts}"), &r, events as f64, "sim-events");
+        let ns_per_event = r.secs.mean() * 1e9 / events as f64;
+        let stale = cancelled as f64 / (events + cancelled) as f64;
+        println!(
+            "    -> {events} events + {cancelled} cancelled (stale ratio {stale:.3}), \
+             {ns_per_event:.0} ns/event"
+        );
+        incast = incast.set(
+            &format!("incast_{hosts}"),
+            Json::obj()
+                .set("hosts", hosts)
+                .set("stripe", 64u64)
+                .set("events", events)
+                .set("events_cancelled", cancelled)
+                .set("stale_event_ratio", stale)
+                .set("wall_secs", r.secs.mean())
+                .set("ns_per_event", ns_per_event)
+                .set("events_per_sec", events as f64 / r.secs.mean())
+                .set("sim_turnaround_s", sim_secs),
+        );
+        incast_curve.push((hosts, ns_per_event, stale));
+    }
+    let (h0, r0, _) = incast_curve[0];
+    let (h1, r1, _) = incast_curve[incast_curve.len() - 1];
+    println!(
+        "    -> per-event cost {r0:.0} ns at {h0} hosts vs {r1:.0} ns at {h1} hosts \
+         ({:.2}x across a {}x train-count spread)",
+        r1 / r0,
+        h1 / h0
+    );
+
     // Parallel testbed campaign: same trials, slot-ordered reduction —
     // byte-identical statistics, fraction of the wallclock.
     println!("\n== parallel testbed campaign (8 fixed trials) ==");
@@ -442,7 +528,8 @@ fn main() {
                 .set("surrogate_max_est_err", sur_max_err)
                 .set("surrogate_secs_per_query", sur_s),
         )
-        .set("scaling", scaling);
+        .set("scaling", scaling)
+        .set("incast", incast);
     let fresh = frame_path_json.render();
     write_results("BENCH_frame_path.json", &fresh);
 

@@ -23,8 +23,13 @@
 //!
 //! * **weighted-fair in-NIC service** — concurrent trains at a contended
 //!   receive queue share the server with byte-proportional rates
-//!   ([`FairStation`]) instead of serializing whole messages, matching
-//!   the frame interleaving the per-frame path produces under incast;
+//!   ([`FairStation`], a virtual-time GPS server: O(log m) per event in
+//!   the m active trains) instead of serializing whole messages, matching
+//!   the frame interleaving the per-frame path produces under incast.
+//!   Each share change moves the head's completion instant, so the
+//!   superseded announcement is *cancelled* at the engine
+//!   (`Scheduler::at_cancellable`/`cancel`) — stale completions are
+//!   counted (`SimReport::events_cancelled`), never delivered;
 //! * **exact leading/last-partial-frame bookkeeping** — the short last
 //!   frame of a non-frame-aligned message waits `full − last` behind its
 //!   siblings on the per-frame path, which the bulk path charges
@@ -43,7 +48,7 @@ use crate::model::fidelity::Fidelity;
 use crate::model::platform::Platform;
 use crate::model::proto::*;
 use crate::model::report::{OpRecord, SimReport, TaskRecord, UtilReport};
-use crate::sim::{FairStation, Scheduler, SimState, Simulation, Station, StationStats};
+use crate::sim::{EventToken, FairStation, Scheduler, SimState, Simulation, Station, StationStats};
 use crate::util::rng::Rng;
 use crate::util::units::{Bytes, SimTime};
 use crate::workload::{FileHint, Workload};
@@ -81,10 +86,14 @@ struct TrainSvc {
 /// An in-NIC receive queue. The per-frame path keeps the strict FIFO of
 /// individual frames; the bulk path services concurrent trains
 /// weighted-fair ([`FairStation`]) so incast messages interleave like
-/// their frames would instead of serializing whole trains.
+/// their frames would instead of serializing whole trains. The fair
+/// station has exactly one completion announcement outstanding at a time
+/// (`pending`): an arrival changes the fair shares, so the superseded
+/// event is cancelled at the engine and the new announcement scheduled in
+/// its place — stale completions never reach the handler.
 pub(crate) enum NicIn {
     Fifo(Station<Frame>),
-    Fair(FairStation<Frame>),
+    Fair { st: FairStation<Frame>, pending: Option<EventToken> },
 }
 
 impl NicIn {
@@ -92,21 +101,21 @@ impl NicIn {
     pub(crate) fn queue_len(&self) -> usize {
         match self {
             NicIn::Fifo(st) => st.queue_len(),
-            NicIn::Fair(fq) => fq.queue_len(),
+            NicIn::Fair { st, .. } => st.queue_len(),
         }
     }
 
     pub(crate) fn stats(&self) -> &StationStats {
         match self {
             NicIn::Fifo(st) => &st.stats,
-            NicIn::Fair(fq) => &fq.stats,
+            NicIn::Fair { st, .. } => &st.stats,
         }
     }
 
     fn finish(&mut self, now: SimTime) {
         match self {
             NicIn::Fifo(st) => st.finish(now),
-            NicIn::Fair(fq) => fq.finish(now),
+            NicIn::Fair { st, .. } => st.finish(now),
         }
     }
 }
@@ -125,9 +134,10 @@ pub enum Ev {
     /// A frame finished service at host's in-NIC (per-frame FIFO path).
     NicInDone(usize),
     /// A train finished weighted-fair service at host's in-NIC (bulk
-    /// path). Carries the announcement epoch: a later arrival changes the
-    /// fair shares and re-announces, making this event stale.
-    NicInFairDone(usize, u64),
+    /// path). Only ever delivered for the live announcement: a later
+    /// arrival changes the fair shares, and the superseded event is
+    /// cancelled at the engine instead of firing stale.
+    NicInFairDone(usize),
     /// A frame arrives at the destination host (post-latency).
     FrameArrive(usize, Frame),
     /// A component station finished serving a message.
@@ -223,7 +233,7 @@ impl<'a> World<'a> {
             nic_in: (0..h)
                 .map(|_| {
                     if aggregated {
-                        NicIn::Fair(FairStation::new())
+                        NicIn::Fair { st: FairStation::new(), pending: None }
                     } else {
                         NicIn::Fifo(Station::new())
                     }
@@ -558,7 +568,7 @@ impl<'a> World<'a> {
                     sched.at(t, Ev::NicInDone(host));
                 }
             }
-            NicIn::Fair(fq) => {
+            NicIn::Fair { st, pending } => {
                 // Bulk path: the train shares the in-NIC weighted by its
                 // wire bytes. Exact partial-frame bookkeeping: per-frame,
                 // a short last frame arrives early (it left the out-NIC
@@ -568,9 +578,16 @@ impl<'a> World<'a> {
                 let tail_wait =
                     if frame.frames > 1 { ts.unit.as_ns() - ts.last.as_ns() } else { 0 };
                 let weight = frame.bytes.as_u64().max(1);
-                let (t, epoch) =
-                    fq.arrive(now, frame, svc, frame.frames as u64, weight, tail_wait);
-                sched.at(t, Ev::NicInFairDone(host, epoch));
+                let t = st.arrive(now, frame, svc, frame.frames as u64, weight, tail_wait);
+                // The new shares move the head's completion: withdraw the
+                // superseded announcement and schedule the live one. The
+                // token is always live here — a fired announcement clears
+                // `pending` in its handler before anything else runs.
+                if let Some(tok) = pending.take() {
+                    let withdrawn = sched.cancel(tok);
+                    debug_assert!(withdrawn, "pending fair completion was already spent");
+                }
+                *pending = Some(sched.at_cancellable(t, Ev::NicInFairDone(host)));
             }
         }
     }
@@ -578,7 +595,7 @@ impl<'a> World<'a> {
     fn on_nic_in_done(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, host: usize) {
         let st = match &mut self.nic_in[host] {
             NicIn::Fifo(st) => st,
-            NicIn::Fair(_) => unreachable!("per-frame completion on a fair in-NIC"),
+            NicIn::Fair { .. } => unreachable!("per-frame completion on a fair in-NIC"),
         };
         let (frame, next) = st.complete(now);
         if let Some(t) = next {
@@ -591,22 +608,17 @@ impl<'a> World<'a> {
         }
     }
 
-    fn on_nic_in_fair_done(
-        &mut self,
-        sched: &mut Scheduler<Ev>,
-        now: SimTime,
-        host: usize,
-        epoch: u64,
-    ) {
-        let fq = match &mut self.nic_in[host] {
-            NicIn::Fair(fq) => fq,
+    fn on_nic_in_fair_done(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, host: usize) {
+        let (st, pending) = match &mut self.nic_in[host] {
+            NicIn::Fair { st, pending } => (st, pending),
             NicIn::Fifo(_) => unreachable!("fair completion on a per-frame in-NIC"),
         };
-        let Some((frame, next)) = fq.complete(now, epoch) else {
-            return; // stale: a later arrival re-announced the completion
-        };
-        if let Some((t, e)) = next {
-            sched.at(t, Ev::NicInFairDone(host, e));
+        // This event was the live announcement (stale ones are cancelled
+        // at the engine and never delivered); its token is now spent.
+        *pending = None;
+        let (frame, next) = st.complete(now);
+        if let Some(t) = next {
+            *pending = Some(sched.at_cancellable(t, Ev::NicInFairDone(host)));
         }
         if frame.last {
             // Message fully assembled: hand to destination component queue.
@@ -965,7 +977,7 @@ impl<'a> World<'a> {
         self.comp_arrive(sched, now, CompId::Client(client), msg_id);
     }
 
-    fn finish_report(mut self, end: SimTime, events: u64) -> SimReport {
+    fn finish_report(mut self, end: SimTime, events: u64, events_cancelled: u64) -> SimReport {
         for st in self.nic_out.iter_mut() {
             st.finish(end);
         }
@@ -1014,6 +1026,7 @@ impl<'a> World<'a> {
             capacity_overflows: overflows,
             util,
             events,
+            events_cancelled,
             conn_retries: self.conn_retries,
         }
     }
@@ -1026,7 +1039,7 @@ impl<'a> SimState for World<'a> {
         match ev {
             Ev::NicOutDone(h) => self.on_nic_out_done(sched, now, h),
             Ev::NicInDone(h) => self.on_nic_in_done(sched, now, h),
-            Ev::NicInFairDone(h, epoch) => self.on_nic_in_fair_done(sched, now, h, epoch),
+            Ev::NicInFairDone(h) => self.on_nic_in_fair_done(sched, now, h),
             Ev::FrameArrive(h, f) => self.on_frame_arrive(sched, now, h, f),
             Ev::CompDone(c) => self.on_comp_done(sched, now, c),
             Ev::Release(t) => self.driver_release(sched, now, t),
@@ -1057,6 +1070,9 @@ pub fn simulate_fid(wl: &Workload, cfg: &Config, plat: &Platform, fid: Fidelity)
 
     let stagger = fid.stagger_mean;
     let mut sim = Simulation::new(World::new(wl, cfg, plat, fid));
+    // Pre-size the event arena past the initial burst so the frame-path
+    // hot loop runs entirely on recycled slots.
+    sim.sched.reserve(256 + wl.tasks.len() * 4);
     // Release initially-runnable tasks (staggered under detailed fidelity:
     // "coordination overheads make them slightly staggered", §5).
     let initial = sim.state.driver.initially_ready();
@@ -1071,6 +1087,7 @@ pub fn simulate_fid(wl: &Workload, cfg: &Config, plat: &Platform, fid: Fidelity)
     }
     let end = sim.run_capped(50_000_000_000);
     let events = sim.sched.processed();
+    let cancelled = sim.sched.cancelled();
     let done = sim.state.driver.finished_tasks();
     assert_eq!(
         done,
@@ -1079,5 +1096,5 @@ pub fn simulate_fid(wl: &Workload, cfg: &Config, plat: &Platform, fid: Fidelity)
         wl.tasks.len(),
         cfg.label
     );
-    sim.state.finish_report(end, events)
+    sim.state.finish_report(end, events, cancelled)
 }

@@ -73,6 +73,13 @@ pub struct SimReport {
     pub util: UtilReport,
     /// Total simulation events processed (cost metric for §3.3).
     pub events: u64,
+    /// Completion announcements withdrawn before firing (bulk-path
+    /// weighted-fair in-NICs cancel the superseded announcement whenever
+    /// an arrival changes the fair shares). Stale work the engine skipped
+    /// for a slab-generation compare instead of a delivered event; the
+    /// microbench reports `events_cancelled / (events + events_cancelled)`
+    /// as the stale-event ratio.
+    pub events_cancelled: u64,
     /// Connection SYN retries (detailed fidelity only; 0 for the
     /// predictor — one of the paper's named sources of real-system noise).
     pub conn_retries: u64,
@@ -142,6 +149,7 @@ mod tests {
                 nic_qlen: vec![],
             },
             events: 0,
+            events_cancelled: 0,
             conn_retries: 0,
         }
     }

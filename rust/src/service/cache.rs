@@ -2,11 +2,12 @@
 //!
 //! Shards bound lock contention when many serving threads hit the cache
 //! concurrently (the fingerprint's mixed high word picks the shard, so
-//! shard load is uniform). Within a shard, recency is a monotonic tick
-//! per access and eviction scans for the minimum — O(shard size), which
-//! at the default capacity (a few hundred entries per shard) is far
-//! cheaper than the simulations the cache is saving, and avoids an
-//! intrusive-list implementation the crate would have to maintain.
+//! shard load is uniform). Within a shard, recency is an intrusive
+//! doubly-linked list threaded through a slot arena (indices, not
+//! pointers): a hit unlinks its node and relinks it at the head, eviction
+//! pops the tail — both O(1), independent of shard size, so the cache
+//! stays cheap at the 10⁵+-entry capacities fleet-wide campaigns want
+//! (the previous min-scan eviction was O(shard size) per insert).
 
 use super::fingerprint::Fingerprint;
 use crate::predict::Prediction;
@@ -15,15 +16,113 @@ use std::sync::{Arc, Mutex};
 
 pub const DEFAULT_SHARDS: usize = 16;
 
-struct Entry {
+/// Vacant link slot.
+const NIL: u32 = u32::MAX;
+
+/// A recency-list node in the slot arena. `prev` is toward the
+/// most-recently-used end (the head), `next` toward the eviction end.
+struct Node {
+    fp: Fingerprint,
     value: Arc<Prediction>,
-    last_used: u64,
+    prev: u32,
+    next: u32,
 }
 
-#[derive(Default)]
 struct Shard {
-    map: HashMap<Fingerprint, Entry>,
-    tick: u64,
+    map: HashMap<Fingerprint, u32>,
+    nodes: Vec<Option<Node>>,
+    free: Vec<u32>,
+    /// Most recently used (NIL when empty).
+    head: u32,
+    /// Least recently used — the eviction victim (NIL when empty).
+    tail: u32,
+}
+
+impl Default for Shard {
+    fn default() -> Shard {
+        Shard { map: HashMap::new(), nodes: Vec::new(), free: Vec::new(), head: NIL, tail: NIL }
+    }
+}
+
+impl Shard {
+    fn node(&self, i: u32) -> &Node {
+        self.nodes[i as usize].as_ref().expect("linked slot is occupied")
+    }
+
+    fn node_mut(&mut self, i: u32) -> &mut Node {
+        self.nodes[i as usize].as_mut().expect("linked slot is occupied")
+    }
+
+    /// Detach `i` from the recency list (its links become dangling; the
+    /// caller relinks or frees it).
+    fn unlink(&mut self, i: u32) {
+        let (prev, next) = {
+            let n = self.node(i);
+            (n.prev, n.next)
+        };
+        match prev {
+            NIL => self.head = next,
+            p => self.node_mut(p).next = next,
+        }
+        match next {
+            NIL => self.tail = prev,
+            x => self.node_mut(x).prev = prev,
+        }
+    }
+
+    /// Link `i` at the most-recently-used end.
+    fn push_front(&mut self, i: u32) {
+        let old = self.head;
+        {
+            let n = self.node_mut(i);
+            n.prev = NIL;
+            n.next = old;
+        }
+        match old {
+            NIL => self.tail = i,
+            h => self.node_mut(h).prev = i,
+        }
+        self.head = i;
+    }
+
+    /// Mark `i` as just used.
+    fn touch(&mut self, i: u32) {
+        if self.head != i {
+            self.unlink(i);
+            self.push_front(i);
+        }
+    }
+
+    /// Evict the least-recently-used entry (no-op on an empty shard).
+    fn evict_tail(&mut self) {
+        let i = self.tail;
+        if i == NIL {
+            return;
+        }
+        self.unlink(i);
+        let n = self.nodes[i as usize].take().expect("tail slot is occupied");
+        self.map.remove(&n.fp);
+        self.free.push(i);
+    }
+
+    /// Place a brand-new node at the MRU position, reusing a free slot.
+    fn insert_front(&mut self, fp: Fingerprint, value: Arc<Prediction>) {
+        let node = Node { fp, value, prev: NIL, next: NIL };
+        let i = match self.free.pop() {
+            Some(i) => {
+                debug_assert!(self.nodes[i as usize].is_none(), "free-list slot in use");
+                self.nodes[i as usize] = Some(node);
+                i
+            }
+            None => {
+                let i = self.nodes.len() as u32;
+                self.nodes.push(Some(node));
+                i
+            }
+        };
+        self.push_front(i);
+        self.map.insert(fp, i);
+    }
 }
 
 /// The sharded LRU.
@@ -53,24 +152,24 @@ impl ShardedLru {
 
     pub fn get(&self, fp: &Fingerprint) -> Option<Arc<Prediction>> {
         let mut s = self.shard(fp).lock().unwrap();
-        s.tick += 1;
-        let tick = s.tick;
-        let e = s.map.get_mut(fp)?;
-        e.last_used = tick;
-        Some(e.value.clone())
+        let i = *s.map.get(fp)?;
+        s.touch(i);
+        Some(s.node(i).value.clone())
     }
 
     pub fn insert(&self, fp: Fingerprint, value: Arc<Prediction>) {
         let mut s = self.shard(&fp).lock().unwrap();
-        s.tick += 1;
-        let tick = s.tick;
-        if !s.map.contains_key(&fp) && s.map.len() >= self.per_shard_capacity {
-            let victim = s.map.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| *k);
-            if let Some(victim) = victim {
-                s.map.remove(&victim);
-            }
+        if let Some(&i) = s.map.get(&fp) {
+            // Refresh in place: overwriting an existing key must not evict
+            // a neighbor.
+            s.node_mut(i).value = value;
+            s.touch(i);
+            return;
         }
-        s.map.insert(fp, Entry { value, last_used: tick });
+        if s.map.len() >= self.per_shard_capacity {
+            s.evict_tail();
+        }
+        s.insert_front(fp, value);
     }
 
     pub fn len(&self) -> usize {
@@ -137,5 +236,49 @@ mod tests {
         c.insert(fp(2), p.clone());
         c.insert(fp(2), p.clone());
         assert_eq!(c.len(), 2, "overwriting an existing key must not evict a neighbor");
+    }
+
+    #[test]
+    fn eviction_order_survives_interleaved_hits() {
+        // The intrusive list must track recency through an arbitrary
+        // get/insert interleaving, including slot reuse after evictions.
+        let c = ShardedLru::with_shards(3, 1);
+        let p = pred();
+        c.insert(fp(1), p.clone());
+        c.insert(fp(2), p.clone());
+        c.insert(fp(3), p.clone()); // MRU→LRU: 3 2 1
+        assert!(c.get(&fp(1)).is_some()); // 1 3 2
+        assert!(c.get(&fp(2)).is_some()); // 2 1 3
+        c.insert(fp(4), p.clone()); // evicts 3 → 4 2 1
+        assert!(c.get(&fp(3)).is_none(), "3 was the LRU at insert(4)");
+        c.insert(fp(5), p.clone()); // evicts 1 → 5 4 2
+        assert!(c.get(&fp(1)).is_none(), "1 was the LRU at insert(5)");
+        assert_eq!(c.len(), 3);
+        for k in [2u64, 4, 5] {
+            assert!(c.get(&fp(k)).is_some(), "{k} must have survived");
+        }
+        // The verification gets reordered recency to 5 4 2. One more
+        // round on recycled slots: rescue the current LRU, then displace.
+        assert!(c.get(&fp(2)).is_some()); // 2 5 4
+        c.insert(fp(6), p.clone()); // evicts 4
+        assert!(c.get(&fp(4)).is_none(), "4 was the LRU after 2 was touched");
+        assert!(c.get(&fp(2)).is_some());
+        assert!(c.get(&fp(5)).is_some());
+        assert!(c.get(&fp(6)).is_some());
+    }
+
+    #[test]
+    fn single_entry_shard_churn() {
+        // head == tail edge cases: repeated insert/evict on capacity 1.
+        let c = ShardedLru::with_shards(1, 1);
+        let p = pred();
+        for k in 0..10u64 {
+            c.insert(fp(k), p.clone());
+            assert_eq!(c.len(), 1);
+            assert!(c.get(&fp(k)).is_some());
+            if k > 0 {
+                assert!(c.get(&fp(k - 1)).is_none());
+            }
+        }
     }
 }

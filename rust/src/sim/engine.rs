@@ -4,46 +4,96 @@
 //! implements [`SimState::handle`], which receives each event in
 //! timestamp order (FIFO among equal timestamps, enforced by a sequence
 //! number) together with a [`Scheduler`] for scheduling follow-up events.
+//!
+//! ## Slab-backed entries and cancellation
+//!
+//! Event payloads live in a slab arena whose slots are recycled through a
+//! free list, so the steady-state frame path allocates nothing per event
+//! (the heap itself holds small plain-data keys). The arena also gives
+//! events an identity: [`Scheduler::at_cancellable`] returns an
+//! [`EventToken`] and [`Scheduler::cancel`] retires the event in O(1)
+//! without touching the heap — the dead key is skipped for the cost of a
+//! slab-generation compare when it eventually surfaces. This is what lets
+//! the weighted-fair NIC stations withdraw a superseded completion
+//! announcement instead of delivering a stale event to the model
+//! (`model/engine.rs`; the cancelled count is reported as
+//! `SimReport::events_cancelled`).
 
 use crate::util::units::SimTime;
 use std::collections::BinaryHeap;
 
-/// An event queue entry: min-heap by (time, seq).
-struct Entry<Ev> {
+/// An event-queue key: min-heap by (time, seq). The payload stays in the
+/// slab; `seq` doubles as the slot generation (it is unique per scheduled
+/// event, so a key whose `seq` no longer matches its slot is dead).
+struct HeapKey {
     time: SimTime,
     seq: u64,
-    ev: Ev,
+    slot: u32,
 }
 
-impl<Ev> PartialEq for Entry<Ev> {
+impl PartialEq for HeapKey {
     fn eq(&self, other: &Self) -> bool {
         self.time == other.time && self.seq == other.seq
     }
 }
-impl<Ev> Eq for Entry<Ev> {}
-impl<Ev> PartialOrd for Entry<Ev> {
+impl Eq for HeapKey {}
+impl PartialOrd for HeapKey {
     fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
         Some(self.cmp(other))
     }
 }
-impl<Ev> Ord for Entry<Ev> {
+impl Ord for HeapKey {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
         // BinaryHeap is a max-heap: reverse for earliest-first.
         other.time.cmp(&self.time).then(other.seq.cmp(&self.seq))
     }
 }
 
+/// A slab slot: `seq` identifies the event currently occupying it
+/// ([`FREE_SEQ`] when vacant), `ev` its payload.
+struct Slot<Ev> {
+    seq: u64,
+    ev: Option<Ev>,
+}
+
+/// Sentinel for a vacant slot. Event sequence numbers start at 1 and
+/// count up, so no live event ever carries it.
+const FREE_SEQ: u64 = u64::MAX;
+
+/// Handle to a scheduled event, returned by [`Scheduler::at_cancellable`].
+/// Pass it to [`Scheduler::cancel`] to retire the event before it fires;
+/// once the event has been delivered (or cancelled) the token is inert —
+/// a late `cancel` is a no-op returning `false`.
+#[derive(Clone, Copy, Debug)]
+pub struct EventToken {
+    slot: u32,
+    seq: u64,
+}
+
 /// Schedules future events; handed to [`SimState::handle`].
 pub struct Scheduler<Ev> {
-    heap: BinaryHeap<Entry<Ev>>,
+    heap: BinaryHeap<HeapKey>,
+    slots: Vec<Slot<Ev>>,
+    free: Vec<u32>,
     now: SimTime,
     seq: u64,
     processed: u64,
+    cancelled: u64,
+    live: usize,
 }
 
 impl<Ev> Scheduler<Ev> {
     pub fn new() -> Self {
-        Scheduler { heap: BinaryHeap::new(), now: SimTime::ZERO, seq: 0, processed: 0 }
+        Scheduler {
+            heap: BinaryHeap::new(),
+            slots: Vec::new(),
+            free: Vec::new(),
+            now: SimTime::ZERO,
+            seq: 0,
+            processed: 0,
+            cancelled: 0,
+            live: 0,
+        }
     }
 
     /// Current virtual time.
@@ -51,21 +101,104 @@ impl<Ev> Scheduler<Ev> {
         self.now
     }
 
-    /// Total events processed so far.
+    /// Total events delivered so far (cancelled events are never
+    /// delivered and do not count).
     pub fn processed(&self) -> u64 {
         self.processed
     }
 
-    /// Events currently pending.
-    pub fn pending(&self) -> usize {
-        self.heap.len()
+    /// Events cancelled before delivery ([`Scheduler::cancel`]).
+    pub fn cancelled(&self) -> u64 {
+        self.cancelled
     }
 
-    /// Schedule `ev` at absolute time `t` (must not be in the past).
-    pub fn at(&mut self, t: SimTime, ev: Ev) {
-        debug_assert!(t >= self.now, "scheduling into the past: {t} < {}", self.now);
+    /// Live (scheduled, not yet delivered or cancelled) events.
+    pub fn pending(&self) -> usize {
+        self.live
+    }
+
+    /// Pre-size the event queue and entry arena for about `n` concurrently
+    /// pending events, so the hot loop starts from steady state instead of
+    /// growing through it.
+    pub fn reserve(&mut self, n: usize) {
+        let extra = n.saturating_sub(self.live);
+        self.heap.reserve(extra);
+        self.slots.reserve(extra);
+        self.free.reserve(extra);
+    }
+
+    /// Claim a slab slot for `ev` under the current `self.seq`.
+    fn alloc_slot(&mut self, ev: Ev) -> u32 {
+        match self.free.pop() {
+            Some(i) => {
+                let s = &mut self.slots[i as usize];
+                debug_assert!(s.ev.is_none() && s.seq == FREE_SEQ, "free-list slot in use");
+                s.seq = self.seq;
+                s.ev = Some(ev);
+                i
+            }
+            None => {
+                let i = self.slots.len() as u32;
+                self.slots.push(Slot { seq: self.seq, ev: Some(ev) });
+                i
+            }
+        }
+    }
+
+    fn push(&mut self, t: SimTime, ev: Ev) -> EventToken {
         self.seq += 1;
-        self.heap.push(Entry { time: t.max(self.now), seq: self.seq, ev });
+        let seq = self.seq;
+        let slot = self.alloc_slot(ev);
+        self.heap.push(HeapKey { time: t, seq, slot });
+        self.live += 1;
+        EventToken { slot, seq }
+    }
+
+    /// Schedule `ev` at absolute time `t`. Scheduling into the past is a
+    /// programming error and panics (in release builds too — the check is
+    /// one predictable branch; the alternative is a silently rewinding
+    /// clock). Callers that *mean* "no earlier than now" say so with
+    /// [`Scheduler::at_or_now`].
+    pub fn at(&mut self, t: SimTime, ev: Ev) {
+        assert!(t >= self.now, "scheduling into the past: {t} < {}", self.now);
+        let _ = self.push(t, ev);
+    }
+
+    /// Schedule `ev` at `t`, clamped to the current time if `t` is
+    /// already past. Returns the time actually scheduled so callers can
+    /// observe the clamp (e.g. log or account a deadline overrun) instead
+    /// of having it silently absorbed.
+    pub fn at_or_now(&mut self, t: SimTime, ev: Ev) -> SimTime {
+        let t = t.max(self.now);
+        let _ = self.push(t, ev);
+        t
+    }
+
+    /// Schedule `ev` at absolute time `t` and return a token that can
+    /// retire it before delivery ([`Scheduler::cancel`]). Past-time rules
+    /// are as for [`Scheduler::at`].
+    #[must_use = "hold the token if the event may need cancelling"]
+    pub fn at_cancellable(&mut self, t: SimTime, ev: Ev) -> EventToken {
+        assert!(t >= self.now, "scheduling into the past: {t} < {}", self.now);
+        self.push(t, ev)
+    }
+
+    /// Cancel a previously scheduled event. Returns `true` when the event
+    /// was still pending (it will now never be delivered); `false` when it
+    /// had already fired or been cancelled. O(1): the payload slot is
+    /// recycled immediately and the heap key is skipped lazily when it
+    /// surfaces.
+    pub fn cancel(&mut self, tok: EventToken) -> bool {
+        let s = &mut self.slots[tok.slot as usize];
+        if s.seq != tok.seq {
+            return false;
+        }
+        s.seq = FREE_SEQ;
+        s.ev = None;
+        self.free.push(tok.slot);
+        self.cancelled += 1;
+        self.live -= 1;
+        true
     }
 
     /// Schedule `ev` after a delay `dt`. Uses the same saturating
@@ -82,12 +215,23 @@ impl<Ev> Scheduler<Ev> {
     }
 
     fn pop(&mut self) -> Option<(SimTime, Ev)> {
-        self.heap.pop().map(|e| {
-            debug_assert!(e.time >= self.now, "event queue went backwards");
-            self.now = e.time;
+        while let Some(k) = self.heap.pop() {
+            let s = &mut self.slots[k.slot as usize];
+            if s.seq != k.seq {
+                // Cancelled: the slot was retired (and possibly reused
+                // under a newer seq). Skip the dead key.
+                continue;
+            }
+            let ev = s.ev.take().expect("live slot without a payload");
+            s.seq = FREE_SEQ;
+            self.free.push(k.slot);
+            self.live -= 1;
+            debug_assert!(k.time >= self.now, "event queue went backwards");
+            self.now = k.time;
             self.processed += 1;
-            (e.time, e.ev)
-        })
+            return Some((k.time, ev));
+        }
+        None
     }
 }
 
@@ -232,5 +376,99 @@ mod tests {
         sim.run();
         assert_eq!(sim.state.log, vec!["first", "second"]);
         assert_eq!(sim.sched.now().as_ns(), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduling into the past")]
+    fn scheduling_into_the_past_panics() {
+        let mut sim = Simulation::new(Recorder { seen: vec![], chain_left: 0 });
+        sim.sched.at(SimTime::from_ns(10), 1);
+        sim.run();
+        sim.sched.at(SimTime::from_ns(5), 2);
+    }
+
+    #[test]
+    fn at_or_now_clamps_and_reports_the_clamp() {
+        let mut sim = Simulation::new(Recorder { seen: vec![], chain_left: 0 });
+        sim.sched.at(SimTime::from_ns(10), 1);
+        sim.run();
+        // Past time: clamped to now, and the caller can see it was.
+        let t = sim.sched.at_or_now(SimTime::from_ns(5), 2);
+        assert_eq!(t, SimTime::from_ns(10), "clamped to now");
+        // Future time: passes through unchanged.
+        let t = sim.sched.at_or_now(SimTime::from_ns(25), 3);
+        assert_eq!(t, SimTime::from_ns(25));
+        sim.run();
+        assert_eq!(sim.state.seen, vec![(10, 1), (10, 2), (25, 3)]);
+    }
+
+    #[test]
+    fn cancelled_events_are_never_delivered() {
+        let mut sim = Simulation::new(Recorder { seen: vec![], chain_left: 0 });
+        let tok = sim.sched.at_cancellable(SimTime::from_ns(10), 1);
+        sim.sched.at(SimTime::from_ns(20), 2);
+        assert_eq!(sim.sched.pending(), 2);
+        assert!(sim.sched.cancel(tok), "first cancel retires the event");
+        assert!(!sim.sched.cancel(tok), "second cancel is inert");
+        assert_eq!(sim.sched.pending(), 1);
+        sim.run();
+        assert_eq!(sim.state.seen, vec![(20, 2)], "only the live event fired");
+        assert_eq!(sim.sched.processed(), 1, "skipped keys are not processed events");
+        assert_eq!(sim.sched.cancelled(), 1);
+    }
+
+    #[test]
+    fn cancel_after_delivery_is_inert() {
+        let mut sim = Simulation::new(Recorder { seen: vec![], chain_left: 0 });
+        let tok = sim.sched.at_cancellable(SimTime::from_ns(10), 1);
+        sim.run();
+        assert!(!sim.sched.cancel(tok), "the event already fired");
+        assert_eq!(sim.sched.cancelled(), 0);
+    }
+
+    #[test]
+    fn cancel_and_reschedule_keeps_only_the_replacement() {
+        // The weighted-fair NIC pattern: each announcement supersedes the
+        // previous one; only the latest may be delivered.
+        let mut sim = Simulation::new(Recorder { seen: vec![], chain_left: 0 });
+        let mut tok = sim.sched.at_cancellable(SimTime::from_ns(10), 1);
+        for (t, ev) in [(15u64, 2u32), (12, 3), (30, 4)] {
+            assert!(sim.sched.cancel(tok));
+            tok = sim.sched.at_cancellable(SimTime::from_ns(t), ev);
+        }
+        sim.run();
+        assert_eq!(sim.state.seen, vec![(30, 4)]);
+        assert_eq!(sim.sched.cancelled(), 3);
+    }
+
+    #[test]
+    fn slab_slots_are_recycled_not_grown() {
+        // A long chain of one-at-a-time events must keep reusing the same
+        // slot instead of growing the arena — the "no allocation per
+        // event" property of the frame-path hot loop.
+        let mut sim = Simulation::new(Recorder { seen: vec![], chain_left: 10_000 });
+        sim.sched.reserve(4);
+        sim.sched.at(SimTime::ZERO, 99);
+        sim.run();
+        assert_eq!(sim.state.seen.len(), 10_001);
+        assert!(
+            sim.sched.slots.len() <= 2,
+            "steady-state chain grew the arena to {} slots",
+            sim.sched.slots.len()
+        );
+    }
+
+    #[test]
+    fn slot_reuse_does_not_resurrect_old_tokens() {
+        // A token for a delivered event whose slot was since reused by a
+        // newer event must not cancel the newcomer (seq acts as the
+        // generation).
+        let mut sim = Simulation::new(Recorder { seen: vec![], chain_left: 0 });
+        let old = sim.sched.at_cancellable(SimTime::from_ns(1), 1);
+        sim.run();
+        let _new = sim.sched.at_cancellable(SimTime::from_ns(2), 2); // reuses the slot
+        assert!(!sim.sched.cancel(old), "stale token must miss");
+        sim.run();
+        assert_eq!(sim.state.seen, vec![(1, 1), (2, 2)]);
     }
 }

@@ -14,5 +14,9 @@
 pub mod engine;
 pub mod station;
 
-pub use engine::{Scheduler, SimState, Simulation};
+pub use engine::{EventToken, Scheduler, SimState, Simulation};
 pub use station::{FairStation, Station, StationStats};
+// The linear-scan equivalence oracle, compiled for the integration
+// proptests but kept out of the supported API surface.
+#[doc(hidden)]
+pub use station::RefFairStation;

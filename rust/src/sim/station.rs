@@ -33,13 +33,30 @@
 //! weights, so equal-sized trains arriving together finish together (as
 //! their interleaved frames would), a lone train gets the full rate (the
 //! uncontended path stays bit-exact), and the server is busy exactly when
-//! work is pending (busy integrals are conserved). Completion times change
-//! whenever membership changes, so announced completions carry an *epoch*:
-//! an event whose epoch is stale is simply ignored by the caller — at most
-//! one stale event per arrival, keeping events O(1) per train.
+//! work is pending (busy integrals are conserved).
+//!
+//! The implementation is **virtual-time** GPS: a virtual clock advances at
+//! `1 / Σ weights` of real time while the server is busy, every train is
+//! stamped once, at arrival, with the virtual *finish tag*
+//! `V + service / weight`, and — because tags never change and `V` is
+//! monotone — the completion order is simply ascending tag order. A
+//! `BinaryHeap` of tags plus incrementally maintained weight/unit totals
+//! make every operation O(log m) in the m concurrently active trains; no
+//! per-event drain over the actives, no linear head scan (the O(m²)
+//! busy-period cost that capped wide incast, see PERF.md §Frame path).
+//! The announced real completion time of the minimal tag *does* change
+//! whenever membership changes — the caller withdraws the superseded
+//! announcement through the engine's cancellable events
+//! (`sim::engine::EventToken`) rather than receiving stale completions.
+//!
+//! [`RefFairStation`] keeps the old linear-scan shape (per-event walk over
+//! the actives, scanned totals) computing the *same* virtual-time formulas
+//! ([`vtmath`]): it is the O(m) reference oracle the equivalence proptests
+//! drive in lockstep with [`FairStation`], and every announced time,
+//! completion, and statistic must match bit-for-bit.
 
 use crate::util::units::SimTime;
-use std::collections::VecDeque;
+use std::collections::{BinaryHeap, VecDeque};
 
 /// Accumulated station statistics.
 #[derive(Clone, Debug, Default)]
@@ -229,43 +246,115 @@ impl<T> Station<T> {
     }
 }
 
-/// An entry in weighted-fair service: remaining dedicated-service time
-/// drains at `weight / Σ weights` of the server rate.
+/// The virtual-time GPS formulas, shared verbatim by [`FairStation`] and
+/// [`RefFairStation`] so the two cannot disagree by a rounding mode: the
+/// equivalence proptests assert bit-identical announced times, and these
+/// helpers are the single place the floating-point arithmetic lives.
+///
+/// All inputs are exact integers (ns, bytes) represented in `f64`; the
+/// only inexact operations are the two divisions and the final product.
+pub mod vtmath {
+    /// Virtual time after `dt_ns` of busy real time at total weight `w`.
+    #[inline(always)]
+    pub fn advance(vt: f64, dt_ns: u64, total_weight: f64) -> f64 {
+        vt + dt_ns as f64 / total_weight
+    }
+
+    /// Virtual finish tag of a train arriving at virtual time `vt`
+    /// needing `svc_ns` dedicated service at fair-share weight `weight`.
+    #[inline(always)]
+    pub fn finish_tag(vt: f64, svc_ns: u64, weight: f64) -> f64 {
+        vt + svc_ns as f64 / weight
+    }
+
+    /// Real ns until the tag `tag` is reached from virtual time `vt` at
+    /// total weight `w`. Rounds up to the next whole ns and clamps at
+    /// zero (an announcement rounded up can leave `vt` a hair past the
+    /// next tag when its event fires).
+    #[inline(always)]
+    pub fn completion_dt(tag: f64, vt: f64, total_weight: f64) -> u64 {
+        ((tag - vt) * total_weight).max(0.0).ceil() as u64
+    }
+}
+
+/// An active train in virtual-time weighted-fair service. The finish tag
+/// is assigned once, at arrival, and never changes; the heap orders by
+/// `(tag, seq)`.
 #[derive(Debug)]
-struct FairEntry<T> {
-    item: T,
-    /// Remaining dedicated-service time in ns (exactly integer-valued at
-    /// arrival; fractional only while sharing).
-    rem: f64,
+struct VtEntry<T> {
+    /// Virtual finish tag: `arrival_vt + svc / weight`.
+    tag: f64,
+    /// Arrival order — FIFO tie-break between equal tags.
+    seq: u64,
+    /// Virtual time at arrival (uncontended-exactness fast path).
+    arrival_vt: f64,
+    /// Dedicated service in ns (exact integer).
+    svc_ns: u64,
     /// Service share weight (wire bytes of the train; ≥ 1).
     weight: f64,
     /// Frames aggregated in this entry (stats unit).
     units: u64,
-    /// Arrival order — FIFO tie-break between equal finishers.
-    seq: u64,
+    item: T,
 }
 
-/// A weighted-fair (GPS-style) shared server for frame trains.
+impl<T> PartialEq for VtEntry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+impl<T> Eq for VtEntry<T> {}
+impl<T> PartialOrd for VtEntry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for VtEntry<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // BinaryHeap is a max-heap: reverse for minimal (tag, seq) first.
+        // Tags are finite (weights ≥ 1, service bounded), never NaN.
+        other
+            .tag
+            .partial_cmp(&self.tag)
+            .expect("finish tags are never NaN")
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// A weighted-fair (GPS-style) shared server for frame trains, in
+/// virtual time.
 ///
-/// While `m` entries are active, entry `i` is served at rate
-/// `w_i / Σ w` of the server capacity; with byte-proportional weights and
-/// service time proportional to bytes, every entry's `rem / weight` decays
-/// at the same rate, so completions keep arrival order among same-rate
-/// trains and a lone train is served at exactly the full rate — the
-/// uncontended case matches the FIFO station bit-for-bit.
+/// While `m` entries are active, entry `i` is served at rate `w_i / Σ w`
+/// of the server capacity; with byte-proportional weights and service
+/// time proportional to bytes, every entry's normalized remaining work
+/// decays at the same virtual rate, so completions keep arrival order
+/// among same-rate trains and a lone train is served at exactly the full
+/// rate — the uncontended case matches the FIFO station bit-for-bit.
+///
+/// Costs are O(log m) per arrival/completion: finish tags are static, so
+/// the completion order is the heap order, and the weight/unit totals are
+/// maintained incrementally — no per-event walk over the actives.
 ///
 /// The caller owns the clock: `arrive` and `complete` return the current
-/// head's completion time tagged with an epoch; any previously announced
-/// completion is stale (its epoch no longer matches) and must be ignored
-/// when its event fires.
+/// head's completion time. An arrival changes the shares and therefore
+/// the head's *real* completion instant, so the time returned by `arrive`
+/// **supersedes** any previously announced completion — the caller must
+/// withdraw the old event (the model uses `Scheduler::at_cancellable` /
+/// `cancel`) and schedule the new one. `complete` must consequently only
+/// ever fire for the one live announcement.
 #[derive(Debug)]
 pub struct FairStation<T> {
-    active: Vec<FairEntry<T>>,
+    /// Active trains, min-heap by (finish tag, seq).
+    active: BinaryHeap<VtEntry<T>>,
+    /// Σ weights of the active trains. Weights are integers, so this
+    /// incremental total is exact (and returns to exactly 0.0 at idle).
+    total_weight: f64,
+    /// Σ units of the active trains.
+    total_units: u64,
+    /// Virtual time within the current busy period (reset at idle so
+    /// precision cannot decay across a long run).
+    vt: f64,
     /// Monotone arrival counter (FIFO tie-break).
     seq: u64,
-    /// Completion-schedule generation: bumped whenever membership changes,
-    /// invalidating previously announced completion times.
-    epoch: u64,
     /// Time the shared service was last advanced to, in ns.
     last_ns: u64,
     pub stats: StationStats,
@@ -280,9 +369,11 @@ impl<T> Default for FairStation<T> {
 impl<T> FairStation<T> {
     pub fn new() -> Self {
         FairStation {
-            active: Vec::new(),
+            active: BinaryHeap::new(),
+            total_weight: 0.0,
+            total_units: 0,
+            vt: 0.0,
             seq: 0,
-            epoch: 0,
             last_ns: 0,
             stats: StationStats::default(),
         }
@@ -296,6 +387,185 @@ impl<T> FairStation<T> {
     /// analogue of the FIFO station's waiting queue (the earliest finisher
     /// plays the role of the in-service entry). Used both for reports and
     /// as the train-weighted queue depth the SYN-drop/mux laws observe.
+    /// O(1): totals are incremental and the head is the heap top.
+    pub fn queue_len(&self) -> usize {
+        match self.active.peek() {
+            None => 0,
+            Some(head) => (self.total_units - head.units) as usize,
+        }
+    }
+
+    /// Advance the shared service to `now`, charging stats for the span.
+    /// O(1): entries are untouched — only the virtual clock moves.
+    fn drain(&mut self, now: SimTime) {
+        let now_ns = now.as_ns();
+        let dt = now_ns.saturating_sub(self.last_ns);
+        let busy = self.is_busy();
+        let qlen = self.queue_len() as u64;
+        self.stats.advance(now, busy, qlen);
+        if busy && dt != 0 {
+            self.vt = vtmath::advance(self.vt, dt, self.total_weight);
+        }
+        self.last_ns = now_ns;
+    }
+
+    /// Completion time of the current head under the current membership.
+    /// Only valid immediately after `drain` (uses `last_ns` as "now").
+    ///
+    /// A lone train that has not shared the server since it arrived is
+    /// announced at exactly `arrival + svc` (integer arithmetic): the
+    /// uncontended bulk path must match the FIFO station bit-for-bit,
+    /// and `(tag − vt) · w` could round a whole-ns value across the next
+    /// integer where the dedicated service itself cannot.
+    fn head_completion(&self) -> Option<SimTime> {
+        let e = self.active.peek()?;
+        let dt = if self.active.len() == 1 && e.arrival_vt == self.vt {
+            e.svc_ns
+        } else {
+            vtmath::completion_dt(e.tag, self.vt, self.total_weight)
+        };
+        Some(SimTime::from_ns(self.last_ns.saturating_add(dt)))
+    }
+
+    /// A train of `units` frames arrives with aggregate dedicated service
+    /// `svc` and fair-share weight `weight` (wire bytes; clamped to ≥ 1 so
+    /// zero-byte control trains still get a share). `extra_wait_ns` is
+    /// charged to the waiting integral analytically — the caller passes
+    /// the per-frame path's partial-last-frame wait (`full − last` when
+    /// the train's final wire frame is short) so the aggregated integrals
+    /// stay exact for arbitrary wire sizes.
+    ///
+    /// Returns the head's completion time, superseding any previously
+    /// announced completion — cancel the old event and schedule this one.
+    #[must_use = "schedule the returned completion event (and cancel the superseded one)"]
+    pub fn arrive(
+        &mut self,
+        now: SimTime,
+        item: T,
+        svc: SimTime,
+        units: u64,
+        weight: u64,
+        extra_wait_ns: u64,
+    ) -> SimTime {
+        debug_assert!(units >= 1);
+        let weight = weight.max(1) as f64;
+        self.drain(now);
+        self.stats.arrivals += units;
+        self.stats.qlen_ns += extra_wait_ns as u128;
+        self.seq += 1;
+        self.active.push(VtEntry {
+            tag: vtmath::finish_tag(self.vt, svc.as_ns(), weight),
+            seq: self.seq,
+            arrival_vt: self.vt,
+            svc_ns: svc.as_ns(),
+            weight,
+            units,
+            item,
+        });
+        self.total_weight += weight;
+        self.total_units += units;
+        let q = self.queue_len();
+        if q > self.stats.max_qlen {
+            self.stats.max_qlen = q;
+        }
+        self.head_completion().expect("just pushed an entry")
+    }
+
+    /// The (live) announced completion fires: pop the finished head and,
+    /// if trains remain, return the next head's completion to schedule.
+    /// The engine-level cancellation guarantees no stale completion is
+    /// ever delivered, so firing on an idle station is a caller bug.
+    #[must_use = "schedule the next completion when the second field is Some"]
+    pub fn complete(&mut self, now: SimTime) -> (T, Option<SimTime>) {
+        self.drain(now);
+        let e = self.active.pop().expect("complete() on idle fair station");
+        self.stats.departures += e.units;
+        self.total_weight -= e.weight;
+        self.total_units -= e.units;
+        if self.active.is_empty() {
+            // Idle: restart the busy-period virtual clock. The weight
+            // total is exactly 0.0 here (integer adds/subtracts), but
+            // re-zero defensively alongside vt.
+            self.total_weight = 0.0;
+            self.vt = 0.0;
+        }
+        (e.item, self.head_completion())
+    }
+
+    /// Finalize stats bookkeeping at the end of a run.
+    pub fn finish(&mut self, now: SimTime) {
+        self.drain(now);
+    }
+}
+
+/// The O(m)-per-event linear-scan reference implementation of the
+/// virtual-time weighted-fair server — the shape [`FairStation`] had
+/// before the heap rewrite, retained as the equivalence oracle. Hidden
+/// from the supported API: it exists for the integration proptests, and
+/// nothing on a hot path may use it.
+///
+/// Entries are the same [`VtEntry`] the fast server keeps (its heap
+/// ordering simply goes unused here), so the two cannot drift apart
+/// field-wise. Totals are recomputed by scanning the actives, the head
+/// is found by a linear minimum scan, and nothing is cached between
+/// events; only the arithmetic ([`vtmath`]) is shared with
+/// [`FairStation`]. Integer weight/unit sums are exact in `f64`
+/// regardless of summation order, so every announced time, completion
+/// and statistic must equal the fast implementation's **bit-for-bit**
+/// (asserted by `prop_virtual_time_fair_station_matches_reference`).
+#[doc(hidden)]
+#[derive(Debug)]
+pub struct RefFairStation<T> {
+    active: Vec<VtEntry<T>>,
+    vt: f64,
+    seq: u64,
+    last_ns: u64,
+    pub stats: StationStats,
+}
+
+impl<T> Default for RefFairStation<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> RefFairStation<T> {
+    pub fn new() -> Self {
+        RefFairStation {
+            active: Vec::new(),
+            vt: 0.0,
+            seq: 0,
+            last_ns: 0,
+            stats: StationStats::default(),
+        }
+    }
+
+    pub fn is_busy(&self) -> bool {
+        !self.active.is_empty()
+    }
+
+    fn total_weight(&self) -> f64 {
+        self.active.iter().map(|e| e.weight).sum()
+    }
+
+    /// Index of the earliest finisher: minimal (tag, seq), by linear scan.
+    fn head(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, e) in self.active.iter().enumerate() {
+            let better = match best {
+                None => true,
+                Some(b) => {
+                    let eb = &self.active[b];
+                    e.tag < eb.tag || (e.tag == eb.tag && e.seq < eb.seq)
+                }
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        best
+    }
+
     pub fn queue_len(&self) -> usize {
         match self.head() {
             None => 0,
@@ -306,31 +576,6 @@ impl<T> FairStation<T> {
         }
     }
 
-    fn total_weight(&self) -> f64 {
-        self.active.iter().map(|e| e.weight).sum()
-    }
-
-    /// Index of the earliest finisher under the current shares: minimal
-    /// `rem / weight` (compared cross-multiplied), ties to lowest seq.
-    fn head(&self) -> Option<usize> {
-        let mut best: Option<usize> = None;
-        for (i, e) in self.active.iter().enumerate() {
-            let better = match best {
-                None => true,
-                Some(b) => {
-                    let eb = &self.active[b];
-                    let (li, lb) = (e.rem * eb.weight, eb.rem * e.weight);
-                    li < lb || (li == lb && e.seq < eb.seq)
-                }
-            };
-            if better {
-                best = Some(i);
-            }
-        }
-        best
-    }
-
-    /// Advance the shared service to `now`, charging stats for the span.
     fn drain(&mut self, now: SimTime) {
         let now_ns = now.as_ns();
         let dt = now_ns.saturating_sub(self.last_ns);
@@ -338,33 +583,24 @@ impl<T> FairStation<T> {
         let qlen = self.queue_len() as u64;
         self.stats.advance(now, busy, qlen);
         if busy && dt != 0 {
-            let w = self.total_weight();
-            for e in &mut self.active {
-                e.rem = (e.rem - dt as f64 * e.weight / w).max(0.0);
-            }
+            self.vt = vtmath::advance(self.vt, dt, self.total_weight());
         }
         self.last_ns = now_ns;
     }
 
-    /// Completion time of the current head under the current membership.
-    /// Only valid immediately after `drain` (uses `last_ns` as "now").
     fn head_completion(&self) -> Option<SimTime> {
         let h = self.head()?;
         let e = &self.active[h];
-        let dt = (e.rem * self.total_weight() / e.weight).ceil() as u64;
+        let dt = if self.active.len() == 1 && e.arrival_vt == self.vt {
+            e.svc_ns
+        } else {
+            vtmath::completion_dt(e.tag, self.vt, self.total_weight())
+        };
         Some(SimTime::from_ns(self.last_ns.saturating_add(dt)))
     }
 
-    /// A train of `units` frames arrives with aggregate dedicated service
-    /// `svc` and fair-share weight `weight` (wire bytes). `extra_wait_ns`
-    /// is charged to the waiting integral analytically — the caller passes
-    /// the per-frame path's partial-last-frame wait (`full − last` when
-    /// the train's final wire frame is short) so the aggregated integrals
-    /// stay exact for arbitrary wire sizes.
-    ///
-    /// Returns the head's completion time and the epoch to tag its event
-    /// with; any previously announced completion is stale from here on.
-    #[must_use = "schedule the returned completion event"]
+    /// See [`FairStation::arrive`].
+    #[must_use = "schedule the returned completion event (and cancel the superseded one)"]
     pub fn arrive(
         &mut self,
         now: SimTime,
@@ -373,42 +609,40 @@ impl<T> FairStation<T> {
         units: u64,
         weight: u64,
         extra_wait_ns: u64,
-    ) -> (SimTime, u64) {
-        debug_assert!(units >= 1 && weight >= 1);
+    ) -> SimTime {
+        debug_assert!(units >= 1);
+        let weight = weight.max(1) as f64;
         self.drain(now);
         self.stats.arrivals += units;
         self.stats.qlen_ns += extra_wait_ns as u128;
         self.seq += 1;
-        self.active.push(FairEntry {
-            item,
-            rem: svc.as_ns() as f64,
-            weight: weight as f64,
-            units,
+        self.active.push(VtEntry {
+            tag: vtmath::finish_tag(self.vt, svc.as_ns(), weight),
             seq: self.seq,
+            arrival_vt: self.vt,
+            svc_ns: svc.as_ns(),
+            weight,
+            units,
+            item,
         });
         let q = self.queue_len();
         if q > self.stats.max_qlen {
             self.stats.max_qlen = q;
         }
-        self.epoch += 1;
-        (self.head_completion().expect("just pushed an entry"), self.epoch)
+        self.head_completion().expect("just pushed an entry")
     }
 
-    /// The completion event tagged `epoch` fires. Returns `None` when the
-    /// event is stale (a later arrival re-announced the completion).
-    /// Otherwise pops the finished head and, if entries remain, returns
-    /// the next head's completion to schedule.
-    pub fn complete(&mut self, now: SimTime, epoch: u64) -> Option<(T, Option<(SimTime, u64)>)> {
-        if epoch != self.epoch {
-            return None;
-        }
+    /// See [`FairStation::complete`].
+    #[must_use = "schedule the next completion when the second field is Some"]
+    pub fn complete(&mut self, now: SimTime) -> (T, Option<SimTime>) {
         self.drain(now);
         let h = self.head().expect("complete() on idle fair station");
         let e = self.active.swap_remove(h);
         self.stats.departures += e.units;
-        self.epoch += 1;
-        let next = self.head_completion().map(|t| (t, self.epoch));
-        Some((e.item, next))
+        if self.active.is_empty() {
+            self.vt = 0.0;
+        }
+        (e.item, self.head_completion())
     }
 
     /// Finalize stats bookkeeping at the end of a run.
@@ -552,13 +786,14 @@ mod tests {
     #[test]
     fn fair_lone_train_is_exact() {
         // A single train gets the full service rate: completion and stats
-        // match the FIFO station bit-for-bit.
+        // match the FIFO station bit-for-bit (integer arithmetic — no
+        // virtual-time rounding on the uncontended path).
         let mut fq: FairStation<u32> = FairStation::new();
-        let (t, e) = fq.arrive(ns(100), 7, ns(12_345), 4, 1_000, 0);
+        let t = fq.arrive(ns(100), 7, ns(12_345), 4, 1_000, 0);
         assert_eq!(t, ns(100 + 12_345));
         assert!(fq.is_busy());
         assert_eq!(fq.queue_len(), 0, "a lone train is all in service");
-        let (item, next) = fq.complete(t, e).expect("current epoch");
+        let (item, next) = fq.complete(t);
         assert_eq!(item, 7);
         assert!(next.is_none());
         fq.finish(ns(20_000));
@@ -569,23 +804,35 @@ mod tests {
     }
 
     #[test]
+    fn fair_lone_awkward_ratio_is_still_exact() {
+        // svc / weight is a non-terminating binary fraction (100/3):
+        // round-tripping through the virtual clock could land on 101 —
+        // the dedicated-service fast path must keep this exactly 100.
+        let mut fq: FairStation<u32> = FairStation::new();
+        let t = fq.arrive(ns(1_000), 1, ns(100), 1, 3, 0);
+        assert_eq!(t, ns(1_100));
+        let (_, next) = fq.complete(t);
+        assert!(next.is_none());
+    }
+
+    #[test]
     fn fair_equal_trains_finish_together() {
         // Two equal-weight, equal-size trains arriving together split the
         // server and finish at the same instant — the incast behavior the
         // per-frame path's interleaving produces, where a FIFO of whole
         // trains would finish them one full service apart.
         let mut fq: FairStation<u32> = FairStation::new();
-        let (t1, e1) = fq.arrive(ns(0), 1, ns(100), 2, 500, 0);
+        let t1 = fq.arrive(ns(0), 1, ns(100), 2, 500, 0);
         assert_eq!(t1, ns(100));
-        let (t2, e2) = fq.arrive(ns(0), 2, ns(100), 2, 500, 0);
+        let t2 = fq.arrive(ns(0), 2, ns(100), 2, 500, 0);
         assert_eq!(t2, ns(200), "shared service: head now finishes at Σ svc");
-        // The first announcement became stale when the second train arrived.
-        assert!(fq.complete(t1, e1).is_none(), "stale epochs are ignored");
-        let (item, next) = fq.complete(t2, e2).expect("current epoch");
+        // t1's announcement is superseded — the caller cancels that event
+        // and only t2's ever fires.
+        let (item, next) = fq.complete(t2);
         assert_eq!(item, 1, "ties complete in arrival order");
-        let (t3, e3) = next.expect("second train still active");
+        let t3 = next.expect("second train still active");
         assert_eq!(t3, ns(200));
-        let (item, next) = fq.complete(t3, e3).expect("current epoch");
+        let (item, next) = fq.complete(t3);
         assert_eq!(item, 2);
         assert!(next.is_none());
         fq.finish(ns(200));
@@ -596,18 +843,18 @@ mod tests {
     #[test]
     fn fair_weights_are_byte_proportional() {
         // A heavy train (3x the bytes, 3x the service) and a light one
-        // arriving together: byte-proportional shares mean both rem/weight
-        // ratios decay together, so the light train does not starve the
-        // heavy one — they finish at 400 in arrival order.
+        // arriving together: byte-proportional shares mean both finish
+        // tags coincide, so the light train does not starve the heavy one
+        // — they finish at 400 in arrival order.
         let mut fq: FairStation<u32> = FairStation::new();
-        let (_, _) = fq.arrive(ns(0), 1, ns(300), 3, 3_000, 0);
-        let (t, e) = fq.arrive(ns(0), 2, ns(100), 1, 1_000, 0);
+        let _ = fq.arrive(ns(0), 1, ns(300), 3, 3_000, 0);
+        let t = fq.arrive(ns(0), 2, ns(100), 1, 1_000, 0);
         assert_eq!(t, ns(400), "head completes when the shared backlog drains");
-        let (item, next) = fq.complete(t, e).expect("current epoch");
+        let (item, next) = fq.complete(t);
         assert_eq!(item, 1);
-        let (t2, e2) = next.unwrap();
+        let t2 = next.unwrap();
         assert_eq!(t2, ns(400));
-        let (item, _) = fq.complete(t2, e2).expect("current epoch");
+        let (item, _) = fq.complete(t2);
         assert_eq!(item, 2);
     }
 
@@ -616,15 +863,15 @@ mod tests {
         // B arrives halfway through A's lone service; A has drained half
         // its work, the rest is served at half rate.
         let mut fq: FairStation<u32> = FairStation::new();
-        let (t1, _) = fq.arrive(ns(0), 1, ns(100), 1, 100, 0);
+        let t1 = fq.arrive(ns(0), 1, ns(100), 1, 100, 0);
         assert_eq!(t1, ns(100));
-        let (t2, e2) = fq.arrive(ns(50), 2, ns(100), 1, 100, 0);
+        let t2 = fq.arrive(ns(50), 2, ns(100), 1, 100, 0);
         assert_eq!(t2, ns(150), "A: 50ns left, served at 1/2 rate");
-        let (item, next) = fq.complete(t2, e2).expect("current epoch");
+        let (item, next) = fq.complete(t2);
         assert_eq!(item, 1);
-        let (t3, e3) = next.unwrap();
+        let t3 = next.unwrap();
         assert_eq!(t3, ns(200), "B: 50ns left at full rate after A departs");
-        let (item, _) = fq.complete(t3, e3).expect("current epoch");
+        let (item, _) = fq.complete(t3);
         assert_eq!(item, 2);
         fq.finish(ns(200));
         assert_eq!(fq.stats.busy_ns, 200);
@@ -633,9 +880,77 @@ mod tests {
     #[test]
     fn fair_extra_wait_charges_the_integral() {
         let mut fq: FairStation<u32> = FairStation::new();
-        let (t, e) = fq.arrive(ns(0), 1, ns(10), 2, 64, 7);
-        let _ = fq.complete(t, e).unwrap();
+        let t = fq.arrive(ns(0), 1, ns(10), 2, 64, 7);
+        let _ = fq.complete(t);
         fq.finish(t);
         assert_eq!(fq.stats.qlen_ns, 7, "analytic partial-frame wait only");
+    }
+
+    #[test]
+    fn fair_zero_weight_is_clamped_to_a_minimal_share() {
+        // A zero-byte control train must not divide by zero or starve:
+        // weight clamps to 1, so two such trains share equally.
+        let mut fq: FairStation<u32> = FairStation::new();
+        let t1 = fq.arrive(ns(0), 1, ns(40), 1, 0, 0);
+        assert_eq!(t1, ns(40));
+        let t2 = fq.arrive(ns(0), 2, ns(40), 1, 0, 0);
+        assert_eq!(t2, ns(80), "two unit shares: head finishes at Σ svc");
+        let (item, next) = fq.complete(t2);
+        assert_eq!(item, 1);
+        let (item, _) = fq.complete(next.unwrap());
+        assert_eq!(item, 2);
+    }
+
+    #[test]
+    fn fair_busy_period_resets_the_virtual_clock() {
+        // After the station idles, a fresh busy period must behave exactly
+        // like the first one (vt restarts at zero).
+        let mut fq: FairStation<u32> = FairStation::new();
+        let t = fq.arrive(ns(0), 1, ns(100), 1, 8, 0);
+        let _ = fq.complete(t);
+        let t1 = fq.arrive(ns(1_000), 2, ns(100), 1, 8, 0);
+        assert_eq!(t1, ns(1_100));
+        let t2 = fq.arrive(ns(1_050), 3, ns(100), 1, 8, 0);
+        assert_eq!(t2, ns(1_150), "identical to the first-busy-period stagger");
+        let (item, next) = fq.complete(t2);
+        assert_eq!(item, 2);
+        let (item, _) = fq.complete(next.unwrap());
+        assert_eq!(item, 3);
+        fq.finish(ns(1_200));
+        assert_eq!(fq.stats.busy_ns, 100 + 200);
+    }
+
+    #[test]
+    fn reference_station_matches_fast_station_on_a_scripted_mix() {
+        // Deterministic lockstep smoke test (the proptests randomize this):
+        // staggered arrivals with unequal weights, announced times and
+        // completions bit-identical between the heap and scan servers.
+        let mut fast: FairStation<u32> = FairStation::new();
+        let mut slow: RefFairStation<u32> = RefFairStation::new();
+        let script = [
+            (0u64, 10u32, 3_000u64, 1_000u64, 997u64),
+            (40, 11, 1_500, 2, 313),
+            (41, 12, 2_718, 30, 4_096),
+        ];
+        let mut pending = None;
+        for &(at, item, svc, units, weight) in &script {
+            let tf = fast.arrive(ns(at), item, ns(svc), units, weight, 0);
+            let ts = slow.arrive(ns(at), item, ns(svc), units, weight, 0);
+            assert_eq!(tf, ts, "announced completion diverged");
+            pending = Some(tf);
+        }
+        while let Some(t) = pending {
+            let (fi, fnext) = fast.complete(t);
+            let (si, snext) = slow.complete(t);
+            assert_eq!(fi, si, "completion order diverged");
+            assert_eq!(fnext, snext, "next announcement diverged");
+            pending = fnext;
+        }
+        fast.finish(ns(10_000));
+        slow.finish(ns(10_000));
+        assert_eq!(fast.stats.busy_ns, slow.stats.busy_ns);
+        assert_eq!(fast.stats.qlen_ns, slow.stats.qlen_ns);
+        assert_eq!(fast.stats.max_qlen, slow.stats.max_qlen);
+        assert_eq!(fast.stats.departures, slow.stats.departures);
     }
 }

@@ -332,7 +332,10 @@ fn prop_weighted_fair_station_conserves_work_and_bytes() {
         trains.sort_unstable();
 
         let mut fq: FairStation<usize> = FairStation::new();
-        let mut pending: Option<(SimTime, u64)> = None;
+        // At most one live announcement, exactly like the engine keeps at
+        // most one cancellable completion event per fair station: the
+        // time returned by `arrive` supersedes (cancels) the previous one.
+        let mut pending: Option<SimTime> = None;
         let mut completions: Vec<(usize, u64)> = Vec::new(); // (train, at ns)
         let mut next_arrival = 0usize;
         loop {
@@ -341,18 +344,15 @@ fn prop_weighted_fair_station_conserves_work_and_bytes() {
             // firing the earlier-scheduled event).
             let arr = trains.get(next_arrival).map(|t| t.0);
             match (arr, pending) {
-                (Some(a), Some((c, epoch))) if SimTime::from_ns(a) >= c => {
-                    if let Some((item, next)) = fq.complete(c, epoch) {
-                        completions.push((item, c.as_ns()));
-                        pending = next;
-                    } else {
-                        pending = None; // stale announcement
-                    }
+                (Some(a), Some(c)) if SimTime::from_ns(a) >= c => {
+                    let (item, next) = fq.complete(c);
+                    completions.push((item, c.as_ns()));
+                    pending = next;
                 }
                 (Some(a), _) => {
                     let (at, units, svc, weight) = trains[next_arrival];
                     debug_assert_eq!(a, at);
-                    let (t, epoch) = fq.arrive(
+                    let t = fq.arrive(
                         SimTime::from_ns(at),
                         next_arrival,
                         SimTime::from_ns(svc),
@@ -360,16 +360,13 @@ fn prop_weighted_fair_station_conserves_work_and_bytes() {
                         weight,
                         0,
                     );
-                    pending = Some((t, epoch));
+                    pending = Some(t);
                     next_arrival += 1;
                 }
-                (None, Some((c, epoch))) => {
-                    if let Some((item, next)) = fq.complete(c, epoch) {
-                        completions.push((item, c.as_ns()));
-                        pending = next;
-                    } else {
-                        pending = None;
-                    }
+                (None, Some(c)) => {
+                    let (item, next) = fq.complete(c);
+                    completions.push((item, c.as_ns()));
+                    pending = next;
                 }
                 (None, None) => break,
             }
@@ -402,6 +399,90 @@ fn prop_weighted_fair_station_conserves_work_and_bytes() {
 }
 
 #[test]
+fn prop_virtual_time_fair_station_matches_reference() {
+    // The O(log m) virtual-time server and the retained O(m) linear-scan
+    // reference (`RefFairStation`) implement the same GPS arithmetic over
+    // different data structures. Drive both in lockstep over randomized
+    // train mixes — clustered and simultaneous arrivals, zero-service and
+    // zero-weight trains, single-train busy periods — and demand
+    // *bit-identical* behavior: every announced completion time, every
+    // completion (item and next announcement), every queue depth, and
+    // every final station integral. No tolerances.
+    check("virtual-time matches linear-scan reference", 80, |g| {
+        use wfpred::sim::{FairStation, RefFairStation};
+        let n = g.usize(1, 24);
+        let mut trains: Vec<(u64, u64, u64, u64)> = (0..n)
+            .map(|_| {
+                // Cluster arrival instants so deep sharing and exact ties
+                // both happen; leave gaps so busy periods also end.
+                let at = if g.bool() {
+                    g.u64(0, 10) * 150_000
+                } else {
+                    g.u64(0, 2_000_000)
+                };
+                let units = g.u64(1, 40);
+                let svc = g.u64(0, 1_000_000); // zero-service trains included
+                let weight = if g.u64(0, 9) == 0 { 0 } else { g.u64(1, 4 * 1024 * 1024) };
+                (at, units, svc, weight)
+            })
+            .collect();
+        trains.sort_unstable();
+
+        let mut fast: FairStation<usize> = FairStation::new();
+        let mut slow: RefFairStation<usize> = RefFairStation::new();
+        let mut pending: Option<SimTime> = None;
+        let mut next_arrival = 0usize;
+        let mut end = 0u64;
+        loop {
+            let arr = trains.get(next_arrival).map(|t| t.0);
+            match (arr, pending) {
+                (Some(a), Some(c)) if SimTime::from_ns(a) >= c => {
+                    let (fi, fnext) = fast.complete(c);
+                    let (si, snext) = slow.complete(c);
+                    assert_eq!(fi, si, "completion order diverged at {c}");
+                    assert_eq!(fnext, snext, "next announcement diverged after {c}");
+                    end = end.max(c.as_ns());
+                    pending = fnext;
+                }
+                (Some(a), _) => {
+                    let (at, units, svc, weight) = trains[next_arrival];
+                    debug_assert_eq!(a, at);
+                    let now = SimTime::from_ns(at);
+                    let svc = SimTime::from_ns(svc);
+                    let tf = fast.arrive(now, next_arrival, svc, units, weight, 0);
+                    let ts = slow.arrive(now, next_arrival, svc, units, weight, 0);
+                    assert_eq!(
+                        tf, ts,
+                        "announced completion diverged on arrival {next_arrival}"
+                    );
+                    assert_eq!(fast.queue_len(), slow.queue_len(), "queue depth diverged");
+                    pending = Some(tf);
+                    next_arrival += 1;
+                }
+                (None, Some(c)) => {
+                    let (fi, fnext) = fast.complete(c);
+                    let (si, snext) = slow.complete(c);
+                    assert_eq!(fi, si, "completion order diverged at {c}");
+                    assert_eq!(fnext, snext, "next announcement diverged after {c}");
+                    end = end.max(c.as_ns());
+                    pending = fnext;
+                }
+                (None, None) => break,
+            }
+        }
+        fast.finish(SimTime::from_ns(end));
+        slow.finish(SimTime::from_ns(end));
+        assert_eq!(fast.stats.busy_ns, slow.stats.busy_ns, "busy integral");
+        assert_eq!(fast.stats.qlen_ns, slow.stats.qlen_ns, "queue-length integral");
+        assert_eq!(fast.stats.max_qlen, slow.stats.max_qlen, "max queue depth");
+        assert_eq!(fast.stats.arrivals, slow.stats.arrivals);
+        assert_eq!(fast.stats.departures, slow.stats.departures);
+        assert_eq!(fast.stats.departures, trains.iter().map(|t| t.1).sum::<u64>());
+        assert!(!fast.is_busy() && !slow.is_busy(), "both drained");
+    });
+}
+
+#[test]
 fn prop_bulk_path_is_work_conserving() {
     // On arbitrary workloads the bulk path may shift individual message
     // completions (partial last frames, train serialization under
@@ -422,13 +503,17 @@ fn prop_bulk_path_is_work_conserving() {
         assert_eq!(bulk.net_frames, frames.net_frames);
         assert_eq!(bulk.stored_total(), frames.stored_total());
         assert_eq!(bulk.tasks.len(), frames.tasks.len());
-        // Weighted-fair completions re-announce on arrival, so a train
-        // arriving at a contended in-NIC can leave one stale event behind
-        // — at most one extra event per message (≤ net_frames covers it).
-        // On zero-data workloads (every message a single control frame)
-        // aggregation saves nothing, so allow that slack; any data frames
-        // at all put the bulk path far below the per-frame count.
+        // Superseded weighted-fair completions are cancelled at the engine
+        // (they never count as processed events), so the bulk path's event
+        // count is bounded by per-message chains alone. On zero-data
+        // workloads (every message a single control frame) aggregation
+        // saves nothing, so allow frame-count slack; any data frames at
+        // all put the bulk path far below the per-frame count.
         assert!(bulk.events <= frames.events + bulk.net_frames);
+        assert!(
+            frames.events_cancelled == 0,
+            "the per-frame path never cancels announcements"
+        );
 
         // Busy integrals are exact under aggregation (train service =
         // exact sum of per-frame services).
