@@ -17,12 +17,16 @@
 //!   concurrent duplicate clients, surrogate answers always carry an
 //!   error estimate), the incast stale-event accounting
 //!   (`stale_event_ratio` present and ≤ 0.5 for every `incast_*`
-//!   section) and, when the baseline is a real previous run (not the
-//!   bootstrap marker), a ±10% drift gate on the machine-independent
-//!   metrics (simulated turnaround and event counts, including the
-//!   64/256/1024-host scaling curve and the 256/1024/4096-host incast
-//!   curve — wallclock numbers are never gated). Exits non-zero on
-//!   violation; implies `--frame-path-only`.
+//!   section), the full-stripe placement gate (the stripe-uncapped
+//!   `incast_4096_fullstripe` per-event cost within ±10% of the
+//!   stripe-64 curve's, measured in the same run so the ratio is
+//!   host-independent) and, when the baseline is a real previous run
+//!   (not the bootstrap marker), a ±10% drift gate on the
+//!   machine-independent metrics (simulated turnaround and event
+//!   counts, including the 64/256/1024-host scaling curve and the
+//!   256/1024/4096-host + full-stripe incast curves — wallclock numbers
+//!   are never gated). Exits non-zero on violation; implies
+//!   `--frame-path-only`.
 
 use wfpred::coordinator;
 use wfpred::model::{simulate, simulate_fid, Config, Fidelity, Platform};
@@ -43,7 +47,10 @@ use wfpred::workload::patterns::{pipeline, reduce, PatternScale};
 ///
 /// Absolute gates (always enforced, from PERF.md §Regression discipline):
 /// `event_reduction_x ≥ 5` and `turnaround_rel_err ≤ 0.01` on the
-/// acceptance workload. Drift gates (enforced when the baseline is a real
+/// acceptance workload, the stale-event ratios, and the full-stripe
+/// placement ratio (`incast_4096_fullstripe` per-event cost within ±10%
+/// of the stripe-64 curve's, both halves measured in the same run).
+/// Drift gates (enforced when the baseline is a real
 /// previous run rather than the `"bootstrap"` marker): simulated
 /// turnaround and event counts — deterministic, machine-independent
 /// metrics — must stay within ±10% of the committed baseline. Wallclock
@@ -88,12 +95,29 @@ fn check_frame_path(path: &str, baseline: &str, fresh: &str) -> i32 {
     // incast. A ratio creeping toward 1 means cancellation regressed into
     // announcement churn; a missing ratio means the incast sections
     // stopped reporting it.
-    for scope in ["incast_256", "incast_1024", "incast_4096"] {
+    for scope in ["incast_256", "incast_1024", "incast_4096", "incast_4096_fullstripe"] {
         match json_number_in(fresh, scope, "stale_event_ratio") {
             Some(r) if (0.0..=0.5).contains(&r) => {}
             Some(r) => failures.push(format!("{scope}.stale_event_ratio {r:.3} outside [0, 0.5]")),
             None => failures.push(format!("fresh results lack {scope}.stale_event_ratio")),
         }
+    }
+
+    // Full-stripe placement gate (absolute): with interned replica groups
+    // the stripe-uncapped 4096-host incast must pay the same per-event
+    // cost as the stripe-64 curve, within the usual ±10% band. Both
+    // halves of the ratio come from the same run on the same machine, so
+    // the comparison is host-independent even though ns/event itself is
+    // not. A ratio drifting up means the placement path is scaling with
+    // the stripe again.
+    match json_number_in(fresh, "incast_4096_fullstripe", "ns_per_event_vs_stripe64_x") {
+        Some(x) if x > 0.0 && x <= 1.0 + tol => {}
+        Some(x) => failures.push(format!(
+            "incast_4096_fullstripe.ns_per_event_vs_stripe64_x {x:.3} outside (0, {:.2}]",
+            1.0 + tol
+        )),
+        None => failures
+            .push("fresh results lack incast_4096_fullstripe.ns_per_event_vs_stripe64_x".into()),
     }
 
     if baseline.is_empty() {
@@ -107,7 +131,7 @@ fn check_frame_path(path: &str, baseline: &str, fresh: &str) -> i32 {
         println!("[bench-check] bootstrap baseline at {path}: absolute gates only");
         println!("[bench-check] commit a fresh BENCH_frame_path.json to arm the drift gate");
     } else {
-        let drift_keys: [(&str, &str); 16] = [
+        let drift_keys: [(&str, &str); 18] = [
             ("bulk", "events"),
             ("bulk", "sim_turnaround_s"),
             ("per_frame", "events"),
@@ -124,6 +148,8 @@ fn check_frame_path(path: &str, baseline: &str, fresh: &str) -> i32 {
             ("incast_1024", "sim_turnaround_s"),
             ("incast_4096", "events"),
             ("incast_4096", "sim_turnaround_s"),
+            ("incast_4096_fullstripe", "events"),
+            ("incast_4096_fullstripe", "sim_turnaround_s"),
         ];
         for (scope, key) in drift_keys {
             let (b, f) = (json_number_in(baseline, scope, key), json_number_in(fresh, scope, key));
@@ -319,14 +345,17 @@ fn main() {
     // must stay flat (within noise) in the concurrent-train count m
     // (O(log m) tags; the old linear drain paid O(m) per event, O(m²) per
     // busy period, which capped the curve near 256 hosts). The stripe is
-    // held at 64 so the curve isolates the event core rather than the
-    // O(n·stripe) placement vectors, which are a different axis. Event
+    // held at 64 so the curve isolates the event core; the full-stripe
+    // section below covers the placement axis. Event
     // counts and simulated turnarounds are deterministic and drift-gated;
     // the stale-event ratio (cancelled / (delivered + cancelled)) makes
     // cancellation regressions visible and is gated ≤ 0.5 absolutely.
     println!("\n== incast scaling (all-to-one reduce, 256/1024/4096 hosts) ==");
     let mut incast = Json::obj();
     let mut incast_curve: Vec<(usize, f64, f64)> = Vec::new(); // (hosts, ns/event, stale)
+    // Min-over-reps ns/event of the 4096-host point — the low-noise
+    // estimator the full-stripe placement gate compares against.
+    let mut incast64_min_nspe = f64::NAN;
     for hosts in [256usize, 1024, 4096] {
         let n = hosts - 1; // workers; the manager takes host 0
         let wl = reduce(n, PatternScale::Small, false);
@@ -344,6 +373,9 @@ fn main() {
         });
         record(&format!("incast_{hosts}"), &r, events as f64, "sim-events");
         let ns_per_event = r.secs.mean() * 1e9 / events as f64;
+        if hosts == 4096 {
+            incast64_min_nspe = r.secs.min() * 1e9 / events as f64;
+        }
         let stale = cancelled as f64 / (events + cancelled) as f64;
         println!(
             "    -> {events} events + {cancelled} cancelled (stale ratio {stale:.3}), \
@@ -371,6 +403,59 @@ fn main() {
          ({:.2}x across a {}x train-count spread)",
         r1 / r0,
         h1 / h0
+    );
+
+    // Full-stripe incast: the same all-to-one reduce at 4096 hosts with
+    // the stripe *uncapped* at cluster width. Before placement interning
+    // (model/placement.rs) every write alloc materialized O(stripe)
+    // replica-group Vecs and the commit cloned one per chunk — O(n·stripe)
+    // per workload — which is why the curve above holds the stripe at 64.
+    // With interned groups a whole allocation is one copyable id, so this
+    // configuration must pay the same per-event cost as the capped curve;
+    // `--check` gates the same-run ratio at ±10% alongside the usual
+    // drift and stale-event gates.
+    println!("\n== incast, full stripe (4096 hosts, stripe = cluster width) ==");
+    let fs_hosts = 4096usize;
+    let fs_n = fs_hosts - 1; // workers; the manager takes host 0
+    let fs_wl = reduce(fs_n, PatternScale::Small, false);
+    let fs_cfg = Config::dss(fs_n); // stripe_width = n_storage: uncapped
+    let mut fs_events = 0u64;
+    let mut fs_cancelled = 0u64;
+    let mut fs_sim_secs = 0.0;
+    let r = BenchRunner::new(1, 3).run(
+        &format!("incast: reduce-small dss ({fs_hosts} hosts, full {fs_n}-wide stripe)"),
+        |_| {
+            let rep = simulate(&fs_wl, &fs_cfg, &plat);
+            fs_events = rep.events;
+            fs_cancelled = rep.events_cancelled;
+            fs_sim_secs = rep.turnaround.as_secs_f64();
+            black_box(rep.events);
+        },
+    );
+    record("incast_4096_fullstripe", &r, fs_events as f64, "sim-events");
+    let fs_ns_per_event = r.secs.mean() * 1e9 / fs_events as f64;
+    let fs_stale = fs_cancelled as f64 / (fs_events + fs_cancelled) as f64;
+    // The gated ratio uses min-over-reps on both sides: the minimum is
+    // the least-interference wallclock estimate, so a background spike
+    // on a shared CI runner cannot fail the gate on its own.
+    let fs_vs64 = (r.secs.min() * 1e9 / fs_events as f64) / incast64_min_nspe;
+    println!(
+        "    -> {fs_events} events + {fs_cancelled} cancelled (stale ratio {fs_stale:.3}), \
+         {fs_ns_per_event:.0} ns/event — {fs_vs64:.2}x the stripe-64 curve"
+    );
+    incast = incast.set(
+        "incast_4096_fullstripe",
+        Json::obj()
+            .set("hosts", fs_hosts)
+            .set("stripe", fs_n as u64)
+            .set("events", fs_events)
+            .set("events_cancelled", fs_cancelled)
+            .set("stale_event_ratio", fs_stale)
+            .set("wall_secs", r.secs.mean())
+            .set("ns_per_event", fs_ns_per_event)
+            .set("ns_per_event_vs_stripe64_x", fs_vs64)
+            .set("events_per_sec", fs_events as f64 / r.secs.mean())
+            .set("sim_turnaround_s", fs_sim_secs),
     );
 
     // Parallel testbed campaign: same trials, slot-ordered reduction —

@@ -43,6 +43,12 @@
 //!   independent candidate simulations (the search layers fan out
 //!   through it; results stay byte-identical to sequential runs).
 //!
+//! A file-level architecture guide — module map, a "life of a
+//! prediction" walkthrough, and a paper-section → module
+//! cross-reference — lives in `rust/README.md`; these rustdoc pages are
+//! the authoritative per-module documentation (CI fails on rustdoc
+//! warnings, so neither can silently rot).
+//!
 //! ## Quickstart
 //!
 //! ```no_run

@@ -116,11 +116,14 @@ impl<'a> World<'a> {
         }
         let mut node: Option<usize> = None;
         for &f in &t.reads {
-            let meta = self.meta[f].as_ref()?; // all inputs are committed at release
-            for group in &meta.chunks {
-                // A chunk counts as "on node s" if any replica is on s —
-                // follow the primary for the locality decision.
-                let primary = *group.first()?;
+            let meta = self.meta[f]?; // all inputs are committed at release
+            // A chunk counts as "on node s" if any replica is on s —
+            // follow the primary for the locality decision. Chunk i maps
+            // to stripe position i % width of the interned allocation, so
+            // the first min(n_chunks, width) positions cover every chunk.
+            let used = self.placement.alloc_width(meta.alloc).min(meta.n_chunks as usize);
+            for j in 0..used {
+                let primary = self.placement.chunk_primary(meta.alloc, j as u64);
                 match node {
                     None => node = Some(primary),
                     Some(n) if n == primary => {}

@@ -41,10 +41,22 @@
 //! aggregated with train-weighted SYN-drop/mux calibration
 //! (`Fidelity::detailed_aggregated`, ~an order of magnitude cheaper
 //! trials).
+//!
+//! ## Interned placement
+//!
+//! Placement decisions flow through a [`PlacementArena`]: a write
+//! allocation is one interned [`AllocId`] (every policy produces a ring
+//! stripe), the committed-metadata table stores that id plus a chunk
+//! count, and `ChunkPut` messages carry an interned
+//! [`GroupId`](crate::model::placement::GroupId) + hop index instead of
+//! an owned replica-chain `Vec` — so full-stripe cluster-wide configs pay
+//! O(distinct groups) placement work instead of O(n·stripe) per workload
+//! (see [`crate::model::placement`] and PERF.md §Interned placement).
 
 use crate::model::config::{Config, Placement};
 use crate::model::driver::DriverState;
 use crate::model::fidelity::Fidelity;
+use crate::model::placement::{AllocId, PlacementArena};
 use crate::model::platform::Platform;
 use crate::model::proto::*;
 use crate::model::report::{OpRecord, SimReport, TaskRecord, UtilReport};
@@ -120,10 +132,15 @@ impl NicIn {
     }
 }
 
-/// Committed file metadata at the manager: one replica group per chunk.
-#[derive(Clone, Debug)]
+/// Committed file metadata at the manager: the interned allocation plus
+/// the chunk count. Chunk `i`'s replica group is derived from the
+/// allocation on demand (see [`crate::model::placement`]) — the table
+/// never materializes per-chunk group vectors, so committing an n-chunk
+/// file over a w-wide stripe costs O(1) instead of O(n·w).
+#[derive(Clone, Copy, Debug)]
 pub struct FileMeta {
-    pub chunks: Vec<Vec<usize>>,
+    pub alloc: AllocId,
+    pub n_chunks: u32,
 }
 
 /// Simulation events.
@@ -188,6 +205,9 @@ pub struct World<'a> {
     // Manager state.
     pub(crate) meta: Vec<Option<FileMeta>>,
     pub(crate) rr_cursor: usize,
+    /// Interned placement decisions: every distinct replica group and
+    /// write allocation is stored once and referenced by copyable ids.
+    pub(crate) placement: PlacementArena,
 
     // Client operation state.
     pub(crate) ops: Vec<Op>,
@@ -245,6 +265,7 @@ impl<'a> World<'a> {
             msgs: Vec::with_capacity(1024),
             meta: vec![None; wl.files.len()],
             rr_cursor: 0,
+            placement: PlacementArena::new(cfg.n_storage),
             ops: Vec::with_capacity(wl.tasks.len() * 4),
             driver: DriverState::new(wl, cfg),
             stored: vec![0; cfg.n_storage],
@@ -261,78 +282,64 @@ impl<'a> World<'a> {
     /// "already loaded in intermediate storage"). Bytes are accounted but
     /// no traffic is generated.
     fn prestage_files(&mut self) {
-        for (fid, f) in self.wl.files.iter().enumerate() {
+        let wl = self.wl;
+        for (fid, f) in wl.files.iter().enumerate() {
             if !f.prestaged {
                 continue;
             }
             let repl = f.replication.unwrap_or(self.cfg.replication) as usize;
-            let stripe = self.stripe_targets_for(fid, None);
+            let alloc = self.alloc_for(fid, None, repl);
             let n_chunks = f.size.chunks(self.cfg.chunk_size);
-            let mut chunks = Vec::with_capacity(n_chunks as usize);
             for i in 0..n_chunks {
-                let group = self.replica_group(stripe[i as usize % stripe.len()], repl);
-                for (r, &s) in group.iter().enumerate() {
-                    let b = if f.size.as_u64() == 0 {
-                        0
-                    } else {
-                        let full = self.cfg.chunk_size.as_u64();
-                        (f.size.as_u64() - i * full).min(full)
-                    };
-                    let _ = r;
+                let b = if f.size.as_u64() == 0 {
+                    0
+                } else {
+                    let full = self.cfg.chunk_size.as_u64();
+                    (f.size.as_u64() - i * full).min(full)
+                };
+                for k in 0..self.placement.chunk_group_len(alloc, i) {
+                    let s = self.placement.chunk_member(alloc, i, k);
                     self.stored[s] += b;
                 }
-                chunks.push(group);
             }
-            self.meta[fid] = Some(FileMeta { chunks });
+            self.meta[fid] = Some(FileMeta { alloc, n_chunks: n_chunks as u32 });
         }
     }
 
     // ---------------- placement (manager policy) ----------------
 
-    /// Replica group for a primary: ring successors on the storage set.
-    pub(crate) fn replica_group(&self, primary: usize, repl: usize) -> Vec<usize> {
-        let n = self.cfg.n_storage;
-        (0..repl.min(n)).map(|k| (primary + k) % n).collect()
-    }
-
-    /// Stripe targets for writing `file` from `client` (None = prestage).
-    pub(crate) fn stripe_targets_for(&mut self, file: usize, client: Option<usize>) -> Vec<usize> {
+    /// Interned allocation for writing `file` from `client` (None =
+    /// prestage): the placement policy resolved to a ring stripe —
+    /// `(start, width)` plus the replication level — and interned once.
+    /// Every policy (hints included) produces a ring, so this is O(1)
+    /// regardless of stripe width; per-chunk replica groups are derived
+    /// from the id on demand and materialized never.
+    pub(crate) fn alloc_for(&mut self, file: usize, client: Option<usize>, repl: usize) -> AllocId {
         let hint = self.wl.files[file].hint;
         let n = self.cfg.n_storage;
-        match hint {
-            FileHint::OnNode(s) => vec![s % n],
+        let (start, width) = match hint {
+            FileHint::OnNode(s) => (s % n, 1),
             FileHint::Striped => {
                 let w = self.cfg.stripe_width.min(n);
-                let start = self.next_cursor(n);
-                (0..w).map(|k| (start + k) % n).collect()
+                (self.next_cursor(n), w)
             }
-            FileHint::Local => {
-                if let Some(c) = client {
-                    if let Some(s) = self.cfg.storage_on_client_host(c) {
-                        return vec![s];
-                    }
-                }
+            FileHint::Local => match client.and_then(|c| self.cfg.storage_on_client_host(c)) {
+                Some(s) => (s, 1),
                 // No collocated storage: fall back to one rotating node.
-                let s = self.next_cursor(n);
-                vec![s]
-            }
+                None => (self.next_cursor(n), 1),
+            },
             FileHint::Default => match self.cfg.placement {
-                Placement::Local => {
-                    if let Some(c) = client {
-                        if let Some(s) = self.cfg.storage_on_client_host(c) {
-                            return vec![s];
-                        }
-                    }
-                    let s = self.next_cursor(n);
-                    vec![s]
-                }
+                Placement::Local => match client.and_then(|c| self.cfg.storage_on_client_host(c)) {
+                    Some(s) => (s, 1),
+                    None => (self.next_cursor(n), 1),
+                },
                 Placement::RoundRobin => {
                     let w = self.cfg.stripe_width.min(n);
-                    let start = self.next_cursor(n);
-                    (0..w).map(|k| (start + k) % n).collect()
+                    (self.next_cursor(n), w)
                 }
             },
-        }
+        };
+        self.placement.alloc_ring(start, width, repl)
     }
 
     /// Next stripe start: a global round-robin cursor in the coarse model,
@@ -688,27 +695,27 @@ impl<'a> World<'a> {
     // ---------------- manager protocol ----------------
 
     fn manager_process(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, msg: MsgId) {
-        // Messages are processed exactly once: take the payload instead of
-        // deep-cloning it (ChunkPut carries a replica-chain Vec).
-        let payload = std::mem::replace(&mut self.msgs[msg].payload, Payload::MetaPing);
+        // Payloads are plain-data `Copy` (replica chains travel as
+        // interned `GroupId`s), so reading one out of the arena is free.
+        let payload = self.msgs[msg].payload;
         match payload {
             Payload::WriteAlloc { op } => {
                 let (client, file) = (self.ops[op].client, self.ops[op].file);
                 let repl = self.wl.files[file].replication.unwrap_or(self.cfg.replication) as usize;
-                let stripe = self.stripe_targets_for(file, Some(client));
-                self.ops[op].targets =
-                    stripe.iter().map(|&p| self.replica_group(p, repl)).collect();
+                // The whole allocation — stripe and replica groups — is
+                // one interned id; the old path materialized O(stripe)
+                // replica-group Vecs here on every write.
+                let alloc = self.alloc_for(file, Some(client), repl);
+                self.ops[op].alloc = Some(alloc);
                 self.send(sched, now, CompId::Manager, CompId::Client(client), Payload::WriteAllocResp { op });
             }
             Payload::ChunkCommit { op } => {
                 let o = &self.ops[op];
-                let (client, file) = (o.client, o.file);
-                // Build per-chunk metadata from the op's stripe groups.
-                let groups = o.targets.clone();
-                let n_chunks = o.n_chunks;
-                let chunks: Vec<Vec<usize>> =
-                    (0..n_chunks).map(|i| groups[i as usize % groups.len()].clone()).collect();
-                self.meta[file] = Some(FileMeta { chunks });
+                let (client, file, n_chunks) = (o.client, o.file, o.n_chunks);
+                // Commit copies the interned allocation id — O(1), where
+                // the old path cloned one replica-group Vec per chunk.
+                let alloc = o.alloc.expect("commit before alloc");
+                self.meta[file] = Some(FileMeta { alloc, n_chunks });
                 self.send(sched, now, CompId::Manager, CompId::Client(client), Payload::CommitAck { op });
                 // File becomes visible: release dependents.
                 self.file_committed(sched, now, file);
@@ -740,20 +747,23 @@ impl<'a> World<'a> {
     // ---------------- storage protocol ----------------
 
     fn storage_process(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, s: usize, msg: MsgId) {
-        // Messages are processed exactly once: take the payload instead of
-        // deep-cloning it (ChunkPut carries a replica-chain Vec).
-        let payload = std::mem::replace(&mut self.msgs[msg].payload, Payload::MetaPing);
+        // Payloads are plain-data `Copy` (replica chains travel as
+        // interned `GroupId`s), so reading one out of the arena is free.
+        let payload = self.msgs[msg].payload;
         match payload {
-            Payload::ChunkPut { op, chunk, size, chain } => {
+            Payload::ChunkPut { op, chunk, size, group, hop } => {
                 self.stored[s] += size.as_u64();
-                if let Some((&next_s, rest)) = chain.split_first() {
-                    // Chained replication: forward to the next replica.
+                let next_hop = hop as usize + 1;
+                if next_hop < self.placement.group_len(group) {
+                    // Chained replication: forward to the next replica,
+                    // resolved from the interned group in O(1).
+                    let next_s = self.placement.group_member(group, next_hop);
                     self.send(
                         sched,
                         now,
                         CompId::Storage(s),
                         CompId::Storage(next_s),
-                        Payload::ChunkPut { op, chunk, size, chain: rest.to_vec() },
+                        Payload::ChunkPut { op, chunk, size, group, hop: hop + 1 },
                     );
                 } else {
                     let client = self.ops[op].client;
@@ -771,9 +781,9 @@ impl<'a> World<'a> {
     // ---------------- client protocol ----------------
 
     fn client_process(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, c: usize, msg: MsgId) {
-        // Messages are processed exactly once: take the payload instead of
-        // deep-cloning it (ChunkPut carries a replica-chain Vec).
-        let payload = std::mem::replace(&mut self.msgs[msg].payload, Payload::MetaPing);
+        // Payloads are plain-data `Copy` (replica chains travel as
+        // interned `GroupId`s), so reading one out of the arena is free.
+        let payload = self.msgs[msg].payload;
         match payload {
             Payload::AppIssue { op } => {
                 // Detailed protocol opens the file at the manager first;
@@ -850,16 +860,24 @@ impl<'a> World<'a> {
         };
         match o.kind {
             OpKind::Write => {
-                for g in &o.targets {
-                    for &s in g {
-                        mark(s);
+                // Every stripe position's replica group, resolved
+                // arithmetically from the interned allocation.
+                if let Some(alloc) = o.alloc {
+                    for j in 0..self.placement.alloc_width(alloc) {
+                        for k in 0..self.placement.chunk_group_len(alloc, j as u64) {
+                            mark(self.placement.chunk_member(alloc, j as u64, k));
+                        }
                     }
                 }
             }
             OpKind::Read => {
-                if let Some(meta) = self.meta[o.file].as_ref() {
-                    for g in &meta.chunks {
-                        mark(g[0]);
+                // Distinct primaries over the chunks that exist: chunk i
+                // maps to stripe position i % width, so the first
+                // min(n_chunks, width) positions cover them all.
+                if let Some(meta) = self.meta[o.file] {
+                    let used = self.placement.alloc_width(meta.alloc).min(meta.n_chunks as usize);
+                    for j in 0..used {
+                        mark(self.placement.chunk_primary(meta.alloc, j as u64));
                     }
                 }
             }
@@ -899,28 +917,33 @@ impl<'a> World<'a> {
         let c = self.ops[op].client;
         match self.ops[op].kind {
             OpKind::Write => {
-                let groups = &self.ops[op].targets;
-                let group = &groups[i as usize % groups.len()];
-                let (primary, chain) = (group[0], group[1..].to_vec());
+                // The chunk's replica group is interned (lazily, once per
+                // *distinct* group) so the put can carry a copyable id.
+                let alloc = self.ops[op].alloc.expect("write before alloc");
+                let group = self.placement.group_of(alloc, i as u64);
+                let primary = self.placement.group_member(group, 0);
                 self.send(
                     sched,
                     now,
                     CompId::Client(c),
                     CompId::Storage(primary),
-                    Payload::ChunkPut { op, chunk: i, size, chain },
+                    Payload::ChunkPut { op, chunk: i, size, group, hop: 0 },
                 );
             }
             OpKind::Read => {
                 let file = self.ops[op].file;
-                let meta = self.meta[file].as_ref().expect("read before commit");
-                let group = &meta.chunks[i as usize];
+                let meta = self.meta[file].expect("read before commit");
                 // Prefer a replica on our own host; otherwise spread
-                // deterministically by (chunk, client).
+                // deterministically by (chunk, client). Both answers are
+                // O(1) ring arithmetic on the interned allocation.
+                let glen = self.placement.chunk_group_len(meta.alloc, i as u64);
                 let src = self
                     .cfg
                     .storage_on_client_host(c)
-                    .filter(|s| group.contains(s))
-                    .unwrap_or_else(|| group[(i as usize + c) % group.len()]);
+                    .filter(|&s| self.placement.chunk_contains(meta.alloc, i as u64, s))
+                    .unwrap_or_else(|| {
+                        self.placement.chunk_member(meta.alloc, i as u64, (i as usize + c) % glen)
+                    });
                 self.send(sched, now, CompId::Client(c), CompId::Storage(src), Payload::ChunkGet { op, chunk: i, size });
             }
         }
@@ -962,7 +985,7 @@ impl<'a> World<'a> {
             file,
             size,
             n_chunks,
-            targets: Vec::new(),
+            alloc: None,
             done: 0,
             next: 0,
             started_ns: now.as_ns(),

@@ -13,6 +13,11 @@
 //! * [`platform`] — service times from system identification (μ_net, μ_sm,
 //!   μ_man, μ_cli) and platform presets (paper testbed, HDD, SSD, 10GbE).
 //! * [`proto`] — message types of the (coarse) storage protocol.
+//! * [`placement`] — interned replica-group placement: every distinct
+//!   replica group and write allocation is stored once behind a copyable
+//!   id, derived lazily from `(primary, repl)` ring arithmetic, so
+//!   full-stripe cluster-wide configurations stop paying O(n·stripe)
+//!   placement vectors per workload.
 //! * [`engine`] — the simulation world: per-host NIC queues, component
 //!   stations, manager metadata, client operations.
 //! * [`driver`] — the application driver: releases tasks when their input
@@ -23,6 +28,7 @@
 pub mod config;
 pub mod platform;
 pub mod proto;
+pub mod placement;
 pub mod fidelity;
 pub mod energy;
 pub mod engine;
@@ -30,6 +36,7 @@ pub mod driver;
 pub mod report;
 
 pub use config::{Config, Placement};
+pub use placement::{AllocId, GroupId, PlacementArena, RefPlacement};
 pub use engine::{simulate, simulate_fid};
 pub use energy::PowerModel;
 pub use fidelity::Fidelity;

@@ -1,0 +1,485 @@
+//! Interned replica-group placement.
+//!
+//! Before this module existed, every write allocation materialized its
+//! placement as `Vec<Vec<usize>>` — one heap vector per stripe position,
+//! each listing that chunk's replica nodes — and the commit path cloned
+//! the whole structure into the committed-metadata table, chunk by chunk.
+//! On an n-wide stripe that is O(stripe) allocations per write and
+//! O(n·stripe) work per workload: cheap at paper scale (20 nodes), but
+//! the term that dominated full-stripe 4096-host configurations after the
+//! virtual-time event core (PR 4) made the *event* cost flat — the incast
+//! microbench had to cap the stripe at 64 to isolate the event core.
+//!
+//! The fix is that placement decisions have almost no entropy. Every
+//! built-in policy — round-robin stripes, local-first, per-file
+//! `OnNode`/`Striped` hints, and the randomized variant behind
+//! `Fidelity::random_placement` — produces *ring* replica groups
+//! `(primary + k) % n_storage` for `k < repl`, laid out over *ring*
+//! stripes `(start + j) % n_storage` for `j < width`. A whole allocation
+//! is therefore three integers, and a cluster has at most
+//! `n_storage × distinct replication levels` distinct replica groups no
+//! matter how many files are written.
+//!
+//! [`PlacementArena`] exploits this:
+//!
+//! * an **allocation** (one write's placement decision) is interned once
+//!   behind a copyable [`AllocId`]; the operation state and the
+//!   committed-metadata table ([`super::engine::FileMeta`]) store the id,
+//!   so the commit path copies 4 bytes instead of cloning per-chunk
+//!   vectors;
+//! * a **replica group** is interned once behind a copyable [`GroupId`],
+//!   derived lazily from its `(primary, repl)` pair the first time a
+//!   protocol message actually needs to carry the chain
+//!   (`Payload::ChunkPut` carries a `GroupId` + hop index, not an owned
+//!   `Vec`);
+//! * membership questions on the read path ("prefer a replica on our own
+//!   host", distinct-target counts, location-aware scheduling) are
+//!   answered arithmetically in O(1) from the ring definition without
+//!   materializing anything.
+//!
+//! Explicit (non-ring) groups remain representable — [`explicit_group`]
+//! canonicalizes ring-shaped member lists back to the interned ring id,
+//! so two policy paths that coincide yield *the same* id (testable by
+//! equality) — but no built-in policy produces them.
+//!
+//! The pre-interning materialized shape survives as [`RefPlacement`], the
+//! equivalence oracle a property test drives in lockstep with the arena
+//! (same role `RefFairStation` plays for the virtual-time fair server):
+//! bit-identical groups, chunk maps, and membership answers across
+//! policies × stripe widths × replication levels.
+//!
+//! [`explicit_group`]: PlacementArena::explicit_group
+
+use std::collections::HashMap;
+
+/// Handle to one interned replica group (a chunk's ordered replica
+/// chain). Small and copyable: protocol messages carry it by value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct GroupId(u32);
+
+impl GroupId {
+    /// Arena slot index (stable for the arena's lifetime).
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Handle to one interned allocation (a whole write's placement: the
+/// mapping from chunk index to replica group). Copyable; the op state
+/// and the committed-metadata table store this instead of materialized
+/// group vectors.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct AllocId(u32);
+
+impl AllocId {
+    /// Arena slot index (stable for the arena's lifetime).
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Shape of one distinct replica group.
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum GroupDef {
+    /// Ring successors `(primary + k) % n_storage` for `k < len` — the
+    /// shape every built-in policy produces (chained replication walks
+    /// the storage ring).
+    Ring { primary: u32, len: u32 },
+    /// Explicit ordered member list (no built-in policy produces one;
+    /// kept so externally described placements stay representable).
+    Explicit(Box<[u32]>),
+}
+
+/// Shape of one allocation: chunk `i` maps to stripe position
+/// `i % width`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum AllocDef {
+    /// Ring stripe: position `j`'s replica group is the ring group of
+    /// primary `(start + j) % n_storage` at replication `repl`.
+    Ring { start: u32, width: u32, repl: u32 },
+    /// Explicit per-position groups.
+    Explicit(Box<[GroupId]>),
+}
+
+/// Interning arena for replica groups and allocations.
+///
+/// Owned by the simulation `World` (and mirrored, in spirit, by the real
+/// store's metadata manager): every placement decision made during a run
+/// resolves to ids into this arena, and each distinct group or
+/// allocation is stored exactly once regardless of how many chunks,
+/// files, or operations share it.
+#[derive(Debug)]
+pub struct PlacementArena {
+    n_storage: u32,
+    groups: Vec<GroupDef>,
+    ring_groups: HashMap<(u32, u32), GroupId>,
+    explicit_groups: HashMap<Box<[u32]>, GroupId>,
+    allocs: Vec<AllocDef>,
+    ring_allocs: HashMap<(u32, u32, u32), AllocId>,
+    explicit_allocs: HashMap<Box<[GroupId]>, AllocId>,
+}
+
+impl PlacementArena {
+    /// An arena over `n_storage` storage nodes (the ring modulus; fixed
+    /// for the arena's lifetime).
+    pub fn new(n_storage: usize) -> PlacementArena {
+        PlacementArena {
+            n_storage: n_storage as u32,
+            groups: Vec::new(),
+            ring_groups: HashMap::new(),
+            explicit_groups: HashMap::new(),
+            allocs: Vec::new(),
+            ring_allocs: HashMap::new(),
+            explicit_allocs: HashMap::new(),
+        }
+    }
+
+    /// Ring modulus (number of storage nodes).
+    pub fn n_storage(&self) -> usize {
+        self.n_storage as usize
+    }
+
+    /// Distinct replica groups interned so far.
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Distinct allocations interned so far.
+    pub fn n_allocs(&self) -> usize {
+        self.allocs.len()
+    }
+
+    // ---------------- groups ----------------
+
+    /// Intern the ring group of `primary` at replication `repl`
+    /// (clamped to the storage count, exactly as the materialized path
+    /// clamped it). O(1) amortized; each distinct `(primary, len)` pair
+    /// is stored once.
+    pub fn ring_group(&mut self, primary: usize, repl: usize) -> GroupId {
+        let n = self.n_storage;
+        debug_assert!(n > 0, "placement over zero storage nodes");
+        let primary = primary as u32 % n;
+        let len = (repl as u32).clamp(1, n);
+        if let Some(&id) = self.ring_groups.get(&(primary, len)) {
+            return id;
+        }
+        let id = GroupId(self.groups.len() as u32);
+        self.groups.push(GroupDef::Ring { primary, len });
+        self.ring_groups.insert((primary, len), id);
+        id
+    }
+
+    /// Intern an explicit ordered member list. Ring-shaped lists
+    /// canonicalize to the ring id, so an override that coincides with a
+    /// policy-derived group returns the *same* `GroupId`.
+    pub fn explicit_group(&mut self, members: &[usize]) -> GroupId {
+        assert!(!members.is_empty(), "replica group cannot be empty");
+        let n = self.n_storage as usize;
+        let is_ring = members
+            .iter()
+            .enumerate()
+            .all(|(k, &m)| m == (members[0] + k) % n);
+        if is_ring && members.len() <= n {
+            return self.ring_group(members[0], members.len());
+        }
+        let key: Box<[u32]> = members.iter().map(|&m| m as u32).collect();
+        if let Some(&id) = self.explicit_groups.get(&key) {
+            return id;
+        }
+        let id = GroupId(self.groups.len() as u32);
+        self.groups.push(GroupDef::Explicit(key.clone()));
+        self.explicit_groups.insert(key, id);
+        id
+    }
+
+    /// Number of replicas in a group.
+    pub fn group_len(&self, g: GroupId) -> usize {
+        match &self.groups[g.index()] {
+            GroupDef::Ring { len, .. } => *len as usize,
+            GroupDef::Explicit(m) => m.len(),
+        }
+    }
+
+    /// The `k`-th replica of a group (0 = primary).
+    pub fn group_member(&self, g: GroupId, k: usize) -> usize {
+        match &self.groups[g.index()] {
+            GroupDef::Ring { primary, len } => {
+                debug_assert!((k as u32) < *len);
+                ((*primary as usize) + k) % self.n_storage as usize
+            }
+            GroupDef::Explicit(m) => m[k] as usize,
+        }
+    }
+
+    /// Whether storage node `s` holds a replica. O(1) for ring groups.
+    pub fn group_contains(&self, g: GroupId, s: usize) -> bool {
+        match &self.groups[g.index()] {
+            GroupDef::Ring { primary, len } => {
+                let n = self.n_storage as usize;
+                s < n && ((s + n - *primary as usize) % n) < *len as usize
+            }
+            GroupDef::Explicit(m) => m.contains(&(s as u32)),
+        }
+    }
+
+    /// Materialize the explicit replica chain — only for protocol
+    /// encodings and tests; the hot paths never call this.
+    pub fn materialize(&self, g: GroupId) -> Vec<usize> {
+        (0..self.group_len(g)).map(|k| self.group_member(g, k)).collect()
+    }
+
+    // ---------------- allocations ----------------
+
+    /// Intern a ring-stripe allocation: stripe position `j` is primary
+    /// `(start + j) % n_storage`, each position a ring group at `repl`.
+    /// Every built-in policy path funnels through here.
+    pub fn alloc_ring(&mut self, start: usize, width: usize, repl: usize) -> AllocId {
+        let n = self.n_storage;
+        debug_assert!(n > 0, "placement over zero storage nodes");
+        let start = start as u32 % n;
+        let width = (width as u32).clamp(1, n);
+        let repl = (repl as u32).clamp(1, n);
+        if let Some(&id) = self.ring_allocs.get(&(start, width, repl)) {
+            return id;
+        }
+        let id = AllocId(self.allocs.len() as u32);
+        self.allocs.push(AllocDef::Ring { start, width, repl });
+        self.ring_allocs.insert((start, width, repl), id);
+        id
+    }
+
+    /// Intern an allocation from explicit per-position groups. Like the
+    /// ring path, each distinct group sequence is stored exactly once.
+    pub fn alloc_explicit(&mut self, groups: &[GroupId]) -> AllocId {
+        assert!(!groups.is_empty(), "allocation cannot be empty");
+        let key: Box<[GroupId]> = groups.into();
+        if let Some(&id) = self.explicit_allocs.get(&key) {
+            return id;
+        }
+        let id = AllocId(self.allocs.len() as u32);
+        self.allocs.push(AllocDef::Explicit(key.clone()));
+        self.explicit_allocs.insert(key, id);
+        id
+    }
+
+    /// Stripe width (number of stripe positions) of an allocation.
+    pub fn alloc_width(&self, a: AllocId) -> usize {
+        match &self.allocs[a.index()] {
+            AllocDef::Ring { width, .. } => *width as usize,
+            AllocDef::Explicit(g) => g.len(),
+        }
+    }
+
+    /// Replica group of chunk `i` — interned lazily on first use (this
+    /// is the only allocation-path operation that may insert, and it
+    /// inserts at most once per *distinct* group, not per chunk).
+    pub fn group_of(&mut self, a: AllocId, chunk: u64) -> GroupId {
+        // Resolve the def to owned data first so the lazy intern below
+        // can take `&mut self` without fighting the arena borrow.
+        let ring = match &self.allocs[a.index()] {
+            &AllocDef::Ring { start, width, repl } => Ok((start, width, repl)),
+            AllocDef::Explicit(g) => Err(g[(chunk % g.len() as u64) as usize]),
+        };
+        match ring {
+            Ok((start, width, repl)) => {
+                let primary = (start as u64 + chunk % width as u64) % self.n_storage as u64;
+                self.ring_group(primary as usize, repl as usize)
+            }
+            Err(gid) => gid,
+        }
+    }
+
+    /// Replicas in chunk `i`'s group, without interning.
+    pub fn chunk_group_len(&self, a: AllocId, chunk: u64) -> usize {
+        match &self.allocs[a.index()] {
+            AllocDef::Ring { repl, .. } => *repl as usize,
+            AllocDef::Explicit(g) => self.group_len(g[(chunk % g.len() as u64) as usize]),
+        }
+    }
+
+    /// The `k`-th replica of chunk `i`'s group, without interning.
+    pub fn chunk_member(&self, a: AllocId, chunk: u64, k: usize) -> usize {
+        match &self.allocs[a.index()] {
+            &AllocDef::Ring { start, width, .. } => {
+                let n = self.n_storage as u64;
+                ((start as u64 + chunk % width as u64 + k as u64) % n) as usize
+            }
+            AllocDef::Explicit(g) => self.group_member(g[(chunk % g.len() as u64) as usize], k),
+        }
+    }
+
+    /// Primary replica of chunk `i`.
+    pub fn chunk_primary(&self, a: AllocId, chunk: u64) -> usize {
+        self.chunk_member(a, chunk, 0)
+    }
+
+    /// Whether node `s` holds a replica of chunk `i`. O(1) — this is the
+    /// read path's "prefer a replica on our own host" test.
+    pub fn chunk_contains(&self, a: AllocId, chunk: u64, s: usize) -> bool {
+        match &self.allocs[a.index()] {
+            &AllocDef::Ring { start, width, repl } => {
+                let n = self.n_storage as usize;
+                if s >= n {
+                    return false;
+                }
+                let primary = (start as usize + (chunk % width as u64) as usize) % n;
+                ((s + n - primary) % n) < repl as usize
+            }
+            AllocDef::Explicit(g) => self.group_contains(g[(chunk % g.len() as u64) as usize], s),
+        }
+    }
+}
+
+/// The pre-interning materialized placement shape, retained as the
+/// equivalence oracle (the same role [`crate::sim::RefFairStation`]
+/// plays for the virtual-time fair server): it computes replica groups,
+/// stripe targets, and per-chunk commit maps exactly the way the engine
+/// did before the arena existed — eager `Vec<Vec<usize>>`s — so a
+/// property test can drive both shapes in lockstep over
+/// policies × stripe widths × replication levels and demand
+/// bit-identical groups, chunk maps, and membership answers.
+#[derive(Clone, Copy, Debug)]
+pub struct RefPlacement {
+    pub n_storage: usize,
+}
+
+impl RefPlacement {
+    /// Replica group for a primary: ring successors on the storage set
+    /// (verbatim the old `World::replica_group`).
+    pub fn replica_group(&self, primary: usize, repl: usize) -> Vec<usize> {
+        let n = self.n_storage;
+        (0..repl.clamp(1, n)).map(|k| (primary + k) % n).collect()
+    }
+
+    /// Stripe targets of a ring allocation (verbatim the old
+    /// round-robin arm of `World::stripe_targets_for`).
+    pub fn stripe_targets(&self, start: usize, width: usize) -> Vec<usize> {
+        let n = self.n_storage;
+        let w = width.clamp(1, n);
+        (0..w).map(|k| (start + k) % n).collect()
+    }
+
+    /// The materialized per-position groups of one allocation (verbatim
+    /// the old `WriteAlloc` handler body).
+    pub fn alloc_groups(&self, start: usize, width: usize, repl: usize) -> Vec<Vec<usize>> {
+        self.stripe_targets(start, width)
+            .iter()
+            .map(|&p| self.replica_group(p, repl))
+            .collect()
+    }
+
+    /// The materialized per-chunk commit map (verbatim the old
+    /// `ChunkCommit` handler body).
+    pub fn chunk_groups(&self, groups: &[Vec<usize>], n_chunks: u64) -> Vec<Vec<usize>> {
+        (0..n_chunks)
+            .map(|i| groups[i as usize % groups.len()].clone())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_groups_intern_once() {
+        let mut a = PlacementArena::new(5);
+        let g1 = a.ring_group(2, 3);
+        let g2 = a.ring_group(2, 3);
+        assert_eq!(g1, g2, "same (primary, repl) pair, same id");
+        assert_eq!(a.n_groups(), 1);
+        assert_eq!(a.materialize(g1), vec![2, 3, 4]);
+        let g3 = a.ring_group(4, 2);
+        assert_ne!(g1, g3);
+        assert_eq!(a.materialize(g3), vec![4, 0], "ring wraps the storage set");
+    }
+
+    #[test]
+    fn replication_clamped_to_storage_count() {
+        let mut a = PlacementArena::new(3);
+        let g = a.ring_group(1, 10);
+        assert_eq!(a.group_len(g), 3);
+        assert_eq!(a.materialize(g), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn membership_is_exact() {
+        let mut a = PlacementArena::new(7);
+        let g = a.ring_group(5, 3); // {5, 6, 0}
+        for s in 0..7 {
+            assert_eq!(
+                a.group_contains(g, s),
+                [5, 6, 0].contains(&s),
+                "membership of node {s}"
+            );
+        }
+        assert!(!a.group_contains(g, 7), "out-of-range node is never a member");
+    }
+
+    #[test]
+    fn explicit_ring_shaped_group_canonicalizes_to_ring_id() {
+        let mut a = PlacementArena::new(6);
+        let ring = a.ring_group(4, 3); // {4, 5, 0}
+        let explicit = a.explicit_group(&[4, 5, 0]);
+        assert_eq!(ring, explicit, "ring-shaped override coincides with the policy id");
+        assert_eq!(a.n_groups(), 1);
+        let scattered = a.explicit_group(&[1, 4]);
+        assert_ne!(ring, scattered);
+        assert_eq!(a.materialize(scattered), vec![1, 4]);
+        assert!(a.group_contains(scattered, 4) && !a.group_contains(scattered, 2));
+    }
+
+    #[test]
+    fn alloc_chunk_map_wraps_stripe() {
+        let mut a = PlacementArena::new(4);
+        let al = a.alloc_ring(2, 3, 2);
+        assert_eq!(a.alloc_width(al), 3);
+        // Chunks walk the stripe positions cyclically: 2, 3, 0, 2, 3, …
+        assert_eq!(a.chunk_primary(al, 0), 2);
+        assert_eq!(a.chunk_primary(al, 1), 3);
+        assert_eq!(a.chunk_primary(al, 2), 0);
+        assert_eq!(a.chunk_primary(al, 3), 2);
+        assert_eq!(a.chunk_member(al, 1, 1), 0, "replica ring wraps too");
+        assert!(a.chunk_contains(al, 1, 3) && a.chunk_contains(al, 1, 0));
+        assert!(!a.chunk_contains(al, 1, 2));
+        // Lazily interned group of a chunk matches the arithmetic view.
+        let g = a.group_of(al, 1);
+        assert_eq!(a.materialize(g), vec![3, 0]);
+        assert_eq!(a.n_groups(), 1, "only the touched group got interned");
+    }
+
+    #[test]
+    fn allocs_intern_once_and_groups_dedup_across_allocs() {
+        let mut a = PlacementArena::new(8);
+        let x = a.alloc_ring(1, 4, 2);
+        let y = a.alloc_ring(1, 4, 2);
+        assert_eq!(x, y);
+        assert_eq!(a.n_allocs(), 1);
+        // Explicit allocations intern by content too.
+        let g0 = a.ring_group(1, 2);
+        let g1 = a.ring_group(5, 2);
+        let e1 = a.alloc_explicit(&[g0, g1]);
+        let e2 = a.alloc_explicit(&[g0, g1]);
+        assert_eq!(e1, e2, "same group sequence, same alloc id");
+        assert_eq!(a.n_allocs(), 2);
+        // A different allocation whose stripe overlaps shares group ids.
+        let z = a.alloc_ring(3, 2, 2);
+        let g_from_x = a.group_of(x, 2); // primary 3
+        let g_from_z = a.group_of(z, 0); // primary 3
+        assert_eq!(g_from_x, g_from_z, "distinct groups are stored once, arena-wide");
+    }
+
+    #[test]
+    fn reference_shape_matches_arena_on_a_known_case() {
+        let (n, start, width, repl, n_chunks) = (5usize, 3usize, 4usize, 2usize, 9u64);
+        let mut a = PlacementArena::new(n);
+        let r = RefPlacement { n_storage: n };
+        let al = a.alloc_ring(start, width, repl);
+        let groups = r.alloc_groups(start, width, repl);
+        let chunks = r.chunk_groups(&groups, n_chunks);
+        for (i, want) in chunks.iter().enumerate() {
+            let gid = a.group_of(al, i as u64);
+            assert_eq!(&a.materialize(gid), want, "chunk {i} group");
+        }
+    }
+}

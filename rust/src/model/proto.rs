@@ -8,6 +8,7 @@
 //! replication) → chunk-map commit at the manager. Reads are lookup →
 //! per-chunk gets.
 
+use crate::model::placement::{AllocId, GroupId};
 use crate::util::units::Bytes;
 use crate::workload::{FileId, TaskId};
 
@@ -27,8 +28,11 @@ pub type OpId = usize;
 pub const CTRL_MSG: Bytes = Bytes(1024);
 
 /// Message payloads. Data messages (`ChunkPut`, `ReplicaPut`, `ChunkData`)
-/// carry chunk-sized payloads; everything else is control.
-#[derive(Clone, Debug)]
+/// carry chunk-sized payloads; everything else is control. Replica
+/// chains travel as interned [`GroupId`]s plus a hop index — a few
+/// copyable words — so every payload is `Copy` and nothing on the
+/// protocol path clones per-replica vectors.
+#[derive(Clone, Copy, Debug)]
 pub enum Payload {
     // ---- application → client SAI ----
     /// The driver hands an operation to the client service.
@@ -39,9 +43,12 @@ pub enum Payload {
     WriteAlloc { op: OpId },
     /// manager → client: stripe targets decided (stored in op state).
     WriteAllocResp { op: OpId },
-    /// client → storage: store one chunk; `chain` holds the remaining
-    /// replica targets (chained replication).
-    ChunkPut { op: OpId, chunk: u32, size: Bytes, chain: Vec<usize> },
+    /// client → storage: store one chunk. `group` is the chunk's interned
+    /// replica chain and `hop` the receiver's position in it; the storage
+    /// node forwards to `group[hop + 1]` while one exists (chained
+    /// replication), resolving members through the world's
+    /// [`PlacementArena`](crate::model::placement::PlacementArena).
+    ChunkPut { op: OpId, chunk: u32, size: Bytes, group: GroupId, hop: u32 },
     /// tail storage → client: chunk fully stored on all replicas.
     ChunkPutAck { op: OpId, chunk: u32 },
     /// client → manager: chunk map, closes the write.
@@ -98,7 +105,7 @@ impl Payload {
 }
 
 /// An in-flight message.
-#[derive(Clone, Debug)]
+#[derive(Clone, Copy, Debug)]
 pub struct Msg {
     pub from: CompId,
     pub to: CompId,
@@ -154,9 +161,11 @@ pub struct Op {
     pub file: FileId,
     pub size: Bytes,
     pub n_chunks: u32,
-    /// Write: stripe targets chosen by the manager (replica groups are
-    /// derived per chunk). Read: per-chunk replica groups from metadata.
-    pub targets: Vec<Vec<usize>>,
+    /// Write: the interned allocation chosen by the manager (per-chunk
+    /// replica groups are derived from it on demand). `None` until the
+    /// manager's `WriteAllocResp`; reads resolve placement through the
+    /// committed metadata instead.
+    pub alloc: Option<AllocId>,
     /// Chunks completed (acked / received).
     pub done: u32,
     /// Next chunk index to issue (window flow control).
@@ -191,7 +200,9 @@ mod tests {
 
     #[test]
     fn data_messages_carry_payload() {
-        let p = Payload::ChunkPut { op: 0, chunk: 0, size: Bytes::mb(1), chain: vec![] };
+        let mut arena = crate::model::placement::PlacementArena::new(2);
+        let g = arena.ring_group(0, 2);
+        let p = Payload::ChunkPut { op: 0, chunk: 0, size: Bytes::mb(1), group: g, hop: 0 };
         assert_eq!(p.wire_size(), Bytes::mb(1) + CTRL_MSG);
         let p = Payload::ChunkData { op: 0, chunk: 0, size: Bytes::kb(256) };
         assert_eq!(p.wire_size(), Bytes::kb(256) + CTRL_MSG);
@@ -206,7 +217,7 @@ mod tests {
             file: 0,
             size: Bytes(2_500_000),
             n_chunks: 3,
-            targets: vec![],
+            alloc: None,
             done: 0,
             next: 0,
             started_ns: 0,
@@ -237,7 +248,7 @@ mod tests {
             file: 0,
             size: Bytes::ZERO,
             n_chunks: 1,
-            targets: vec![],
+            alloc: None,
             done: 0,
             next: 0,
             started_ns: 0,

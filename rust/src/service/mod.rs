@@ -9,7 +9,7 @@
 //! `batch` invocations — ask about the same point. This module turns the
 //! predictor into a serving system:
 //!
-//! * **Fingerprints** ([`fingerprint`]) — a canonical, process-stable
+//! * **Fingerprints** ([`fingerprint`](mod@fingerprint)) — a canonical, process-stable
 //!   128-bit key over `(Workload, Config, Platform, Fidelity)`,
 //!   order-invariant over workload file/task layout.
 //! * **Memoization** ([`cache`]) — a sharded in-memory LRU of full

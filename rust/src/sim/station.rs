@@ -504,7 +504,7 @@ impl<T> FairStation<T> {
 /// from the supported API: it exists for the integration proptests, and
 /// nothing on a hot path may use it.
 ///
-/// Entries are the same [`VtEntry`] the fast server keeps (its heap
+/// Entries are the same `VtEntry` the fast server keeps (its heap
 /// ordering simply goes unused here), so the two cannot drift apart
 /// field-wise. Totals are recomputed by scanning the actives, the head
 /// is found by a linear minimum scan, and nothing is cached between

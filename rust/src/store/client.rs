@@ -9,12 +9,16 @@ use crate::store::StorePlacement;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::net::TcpStream;
+use std::sync::Arc;
 
 /// A connected store client.
 pub struct StoreClient {
     manager: TcpStream,
-    /// node_id → address.
-    node_addrs: Vec<String>,
+    /// node_id → address. Shared `Arc<str>`s: the write path hands out
+    /// one address per forwarded replica per chunk, which must not cost
+    /// a fresh `String` allocation each time (replication degree × chunk
+    /// count adds up on large files).
+    node_addrs: Vec<Arc<str>>,
     /// Pooled data connections, one per storage node.
     node_conns: HashMap<u32, TcpStream>,
     pub chunk_size: u64,
@@ -30,7 +34,8 @@ impl StoreClient {
         let resp = wire::call(&mut manager, Enc::new(op::NODES).finish())?;
         let mut d = Dec::new(&resp[1..]);
         let n = d.u32()?;
-        let node_addrs: Vec<String> = (0..n).map(|_| d.str()).collect::<Result<_>>()?;
+        let node_addrs: Vec<Arc<str>> =
+            (0..n).map(|_| d.str().map(Arc::from)).collect::<Result<_>>()?;
         Ok(StoreClient {
             manager,
             node_addrs,
@@ -64,7 +69,8 @@ impl StoreClient {
                 .node_addrs
                 .get(id as usize)
                 .ok_or_else(|| anyhow::anyhow!("unknown node {id}"))?;
-            let s = TcpStream::connect(addr).with_context(|| format!("connecting to node {id}"))?;
+            let s = TcpStream::connect(&**addr)
+                .with_context(|| format!("connecting to node {id}"))?;
             s.set_nodelay(true)?;
             self.node_conns.insert(id, s);
         }
@@ -98,11 +104,12 @@ impl StoreClient {
             let hi = ((i + 1) * self.chunk_size as usize).min(data.len());
             let chunk = &data[lo.min(data.len())..hi];
             let primary = group[0];
-            let chain: Vec<String> =
-                group[1..].iter().map(|&g| self.node_addrs[g as usize].clone()).collect();
-            let mut e = Enc::new(op::PUT).str(name).u32(i as u32).u32(chain.len() as u32);
-            for a in &chain {
-                e = e.str(a);
+            // Forwarding chain: encode the shared addresses straight into
+            // the wire body — no per-replica String clones.
+            let rest = &group[1..];
+            let mut e = Enc::new(op::PUT).str(name).u32(i as u32).u32(rest.len() as u32);
+            for &g in rest {
+                e = e.str(&self.node_addrs[g as usize]);
             }
             let body = e.bytes(chunk).finish();
             let conn = self.node_conn(primary)?;

@@ -12,13 +12,49 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 /// Metadata of one file.
+///
+/// Placement is interned, structurally mirroring the model's
+/// [`PlacementArena`](crate::model::placement::PlacementArena): instead
+/// of one materialized replica-group `Vec` per chunk, the table keeps
+/// the stripe primaries, the replication level, and the ring modulus
+/// captured at allocation time. Chunk `i`'s replica group
+/// `(stripe[i % stripe.len()] + k) % ring_mod` is derived on demand and
+/// materialized only at the moment a wire response needs the explicit
+/// chain — metadata cost per file is O(stripe), not O(chunks × repl).
 #[derive(Clone, Debug, Default)]
 struct FileMeta {
     size: u64,
     chunk_size: u64,
-    /// Replica group (node ids) per chunk.
-    chunks: Vec<Vec<u32>>,
+    n_chunks: u64,
+    /// Stripe primaries (chunk `i` starts at `stripe[i % stripe.len()]`).
+    stripe: Vec<u32>,
+    /// Replication level (ring successors of the primary).
+    repl: u32,
+    /// Node count at allocation time — the replica-ring modulus. Later
+    /// registrations must not change already-allocated placements.
+    ring_mod: u32,
     committed: bool,
+}
+
+impl FileMeta {
+    /// Materialize chunk `i`'s replica chain into `out` (wire encoding
+    /// only; `out` is a reusable scratch buffer).
+    fn fill_group(&self, i: u64, out: &mut Vec<u32>) {
+        out.clear();
+        let primary = self.stripe[(i % self.stripe.len() as u64) as usize];
+        out.extend((0..self.repl).map(|k| (primary + k) % self.ring_mod));
+    }
+
+    /// Append every chunk's (derived) replica group to a wire response —
+    /// one scratch buffer for the whole response, not one `Vec` per chunk.
+    fn encode_groups(&self, mut e: Enc) -> Enc {
+        let mut scratch = Vec::with_capacity(self.repl as usize);
+        for i in 0..self.n_chunks {
+            self.fill_group(i, &mut scratch);
+            e = e.u32_list(&scratch);
+        }
+        e
+    }
 }
 
 #[derive(Default)]
@@ -140,18 +176,17 @@ fn handle(msg: &[u8], state: &Arc<Mutex<State>>) -> Result<Vec<u8>> {
                 1 => vec![parg % n],
                 t => anyhow::bail!("bad placement tag {t}"),
             };
-            let chunks: Vec<Vec<u32>> = (0..n_chunks)
-                .map(|i| {
-                    let primary = stripe[(i % stripe.len() as u64) as usize];
-                    (0..repl).map(|k| (primary + k) % n).collect()
-                })
-                .collect();
-            let meta = FileMeta { size, chunk_size, chunks: chunks.clone(), committed: false };
+            let meta = FileMeta {
+                size,
+                chunk_size,
+                n_chunks,
+                stripe,
+                repl,
+                ring_mod: n,
+                committed: false,
+            };
+            let e = meta.encode_groups(Enc::new(op::ALLOC).u32(n_chunks as u32));
             st.files.insert(file, meta);
-            let mut e = Enc::new(op::ALLOC).u32(chunks.len() as u32);
-            for g in &chunks {
-                e = e.u32_list(g);
-            }
             Ok(e.finish())
         }
         op::COMMIT => {
@@ -164,10 +199,9 @@ fn handle(msg: &[u8], state: &Arc<Mutex<State>>) -> Result<Vec<u8>> {
             let file = d.str()?;
             let f = st.files.get(&file).ok_or_else(|| anyhow::anyhow!("unknown file {file}"))?;
             anyhow::ensure!(f.committed, "file {file} not committed");
-            let mut e = Enc::new(op::LOOKUP).u64(f.size).u64(f.chunk_size).u32(f.chunks.len() as u32);
-            for g in &f.chunks {
-                e = e.u32_list(g);
-            }
+            let e = f.encode_groups(
+                Enc::new(op::LOOKUP).u64(f.size).u64(f.chunk_size).u32(f.n_chunks as u32),
+            );
             Ok(e.finish())
         }
         o => anyhow::bail!("manager: bad opcode {o}"),

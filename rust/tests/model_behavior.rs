@@ -2,10 +2,11 @@
 //! findings of the paper's evaluation (§3.1) — who wins and why — before
 //! any accuracy comparison against the testbed makes sense.
 
-use wfpred::model::{simulate, Config, Platform};
+use wfpred::model::{simulate, Config, Placement, Platform};
 use wfpred::util::units::{Bytes, SimTime};
 use wfpred::workload::patterns::{broadcast, pipeline, reduce, PatternScale};
 use wfpred::workload::blast::{blast, BlastParams};
+use wfpred::workload::{FileHint, FileSpec, TaskSpec, Workload};
 
 fn secs(t: SimTime) -> f64 {
     t.as_secs_f64()
@@ -142,6 +143,82 @@ fn deterministic_across_runs() {
     assert_eq!(a.turnaround, b.turnaround);
     assert_eq!(a.net_bytes, b.net_bytes);
     assert_eq!(a.events, b.events);
+}
+
+#[test]
+fn filehint_overrides_coincide_with_default_policy() {
+    // A per-file hint that restates the system-wide policy is the same
+    // placement decision. Through the interned-placement path both runs
+    // resolve to the same ring allocation (same cursor draw, same
+    // (start, width, repl)), so the predictions must be bit-identical —
+    // not merely close.
+    let plat = Platform::paper_testbed();
+    let build = |hint: FileHint| {
+        let mut wl = Workload::new("hint-coincide");
+        let input = wl.add_file(FileSpec::new("in", Bytes::mb(8)).prestaged());
+        let out = wl.add_file(FileSpec::new("out", Bytes::mb(8)).hint(hint));
+        wl.add_task(TaskSpec::new("t", 0).reads(input).writes(out));
+        wl
+    };
+
+    // Striped hint vs Default under the round-robin (striping) policy.
+    let cfg = Config::dss(6);
+    let a = simulate(&build(FileHint::Default), &cfg, &plat);
+    let b = simulate(&build(FileHint::Striped), &cfg, &plat);
+    assert_eq!(a.turnaround, b.turnaround, "striped hint == default striping");
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.net_bytes, b.net_bytes);
+    assert_eq!(a.stored, b.stored, "chunks landed on the same nodes");
+
+    // Local hint vs Default under a local-placement system policy
+    // (scheduling held fixed so only placement is compared).
+    let mut cfg_local = Config::wass(6);
+    cfg_local.location_aware = false;
+    let a = simulate(&build(FileHint::Default), &cfg_local, &plat);
+    let b = simulate(&build(FileHint::Local), &cfg_local, &plat);
+    assert_eq!(a.turnaround, b.turnaround, "local hint == default local placement");
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.stored, b.stored);
+}
+
+#[test]
+fn placement_matrix_stores_and_completes_across_policies() {
+    // Sweep the placement decision space — system policy × stripe width ×
+    // replication level — through full simulations: every combination
+    // must finish all tasks and store exactly bytes × replication. This
+    // pins the interned-placement write, commit, chained-replication and
+    // read paths across the whole policy matrix.
+    let plat = Platform::paper_testbed();
+    let wl = pipeline(5, PatternScale::Small, false);
+    for placement in [Placement::RoundRobin, Placement::Local] {
+        for stripe in [1usize, 2, 5] {
+            for repl in [1u32, 2, 3] {
+                let mut cfg = Config::dss(5).with_stripe(stripe).with_replication(repl);
+                cfg.placement = placement;
+                let rep = simulate(&wl, &cfg, &plat);
+                assert_eq!(
+                    rep.tasks.len(),
+                    wl.tasks.len(),
+                    "{placement} stripe={stripe} repl={repl}: tasks complete"
+                );
+                let expect: u64 = wl
+                    .files
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, f)| f.prestaged || wl.writer_of(*i).is_some())
+                    .map(|(_, f)| {
+                        let r = f.replication.unwrap_or(repl) as u64;
+                        f.size.as_u64() * r.min(cfg.n_storage as u64)
+                    })
+                    .sum();
+                assert_eq!(
+                    rep.stored_total().as_u64(),
+                    expect,
+                    "{placement} stripe={stripe} repl={repl}: stored-bytes conservation"
+                );
+            }
+        }
+    }
 }
 
 #[test]

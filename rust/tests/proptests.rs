@@ -310,6 +310,68 @@ fn prop_bulk_path_exact_for_any_wire_size() {
 }
 
 #[test]
+fn prop_interned_placement_matches_materialized_reference() {
+    // The interning arena (`model/placement.rs`) and the retained
+    // pre-interning materialized shape (`RefPlacement` — the same role
+    // `RefFairStation` plays for the virtual-time fair server) implement
+    // one placement policy over different representations. Drive both in
+    // lockstep across policies × stripe widths × replication levels and
+    // demand bit-identical replica chains, chunk maps, and membership
+    // answers — the quantities that feed ChunkPut chains, the committed
+    // metadata table, the read path's own-host preference, and the
+    // location-aware scheduler. No tolerances.
+    use wfpred::model::{PlacementArena, RefPlacement};
+    check("interned placement matches reference", 120, |g| {
+        let n = g.usize(1, 12);
+        let mut arena = PlacementArena::new(n);
+        let rp = RefPlacement { n_storage: n };
+        for _ in 0..g.usize(1, 8) {
+            // Every policy (round-robin stripes, local-first, OnNode /
+            // Striped hints, randomized placement) resolves to a ring
+            // (start, width) at some replication level — sweep them all.
+            let start = g.usize(0, n - 1);
+            let width = g.usize(1, n);
+            let repl = g.usize(1, n);
+            let n_chunks = g.u64(1, 40);
+            let alloc = arena.alloc_ring(start, width, repl);
+            let groups = rp.alloc_groups(start, width, repl);
+            let chunks = rp.chunk_groups(&groups, n_chunks);
+            assert_eq!(arena.alloc_width(alloc), groups.len(), "stripe width");
+            for (i, want) in chunks.iter().enumerate() {
+                let i = i as u64;
+                // The materialized chain (what a ChunkPut hop walk visits).
+                let gid = arena.group_of(alloc, i);
+                assert_eq!(&arena.materialize(gid), want, "chunk {i} replica chain");
+                // The arithmetic, never-materialized views must agree too.
+                assert_eq!(arena.chunk_group_len(alloc, i), want.len(), "chunk {i} len");
+                for (k, &m) in want.iter().enumerate() {
+                    assert_eq!(arena.chunk_member(alloc, i, k), m, "chunk {i} member {k}");
+                }
+                assert_eq!(arena.chunk_primary(alloc, i), want[0], "chunk {i} primary");
+                for s in 0..=n {
+                    assert_eq!(
+                        arena.chunk_contains(alloc, i, s),
+                        want.contains(&s),
+                        "membership of node {s} in chunk {i}"
+                    );
+                }
+                // Interning is stable: asking again yields the same id.
+                assert_eq!(gid, arena.group_of(alloc, i));
+            }
+            // Re-interning the same decision yields the same alloc id.
+            assert_eq!(arena.alloc_ring(start, width, repl), alloc);
+        }
+        // Each distinct group is stored once: the arena can never hold
+        // more than one entry per (primary, replication-level) pair.
+        assert!(
+            arena.n_groups() <= n * n,
+            "{} groups interned over {n} nodes",
+            arena.n_groups()
+        );
+    });
+}
+
+#[test]
 fn prop_weighted_fair_station_conserves_work_and_bytes() {
     // Drive the weighted-fair station directly with random concurrent
     // trains: whatever the interleaving, (a) every frame that arrives
