@@ -20,16 +20,20 @@
 //!   section), the full-stripe placement gate (the stripe-uncapped
 //!   `incast_4096_fullstripe` per-event cost within ±10% of the
 //!   stripe-64 curve's, measured in the same run so the ratio is
-//!   host-independent) and, when the baseline is a real previous run
+//!   host-independent), the degraded-mode invariants on the `faults`
+//!   section (the zero-crash replication-1 row reproduces `incast_1024`
+//!   exactly, replication 1 reports unrecoverable ops under crashes,
+//!   replication ≥ 2 stays monotone in the crash count and within 3× of
+//!   fault-free) and, when the baseline is a real previous run
 //!   (not the bootstrap marker), a ±10% drift gate on the
 //!   machine-independent metrics (simulated turnaround and event
-//!   counts, including the 64/256/1024-host scaling curve and the
-//!   256/1024/4096-host + full-stripe incast curves — wallclock numbers
-//!   are never gated). Exits non-zero on violation; implies
-//!   `--frame-path-only`.
+//!   counts, including the 64/256/1024-host scaling curve, the
+//!   256/1024/4096-host + full-stripe incast curves and the fault
+//!   curve — wallclock numbers are never gated). Exits non-zero on
+//!   violation; implies `--frame-path-only`.
 
 use wfpred::coordinator;
-use wfpred::model::{simulate, simulate_fid, Config, Fidelity, Platform};
+use wfpred::model::{simulate, simulate_fid, Config, FaultPlan, Fidelity, Platform};
 use wfpred::predict::Predictor;
 use wfpred::search::{SearchSpace, Searcher};
 use wfpred::service::{GridCoord, Service};
@@ -47,9 +51,13 @@ use wfpred::workload::patterns::{pipeline, reduce, PatternScale};
 ///
 /// Absolute gates (always enforced, from PERF.md §Regression discipline):
 /// `event_reduction_x ≥ 5` and `turnaround_rel_err ≤ 0.01` on the
-/// acceptance workload, the stale-event ratios, and the full-stripe
+/// acceptance workload, the stale-event ratios, the full-stripe
 /// placement ratio (`incast_4096_fullstripe` per-event cost within ±10%
-/// of the stripe-64 curve's, both halves measured in the same run).
+/// of the stripe-64 curve's, both halves measured in the same run), and
+/// the degraded-mode invariants of the fault curve (zero-crash row
+/// reproduces `incast_1024` exactly; replication 1 reports
+/// unrecoverable ops; replication ≥ 2 is monotone in the crash count
+/// and bounded against fault-free).
 /// Drift gates (enforced when the baseline is a real
 /// previous run rather than the `"bootstrap"` marker): simulated
 /// turnaround and event counts — deterministic, machine-independent
@@ -120,6 +128,62 @@ fn check_frame_path(path: &str, baseline: &str, fresh: &str) -> i32 {
             .push("fresh results lack incast_4096_fullstripe.ns_per_event_vs_stripe64_x".into()),
     }
 
+    // Degraded-mode gates (absolute; every metric is sim-deterministic).
+    // The faults section runs the 1024-host incast under evenly-spread
+    // node crashes at t=0 across replication levels.
+    let flt = |repl: u32, crashes: usize, key: &str| {
+        json_number_in(fresh, &format!("r{repl}_c{crashes}"), key)
+    };
+    // (a) The zero-crash replication-1 row is the same simulation as
+    // `incast_1024` — event counts must match exactly in the same run
+    // (an empty fault plan must cost nothing and change nothing).
+    match (flt(1, 0, "events"), json_number_in(fresh, "incast_1024", "events")) {
+        (Some(a), Some(b)) if a == b => {}
+        (a, b) => failures.push(format!(
+            "faults.r1_c0.events {a:?} != incast_1024.events {b:?} (empty plan must be free)"
+        )),
+    }
+    // (b) At replication 1 a crash destroys sole replicas: the run must
+    // report the loss, not hang or under-count it.
+    for crashes in [1usize, 4, 16] {
+        match flt(1, crashes, "unrecoverable_ops") {
+            Some(u) if u >= 1.0 => {}
+            u => failures
+                .push(format!("faults.r1_c{crashes}.unrecoverable_ops {u:?} — expected ≥ 1")),
+        }
+    }
+    // (c) At replication ≥ 2 every chunk keeps a surviving replica:
+    // nothing is unrecoverable, turnaround is monotone non-decreasing in
+    // the crash count (0.5% slack — degraded chains legitimately write
+    // fewer replica copies), and the deepest degraded run stays within
+    // 3× fault-free.
+    for repl in [2u32, 3] {
+        let curve: Vec<(usize, Option<f64>)> =
+            [0usize, 1, 4, 16].iter().map(|&c| (c, flt(repl, c, "sim_turnaround_s"))).collect();
+        for w in curve.windows(2) {
+            match (w[0].1, w[1].1) {
+                (Some(a), Some(b)) if b >= a * 0.995 => {}
+                _ => failures.push(format!(
+                    "faults.r{repl}: turnaround not monotone in crash count ({:?} -> {:?})",
+                    w[0], w[1]
+                )),
+            }
+        }
+        match (curve[0].1, curve[3].1) {
+            (Some(c0), Some(c16)) if c16 <= 3.0 * c0 => {}
+            (c0, c16) => failures.push(format!(
+                "faults.r{repl}: 16-crash turnaround {c16:?} exceeds 3x fault-free {c0:?}"
+            )),
+        }
+        for crashes in [1usize, 4, 16] {
+            match flt(repl, crashes, "unrecoverable_ops") {
+                Some(u) if u == 0.0 => {}
+                u => failures
+                    .push(format!("faults.r{repl}_c{crashes}.unrecoverable_ops {u:?} — expected 0")),
+            }
+        }
+    }
+
     if baseline.is_empty() {
         // A checked baseline is a committed file; its absence means a
         // broken path or a deleted baseline, and must not pass silently.
@@ -164,6 +228,33 @@ fn check_frame_path(path: &str, baseline: &str, fresh: &str) -> i32 {
                 }
                 (None, _) => println!("[bench-check] baseline lacks {scope}.{key}; skipped"),
                 (_, None) => failures.push(format!("fresh results lack {scope}.{key}")),
+            }
+        }
+        // The fault curve's sim metrics are as deterministic as the rest;
+        // drift-gate every row (a baseline predating the section skips).
+        for repl in [1u32, 2, 3] {
+            for crashes in [0usize, 1, 4, 16] {
+                let scope = format!("r{repl}_c{crashes}");
+                for key in ["events", "sim_turnaround_s"] {
+                    let (b, f) =
+                        (json_number_in(baseline, &scope, key), json_number_in(fresh, &scope, key));
+                    match (b, f) {
+                        (Some(b), Some(f)) => {
+                            if !within_rel(f, b, tol) {
+                                failures.push(format!(
+                                    "faults.{scope}.{key}: fresh {f} vs baseline {b} (> ±{:.0}%)",
+                                    tol * 100.0
+                                ));
+                            }
+                        }
+                        (None, _) => {
+                            println!("[bench-check] baseline lacks faults.{scope}.{key}; skipped")
+                        }
+                        (_, None) => {
+                            failures.push(format!("fresh results lack faults.{scope}.{key}"))
+                        }
+                    }
+                }
             }
         }
     }
@@ -458,6 +549,65 @@ fn main() {
             .set("sim_turnaround_s", fs_sim_secs),
     );
 
+    // Fault-injection curve: the 1024-host incast under evenly-spread
+    // seeded node crashes at t=0, across replication 1/2/3. Crashing
+    // before the first issue makes the degraded path pure capacity loss
+    // (issue-time failover, no timeout waits), so the curve isolates the
+    // redistribution cost: at replication ≥ 2 turnaround is monotone
+    // non-decreasing in the crash count and bounded against fault-free,
+    // while at replication 1 crashed nodes hold sole replicas and the
+    // run must *report* unrecoverable ops instead of hanging. Events and
+    // simulated turnaround are deterministic: they are drift-gated like
+    // the other incast rows, and the zero-crash replication-1 row must
+    // reproduce `incast_1024` exactly (same config, same workload — the
+    // empty-plan-is-free pin, cross-checked by `--check`).
+    println!("\n== incast under faults (1024 hosts, crashes x replication) ==");
+    let flt_n = 1023usize; // workers; the manager takes host 0
+    let flt_wl = reduce(flt_n, PatternScale::Small, false);
+    let mut faults_json = Json::obj();
+    for repl in [1u32, 2, 3] {
+        for crashes in [0usize, 1, 4, 16] {
+            let cfg = Config::dss(flt_n)
+                .with_stripe(64)
+                .with_replication(repl)
+                .with_fault_plan(FaultPlan::spread_crashes(flt_n, crashes, SimTime::ZERO));
+            let mut events = 0u64;
+            let mut sim_secs = 0.0;
+            let mut retries = 0u64;
+            let mut failovers = 0u64;
+            let mut unrecoverable = 0u64;
+            let mut failed = 0u64;
+            let name = format!("faults: incast repl={repl} crashes={crashes}");
+            let r = BenchRunner::new(0, 1).run(&name, |_| {
+                let rep = simulate(&flt_wl, &cfg, &plat);
+                events = rep.events;
+                sim_secs = rep.turnaround.as_secs_f64();
+                retries = rep.fault_retries;
+                failovers = rep.fault_failovers;
+                unrecoverable = rep.unrecoverable_ops;
+                failed = rep.failed_tasks;
+                black_box(rep.events);
+            });
+            println!(
+                "    -> {events} events, sim {sim_secs:.2}s, {failovers} failover(s), \
+                 {unrecoverable} unrecoverable op(s)"
+            );
+            faults_json = faults_json.set(
+                &format!("r{repl}_c{crashes}"),
+                Json::obj()
+                    .set("replication", repl as u64)
+                    .set("crashes", crashes as u64)
+                    .set("events", events)
+                    .set("sim_turnaround_s", sim_secs)
+                    .set("fault_retries", retries)
+                    .set("fault_failovers", failovers)
+                    .set("unrecoverable_ops", unrecoverable)
+                    .set("failed_tasks", failed)
+                    .set("wall_secs", r.secs.mean()),
+            );
+        }
+    }
+
     // Parallel testbed campaign: same trials, slot-ordered reduction —
     // byte-identical statistics, fraction of the wallclock.
     println!("\n== parallel testbed campaign (8 fixed trials) ==");
@@ -614,7 +764,8 @@ fn main() {
                 .set("surrogate_secs_per_query", sur_s),
         )
         .set("scaling", scaling)
-        .set("incast", incast);
+        .set("incast", incast)
+        .set("faults", faults_json);
     let fresh = frame_path_json.render();
     write_results("BENCH_frame_path.json", &fresh);
 

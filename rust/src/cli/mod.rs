@@ -11,7 +11,7 @@
 //! ```
 
 use crate::ident::{identify, IdentConfig};
-use crate::model::{Config, Placement, Platform};
+use crate::model::{Config, FaultPlan, Placement, Platform};
 use crate::predict::Predictor;
 use crate::runtime::{ScorerRuntime, StageDesc};
 use crate::search::{SearchSpace, Searcher};
@@ -133,6 +133,16 @@ fn build_workload(f: &Flags) -> Result<(Workload, Config), String> {
     } else {
         Config::dss(n).with_chunk(chunk)
     };
+    let plan = f.get("fault-plan");
+    let cfg = if plan.is_empty() {
+        cfg
+    } else {
+        let plan = FaultPlan::parse(&plan).map_err(|e| format!("--fault-plan: {e}"))?;
+        // Check indices against the cluster here so a bad plan is a flag
+        // error, not a panic deep inside the simulator.
+        plan.validate(cfg.n_storage, cfg.n_hosts()).map_err(|e| format!("--fault-plan: {e}"))?;
+        cfg.with_fault_plan(plan)
+    };
     Ok((wl, cfg))
 }
 
@@ -154,6 +164,12 @@ fn pattern_flags(f: Flags) -> Flags {
         .flag("queries", "200", "BLAST query count")
         .flag("app-nodes", "14", "BLAST application nodes")
         .flag("platform", "paper", "paper|hdd|ssd|10g")
+        .flag(
+            "fault-plan",
+            "",
+            "fault plan: seed=N;crash=<storage>@<secs>;slow=<host>@<secs>x<mult>;\
+             drop=<src>-<dst>@<from>-<until>p<prob> (empty = fault-free)",
+        )
 }
 
 fn cmd_identify(args: &[String]) -> Result<(), String> {
@@ -258,13 +274,18 @@ fn cmd_search(args: &[String]) -> Result<(), String> {
         .flag("platform", "paper", "paper|hdd|ssd|10g")
         .flag("artifact", "artifacts/predictor.hlo.txt", "AOT scorer (empty to disable)")
         .flag("surrogate", "0", "surrogate error gate, e.g. 0.3 (0 = off: refine exactly)")
+        .flag("fault-plan", "", "fault plan applied to every candidate (empty = fault-free)")
         .parse(args)?;
     let plat = platform_by_name(&f.get("platform"))?;
     let chunks: Vec<Bytes> = f.get_u64_list("chunks-kb").into_iter().map(Bytes::kb).collect();
-    let space = SearchSpace::elastic(
+    let mut space = SearchSpace::elastic(
         f.get_u64_list("allocations").into_iter().map(|x| x as usize).collect(),
         chunks,
     );
+    if !f.get("fault-plan").is_empty() {
+        space.faults =
+            FaultPlan::parse(&f.get("fault-plan")).map_err(|e| format!("--fault-plan: {e}"))?;
+    }
     let params = BlastParams { queries: f.get_u64("queries") as u32, ..Default::default() };
     let predictor = Predictor::new(plat);
     let surrogate_gate = f.get_f64("surrogate");
@@ -351,9 +372,10 @@ fn cmd_search(args: &[String]) -> Result<(), String> {
 /// `{"pattern": "blast", "app-nodes": 14, "nodes": 19, "chunk-kb": 256}`.
 /// Values are rewritten as `--key=value` tokens and run through the same
 /// flag parser as `wfpred predict`, so the two surfaces cannot drift.
-fn parse_query(line: &str) -> Result<Flags, String> {
+fn parse_query(line: &str, extra_argv: &[String]) -> Result<Flags, String> {
     let kv = jsonw::parse_flat(line).map_err(|e| format!("bad query JSON: {e}"))?;
-    let mut argv = Vec::new();
+    // Command-level defaults come first so a per-query key overrides them.
+    let mut argv = extra_argv.to_vec();
     for (k, v) in kv {
         let val = match v {
             Scalar::Str(s) => s,
@@ -378,12 +400,16 @@ fn query_family(f: &Flags, plat: &Platform) -> u64 {
     h.write_bool(f.get_bool("wass"));
     h.write_u64(f.get_u64("queries"));
     h.write_u64(f.get_u64("replicas"));
+    // A degraded run is a different response surface than a clean one, so
+    // fault plans never share a surrogate grid with fault-free queries
+    // (or with differently-faulted ones).
+    h.write_str(&f.get("fault-plan"));
     h.write_str(&plat.label);
     h.finish()
 }
 
-fn query_to_service(line: &str, plat: &Platform) -> Result<Query, String> {
-    let qf = parse_query(line)?;
+fn query_to_service(line: &str, plat: &Platform, extra_argv: &[String]) -> Result<Query, String> {
+    let qf = parse_query(line, extra_argv)?;
     // Flag getters panic on type mismatches — fine for a developer's own
     // command line, not for untrusted query input. Convert panics from
     // malformed values (e.g. "queries": 2.5) into per-line errors so one
@@ -404,12 +430,16 @@ fn query_to_service(line: &str, plat: &Platform) -> Result<Query, String> {
 
 fn answer_json(a: &Answer) -> Json {
     match a {
-        Answer::Exact { fp, turnaround_s, cost_node_s, source } => Json::obj()
+        Answer::Exact { fp, turnaround_s, cost_node_s, source, failures } => Json::obj()
             .set("fp", fp.to_string())
             .set("kind", "exact")
             .set("turnaround_s", *turnaround_s)
             .set("cost_node_s", *cost_node_s)
-            .set("source", source.as_str()),
+            .set("source", source.as_str())
+            .set("fault_retries", failures.retries)
+            .set("fault_failovers", failures.failovers)
+            .set("fault_timeouts", failures.timeouts)
+            .set("unrecoverable", failures.unrecoverable),
         Answer::Surrogate { fp, turnaround_s, cost_node_s, est_err } => Json::obj()
             .set("fp", fp.to_string())
             .set("kind", "surrogate")
@@ -423,6 +453,17 @@ fn service_flags(f: Flags) -> Flags {
     f.flag("platform", "paper", "paper|hdd|ssd|10g")
         .flag("store", "", "append-only JSONL prediction store (warm-starts across runs)")
         .flag("surrogate", "0", "surrogate error gate, e.g. 0.3 (0 = off: always exact)")
+        .flag("fault-plan", "", "fault plan for queries without their own (empty = fault-free)")
+}
+
+/// Command-level default argv prepended to every query line (per-query
+/// keys override these).
+fn service_query_defaults(f: &Flags) -> Vec<String> {
+    let mut extra = Vec::new();
+    if !f.get("fault-plan").is_empty() {
+        extra.push(format!("--fault-plan={}", f.get("fault-plan")));
+    }
+    extra
 }
 
 fn open_service(f: &Flags, plat: &Platform) -> Result<Service, String> {
@@ -448,13 +489,14 @@ fn cmd_batch(args: &[String]) -> Result<(), String> {
         std::fs::read_to_string(f.get("in")).map_err(|e| e.to_string())?
     };
     let service = open_service(&f, &plat)?;
+    let extra = service_query_defaults(&f);
     let mut queries = Vec::new();
     for line in text.lines() {
         let line = line.trim();
         if line.is_empty() {
             continue;
         }
-        queries.push(query_to_service(line, &plat)?);
+        queries.push(query_to_service(line, &plat, &extra)?);
     }
     if queries.is_empty() {
         return Err("no queries in input".into());
@@ -481,6 +523,7 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
     let f = service_flags(Flags::new("wfpred serve")).parse(args)?;
     let plat = platform_by_name(&f.get("platform"))?;
     let service = open_service(&f, &plat)?;
+    let extra = service_query_defaults(&f);
     let gate = f.get_f64("surrogate");
     let stdin = std::io::stdin();
     let mut line = String::new();
@@ -497,7 +540,7 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
         if l == "quit" {
             break;
         }
-        let out = match query_to_service(l, &plat) {
+        let out = match query_to_service(l, &plat, &extra) {
             Ok(q) => {
                 let answers = service.serve_batch(std::slice::from_ref(&q), 1, gate);
                 answer_json(&answers[0])
@@ -595,6 +638,53 @@ mod tests {
     #[test]
     fn predict_rejects_bad_pattern() {
         assert_eq!(run(&argv(&["predict", "--pattern", "nope"])), 2);
+    }
+
+    #[test]
+    fn predict_with_fault_plan_runs() {
+        assert_eq!(
+            run(&argv(&[
+                "predict", "--pattern", "pipeline", "--nodes", "4", "--scale", "small",
+                "--fault-plan", "crash=1@0.5;slow=2@0.1x0.5",
+            ])),
+            0
+        );
+    }
+
+    #[test]
+    fn predict_rejects_bad_fault_plans() {
+        for plan in ["crash=oops", "crash=99@1", "slow=1@1x0"] {
+            assert_eq!(
+                run(&argv(&[
+                    "predict", "--pattern", "pipeline", "--nodes", "4", "--scale", "small",
+                    "--fault-plan", plan,
+                ])),
+                2,
+                "{plan:?} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn batch_applies_command_level_fault_plan() {
+        let dir = std::env::temp_dir();
+        let qpath = dir.join(format!("wfpred_cli_faultq_{}.jsonl", std::process::id()));
+        let queries = "\
+{\"pattern\": \"blast\", \"queries\": 20, \"app-nodes\": 4, \"nodes\": 8, \"chunk-kb\": 256}\n\
+{\"pattern\": \"blast\", \"queries\": 20, \"app-nodes\": 4, \"nodes\": 8, \"chunk-kb\": 256, \
+\"fault-plan\": \"crash=0@0.1;crash=1@0.1\"}\n";
+        std::fs::write(&qpath, queries).unwrap();
+        assert_eq!(
+            run(&argv(&[
+                "batch",
+                "--in",
+                qpath.to_str().unwrap(),
+                "--fault-plan",
+                "crash=0@0.1",
+            ])),
+            0
+        );
+        let _ = std::fs::remove_file(&qpath);
     }
 
     #[test]

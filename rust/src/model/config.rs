@@ -3,6 +3,7 @@
 //! (app vs storage nodes), and configuration (stripe width, replication,
 //! chunk size, placement policy).
 
+use super::faults::FaultPlan;
 use crate::util::units::Bytes;
 
 /// System-wide data placement policy (paper §2.2).
@@ -54,6 +55,9 @@ pub struct Config {
     /// Max outstanding chunk requests per client operation (SAI pipeline
     /// window; MosaStore-like clients bound in-flight chunks).
     pub io_window: usize,
+    /// Deterministic fault schedule (empty by default: the fault-free
+    /// engine, bit-identical to a run without fault support).
+    pub faults: FaultPlan,
 }
 
 impl Config {
@@ -72,6 +76,7 @@ impl Config {
             placement: Placement::RoundRobin,
             location_aware: false,
             io_window: 8,
+            faults: FaultPlan::default(),
         }
     }
 
@@ -101,6 +106,7 @@ impl Config {
             placement: Placement::RoundRobin,
             location_aware: false,
             io_window: 8,
+            faults: FaultPlan::default(),
         }
     }
 
@@ -126,6 +132,11 @@ impl Config {
 
     pub fn with_window(mut self, w: usize) -> Config {
         self.io_window = w;
+        self
+    }
+
+    pub fn with_fault_plan(mut self, plan: FaultPlan) -> Config {
+        self.faults = plan;
         self
     }
 
@@ -194,6 +205,7 @@ impl Config {
         if self.io_window == 0 {
             return Err("io window must be >= 1".into());
         }
+        self.faults.validate(self.n_storage, self.n_hosts())?;
         Ok(())
     }
 }
@@ -239,5 +251,14 @@ mod tests {
         assert!(Config::dss(19).with_replication(20).validate().is_err());
         assert!(Config::partitioned(0, 5, Bytes::mb(1)).validate().is_err());
         assert!(Config::dss(19).with_chunk(Bytes(0)).validate().is_err());
+    }
+
+    #[test]
+    fn fault_plan_validated_against_cluster_shape() {
+        let plan = FaultPlan::parse("crash=19@1").unwrap();
+        assert!(Config::dss(19).with_fault_plan(plan.clone()).validate().is_err());
+        assert!(Config::dss(20).with_fault_plan(plan).validate().is_ok());
+        let slow = FaultPlan::parse("slow=25@1x0.5").unwrap();
+        assert!(Config::dss(19).with_fault_plan(slow).validate().is_err(), "host out of range");
     }
 }

@@ -45,6 +45,9 @@ pub struct DriverState {
     task_client: Vec<usize>,
     task_start: Vec<SimTime>,
     finished: usize,
+    /// Tasks abandoned because an operation was unrecoverable (degraded
+    /// mode; always 0 fault-free).
+    failed: usize,
 }
 
 impl DriverState {
@@ -69,6 +72,7 @@ impl DriverState {
             task_client: vec![usize::MAX; n],
             task_start: vec![SimTime::ZERO; n],
             finished: 0,
+            failed: 0,
         }
     }
 
@@ -79,6 +83,11 @@ impl DriverState {
 
     pub fn finished_tasks(&self) -> usize {
         self.finished
+    }
+
+    /// Tasks abandoned as unrecoverable (degraded mode).
+    pub fn failed_tasks(&self) -> usize {
+        self.failed
     }
 }
 
@@ -212,6 +221,19 @@ impl<'a> World<'a> {
             }
             p => unreachable!("advance in phase {p:?}"),
         }
+    }
+
+    /// Abandon a task whose operation was declared unrecoverable
+    /// (degraded mode): free its client for other work, but record no
+    /// completion — its outputs never commit, so dependents never
+    /// release, and `finished_tasks` keeps meaning "ran to completion".
+    pub(crate) fn abandon_task(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, task: TaskId) {
+        let client = self.driver.task_client[task];
+        debug_assert_ne!(client, usize::MAX, "abandoning a task that never started");
+        self.driver.phase[task] = Phase::Done;
+        self.driver.busy[client] = false;
+        self.driver.failed += 1;
+        self.try_assign(sched, now);
     }
 
     fn finish_task(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, task: TaskId) {

@@ -36,6 +36,25 @@
 //!   analytically, so turnaround and every station integral agree for
 //!   arbitrary wire sizes on uncontended paths (property-tested).
 //!
+//! ## Degraded mode (fault injection)
+//!
+//! When the config carries a non-empty [`faults::FaultPlan`], the engine
+//! runs the degraded-mode protocol: seeded node crashes abandon a storage
+//! station's queue and silently discard later arrivals; stragglers scale a
+//! host's service rate from their trigger time on; lossy links drop
+//! messages by a pure per-message hash. Every in-flight chunk carries an
+//! attempt number and arms a cancellable timeout
+//! ([`faults::timeout_for`]); a fired timeout retries with bounded
+//! exponential backoff ([`faults::backoff_delay`]) — reads fail over to
+//! the next surviving replica via O(1) ring membership, writes enter the
+//! replica chain at its first surviving member and forwarding skips dead
+//! hops — until the attempt budget ([`faults::MAX_ATTEMPTS`]) is spent or
+//! no replica survives, at which point the op is *unrecoverable*: its task
+//! is abandoned at the driver and dependents never release. With an empty
+//! plan none of this machinery runs — no timers, no extra RNG draws, no
+//! extra events — so the fault-free path is bit-identical to the
+//! pre-fault engine (pinned by `prop_empty_fault_plan_matches_baseline`).
+//!
 //! The per-frame path remains selectable as the equivalence reference;
 //! the detailed tier can run either per-frame (`Fidelity::detailed`) or
 //! aggregated with train-weighted SYN-drop/mux calibration
@@ -55,8 +74,9 @@
 
 use crate::model::config::{Config, Placement};
 use crate::model::driver::DriverState;
+use crate::model::faults;
 use crate::model::fidelity::Fidelity;
-use crate::model::placement::{AllocId, PlacementArena};
+use crate::model::placement::{AllocId, GroupId, PlacementArena};
 use crate::model::platform::Platform;
 use crate::model::proto::*;
 use crate::model::report::{OpRecord, SimReport, TaskRecord, UtilReport};
@@ -64,7 +84,7 @@ use crate::sim::{EventToken, FairStation, Scheduler, SimState, Simulation, Stati
 use crate::util::rng::Rng;
 use crate::util::units::{Bytes, SimTime};
 use crate::workload::{FileHint, Workload};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 /// Connection key: canonical (host, host) pair. Data-path connections are
 /// pooled per host pair (as the real SAI does) and persist for the run;
@@ -170,6 +190,24 @@ pub enum Ev {
     /// Per-target stream setup finished; open the op's chunk window
     /// (detailed fidelity only).
     OpenWindow(OpId),
+    /// Storage node crashes (fault plan).
+    Crash(usize),
+    /// Straggler trigger: index into the plan's straggler list.
+    Straggle(usize),
+    /// A chunk attempt's timeout fired (degraded mode; cancelled when the
+    /// matching response settles the chunk first).
+    ChunkTimeout(OpId, u32, u32),
+    /// Re-issue a timed-out chunk as the given attempt, after backoff.
+    ChunkRetry(OpId, u32, u32),
+}
+
+/// A live chunk attempt awaiting its response: the armed timeout token
+/// and the attempt number it covers (responses and timeouts of
+/// superseded attempts are ignored).
+#[derive(Clone, Copy, Debug)]
+struct PendingChunk {
+    token: EventToken,
+    attempt: u32,
 }
 
 pub struct World<'a> {
@@ -222,6 +260,20 @@ pub struct World<'a> {
     pub(crate) net_frames: u64,
     pub(crate) op_records: Vec<OpRecord>,
     pub(crate) task_records: Vec<TaskRecord>,
+
+    // Degraded-mode state. All of it is inert when `cfg.faults` is empty:
+    // `dead` stays all-false, no timers are armed, and every counter
+    // stays zero — the fault-free path is bit-identical to a build
+    // without this machinery.
+    pub(crate) dead: Vec<bool>,
+    pending_chunks: BTreeMap<(OpId, u32), PendingChunk>,
+    op_failed: Vec<bool>,
+    fault_retries: u64,
+    fault_failovers: u64,
+    fault_timeouts: u64,
+    fault_msgs_dropped: u64,
+    fault_work_lost: u64,
+    unrecoverable_ops: u64,
 }
 
 impl<'a> World<'a> {
@@ -273,6 +325,15 @@ impl<'a> World<'a> {
             net_frames: 0,
             op_records: Vec::new(),
             task_records: Vec::new(),
+            dead: vec![false; cfg.n_storage],
+            pending_chunks: BTreeMap::new(),
+            op_failed: Vec::new(),
+            fault_retries: 0,
+            fault_failovers: 0,
+            fault_timeouts: 0,
+            fault_msgs_dropped: 0,
+            fault_work_lost: 0,
+            unrecoverable_ops: 0,
         };
         w.prestage_files();
         w
@@ -392,6 +453,18 @@ impl<'a> World<'a> {
         let needs_conn = self.fid.connections && !local && payload.data_path_op().is_some();
         let msg_id = self.msgs.len();
         self.msgs.push(Msg { from, to, payload, local });
+
+        // Lossy links (fault plan): the drop decision is a pure hash of
+        // (plan seed, src, dst, msg id), so it is identical across runs
+        // and thread counts. The id is consumed either way — a retry of a
+        // dropped message hashes a fresh id, not the same verdict again.
+        if !self.cfg.faults.links.is_empty()
+            && !local
+            && self.cfg.faults.drops(src, dst, now, msg_id as u64)
+        {
+            self.fault_msgs_dropped += 1;
+            return;
+        }
 
         if needs_conn {
             let key: ConnKey = (src.min(dst), src.max(dst));
@@ -664,6 +737,15 @@ impl<'a> World<'a> {
 
     /// A message (or application op) arrives at a component's queue.
     pub(crate) fn comp_arrive(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, comp: CompId, msg: MsgId) {
+        // A crashed storage node silently loses whatever reaches it; the
+        // sender's chunk timeout is what notices. (`dead` is all-false
+        // when the fault plan is empty.)
+        if let CompId::Storage(s) = comp {
+            if self.dead[s] {
+                self.fault_work_lost += 1;
+                return;
+            }
+        }
         let svc = self.comp_service(comp, msg);
         let st = match comp {
             CompId::Manager => &mut self.manager_st,
@@ -684,6 +766,15 @@ impl<'a> World<'a> {
         let (msg, next) = st.complete(now);
         if let Some(t) = next {
             sched.at(t, Ev::CompDone(comp));
+        }
+        // A service that was in flight when its node crashed completes
+        // without effect (the crash drained the rest of the queue, so
+        // `next` is None and the station idles forever).
+        if let CompId::Storage(s) = comp {
+            if self.dead[s] {
+                self.fault_work_lost += 1;
+                return;
+            }
         }
         match comp {
             CompId::Manager => self.manager_process(sched, now, msg),
@@ -751,10 +842,18 @@ impl<'a> World<'a> {
         // interned `GroupId`s), so reading one out of the arena is free.
         let payload = self.msgs[msg].payload;
         match payload {
-            Payload::ChunkPut { op, chunk, size, group, hop } => {
+            Payload::ChunkPut { op, chunk, size, group, hop, attempt } => {
                 self.stored[s] += size.as_u64();
-                let next_hop = hop as usize + 1;
-                if next_hop < self.placement.group_len(group) {
+                let glen = self.placement.group_len(group);
+                let mut next_hop = hop as usize + 1;
+                // Degraded mode: forwarding skips dead hops; if no
+                // replica survives downstream, the chain ends here with
+                // degraded replication (`dead` is all-false fault-free,
+                // so the scan is the plain `hop + 1`).
+                while next_hop < glen && self.dead[self.placement.group_member(group, next_hop)] {
+                    next_hop += 1;
+                }
+                if next_hop < glen {
                     // Chained replication: forward to the next replica,
                     // resolved from the interned group in O(1).
                     let next_s = self.placement.group_member(group, next_hop);
@@ -763,16 +862,28 @@ impl<'a> World<'a> {
                         now,
                         CompId::Storage(s),
                         CompId::Storage(next_s),
-                        Payload::ChunkPut { op, chunk, size, group, hop: hop + 1 },
+                        Payload::ChunkPut { op, chunk, size, group, hop: next_hop as u32, attempt },
                     );
                 } else {
                     let client = self.ops[op].client;
-                    self.send(sched, now, CompId::Storage(s), CompId::Client(client), Payload::ChunkPutAck { op, chunk });
+                    self.send(
+                        sched,
+                        now,
+                        CompId::Storage(s),
+                        CompId::Client(client),
+                        Payload::ChunkPutAck { op, chunk, attempt },
+                    );
                 }
             }
-            Payload::ChunkGet { op, chunk, size } => {
+            Payload::ChunkGet { op, chunk, size, attempt } => {
                 let client = self.ops[op].client;
-                self.send(sched, now, CompId::Storage(s), CompId::Client(client), Payload::ChunkData { op, chunk, size });
+                self.send(
+                    sched,
+                    now,
+                    CompId::Storage(s),
+                    CompId::Client(client),
+                    Payload::ChunkData { op, chunk, size, attempt },
+                );
             }
             p => unreachable!("storage got {p:?}"),
         }
@@ -814,7 +925,16 @@ impl<'a> World<'a> {
                     self.open_window(sched, now, op);
                 }
             }
-            Payload::ChunkPutAck { op, .. } | Payload::ChunkData { op, .. } => {
+            Payload::ChunkPutAck { op, chunk, attempt }
+            | Payload::ChunkData { op, chunk, attempt, .. } => {
+                // Degraded mode only: match the response against the live
+                // attempt and disarm its timeout; stale attempts (already
+                // retried) and failed ops are ignored so a chunk settles
+                // exactly once. Fault-free, no timers exist and every
+                // response counts.
+                if !self.cfg.faults.is_empty() && !self.settle_chunk(sched, op, chunk, attempt) {
+                    return;
+                }
                 self.ops[op].done += 1;
                 if self.ops[op].next < self.ops[op].n_chunks {
                     self.issue_next_chunk(sched, now, op);
@@ -913,21 +1033,60 @@ impl<'a> World<'a> {
             let c = self.ops[op].client;
             self.send(sched, now, CompId::Client(c), CompId::Manager, Payload::MetaPing);
         }
-        let size = self.ops[op].chunk_bytes(i, self.cfg.chunk_size);
+        self.issue_chunk_attempt(sched, now, op, i, 0);
+    }
+
+    /// Issue one attempt of one chunk — the initial try (attempt 0) and
+    /// every degraded-mode retry share this path. Under a fault plan the
+    /// target selection routes around dead nodes (read failover, write
+    /// chain entry at the first surviving replica) and a cancellable
+    /// timeout is armed; fault-free it reduces to exactly the pre-fault
+    /// issue path.
+    fn issue_chunk_attempt(
+        &mut self,
+        sched: &mut Scheduler<Ev>,
+        now: SimTime,
+        op: OpId,
+        chunk: u32,
+        attempt: u32,
+    ) {
+        if self.op_failed[op] {
+            return; // failed mid-burst: the window loop keeps calling
+        }
+        let faulty = !self.cfg.faults.is_empty();
+        let size = self.ops[op].chunk_bytes(chunk, self.cfg.chunk_size);
         let c = self.ops[op].client;
         match self.ops[op].kind {
             OpKind::Write => {
                 // The chunk's replica group is interned (lazily, once per
                 // *distinct* group) so the put can carry a copyable id.
                 let alloc = self.ops[op].alloc.expect("write before alloc");
-                let group = self.placement.group_of(alloc, i as u64);
-                let primary = self.placement.group_member(group, 0);
+                let group = self.placement.group_of(alloc, chunk as u64);
+                let (target, hop) = if faulty {
+                    // Re-allocation: enter the chain at its first
+                    // surviving member; a fully-dead group means every
+                    // replica of this chunk would be lost.
+                    match self.first_alive_member(group) {
+                        Some((k, s)) => {
+                            if k > 0 {
+                                self.fault_failovers += 1;
+                            }
+                            (s, k as u32)
+                        }
+                        None => {
+                            self.fail_op(sched, now, op);
+                            return;
+                        }
+                    }
+                } else {
+                    (self.placement.group_member(group, 0), 0)
+                };
                 self.send(
                     sched,
                     now,
                     CompId::Client(c),
-                    CompId::Storage(primary),
-                    Payload::ChunkPut { op, chunk: i, size, group, hop: 0 },
+                    CompId::Storage(target),
+                    Payload::ChunkPut { op, chunk, size, group, hop, attempt },
                 );
             }
             OpKind::Read => {
@@ -936,17 +1095,150 @@ impl<'a> World<'a> {
                 // Prefer a replica on our own host; otherwise spread
                 // deterministically by (chunk, client). Both answers are
                 // O(1) ring arithmetic on the interned allocation.
-                let glen = self.placement.chunk_group_len(meta.alloc, i as u64);
-                let src = self
+                let glen = self.placement.chunk_group_len(meta.alloc, chunk as u64);
+                let own = self
                     .cfg
                     .storage_on_client_host(c)
-                    .filter(|&s| self.placement.chunk_contains(meta.alloc, i as u64, s))
-                    .unwrap_or_else(|| {
-                        self.placement.chunk_member(meta.alloc, i as u64, (i as usize + c) % glen)
+                    .filter(|&s| self.placement.chunk_contains(meta.alloc, chunk as u64, s));
+                let default = own.unwrap_or_else(|| {
+                    self.placement.chunk_member(meta.alloc, chunk as u64, (chunk as usize + c) % glen)
+                });
+                let src = if faulty {
+                    // Failover: first surviving replica in ring order,
+                    // rotated by the attempt so consecutive retries probe
+                    // different members first.
+                    let alive = own.filter(|&s| !self.dead[s]).or_else(|| {
+                        let start = (chunk as usize + c + attempt as usize) % glen;
+                        self.placement.chunk_first_alive(meta.alloc, chunk as u64, start, &self.dead)
                     });
-                self.send(sched, now, CompId::Client(c), CompId::Storage(src), Payload::ChunkGet { op, chunk: i, size });
+                    match alive {
+                        Some(s) => {
+                            if s != default {
+                                self.fault_failovers += 1;
+                            }
+                            s
+                        }
+                        None => {
+                            self.fail_op(sched, now, op);
+                            return;
+                        }
+                    }
+                } else {
+                    default
+                };
+                self.send(
+                    sched,
+                    now,
+                    CompId::Client(c),
+                    CompId::Storage(src),
+                    Payload::ChunkGet { op, chunk, size, attempt },
+                );
             }
         }
+        if faulty {
+            let tok = sched.at_cancellable(
+                now + faults::timeout_for(attempt),
+                Ev::ChunkTimeout(op, chunk, attempt),
+            );
+            self.pending_chunks.insert((op, chunk), PendingChunk { token: tok, attempt });
+        }
+    }
+
+    /// First surviving member of a replica group, as `(position, node)`.
+    fn first_alive_member(&self, group: GroupId) -> Option<(usize, usize)> {
+        (0..self.placement.group_len(group))
+            .map(|k| (k, self.placement.group_member(group, k)))
+            .find(|&(_, s)| !self.dead[s])
+    }
+
+    /// Degraded-mode bookkeeping for a chunk response: matches it against
+    /// the live attempt and disarms the timeout. Returns false — the
+    /// response must be ignored — for stale attempts (already retried,
+    /// possibly already settled by the retry) and failed ops, so every
+    /// chunk settles exactly once.
+    fn settle_chunk(&mut self, sched: &mut Scheduler<Ev>, op: OpId, chunk: u32, attempt: u32) -> bool {
+        if self.op_failed[op] {
+            return false;
+        }
+        match self.pending_chunks.get(&(op, chunk)) {
+            Some(p) if p.attempt == attempt => {
+                let p = self.pending_chunks.remove(&(op, chunk)).expect("entry just seen");
+                sched.cancel(p.token);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    fn on_chunk_timeout(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, op: OpId, chunk: u32, attempt: u32) {
+        // Only the live attempt's timer can fire (settled or superseded
+        // timers are cancelled at the engine); check anyway.
+        match self.pending_chunks.get(&(op, chunk)) {
+            Some(p) if p.attempt == attempt => {}
+            _ => return,
+        }
+        self.pending_chunks.remove(&(op, chunk));
+        if self.op_failed[op] {
+            return;
+        }
+        self.fault_timeouts += 1;
+        let next = attempt + 1;
+        if next >= faults::MAX_ATTEMPTS {
+            self.fail_op(sched, now, op);
+        } else {
+            let delay = faults::backoff_delay(self.cfg.faults.seed, op, chunk, next);
+            sched.at(now + delay, Ev::ChunkRetry(op, chunk, next));
+        }
+    }
+
+    fn on_chunk_retry(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, op: OpId, chunk: u32, attempt: u32) {
+        if self.op_failed[op] {
+            return;
+        }
+        self.fault_retries += 1;
+        self.issue_chunk_attempt(sched, now, op, chunk, attempt);
+    }
+
+    /// Declare `op` unrecoverable: every replica of a needed chunk is
+    /// gone, or its retry budget is spent. Pending timers are withdrawn,
+    /// late responses are ignored from here on, and the owning task is
+    /// abandoned at the driver — its outputs never commit, so dependent
+    /// tasks never release.
+    fn fail_op(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, op: OpId) {
+        if self.op_failed[op] {
+            return;
+        }
+        self.op_failed[op] = true;
+        self.unrecoverable_ops += 1;
+        let stale: Vec<u32> = self
+            .pending_chunks
+            .range((op, 0)..=(op, u32::MAX))
+            .map(|(&(_, chunk), _)| chunk)
+            .collect();
+        for chunk in stale {
+            let p = self.pending_chunks.remove(&(op, chunk)).expect("pending entry vanished");
+            sched.cancel(p.token);
+        }
+        let task = self.ops[op].task;
+        self.abandon_task(sched, now, task);
+    }
+
+    fn on_crash(&mut self, now: SimTime, s: usize) {
+        if self.dead[s] {
+            return; // duplicate crash directive
+        }
+        self.dead[s] = true;
+        // Queued work is abandoned; the in-service entry keeps its
+        // scheduled completion, whose effect `on_comp_done` discards.
+        self.fault_work_lost += self.storage_st[s].drain_waiting(now);
+    }
+
+    fn on_straggle(&mut self, idx: usize) {
+        let host = self.cfg.faults.stragglers[idx].host;
+        let slowdown = self.cfg.faults.stragglers[idx].slowdown;
+        // Services arriving from now on are slower; in-flight ones keep
+        // their scheduled completion.
+        self.speed_mult[host] *= slowdown;
     }
 
     /// A whole-file operation completed at the client.
@@ -978,6 +1270,7 @@ impl<'a> World<'a> {
         let size = self.wl.files[file].size;
         let n_chunks = size.chunks(self.cfg.chunk_size) as u32;
         let op = self.ops.len();
+        self.op_failed.push(false);
         self.ops.push(Op {
             kind,
             client,
@@ -1051,6 +1344,13 @@ impl<'a> World<'a> {
             events,
             events_cancelled,
             conn_retries: self.conn_retries,
+            fault_retries: self.fault_retries,
+            fault_failovers: self.fault_failovers,
+            fault_timeouts: self.fault_timeouts,
+            fault_msgs_dropped: self.fault_msgs_dropped,
+            fault_work_lost: self.fault_work_lost,
+            unrecoverable_ops: self.unrecoverable_ops,
+            failed_tasks: self.driver.failed_tasks() as u64,
         }
     }
 }
@@ -1070,6 +1370,10 @@ impl<'a> SimState for World<'a> {
             Ev::ConnTry(k) => self.on_conn_try(sched, now, k),
             Ev::ConnUp(k) => self.on_conn_up(sched, now, k),
             Ev::OpenWindow(op) => self.open_window(sched, now, op),
+            Ev::Crash(s) => self.on_crash(now, s),
+            Ev::Straggle(i) => self.on_straggle(i),
+            Ev::ChunkTimeout(op, chunk, a) => self.on_chunk_timeout(sched, now, op, chunk, a),
+            Ev::ChunkRetry(op, chunk, a) => self.on_chunk_retry(sched, now, op, chunk, a),
         }
     }
 }
@@ -1096,6 +1400,17 @@ pub fn simulate_fid(wl: &Workload, cfg: &Config, plat: &Platform, fid: Fidelity)
     // Pre-size the event arena past the initial burst so the frame-path
     // hot loop runs entirely on recycled slots.
     sim.sched.reserve(256 + wl.tasks.len() * 4);
+    // Arm the fault schedule (an empty plan schedules nothing, keeping
+    // event sequence numbers — and hence same-time ordering — identical
+    // to the pre-fault engine).
+    if !cfg.faults.is_empty() {
+        for c in &cfg.faults.crashes {
+            sim.sched.at(c.at, Ev::Crash(c.storage));
+        }
+        for (i, s) in cfg.faults.stragglers.iter().enumerate() {
+            sim.sched.at(s.at, Ev::Straggle(i));
+        }
+    }
     // Release initially-runnable tasks (staggered under detailed fidelity:
     // "coordination overheads make them slightly staggered", §5).
     let initial = sim.state.driver.initially_ready();
@@ -1112,12 +1427,17 @@ pub fn simulate_fid(wl: &Workload, cfg: &Config, plat: &Platform, fid: Fidelity)
     let events = sim.sched.processed();
     let cancelled = sim.sched.cancelled();
     let done = sim.state.driver.finished_tasks();
-    assert_eq!(
-        done,
-        wl.tasks.len(),
-        "simulation drained with {done}/{} tasks finished — workload deadlock (config {})",
-        wl.tasks.len(),
-        cfg.label
-    );
+    // Under a fault plan, unrecoverable ops legitimately strand their
+    // task (and its dependents); fault-free, an undrained workload is a
+    // deadlock bug.
+    if cfg.faults.is_empty() {
+        assert_eq!(
+            done,
+            wl.tasks.len(),
+            "simulation drained with {done}/{} tasks finished — workload deadlock (config {})",
+            wl.tasks.len(),
+            cfg.label
+        );
+    }
     sim.state.finish_report(end, events, cancelled)
 }

@@ -1,0 +1,378 @@
+//! Deterministic fault injection: seeded, reproducible node crashes,
+//! slow-node stragglers, and per-link message loss, threaded through the
+//! model engine.
+//!
+//! A [`FaultPlan`] is part of [`Config`](super::Config) and therefore of
+//! the service fingerprint: two plans are two distinct points of the
+//! configuration space, and the same plan reproduces byte-identical
+//! predictions across runs and thread counts. Every random choice the
+//! degraded-mode protocol makes — whether a message on a lossy link is
+//! dropped, how long a retry backs off — is a *pure function* of the plan
+//! seed and the identity of the thing being decided
+//! ([`Rng::stream_seed`]), never a draw from the simulation's own RNG.
+//! That keeps the fault-free path bit-identical to the pre-fault engine
+//! (an empty plan injects nothing, arms no timers, and draws nothing) and
+//! makes faulty runs independent of event-processing order.
+//!
+//! The degraded-mode protocol the engine builds on this plan:
+//!
+//! * per-chunk timeouts with bounded exponential backoff
+//!   ([`timeout_for`], [`backoff_delay`], [`MAX_ATTEMPTS`]);
+//! * read failover to surviving replicas via O(1)
+//!   [`PlacementArena`](super::PlacementArena) ring membership;
+//! * write re-allocation and replica-chain forwarding that skip dead
+//!   nodes;
+//! * explicit unrecoverable accounting when every replica of a needed
+//!   chunk is gone (e.g. replication 1 + one crash).
+
+use crate::util::rng::Rng;
+use crate::util::units::SimTime;
+
+/// A storage-node crash: storage node `storage` fails at simulated time
+/// `at`. Its queued work is abandoned, in-flight service completes
+/// without effect, and later requests addressed to it are lost.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Crash {
+    pub storage: usize,
+    pub at: SimTime,
+}
+
+/// A slow-node straggler: from `at` on, host `host`'s service rate is
+/// multiplied by `slowdown` (a speed factor in `(0, 1]`; smaller is
+/// slower). Services already in flight keep their scheduled completion.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Straggler {
+    pub host: usize,
+    pub at: SimTime,
+    pub slowdown: f64,
+}
+
+/// Per-link message loss: a message sent from host `src` to host `dst`
+/// during `[from, until)` is dropped with probability `prob`. The drop
+/// decision for one message is a pure hash of `(plan seed, src, dst,
+/// message id)`, so it is identical across runs and thread counts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkLoss {
+    pub src: usize,
+    pub dst: usize,
+    pub from: SimTime,
+    pub until: SimTime,
+    pub prob: f64,
+}
+
+/// A deterministic fault schedule. The default (empty) plan is the
+/// fault-free engine: nothing is injected, no timers are armed, and the
+/// simulation is bit-identical to a build without this module.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for every per-decision hash (drops, backoff jitter).
+    pub seed: u64,
+    pub crashes: Vec<Crash>,
+    pub stragglers: Vec<Straggler>,
+    pub links: Vec<LinkLoss>,
+}
+
+/// Retry attempts per chunk (initial try + retries) before the owning
+/// operation is declared unrecoverable.
+pub const MAX_ATTEMPTS: u32 = 5;
+
+/// Per-chunk timeout for attempt 0 (5 s — generous next to healthy chunk
+/// latencies, so congestion alone does not fire retries); later attempts
+/// double it (see [`timeout_for`]).
+pub const TIMEOUT_BASE: SimTime = SimTime(5_000_000_000);
+
+/// Timeout armed for 0-based attempt `attempt`: `TIMEOUT_BASE`
+/// exponentially doubled, capped at 16×.
+pub fn timeout_for(attempt: u32) -> SimTime {
+    SimTime(TIMEOUT_BASE.0 << attempt.min(4))
+}
+
+/// Backoff delay before re-issuing `(op, chunk)` as attempt `attempt`:
+/// uniform in `[0, timeout_for(attempt) / 2]`, a pure function of
+/// `(seed, op, chunk, attempt)` so the schedule is byte-identical across
+/// runs and thread counts.
+pub fn backoff_delay(seed: u64, op: usize, chunk: u32, attempt: u32) -> SimTime {
+    let stream = (op as u64)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(((chunk as u64) << 32) | attempt as u64);
+    let half = timeout_for(attempt).0 / 2;
+    SimTime(Rng::stream_seed(seed, stream) % (half + 1))
+}
+
+fn parse_idx(s: &str, what: &str) -> Result<usize, String> {
+    s.trim().parse().map_err(|_| format!("bad {what} {s:?}"))
+}
+
+fn parse_secs(s: &str, what: &str) -> Result<SimTime, String> {
+    let secs: f64 = s.trim().parse().map_err(|_| format!("bad {what} {s:?}"))?;
+    if !(secs >= 0.0 && secs.is_finite()) {
+        return Err(format!("bad {what} {s:?}"));
+    }
+    Ok(SimTime::from_secs_f64(secs))
+}
+
+impl FaultPlan {
+    /// Whether the plan injects anything. Empty plans take the engine's
+    /// pre-fault path exactly.
+    pub fn is_empty(&self) -> bool {
+        self.crashes.is_empty() && self.stragglers.is_empty() && self.links.is_empty()
+    }
+
+    /// Parse the `--fault-plan` DSL: semicolon-separated directives
+    /// `seed=<u64>`, `crash=<storage>@<secs>`, `slow=<host>@<secs>x<mult>`,
+    /// and `drop=<src>-<dst>@<from_secs>-<until_secs>p<prob>`, e.g.
+    /// `seed=7;crash=0@2.5;crash=3@4;slow=1@1x0.25;drop=1-2@0-10p0.05`.
+    pub fn parse(text: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for part in text.split(';').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| format!("fault directive {part:?} is not key=value"))?;
+            match key {
+                "seed" => {
+                    plan.seed =
+                        val.parse().map_err(|_| format!("bad fault seed {val:?}"))?;
+                }
+                "crash" => {
+                    let (node, at) = val
+                        .split_once('@')
+                        .ok_or_else(|| format!("crash {val:?} is not <storage>@<secs>"))?;
+                    plan.crashes.push(Crash {
+                        storage: parse_idx(node, "crash storage")?,
+                        at: parse_secs(at, "crash time")?,
+                    });
+                }
+                "slow" => {
+                    let (node, rest) = val
+                        .split_once('@')
+                        .ok_or_else(|| format!("slow {val:?} is not <host>@<secs>x<mult>"))?;
+                    let (at, mult) = rest
+                        .split_once('x')
+                        .ok_or_else(|| format!("slow {val:?} is not <host>@<secs>x<mult>"))?;
+                    plan.stragglers.push(Straggler {
+                        host: parse_idx(node, "slow host")?,
+                        at: parse_secs(at, "slow time")?,
+                        slowdown: mult
+                            .parse()
+                            .map_err(|_| format!("bad slowdown {mult:?}"))?,
+                    });
+                }
+                "drop" => {
+                    let (link, rest) = val.split_once('@').ok_or_else(|| {
+                        format!("drop {val:?} is not <src>-<dst>@<from>-<until>p<prob>")
+                    })?;
+                    let (src, dst) = link
+                        .split_once('-')
+                        .ok_or_else(|| format!("drop link {link:?} is not <src>-<dst>"))?;
+                    let (window, prob) = rest
+                        .split_once('p')
+                        .ok_or_else(|| format!("drop {val:?} has no p<prob>"))?;
+                    let (from, until) = window
+                        .split_once('-')
+                        .ok_or_else(|| format!("drop window {window:?} is not <from>-<until>"))?;
+                    plan.links.push(LinkLoss {
+                        src: parse_idx(src, "drop src host")?,
+                        dst: parse_idx(dst, "drop dst host")?,
+                        from: parse_secs(from, "drop window start")?,
+                        until: parse_secs(until, "drop window end")?,
+                        prob: prob.parse().map_err(|_| format!("bad drop prob {prob:?}"))?,
+                    });
+                }
+                other => return Err(format!("unknown fault directive {other:?}")),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Validate against a cluster shape: crash targets are storage
+    /// indices, straggler hosts and link endpoints are host indices.
+    pub fn validate(&self, n_storage: usize, n_hosts: usize) -> Result<(), String> {
+        for c in &self.crashes {
+            if c.storage >= n_storage {
+                return Err(format!(
+                    "fault plan crashes storage {} but the config has {n_storage} storage nodes",
+                    c.storage
+                ));
+            }
+        }
+        for s in &self.stragglers {
+            if s.host >= n_hosts {
+                return Err(format!(
+                    "fault plan slows host {} but the config has {n_hosts} hosts",
+                    s.host
+                ));
+            }
+            if !(s.slowdown > 0.0 && s.slowdown <= 1.0) {
+                return Err(format!(
+                    "straggler slowdown {} is outside (0, 1]",
+                    s.slowdown
+                ));
+            }
+        }
+        for l in &self.links {
+            if l.src >= n_hosts || l.dst >= n_hosts {
+                return Err(format!(
+                    "fault plan drops on link {}-{} but the config has {n_hosts} hosts",
+                    l.src, l.dst
+                ));
+            }
+            if !(0.0..=1.0).contains(&l.prob) {
+                return Err(format!("drop probability {} is outside [0, 1]", l.prob));
+            }
+            if l.until < l.from {
+                return Err(format!(
+                    "drop window [{}, {}) on link {}-{} is inverted",
+                    l.from, l.until, l.src, l.dst
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Whether a message from host `src` to host `dst` with identity
+    /// `msg_id`, sent at `now`, is dropped. Pure in `(seed, src, dst,
+    /// msg_id)` for a given plan — independent of run and thread count.
+    pub fn drops(&self, src: usize, dst: usize, now: SimTime, msg_id: u64) -> bool {
+        for l in &self.links {
+            if l.src == src && l.dst == dst && now >= l.from && now < l.until {
+                let stream = (src as u64)
+                    .wrapping_mul(0x2545_F491_4F6C_DD1D)
+                    .wrapping_add((dst as u64) << 20)
+                    .wrapping_add(msg_id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                let r = Rng::stream_seed(self.seed, stream);
+                let u = (r >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+                return u < l.prob;
+            }
+        }
+        false
+    }
+
+    /// A benchmark schedule: `n_crashes` storage nodes spread evenly
+    /// around the ring (so no two crashed nodes fall within one replica
+    /// chain at replication ≥ 2, keeping every chunk recoverable), all
+    /// crashing at `at`.
+    pub fn spread_crashes(n_storage: usize, n_crashes: usize, at: SimTime) -> FaultPlan {
+        assert!(n_crashes <= n_storage, "cannot crash more nodes than exist");
+        let step = if n_crashes == 0 { 1 } else { n_storage / n_crashes };
+        FaultPlan {
+            seed: 1,
+            crashes: (0..n_crashes).map(|k| Crash { storage: k * step, at }).collect(),
+            ..FaultPlan::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_empty() {
+        assert!(FaultPlan::default().is_empty());
+        assert!(FaultPlan { seed: 9, ..FaultPlan::default() }.is_empty());
+        let p = FaultPlan::parse("seed=3").unwrap();
+        assert!(p.is_empty());
+        assert_eq!(p.seed, 3);
+    }
+
+    #[test]
+    fn parse_roundtrips_every_directive() {
+        let p = FaultPlan::parse("seed=7; crash=0@2.5; crash=3@4; slow=1@1x0.25; drop=1-2@0-10p0.05")
+            .unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(
+            p.crashes,
+            vec![
+                Crash { storage: 0, at: SimTime::from_secs_f64(2.5) },
+                Crash { storage: 3, at: SimTime::from_secs_f64(4.0) },
+            ]
+        );
+        assert_eq!(
+            p.stragglers,
+            vec![Straggler { host: 1, at: SimTime::from_secs_f64(1.0), slowdown: 0.25 }]
+        );
+        assert_eq!(
+            p.links,
+            vec![LinkLoss {
+                src: 1,
+                dst: 2,
+                from: SimTime::ZERO,
+                until: SimTime::from_secs_f64(10.0),
+                prob: 0.05,
+            }]
+        );
+        assert!(!p.is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_directives() {
+        for bad in ["crash=0", "slow=1@2", "drop=1-2@5p0.1", "warp=9", "crash"] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn validate_checks_cluster_shape() {
+        let p = FaultPlan::parse("crash=5@1").unwrap();
+        assert!(p.validate(5, 10).is_err(), "storage index out of range");
+        assert!(p.validate(6, 10).is_ok());
+        let s = FaultPlan::parse("slow=3@1x1.5").unwrap();
+        assert!(s.validate(4, 10).is_err(), "slowdown above 1 is a speedup");
+        let l = FaultPlan::parse("drop=0-1@5-2p0.5").unwrap();
+        assert!(l.validate(4, 10).is_err(), "inverted drop window");
+    }
+
+    #[test]
+    fn drop_decisions_are_pure_and_respect_the_window() {
+        let p = FaultPlan::parse("seed=11;drop=1-2@1-2p0.5").unwrap();
+        let inside = SimTime::from_secs_f64(1.5);
+        for id in 0..64u64 {
+            assert_eq!(p.drops(1, 2, inside, id), p.drops(1, 2, inside, id));
+        }
+        let hits = (0..1000u64).filter(|&id| p.drops(1, 2, inside, id)).count();
+        assert!((300..700).contains(&hits), "p=0.5 should drop roughly half: {hits}");
+        assert!(!p.drops(2, 1, inside, 0), "reverse direction is unaffected");
+        assert!(!p.drops(1, 2, SimTime::from_secs_f64(2.0), 0), "window is half-open");
+        assert!((0..1000u64).all(|id| !p.drops(1, 2, SimTime::from_secs_f64(0.5), id)));
+    }
+
+    #[test]
+    fn backoff_schedule_is_deterministic_and_bounded() {
+        for op in 0..8usize {
+            for chunk in 0..8u32 {
+                for attempt in 0..MAX_ATTEMPTS {
+                    let a = backoff_delay(42, op, chunk, attempt);
+                    let b = backoff_delay(42, op, chunk, attempt);
+                    assert_eq!(a, b, "backoff must be pure in (seed, op, chunk, attempt)");
+                    assert!(a <= timeout_for(attempt) / 2);
+                }
+            }
+        }
+        assert_ne!(
+            backoff_delay(1, 0, 0, 1),
+            backoff_delay(2, 0, 0, 1),
+            "distinct seeds give distinct jitter"
+        );
+    }
+
+    #[test]
+    fn timeouts_double_and_cap() {
+        assert_eq!(timeout_for(0), TIMEOUT_BASE);
+        assert_eq!(timeout_for(1), TIMEOUT_BASE * 2);
+        assert_eq!(timeout_for(4), TIMEOUT_BASE * 16);
+        assert_eq!(timeout_for(9), TIMEOUT_BASE * 16, "cap at 16x");
+    }
+
+    #[test]
+    fn spread_crashes_never_adjacent_at_low_counts() {
+        let p = FaultPlan::spread_crashes(1023, 16, SimTime::from_secs_f64(1.0));
+        assert_eq!(p.crashes.len(), 16);
+        let mut nodes: Vec<usize> = p.crashes.iter().map(|c| c.storage).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        assert_eq!(nodes.len(), 16, "crashed nodes are distinct");
+        for w in nodes.windows(2) {
+            assert!(w[1] - w[0] >= 2, "no two crashed nodes are ring-adjacent");
+        }
+    }
+}

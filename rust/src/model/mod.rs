@@ -18,6 +18,9 @@
 //!   id, derived lazily from `(primary, repl)` ring arithmetic, so
 //!   full-stripe cluster-wide configurations stop paying O(n·stripe)
 //!   placement vectors per workload.
+//! * [`faults`] — deterministic fault injection: seeded crash/straggler/
+//!   message-loss schedules ([`FaultPlan`], part of [`Config`]) and the
+//!   timeout/backoff constants of the degraded-mode protocol.
 //! * [`engine`] — the simulation world: per-host NIC queues, component
 //!   stations, manager metadata, client operations.
 //! * [`driver`] — the application driver: releases tasks when their input
@@ -31,11 +34,13 @@ pub mod proto;
 pub mod placement;
 pub mod fidelity;
 pub mod energy;
+pub mod faults;
 pub mod engine;
 pub mod driver;
 pub mod report;
 
 pub use config::{Config, Placement};
+pub use faults::{Crash, FaultPlan, LinkLoss, Straggler};
 pub use placement::{AllocId, GroupId, PlacementArena, RefPlacement};
 pub use engine::{simulate, simulate_fid};
 pub use energy::PowerModel;

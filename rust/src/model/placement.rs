@@ -328,6 +328,22 @@ impl PlacementArena {
             AllocDef::Explicit(g) => self.group_contains(g[(chunk % g.len() as u64) as usize], s),
         }
     }
+
+    /// Degraded-mode failover scan: the first member of chunk `i`'s
+    /// replica group that is not `dead`, probing ring positions
+    /// `start_k, start_k+1, …` (mod group length). Each probe is the O(1)
+    /// ring arithmetic of [`chunk_member`](Self::chunk_member); `None`
+    /// means every replica of the chunk is lost.
+    pub fn chunk_first_alive(
+        &self,
+        a: AllocId,
+        chunk: u64,
+        start_k: usize,
+        dead: &[bool],
+    ) -> Option<usize> {
+        let glen = self.chunk_group_len(a, chunk);
+        (0..glen).map(|d| self.chunk_member(a, chunk, (start_k + d) % glen)).find(|&s| !dead[s])
+    }
 }
 
 /// The pre-interning materialized placement shape, retained as the
@@ -392,6 +408,24 @@ mod tests {
         let g3 = a.ring_group(4, 2);
         assert_ne!(g1, g3);
         assert_eq!(a.materialize(g3), vec![4, 0], "ring wraps the storage set");
+    }
+
+    #[test]
+    fn chunk_first_alive_skips_dead_members_in_ring_order() {
+        let mut a = PlacementArena::new(5);
+        let alloc = a.alloc_ring(0, 5, 3);
+        // Chunk 0's replica group is {0, 1, 2}.
+        let mut dead = vec![false; 5];
+        assert_eq!(a.chunk_first_alive(alloc, 0, 0, &dead), Some(0));
+        dead[0] = true;
+        assert_eq!(a.chunk_first_alive(alloc, 0, 0, &dead), Some(1), "failover to next replica");
+        dead[1] = true;
+        assert_eq!(a.chunk_first_alive(alloc, 0, 0, &dead), Some(2));
+        assert_eq!(a.chunk_first_alive(alloc, 0, 2, &dead), Some(2), "offset start wraps");
+        dead[2] = true;
+        assert_eq!(a.chunk_first_alive(alloc, 0, 0, &dead), None, "all replicas lost");
+        // Other chunks' groups are unaffected by those deaths.
+        assert_eq!(a.chunk_first_alive(alloc, 3, 0, &dead), Some(3));
     }
 
     #[test]

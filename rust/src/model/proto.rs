@@ -45,12 +45,13 @@ pub enum Payload {
     WriteAllocResp { op: OpId },
     /// client → storage: store one chunk. `group` is the chunk's interned
     /// replica chain and `hop` the receiver's position in it; the storage
-    /// node forwards to `group[hop + 1]` while one exists (chained
-    /// replication), resolving members through the world's
+    /// node forwards to the next *surviving* member while one exists
+    /// (chained replication), resolving members through the world's
     /// [`PlacementArena`](crate::model::placement::PlacementArena).
-    ChunkPut { op: OpId, chunk: u32, size: Bytes, group: GroupId, hop: u32 },
-    /// tail storage → client: chunk fully stored on all replicas.
-    ChunkPutAck { op: OpId, chunk: u32 },
+    /// `attempt` is the degraded-mode retry number (always 0 fault-free).
+    ChunkPut { op: OpId, chunk: u32, size: Bytes, group: GroupId, hop: u32, attempt: u32 },
+    /// tail storage → client: chunk fully stored on all surviving replicas.
+    ChunkPutAck { op: OpId, chunk: u32, attempt: u32 },
     /// client → manager: chunk map, closes the write.
     ChunkCommit { op: OpId },
     /// manager → client: commit acknowledged; file becomes visible.
@@ -61,10 +62,11 @@ pub enum Payload {
     ReadLookup { op: OpId },
     /// manager → client: chunk map available (stored in op state).
     ReadLookupResp { op: OpId },
-    /// client → storage: send one chunk.
-    ChunkGet { op: OpId, chunk: u32, size: Bytes },
-    /// storage → client: chunk payload.
-    ChunkData { op: OpId, chunk: u32, size: Bytes },
+    /// client → storage: send one chunk. `attempt` tags the degraded-mode
+    /// retry this request belongs to (always 0 fault-free).
+    ChunkGet { op: OpId, chunk: u32, size: Bytes, attempt: u32 },
+    /// storage → client: chunk payload (echoes the request's `attempt`).
+    ChunkData { op: OpId, chunk: u32, size: Bytes, attempt: u32 },
 
     // ---- detailed-fidelity control rounds (testbed protocol only) ----
     /// client → manager: open the file handle (FUSE-ish extra round).
@@ -194,7 +196,7 @@ mod tests {
     fn control_messages_have_fixed_size() {
         let p = Payload::WriteAlloc { op: 0 };
         assert_eq!(p.wire_size(), CTRL_MSG);
-        let p = Payload::ChunkPutAck { op: 0, chunk: 3 };
+        let p = Payload::ChunkPutAck { op: 0, chunk: 3, attempt: 0 };
         assert_eq!(p.wire_size(), CTRL_MSG);
     }
 
@@ -202,9 +204,10 @@ mod tests {
     fn data_messages_carry_payload() {
         let mut arena = crate::model::placement::PlacementArena::new(2);
         let g = arena.ring_group(0, 2);
-        let p = Payload::ChunkPut { op: 0, chunk: 0, size: Bytes::mb(1), group: g, hop: 0 };
+        let p =
+            Payload::ChunkPut { op: 0, chunk: 0, size: Bytes::mb(1), group: g, hop: 0, attempt: 0 };
         assert_eq!(p.wire_size(), Bytes::mb(1) + CTRL_MSG);
-        let p = Payload::ChunkData { op: 0, chunk: 0, size: Bytes::kb(256) };
+        let p = Payload::ChunkData { op: 0, chunk: 0, size: Bytes::kb(256), attempt: 0 };
         assert_eq!(p.wire_size(), Bytes::kb(256) + CTRL_MSG);
     }
 

@@ -83,9 +83,34 @@ pub struct SimReport {
     /// Connection SYN retries (detailed fidelity only; 0 for the
     /// predictor — one of the paper's named sources of real-system noise).
     pub conn_retries: u64,
+    /// Degraded-mode accounting (all zero when the fault plan is empty).
+    /// Chunk attempts re-issued after a timeout.
+    pub fault_retries: u64,
+    /// Chunk attempts routed away from the fault-free target (read
+    /// failover to a surviving replica, write chain entry past dead
+    /// members).
+    pub fault_failovers: u64,
+    /// Per-chunk timeouts that fired.
+    pub fault_timeouts: u64,
+    /// Messages dropped by lossy links.
+    pub fault_msgs_dropped: u64,
+    /// Service units lost to crashes: a crashed node's abandoned queue,
+    /// its in-flight service, and later arrivals addressed to it.
+    pub fault_work_lost: u64,
+    /// Operations declared unrecoverable (every replica of a needed chunk
+    /// lost, or the retry budget spent).
+    pub unrecoverable_ops: u64,
+    /// Tasks abandoned because an operation was unrecoverable.
+    pub failed_tasks: u64,
 }
 
 impl SimReport {
+    /// Whether any operation was lost for good — the headline availability
+    /// signal of a degraded run (always false fault-free).
+    pub fn unrecoverable(&self) -> bool {
+        self.unrecoverable_ops > 0
+    }
+
     /// Makespan of one stage: last task end − first task start.
     pub fn stage_time(&self, stage: u32) -> SimTime {
         let xs: Vec<&TaskRecord> = self.tasks.iter().filter(|t| t.stage == stage).collect();
@@ -151,6 +176,13 @@ mod tests {
             events: 0,
             events_cancelled: 0,
             conn_retries: 0,
+            fault_retries: 0,
+            fault_failovers: 0,
+            fault_timeouts: 0,
+            fault_msgs_dropped: 0,
+            fault_work_lost: 0,
+            unrecoverable_ops: 0,
+            failed_tasks: 0,
         }
     }
 

@@ -19,7 +19,7 @@
 pub mod anneal;
 
 use crate::coordinator;
-use crate::model::Config;
+use crate::model::{Config, FaultPlan};
 use crate::predict::{Prediction, Predictor};
 use crate::runtime::{encode_config, encode_platform, Score, ScorerRuntime, StageDesc};
 use crate::service::{Estimate, GridCoord, Service};
@@ -40,17 +40,33 @@ pub struct SearchSpace {
     pub replication: Vec<u32>,
     /// Minimum storage nodes to consider per partitioning.
     pub min_storage: usize,
+    /// Fault plan applied to every candidate — search under degraded
+    /// conditions ("what is the best configuration if a node dies
+    /// mid-run?"). Empty by default: a fault-free search.
+    pub faults: FaultPlan,
 }
 
 impl SearchSpace {
     /// Scenario I space: one fixed cluster, all partitionings × chunks.
     pub fn fixed_cluster(total_nodes: usize, chunk_sizes: Vec<Bytes>) -> SearchSpace {
-        SearchSpace { allocations: vec![total_nodes], chunk_sizes, replication: vec![1], min_storage: 1 }
+        SearchSpace {
+            allocations: vec![total_nodes],
+            chunk_sizes,
+            replication: vec![1],
+            min_storage: 1,
+            faults: FaultPlan::default(),
+        }
     }
 
     /// Scenario II space: several allocation sizes (paper: 11, 17, 20).
     pub fn elastic(allocations: Vec<usize>, chunk_sizes: Vec<Bytes>) -> SearchSpace {
-        SearchSpace { allocations, chunk_sizes, replication: vec![1], min_storage: 1 }
+        SearchSpace {
+            allocations,
+            chunk_sizes,
+            replication: vec![1],
+            min_storage: 1,
+            faults: FaultPlan::default(),
+        }
     }
 
     /// Enumerate all candidate configurations.
@@ -66,7 +82,17 @@ impl SearchSpace {
                         if r as usize > n_storage {
                             continue;
                         }
-                        let cfg = Config::partitioned(n_app, n_storage, chunk).with_replication(r);
+                        let mut cfg =
+                            Config::partitioned(n_app, n_storage, chunk).with_replication(r);
+                        if !self.faults.is_empty() {
+                            // A plan names concrete node indices; drop the
+                            // partitionings too small to contain them
+                            // (e.g. crash=5 when only 3 storage nodes).
+                            if self.faults.validate(n_storage, cfg.n_hosts()).is_err() {
+                                continue;
+                            }
+                            cfg = cfg.with_fault_plan(self.faults.clone());
+                        }
                         out.push(cfg);
                     }
                 }
@@ -520,6 +546,21 @@ mod tests {
     }
 
     #[test]
+    fn fault_plans_flow_into_enumerated_candidates() {
+        let mut s = SearchSpace::fixed_cluster(8, vec![Bytes::mb(1)]);
+        s.faults = FaultPlan::parse("crash=2@1").unwrap();
+        let cfgs = s.enumerate();
+        assert!(!cfgs.is_empty());
+        // The plan names storage node 2, so partitionings with fewer than
+        // 3 storage nodes are dropped; everything kept carries the plan.
+        assert!(cfgs.iter().all(|c| c.n_storage >= 3));
+        assert!(cfgs.iter().all(|c| !c.faults.is_empty()));
+        let fault_free = SearchSpace::fixed_cluster(8, vec![Bytes::mb(1)]).enumerate();
+        assert!(cfgs.len() < fault_free.len());
+        assert!(fault_free.iter().all(|c| c.faults.is_empty()));
+    }
+
+    #[test]
     fn search_without_runtime_refines_everything() {
         let predictor = Predictor::new(Platform::paper_testbed());
         let searcher = Searcher::new(&predictor);
@@ -528,6 +569,7 @@ mod tests {
             chunk_sizes: vec![Bytes::mb(1)],
             replication: vec![1],
             min_storage: 1,
+            faults: FaultPlan::default(),
         };
         let params = BlastParams { queries: 20, ..Default::default() };
         let report = searcher.search(&space, &[], |cfg| blast(cfg.n_app, &params));

@@ -146,19 +146,24 @@ impl ShardedLru {
         }
     }
 
-    fn shard(&self, fp: &Fingerprint) -> &Mutex<Shard> {
-        &self.shards[fp.shard(self.shards.len())]
+    /// Shard locks shrug off poisoning: a panic elsewhere while a guard
+    /// was held (the cache is process-wide in `serve`) must not turn
+    /// every later request into a panic. Mutations keep the map and the
+    /// recency list consistent at every await-free step, so the state
+    /// behind a poisoned lock is still well-formed.
+    fn shard(&self, fp: &Fingerprint) -> std::sync::MutexGuard<'_, Shard> {
+        self.shards[fp.shard(self.shards.len())].lock().unwrap_or_else(|e| e.into_inner())
     }
 
     pub fn get(&self, fp: &Fingerprint) -> Option<Arc<Prediction>> {
-        let mut s = self.shard(fp).lock().unwrap();
+        let mut s = self.shard(fp);
         let i = *s.map.get(fp)?;
         s.touch(i);
         Some(s.node(i).value.clone())
     }
 
     pub fn insert(&self, fp: Fingerprint, value: Arc<Prediction>) {
-        let mut s = self.shard(&fp).lock().unwrap();
+        let mut s = self.shard(&fp);
         if let Some(&i) = s.map.get(&fp) {
             // Refresh in place: overwriting an existing key must not evict
             // a neighbor.
@@ -173,7 +178,7 @@ impl ShardedLru {
     }
 
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+        self.shards.iter().map(|s| s.lock().unwrap_or_else(|e| e.into_inner()).map.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {

@@ -181,6 +181,35 @@ fn hash_config(h: &mut H2, cfg: &Config) {
     });
     h.bool(cfg.location_aware);
     h.usize(cfg.io_window);
+    // Fault plans are hashed only when non-empty, so a config with the
+    // default (empty) plan keeps the fingerprint it had before fault
+    // support existed — warm-start stores stay valid. The seed is hashed
+    // only alongside actual fault events: it feeds no decision on an
+    // empty plan, and two plans differing in any event or the seed are
+    // distinct evaluation points.
+    if !cfg.faults.is_empty() {
+        h.str("faults.v1");
+        h.u64(cfg.faults.seed);
+        h.usize(cfg.faults.crashes.len());
+        for c in &cfg.faults.crashes {
+            h.usize(c.storage);
+            h.u64(c.at.as_ns());
+        }
+        h.usize(cfg.faults.stragglers.len());
+        for s in &cfg.faults.stragglers {
+            h.usize(s.host);
+            h.u64(s.at.as_ns());
+            h.f64(s.slowdown);
+        }
+        h.usize(cfg.faults.links.len());
+        for l in &cfg.faults.links {
+            h.usize(l.src);
+            h.usize(l.dst);
+            h.u64(l.from.as_ns());
+            h.u64(l.until.as_ns());
+            h.f64(l.prob);
+        }
+    }
 }
 
 fn hash_platform(h: &mut H2, p: &Platform) {
@@ -334,6 +363,30 @@ mod tests {
                 &Fidelity::coarse_per_frame()
             )
         );
+    }
+
+    #[test]
+    fn fault_plans_are_distinct_points_but_empty_plans_are_free() {
+        use crate::model::FaultPlan;
+        let w = wl();
+        let plat = Platform::paper_testbed();
+        let fid = Fidelity::coarse();
+        let base = fp_of(&w);
+        let seeded_empty =
+            Config::dss(4).with_fault_plan(FaultPlan { seed: 77, ..FaultPlan::default() });
+        assert_eq!(
+            base,
+            fingerprint(&w, &seeded_empty, &plat, &fid),
+            "an empty plan (whatever its seed) keeps the pre-fault fingerprint"
+        );
+        let crash = Config::dss(4).with_fault_plan(FaultPlan::parse("crash=1@2").unwrap());
+        let fp_crash = fingerprint(&w, &crash, &plat, &fid);
+        assert_ne!(base, fp_crash);
+        let later = Config::dss(4).with_fault_plan(FaultPlan::parse("crash=1@3").unwrap());
+        assert_ne!(fp_crash, fingerprint(&w, &later, &plat, &fid));
+        let reseeded =
+            Config::dss(4).with_fault_plan(FaultPlan::parse("seed=9;crash=1@2").unwrap());
+        assert_ne!(fp_crash, fingerprint(&w, &reseeded, &plat, &fid));
     }
 
     #[test]

@@ -27,6 +27,13 @@
 //!   over already-evaluated grid neighbors, gated by a per-answer error
 //!   estimate and always attributed ([`Answer::Surrogate`] vs
 //!   [`Answer::Exact`]); with the gate off it is never consulted.
+//! * **Crash safety** — a request thread that panics mid-simulation must
+//!   not take the process-wide service down with it: the single-flight
+//!   leader finishes its flight from a drop guard (waiters wake and
+//!   re-execute), and every shared-state lock shrugs off poisoning
+//!   instead of propagating the panic to unrelated requests. Exact
+//!   answers carry the run's degraded-mode [`FailureStats`] so callers
+//!   can tell a clean prediction from one that failed over or lost work.
 //!
 //! The `Searcher` and `Annealer` evaluate through a service handle
 //! (creating a private cold one when the caller does not supply a handle,
@@ -40,7 +47,7 @@ pub mod store;
 pub mod surrogate;
 
 pub use fingerprint::{fingerprint, Fingerprint};
-pub use store::{DiskStore, StoredAnswer};
+pub use store::{DiskStore, FailureStats, StoredAnswer};
 pub use surrogate::{Estimate, GridCoord, SurrogateGrid};
 
 use crate::coordinator;
@@ -73,12 +80,25 @@ impl Source {
     }
 }
 
-/// A served answer. Exact answers are attributed to their source;
-/// surrogate answers always carry their error estimate.
+/// A served answer. Exact answers are attributed to their source and
+/// carry the run's degraded-mode failure accounting; surrogate answers
+/// always carry their error estimate (and no failure stats — they are
+/// interpolations, not runs).
 #[derive(Clone, Debug)]
 pub enum Answer {
-    Exact { fp: Fingerprint, turnaround_s: f64, cost_node_s: f64, source: Source },
-    Surrogate { fp: Fingerprint, turnaround_s: f64, cost_node_s: f64, est_err: f64 },
+    Exact {
+        fp: Fingerprint,
+        turnaround_s: f64,
+        cost_node_s: f64,
+        source: Source,
+        failures: FailureStats,
+    },
+    Surrogate {
+        fp: Fingerprint,
+        turnaround_s: f64,
+        cost_node_s: f64,
+        est_err: f64,
+    },
 }
 
 impl Answer {
@@ -114,6 +134,15 @@ impl Answer {
         match self {
             Answer::Surrogate { est_err, .. } => Some(*est_err),
             Answer::Exact { .. } => None,
+        }
+    }
+
+    /// `Some` only for exact answers — a surrogate interpolation never
+    /// ran the fault plan.
+    pub fn failures(&self) -> Option<FailureStats> {
+        match self {
+            Answer::Exact { failures, .. } => Some(*failures),
+            Answer::Surrogate { .. } => None,
         }
     }
 }
@@ -243,7 +272,10 @@ impl Service {
             return p;
         }
         let (flight, leader) = {
-            let mut inflight = self.inflight.lock().unwrap();
+            // Every service lock tolerates poisoning: a panic on one
+            // request thread (the flight drop-guard below already keeps
+            // the map consistent) must not wedge the rest of `serve`.
+            let mut inflight = self.inflight.lock().unwrap_or_else(|e| e.into_inner());
             // Re-check under the map lock: a leader that finished after
             // our cache probe has already moved its result to the cache
             // and removed its flight entry.
@@ -275,8 +307,14 @@ impl Service {
             }
             impl Drop for FinishFlight<'_> {
                 fn drop(&mut self) {
-                    self.service.inflight.lock().unwrap().remove(&self.fp);
-                    self.flight.state.lock().unwrap().finished = true;
+                    // Runs on the panic path too, so both locks must
+                    // accept an already-poisoned mutex.
+                    self.service
+                        .inflight
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .remove(&self.fp);
+                    self.flight.state.lock().unwrap_or_else(|e| e.into_inner()).finished = true;
                     self.flight.done.notify_all();
                 }
             }
@@ -288,14 +326,21 @@ impl Service {
             if let Some(disk) = &self.disk {
                 disk.put(fp, &StoredAnswer::of(&pred));
             }
-            finish.flight.state.lock().unwrap().result = Some(pred.clone());
+            finish.flight.state.lock().unwrap_or_else(|e| e.into_inner()).result =
+                Some(pred.clone());
             drop(finish);
             pred
         } else {
             self.counters.dedup_waits.fetch_add(1, Ordering::Relaxed);
-            let mut state = flight.state.lock().unwrap();
+            let mut state = flight.state.lock().unwrap_or_else(|e| e.into_inner());
             while !state.finished {
-                state = flight.done.wait(state).unwrap();
+                // A leader that panicked poisons this mutex; the waiter
+                // still wants the (consistent) state to see `finished`
+                // and retry, not to propagate the foreign panic.
+                state = match flight.done.wait(state) {
+                    Ok(g) => g,
+                    Err(e) => e.into_inner(),
+                };
             }
             match state.result.clone() {
                 Some(p) => p,
@@ -319,6 +364,7 @@ impl Service {
                 turnaround_s: p.turnaround.as_secs_f64(),
                 cost_node_s: p.cost_node_secs,
                 source: Source::Memory,
+                failures: FailureStats::of(&p.report),
             });
         }
         let a = self.disk.as_ref().and_then(|d| d.get(&fp))?;
@@ -328,6 +374,7 @@ impl Service {
             turnaround_s: a.turnaround.as_secs_f64(),
             cost_node_s: a.cost_node_s,
             source: Source::Disk,
+            failures: a.failures,
         })
     }
 
@@ -338,6 +385,7 @@ impl Service {
             turnaround_s: p.turnaround.as_secs_f64(),
             cost_node_s: p.cost_node_secs,
             source: Source::Simulated,
+            failures: FailureStats::of(&p.report),
         }
     }
 
@@ -395,14 +443,19 @@ impl Service {
     /// Record an exact sample into workload family `family`'s surrogate
     /// grid.
     pub fn note_sample(&self, family: u64, coord: GridCoord, time_s: f64) {
-        self.grids.lock().unwrap().entry(family).or_default().note(coord, time_s);
+        self.grids
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .entry(family)
+            .or_default()
+            .note(coord, time_s);
     }
 
     /// Surrogate fast-path: an interpolated estimate for `coord` within
     /// `family`, only when its error bound fits `max_est_err`. Counted in
     /// [`StatsSnapshot::surrogate_answers`] when it answers.
     pub fn interpolate(&self, family: u64, coord: GridCoord, max_est_err: f64) -> Option<Estimate> {
-        let grids = self.grids.lock().unwrap();
+        let grids = self.grids.lock().unwrap_or_else(|e| e.into_inner());
         let est = grids.get(&family)?.interpolate(coord)?;
         if est.est_err <= max_est_err {
             self.counters.surrogate_answers.fetch_add(1, Ordering::Relaxed);
@@ -483,6 +536,31 @@ mod tests {
         }
         assert_eq!(a.fp(), b.fp());
         assert!(a.is_exact() && a.est_err().is_none());
+    }
+
+    #[test]
+    fn poisoned_locks_do_not_wedge_the_service() {
+        let svc = service();
+        let (wl, cfg) = point();
+        // Poison the grid and inflight mutexes the way a panicking
+        // request thread would: by unwinding while the guard is held.
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = svc.grids.lock().unwrap();
+            panic!("injected panic while holding the grids lock");
+        }));
+        assert!(r.is_err());
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = svc.inflight.lock().unwrap();
+            panic!("injected panic while holding the inflight lock");
+        }));
+        assert!(r.is_err());
+        // Every path that takes those locks must still work.
+        svc.note_sample(7, GridCoord::of(&cfg), 1.25);
+        let _ = svc.interpolate(7, GridCoord::of(&cfg), 0.5);
+        let a = svc.evaluate(&wl, &cfg);
+        let b = svc.query(&wl, &cfg);
+        assert_eq!(a.turnaround.as_secs_f64(), b.turnaround_s());
+        assert_eq!(b.failures(), Some(FailureStats::default()), "fault-free run, clean stats");
     }
 
     #[test]

@@ -14,6 +14,7 @@
 //! successor.
 
 use super::fingerprint::Fingerprint;
+use crate::model::SimReport;
 use crate::predict::Prediction;
 use crate::util::jsonw::{self, Json, Scalar};
 use crate::util::units::{Bytes, SimTime};
@@ -23,6 +24,32 @@ use std::io::{BufWriter, Write as _};
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
+/// Degraded-mode accounting carried on an answer. All-zero (and
+/// `unrecoverable == false`) whenever the query's fault plan was empty,
+/// including every record written before fault injection existed.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FailureStats {
+    /// Chunk attempts re-issued after a timeout.
+    pub retries: u64,
+    /// Chunk attempts routed away from the fault-free replica target.
+    pub failovers: u64,
+    /// Per-chunk timeouts that fired.
+    pub timeouts: u64,
+    /// Whether any operation was lost for good.
+    pub unrecoverable: bool,
+}
+
+impl FailureStats {
+    pub fn of(r: &SimReport) -> FailureStats {
+        FailureStats {
+            retries: r.fault_retries,
+            failovers: r.fault_failovers,
+            timeouts: r.fault_timeouts,
+            unrecoverable: r.unrecoverable(),
+        }
+    }
+}
+
 /// The persisted summary of one prediction.
 #[derive(Clone, Debug, PartialEq)]
 pub struct StoredAnswer {
@@ -31,6 +58,7 @@ pub struct StoredAnswer {
     pub stage_times: Vec<SimTime>,
     pub events: u64,
     pub net_bytes: Bytes,
+    pub failures: FailureStats,
 }
 
 impl StoredAnswer {
@@ -41,6 +69,7 @@ impl StoredAnswer {
             stage_times: p.stage_times.clone(),
             events: p.report.events,
             net_bytes: p.report.net_bytes,
+            failures: FailureStats::of(&p.report),
         }
     }
 }
@@ -50,18 +79,22 @@ pub struct DiskStore {
     path: PathBuf,
     writer: Mutex<BufWriter<File>>,
     loaded: Mutex<HashMap<Fingerprint, StoredAnswer>>,
+    salvaged: usize,
 }
 
 impl DiskStore {
     /// Open `path` (creating it if needed) and replay existing records.
-    /// A corrupt interior record is an error, not a silent skip: the
-    /// store is the warm-start substrate and half-read state would be
-    /// confusing. A corrupt *final* record is what a crash or full disk
-    /// mid-append leaves behind, so it is dropped with a warning and the
-    /// rest of the store is recovered.
+    /// A corrupt *interior* record — a flipped bit, an editor accident, a
+    /// record from a future format — is quarantined: logged, counted in
+    /// [`salvaged`](Self::salvaged), and skipped, so one bad line cannot
+    /// hold the whole warm-start substrate hostage. A corrupt *final*
+    /// record is what a crash or full disk mid-append leaves behind, so
+    /// it is likewise dropped with a warning and every complete record
+    /// is recovered.
     pub fn open(path: impl AsRef<Path>) -> Result<DiskStore, String> {
         let path = path.as_ref().to_path_buf();
         let mut loaded = HashMap::new();
+        let mut salvaged = 0usize;
         if let Ok(text) = std::fs::read_to_string(&path) {
             let lines: Vec<&str> = text.lines().collect();
             for (idx, raw) in lines.iter().enumerate() {
@@ -80,7 +113,12 @@ impl DiskStore {
                         );
                     }
                     None => {
-                        return Err(format!("corrupt record in {}: {line:?}", path.display()));
+                        salvaged += 1;
+                        eprintln!(
+                            "[service] quarantining corrupt record at line {} of {}: {line:?}",
+                            idx + 1,
+                            path.display()
+                        );
                     }
                 }
             }
@@ -90,15 +128,27 @@ impl DiskStore {
             .append(true)
             .open(&path)
             .map_err(|e| format!("open {}: {e}", path.display()))?;
-        Ok(DiskStore { path, writer: Mutex::new(BufWriter::new(file)), loaded: Mutex::new(loaded) })
+        Ok(DiskStore {
+            path,
+            writer: Mutex::new(BufWriter::new(file)),
+            loaded: Mutex::new(loaded),
+            salvaged,
+        })
     }
 
     pub fn path(&self) -> &Path {
         &self.path
     }
 
+    /// Corrupt interior records skipped while replaying at `open` time
+    /// (the truncated-tail drop is not counted — that is the normal
+    /// crash-recovery path, not data damage).
+    pub fn salvaged(&self) -> usize {
+        self.salvaged
+    }
+
     pub fn len(&self) -> usize {
-        self.loaded.lock().unwrap().len()
+        self.lock_loaded().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -106,7 +156,7 @@ impl DiskStore {
     }
 
     pub fn get(&self, fp: &Fingerprint) -> Option<StoredAnswer> {
-        self.loaded.lock().unwrap().get(fp).cloned()
+        self.lock_loaded().get(fp).cloned()
     }
 
     /// Record one answer (idempotent per fingerprint) and flush. An
@@ -115,7 +165,7 @@ impl DiskStore {
     /// index claims and what the next `open` replays stay consistent.
     pub fn put(&self, fp: Fingerprint, ans: &StoredAnswer) {
         {
-            let mut m = self.loaded.lock().unwrap();
+            let mut m = self.lock_loaded();
             if m.contains_key(&fp) {
                 return;
             }
@@ -130,14 +180,25 @@ impl DiskStore {
             .set("stages_ns", Json::Arr(stages))
             .set("events", ans.events)
             .set("net_bytes", ans.net_bytes.as_u64())
+            .set("fault_retries", ans.failures.retries)
+            .set("fault_failovers", ans.failures.failovers)
+            .set("fault_timeouts", ans.failures.timeouts)
+            .set("unrecoverable", ans.failures.unrecoverable)
             .render_compact();
-        let mut w = self.writer.lock().unwrap();
+        let mut w = self.writer.lock().unwrap_or_else(|e| e.into_inner());
         let wrote = writeln!(w, "{line}").and_then(|_| w.flush());
         drop(w);
         if let Err(e) = wrote {
             eprintln!("[service] failed to append to {}: {e}", self.path.display());
-            self.loaded.lock().unwrap().remove(&fp);
+            self.lock_loaded().remove(&fp);
         }
+    }
+
+    /// A panic while a lock was held must not wedge every later request
+    /// (the store outlives request threads in `serve`), so poisoning is
+    /// shrugged off: the guarded maps are always left key-consistent.
+    fn lock_loaded(&self) -> std::sync::MutexGuard<'_, HashMap<Fingerprint, StoredAnswer>> {
+        self.loaded.lock().unwrap_or_else(|e| e.into_inner())
     }
 
     fn parse_line(line: &str) -> Option<(Fingerprint, StoredAnswer)> {
@@ -155,6 +216,14 @@ impl DiskStore {
             Scalar::NumArr(xs) => xs.iter().map(|&x| SimTime::from_ns(x as u64)).collect(),
             _ => return None,
         };
+        // Failure keys are absent from pre-fault-injection stores; such
+        // records are by construction fault-free, so default to zero.
+        let failures = FailureStats {
+            retries: num("fault_retries").unwrap_or(0.0) as u64,
+            failovers: num("fault_failovers").unwrap_or(0.0) as u64,
+            timeouts: num("fault_timeouts").unwrap_or(0.0) as u64,
+            unrecoverable: matches!(get("unrecoverable"), Some(Scalar::Bool(true))),
+        };
         Some((
             fp,
             StoredAnswer {
@@ -163,6 +232,7 @@ impl DiskStore {
                 stage_times,
                 events: num("events")? as u64,
                 net_bytes: Bytes(num("net_bytes")? as u64),
+                failures,
             },
         ))
     }
@@ -185,6 +255,12 @@ mod tests {
                 stage_times: vec![SimTime::from_ms(40), SimTime::from_ms(60 + i)],
                 events: 1000 + i,
                 net_bytes: Bytes::mb(i + 1),
+                failures: FailureStats {
+                    retries: i,
+                    failovers: 2 * i,
+                    timeouts: i,
+                    unrecoverable: i % 2 == 1,
+                },
             },
         )
     }
@@ -227,19 +303,44 @@ mod tests {
     }
 
     #[test]
-    fn corrupt_interior_record_is_an_error() {
+    fn corrupt_interior_record_is_salvaged_around() {
         let path = tmp("corrupt");
         let (fp, ans) = sample(1);
         let good = {
             let _ = std::fs::remove_file(&path);
             let store = DiskStore::open(&path).unwrap();
+            assert_eq!(store.salvaged(), 0);
             store.put(fp, &ans);
             drop(store);
             std::fs::read_to_string(&path).unwrap()
         };
-        std::fs::write(&path, format!("{{\"fp\": \"nope\"}}\n{good}")).unwrap();
-        let err = DiskStore::open(&path).unwrap_err();
-        assert!(err.contains("corrupt"), "{err}");
+        std::fs::write(&path, format!("{{\"fp\": \"nope\"}}\nnot json at all\n{good}")).unwrap();
+        let store = DiskStore::open(&path).unwrap();
+        assert_eq!(store.len(), 1, "the intact record survives its corrupt neighbors");
+        assert_eq!(store.get(&fp), Some(ans));
+        assert_eq!(store.salvaged(), 2, "each quarantined line is counted");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn records_without_failure_keys_parse_as_fault_free() {
+        // Stores written before fault injection existed lack the
+        // fault_* / unrecoverable keys entirely.
+        let path = tmp("legacy");
+        let fp = Fingerprint { hi: 5, lo: 155 };
+        std::fs::write(
+            &path,
+            format!(
+                "{{\"fp\": \"{fp}\", \"turnaround_ns\": 1500000, \"cost_node_s\": 2.5, \
+                 \"stages_ns\": [1500000], \"events\": 42, \"net_bytes\": 1024}}\n"
+            ),
+        )
+        .unwrap();
+        let store = DiskStore::open(&path).unwrap();
+        assert_eq!(store.salvaged(), 0);
+        let ans = store.get(&fp).expect("legacy record parses");
+        assert_eq!(ans.failures, FailureStats::default());
+        assert!(!ans.failures.unrecoverable);
         let _ = std::fs::remove_file(&path);
     }
 

@@ -240,6 +240,19 @@ impl<T> Station<T> {
         (done, next)
     }
 
+    /// Abandon every waiting entry (a crashed node's queue): advances the
+    /// statistics integrals to `now`, clears the queue, and returns the
+    /// abandoned unit count. The in-service entry keeps its already-
+    /// scheduled completion — the caller discards that completion's
+    /// effect instead (a crashed server finishes nothing).
+    pub fn drain_waiting(&mut self, now: SimTime) -> u64 {
+        self.stats.advance(now, self.is_busy(), self.waiting_units);
+        let dropped = self.waiting_units;
+        self.waiting.clear();
+        self.waiting_units = 0;
+        dropped
+    }
+
     /// Finalize stats bookkeeping at the end of a run.
     pub fn finish(&mut self, now: SimTime) {
         self.stats.advance(now, self.is_busy(), self.waiting_units);
@@ -687,6 +700,23 @@ mod tests {
         assert_eq!(done, 3);
         assert_eq!(next, None);
         assert!(!st.is_busy());
+    }
+
+    #[test]
+    fn drain_waiting_abandons_queue_but_not_in_service() {
+        let mut st: Station<u32> = Station::new();
+        let done = st.arrive(ns(0), 1, ns(10)).unwrap();
+        assert!(st.arrive(ns(1), 2, ns(10)).is_none());
+        assert!(st.arrive(ns(2), 3, ns(10)).is_none());
+        assert_eq!(st.drain_waiting(ns(5)), 2, "two waiters abandoned");
+        assert_eq!(st.queue_len(), 0);
+        assert!(st.is_busy(), "in-service entry keeps its completion");
+        let (item, next) = st.complete(done);
+        assert_eq!(item, 1);
+        assert_eq!(next, None, "nothing left to start");
+        st.finish(ns(10));
+        // Waiters queued over [1,5) and [2,5): 4 + 3 = 7 ns·units.
+        assert_eq!(st.stats.qlen_ns, 7);
     }
 
     #[test]

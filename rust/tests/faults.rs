@@ -1,0 +1,213 @@
+//! Integration tests for degraded-mode prediction under an injected
+//! fault plan: crashed storage nodes force write re-allocation and read
+//! failover, replication 1 makes losses unrecoverable (reported, never
+//! hung), mid-run crashes are ridden out by timeout + retry, message
+//! loss windows drain through backoff, stragglers slow predictions
+//! monotonically, and the serving layer gives every plan its own
+//! fingerprint plus failure accounting — byte-identical across thread
+//! counts.
+
+use wfpred::model::{simulate, Config, FaultPlan, Platform};
+use wfpred::predict::Predictor;
+use wfpred::service::{Answer, FailureStats, Query, Service};
+use wfpred::util::units::Bytes;
+use wfpred::workload::{FileSpec, TaskSpec, Workload};
+
+/// One task reading a prestaged input and writing one output.
+fn rw_workload(in_mb: u64, out_mb: u64) -> Workload {
+    let mut w = Workload::new("faults-rw");
+    let a = w.add_file(FileSpec::new("in", Bytes::mb(in_mb)).prestaged());
+    let b = w.add_file(FileSpec::new("out", Bytes::mb(out_mb)));
+    w.add_task(TaskSpec::new("t", 0).reads(a).writes(b));
+    w
+}
+
+#[test]
+fn crash_before_first_write_reallocates_to_the_surviving_replica() {
+    // Storage 0 dies before anything is issued. At replication 2 every
+    // chunk still has a surviving replica: reads fail over, writes enter
+    // the chain at the surviving member, and the run completes with zero
+    // timeouts — issue-time liveness checks handle everything.
+    let plat = Platform::paper_testbed();
+    let wl = rw_workload(8, 8);
+    let cfg = Config::partitioned(1, 2, Bytes::mb(1))
+        .with_replication(2)
+        .with_fault_plan(FaultPlan::parse("crash=0@0").unwrap());
+    let rep = simulate(&wl, &cfg, &plat);
+
+    assert_eq!(rep.tasks.len(), 1, "the task must complete despite the crash");
+    assert_eq!(rep.failed_tasks, 0);
+    assert_eq!(rep.unrecoverable_ops, 0);
+    assert!(rep.fault_failovers > 0, "reads/writes must have been redirected");
+    assert_eq!(rep.fault_timeouts, 0, "nothing was in flight to the dead node");
+    assert_eq!(rep.fault_retries, 0);
+    // The input was prestaged on both nodes before the crash; the new
+    // output lands only on the survivor (degraded single-replica write).
+    assert_eq!(rep.stored[0], Bytes::mb(8), "dead node holds only prestaged bytes");
+    assert_eq!(rep.stored[1], Bytes::mb(16), "survivor holds prestage + the whole output");
+}
+
+#[test]
+fn read_failover_serves_every_chunk_from_survivors() {
+    // Three storage nodes, replication 2, node 1 dead from the start:
+    // every chunk whose preferred replica was node 1 is read from the
+    // other member of its group, with no timeout and no data loss.
+    let plat = Platform::paper_testbed();
+    let wl = rw_workload(9, 3);
+    let cfg = Config::partitioned(1, 3, Bytes::mb(1))
+        .with_replication(2)
+        .with_fault_plan(FaultPlan::parse("crash=1@0").unwrap());
+    let rep = simulate(&wl, &cfg, &plat);
+
+    assert_eq!(rep.tasks.len(), 1);
+    assert_eq!(rep.unrecoverable_ops, 0);
+    assert!(rep.fault_failovers > 0);
+    assert_eq!(rep.fault_timeouts, 0);
+    assert_eq!(rep.fault_work_lost, 0, "nothing reached the dead node's queue");
+}
+
+#[test]
+fn replication_one_crash_is_reported_unrecoverable_not_hung() {
+    // At replication 1 the dead node held the only copy of half the
+    // input's chunks: the reader fails, its dependent stalls (its input
+    // never commits), and the simulation still drains to a report
+    // instead of deadlocking.
+    let plat = Platform::paper_testbed();
+    let mut wl = Workload::new("faults-chain");
+    let a = wl.add_file(FileSpec::new("in", Bytes::mb(8)).prestaged());
+    let m = wl.add_file(FileSpec::new("mid", Bytes::mb(4)));
+    let o = wl.add_file(FileSpec::new("out", Bytes::mb(2)));
+    wl.add_task(TaskSpec::new("t1", 0).reads(a).writes(m));
+    wl.add_task(TaskSpec::new("t2", 0).reads(m).writes(o));
+    let cfg = Config::partitioned(1, 2, Bytes::mb(1))
+        .with_replication(1)
+        .with_fault_plan(FaultPlan::parse("crash=0@0").unwrap());
+    let rep = simulate(&wl, &cfg, &plat);
+
+    assert!(rep.unrecoverable(), "single-replica loss must be unrecoverable");
+    assert!(rep.unrecoverable_ops >= 1);
+    assert_eq!(rep.failed_tasks, 1, "only the reader fails outright");
+    assert_eq!(rep.tasks.len(), 0, "the dependent stalls — it neither finishes nor fails");
+}
+
+#[test]
+fn mid_run_crash_times_out_inflight_chunks_and_retries() {
+    // The crash lands while storage 0 is still servicing read chunks:
+    // the in-flight requests are lost, the per-request timeout fires,
+    // and the retry path reroutes to the surviving replica. The run
+    // completes, paying at least one timeout (5 s base) over fault-free.
+    let plat = Platform::paper_testbed();
+    let wl = rw_workload(64, 1);
+    let base = Config::partitioned(1, 2, Bytes::mb(16)).with_replication(2).with_window(4);
+    let clean = simulate(&wl, &base, &plat);
+    let faulted = simulate(
+        &wl,
+        &base.clone().with_fault_plan(FaultPlan::parse("crash=0@0.015").unwrap()),
+        &plat,
+    );
+
+    assert_eq!(faulted.tasks.len(), 1, "replication 2 must recover the op");
+    assert_eq!(faulted.unrecoverable_ops, 0);
+    assert!(faulted.fault_timeouts >= 1, "an in-flight chunk must have timed out");
+    assert!(faulted.fault_retries >= 1);
+    assert!(
+        faulted.turnaround.as_secs_f64() > 5.0,
+        "recovery pays the 5 s request timeout, got {:.3}s",
+        faulted.turnaround.as_secs_f64()
+    );
+    assert!(faulted.turnaround > clean.turnaround);
+}
+
+#[test]
+fn message_loss_window_is_ridden_out_by_timeout_and_retry() {
+    // Every frame from the client (host 1) to storage 0 (host 2) is
+    // dropped for the first second. Requests into the loss window time
+    // out; their retries rotate to the other replica and complete.
+    let plat = Platform::paper_testbed();
+    let wl = rw_workload(4, 4);
+    let cfg = Config::partitioned(1, 2, Bytes::mb(1)).with_replication(2);
+    let (src, dst) = (cfg.client_host(0), cfg.storage_host(0));
+    let plan = FaultPlan::parse(&format!("seed=7;drop={src}-{dst}@0-1p1")).unwrap();
+    let rep = simulate(&wl, &cfg.with_fault_plan(plan), &plat);
+
+    assert_eq!(rep.tasks.len(), 1);
+    assert_eq!(rep.unrecoverable_ops, 0);
+    assert!(rep.fault_msgs_dropped >= 1, "the loss window must have eaten frames");
+    assert!(rep.fault_timeouts >= 1);
+    assert!(rep.fault_retries >= 1);
+}
+
+#[test]
+fn stragglers_slow_the_prediction_monotonically() {
+    // A slow storage node stretches every service it performs; deeper
+    // slowdowns stretch the prediction further. The HDD platform with a
+    // single storage node keeps the disk (not the NIC) the bottleneck,
+    // so the slowdown is on the critical path. No failure counters
+    // move — degraded speed is not a fault outcome.
+    let plat = Platform::paper_testbed_hdd();
+    let wl = rw_workload(8, 8);
+    let cfg = Config::partitioned(1, 1, Bytes::mb(1));
+    let host = cfg.storage_host(0);
+    let run = |slowdown: &str| {
+        let plan = FaultPlan::parse(&format!("slow={host}@0x{slowdown}")).unwrap();
+        simulate(&wl, &cfg.clone().with_fault_plan(plan), &plat)
+    };
+
+    let clean = simulate(&wl, &cfg, &plat);
+    let half = run("0.5");
+    let quarter = run("0.25");
+    assert_eq!(half.tasks.len(), 1);
+    assert_eq!(quarter.tasks.len(), 1);
+    assert!(half.turnaround > clean.turnaround, "a straggler must cost time");
+    assert!(quarter.turnaround >= half.turnaround, "deeper slowdown, no faster");
+    for r in [&half, &quarter] {
+        assert_eq!(r.fault_timeouts, 0);
+        assert_eq!(r.fault_retries, 0);
+        assert_eq!(r.unrecoverable_ops, 0);
+        assert_eq!(r.failed_tasks, 0);
+    }
+}
+
+#[test]
+fn fault_plans_get_distinct_fingerprints_and_failure_accounting() {
+    // Three queries on the same workload — fault-free, survivable crash,
+    // unrecoverable crash — must memoize as three distinct points, carry
+    // their failure accounting in the answers, and serve byte-identical
+    // results regardless of the serving thread count.
+    let wl = rw_workload(8, 8);
+    let base = Config::partitioned(1, 2, Bytes::mb(1)).with_replication(2);
+    let crash = FaultPlan::parse("crash=0@0").unwrap();
+    let queries: Vec<Query> = vec![
+        Query { workload: wl.clone(), config: base.clone(), family: 3 },
+        Query {
+            workload: wl.clone(),
+            config: base.clone().with_fault_plan(crash.clone()),
+            family: 3,
+        },
+        Query {
+            workload: wl.clone(),
+            config: base.with_replication(1).with_fault_plan(crash),
+            family: 3,
+        },
+    ];
+
+    let one = Service::new(Predictor::new(Platform::paper_testbed())).serve_batch(&queries, 1, 0.0);
+    let four = Service::new(Predictor::new(Platform::paper_testbed())).serve_batch(&queries, 4, 0.0);
+
+    assert!(one.iter().all(Answer::is_exact));
+    for (a, b) in one.iter().zip(&four) {
+        assert_eq!(a.fp(), b.fp(), "fingerprints must not depend on thread count");
+        assert_eq!(a.turnaround_s().to_bits(), b.turnaround_s().to_bits());
+        assert_eq!(a.failures(), b.failures());
+    }
+    assert_ne!(one[0].fp(), one[1].fp(), "a fault plan is a distinct memo point");
+    assert_ne!(one[1].fp(), one[2].fp());
+    assert_ne!(one[0].fp(), one[2].fp());
+
+    assert_eq!(one[0].failures(), Some(FailureStats::default()), "fault-free answer is clean");
+    let survivable = one[1].failures().unwrap();
+    assert!(survivable.failovers > 0);
+    assert!(!survivable.unrecoverable);
+    let lost = one[2].failures().unwrap();
+    assert!(lost.unrecoverable, "replication-1 loss must surface in the answer");
+}

@@ -726,6 +726,11 @@ fn prop_fingerprint_distinct_across_single_knob_changes() {
             };
             variants.push(c);
         }
+        {
+            let mut c = cfg.clone();
+            c.faults = wfpred::model::FaultPlan::parse("crash=0@1").unwrap();
+            variants.push(c);
+        }
         for (k, v) in variants.iter().enumerate() {
             assert_ne!(
                 base,
@@ -739,5 +744,139 @@ fn prop_fingerprint_distinct_across_single_knob_changes() {
         let mut wl2 = wl.clone();
         wl2.files[0].size += Bytes(1);
         assert_ne!(base, fingerprint(&wl2, &cfg, &plat, &fid));
+    });
+}
+
+#[test]
+fn prop_empty_fault_plan_matches_baseline() {
+    // The fault-injection machinery must be *free* when unused: a config
+    // whose plan schedules nothing (any seed) takes the pre-fault code
+    // path exactly. Run both configs in lockstep and demand bit-identical
+    // reports — turnaround, event counts, byte/frame accounting, stored
+    // bytes, every utilization integral — plus an identical service
+    // fingerprint, so warm stores written before fault injection existed
+    // keep answering. No tolerances.
+    use wfpred::model::FaultPlan;
+    use wfpred::service::fingerprint;
+    check("empty fault plan is free", 30, |g| {
+        let wl = random_workload(g, 3);
+        if wl.validate().is_err() {
+            return;
+        }
+        let cfg = random_config(g);
+        let mut seeded = cfg.clone();
+        seeded.faults = FaultPlan { seed: g.u64(0, 1 << 60), ..FaultPlan::default() };
+        let plat = Platform::paper_testbed();
+        let a = simulate(&wl, &cfg, &plat);
+        let b = simulate(&wl, &seeded, &plat);
+
+        assert_eq!(a.turnaround, b.turnaround, "empty plan shifted turnaround");
+        assert_eq!(a.events, b.events, "empty plan created or removed events");
+        assert_eq!(a.events_cancelled, b.events_cancelled);
+        assert_eq!(a.net_bytes, b.net_bytes);
+        assert_eq!(a.net_frames, b.net_frames);
+        assert_eq!(a.stored, b.stored);
+        assert_eq!(a.tasks.len(), b.tasks.len());
+        assert_eq!(a.ops.len(), b.ops.len());
+        for (x, y) in a.ops.iter().zip(b.ops.iter()) {
+            assert_eq!((x.start, x.end), (y.start, y.end), "op interval moved");
+        }
+        assert_eq!(a.util.manager_util.to_bits(), b.util.manager_util.to_bits());
+        assert_eq!(a.util.manager_mean_qlen.to_bits(), b.util.manager_mean_qlen.to_bits());
+        for (h, (x, y)) in a.util.storage.iter().zip(b.util.storage.iter()).enumerate() {
+            assert_eq!(x.0.to_bits(), y.0.to_bits(), "storage {h} utilization");
+            assert_eq!(x.1.to_bits(), y.1.to_bits(), "storage {h} qlen");
+        }
+        for (h, (x, y)) in a.util.nic.iter().zip(b.util.nic.iter()).enumerate() {
+            assert_eq!(x.0.to_bits(), y.0.to_bits(), "host {h} out-NIC utilization");
+            assert_eq!(x.1.to_bits(), y.1.to_bits(), "host {h} in-NIC utilization");
+        }
+        for (h, (x, y)) in a.util.nic_qlen.iter().zip(b.util.nic_qlen.iter()).enumerate() {
+            assert_eq!(x.0.to_bits(), y.0.to_bits(), "host {h} out-NIC qlen integral");
+            assert_eq!(x.1.to_bits(), y.1.to_bits(), "host {h} in-NIC qlen integral");
+        }
+        for rep in [&a, &b] {
+            assert_eq!(rep.fault_retries, 0);
+            assert_eq!(rep.fault_failovers, 0);
+            assert_eq!(rep.fault_timeouts, 0);
+            assert_eq!(rep.fault_msgs_dropped, 0);
+            assert_eq!(rep.fault_work_lost, 0);
+            assert_eq!(rep.unrecoverable_ops, 0);
+            assert_eq!(rep.failed_tasks, 0);
+            assert!(!rep.unrecoverable());
+        }
+        let fid = Fidelity::coarse();
+        assert_eq!(
+            fingerprint(&wl, &cfg, &plat, &fid),
+            fingerprint(&wl, &seeded, &plat, &fid),
+            "an empty plan must not move the service fingerprint"
+        );
+    });
+}
+
+#[test]
+fn prop_faulty_runs_are_deterministic_and_account_consistently() {
+    // A non-empty plan is a point of the configuration space like any
+    // other: the same plan must reproduce byte-identical predictions and
+    // failure accounting, and the accounting must be self-consistent
+    // (every task either finishes or is counted failed; stalls from
+    // control-path loss are the only third outcome, and only when links
+    // are lossy).
+    use wfpred::model::{Crash, FaultPlan, Straggler};
+    check("faulty runs deterministic", 20, |g| {
+        let wl = random_workload(g, 3);
+        if wl.validate().is_err() {
+            return;
+        }
+        let cfg = random_config(g);
+        let n_hosts = cfg.n_hosts();
+        let mut plan = FaultPlan { seed: g.u64(0, 1 << 40), ..FaultPlan::default() };
+        for _ in 0..g.usize(0, 2) {
+            plan.crashes.push(Crash {
+                storage: g.usize(0, cfg.n_storage - 1),
+                at: SimTime::from_ms(g.u64(0, 2_000)),
+            });
+        }
+        for _ in 0..g.usize(0, 2) {
+            plan.stragglers.push(Straggler {
+                host: g.usize(0, n_hosts - 1),
+                at: SimTime::from_ms(g.u64(0, 2_000)),
+                slowdown: g.f64(0.1, 1.0),
+            });
+        }
+        if plan.is_empty() {
+            plan.crashes.push(Crash { storage: 0, at: SimTime::from_ms(g.u64(0, 1_000)) });
+        }
+        let faulted = cfg.clone().with_fault_plan(plan);
+        let plat = Platform::paper_testbed();
+        let a = simulate(&wl, &faulted, &plat);
+        let b = simulate(&wl, &faulted, &plat);
+
+        assert_eq!(a.turnaround, b.turnaround, "same plan, same turnaround");
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.net_bytes, b.net_bytes);
+        assert_eq!(a.fault_retries, b.fault_retries);
+        assert_eq!(a.fault_failovers, b.fault_failovers);
+        assert_eq!(a.fault_timeouts, b.fault_timeouts);
+        assert_eq!(a.fault_work_lost, b.fault_work_lost);
+        assert_eq!(a.unrecoverable_ops, b.unrecoverable_ops);
+        assert_eq!(a.failed_tasks, b.failed_tasks);
+
+        // Crash/straggler plans have no lossy links, so nothing is ever
+        // dropped. A task finishes, fails, or — when its producer failed
+        // and its inputs never commit — stalls unreleased; never more
+        // than the workload holds.
+        assert_eq!(a.fault_msgs_dropped, 0);
+        let resolved = a.tasks.len() + a.failed_tasks as usize;
+        assert!(resolved <= wl.tasks.len(), "{resolved} resolved of {} tasks", wl.tasks.len());
+        if a.unrecoverable_ops == 0 {
+            assert_eq!(a.failed_tasks, 0);
+            assert_eq!(a.tasks.len(), wl.tasks.len(), "no failures ⇒ everything finishes");
+        } else {
+            assert!(a.failed_tasks > 0, "unrecoverable ops must fail their tasks");
+        }
+        if a.failed_tasks > 0 {
+            assert!(a.unrecoverable_ops > 0, "tasks only fail via unrecoverable ops");
+        }
     });
 }
