@@ -1,0 +1,368 @@
+//! The gate DSL: per-cell pass/fail predicates over [`CellRecord`]s.
+//!
+//! Three gate families, distinguished by what they compare against (see
+//! `rust/METHODOLOGY.md` § Gate semantics):
+//!
+//! * **Absolute** ([`Gate::Min`], [`Gate::Max`], [`Gate::Range`],
+//!   [`Gate::GeKey`]) — a bound on this run's record alone. Always
+//!   enforced, including on bootstrap runs.
+//! * **Drift** ([`Gate::Drift`]) — fresh value within a relative
+//!   tolerance of the *same cell's* armed baseline record. Skipped (with
+//!   a note) while the cell has no committed baseline — that is the
+//!   bootstrap state, localized to the cell.
+//! * **Same-run cross-cell** ([`Gate::EqCell`], [`Gate::WithinCell`],
+//!   [`Gate::GeCell`], [`Gate::LeCell`], [`Gate::RatioRange`]) — this
+//!   cell's fresh value against a *peer cell's* fresh value from the same
+//!   run. Host-independent (both sides saw the same machine and load), so
+//!   these hold even on bootstrap runs. If the peer was not selected into
+//!   the run, the gate is skipped with a note — only a full `ci` suite
+//!   run enforces every cross-cell gate.
+//!
+//! A key missing from the *fresh* record always fails the gate; a key
+//! missing from a baseline record only skips the drift comparison (the
+//! baseline predates the key).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use super::record::CellRecord;
+use crate::util::bench::within_rel;
+
+/// Default drift tolerance: ±10 %, matching the retired global gate.
+pub const DRIFT_TOL: f64 = 0.10;
+
+/// One pass/fail predicate attached to a cell definition.
+#[derive(Clone, Debug)]
+pub enum Gate {
+    /// `rec[key] >= min`.
+    Min { key: &'static str, min: f64 },
+    /// `rec[key] <= max`.
+    Max { key: &'static str, max: f64 },
+    /// `lo <= rec[key] <= hi` (both inclusive).
+    Range { key: &'static str, lo: f64, hi: f64 },
+    /// `rec[key] >= rec[floor_key]` — both keys from this cell's record
+    /// (e.g. dedup factor must reach the concurrent client count).
+    GeKey { key: &'static str, floor_key: &'static str },
+    /// `|rec[key] - base[key]| <= tol * |base[key]|` vs the armed
+    /// baseline (exact match required when the baseline value is zero).
+    Drift { key: &'static str, tol: f64 },
+    /// `rec[key] == peer[other_key]` exactly (deterministic invariants,
+    /// e.g. a zero-crash fault cell reproducing the fault-free event count).
+    EqCell { key: &'static str, other: &'static str, other_key: &'static str },
+    /// `|rec[key] - peer[other_key]| <= tol * |peer[other_key]|`.
+    WithinCell { key: &'static str, other: &'static str, other_key: &'static str, tol: f64 },
+    /// `rec[key] >= peer[other_key] * (1 - slack)` — monotone curves.
+    GeCell { key: &'static str, other: &'static str, other_key: &'static str, slack: f64 },
+    /// `rec[key] <= peer[other_key] * factor` — bounded blow-up.
+    LeCell { key: &'static str, other: &'static str, other_key: &'static str, factor: f64 },
+    /// `lo < rec[key] / peer[other_key] <= hi` (lo exclusive, hi
+    /// inclusive — a ratio of positive quantities is never 0).
+    RatioRange { key: &'static str, other: &'static str, other_key: &'static str, lo: f64, hi: f64 },
+}
+
+impl Gate {
+    /// Drift gate at the default ±10 % tolerance.
+    pub fn drift(key: &'static str) -> Gate {
+        Gate::Drift { key, tol: DRIFT_TOL }
+    }
+
+    /// Same-key equality against a peer cell.
+    pub fn eq_cell(key: &'static str, other: &'static str) -> Gate {
+        Gate::EqCell { key, other, other_key: key }
+    }
+
+    /// Same-key relative band against a peer cell.
+    pub fn within_cell(key: &'static str, other: &'static str, tol: f64) -> Gate {
+        Gate::WithinCell { key, other, other_key: key, tol }
+    }
+
+    /// Same-key monotone floor against a peer cell.
+    pub fn ge_cell(key: &'static str, other: &'static str, slack: f64) -> Gate {
+        Gate::GeCell { key, other, other_key: key, slack }
+    }
+
+    /// Same-key factor ceiling against a peer cell.
+    pub fn le_cell(key: &'static str, other: &'static str, factor: f64) -> Gate {
+        Gate::LeCell { key, other, other_key: key, factor }
+    }
+
+    /// Same-key ratio band against a peer cell.
+    pub fn ratio_range(key: &'static str, other: &'static str, lo: f64, hi: f64) -> Gate {
+        Gate::RatioRange { key, other, other_key: key, lo, hi }
+    }
+
+    /// The peer cell this gate reads from, if it is a cross-cell gate.
+    pub fn peer(&self) -> Option<&'static str> {
+        match self {
+            Gate::EqCell { other, .. }
+            | Gate::WithinCell { other, .. }
+            | Gate::GeCell { other, .. }
+            | Gate::LeCell { other, .. }
+            | Gate::RatioRange { other, .. } => Some(other),
+            _ => None,
+        }
+    }
+
+    /// Whether this gate needs an armed baseline to be enforceable.
+    pub fn needs_baseline(&self) -> bool {
+        matches!(self, Gate::Drift { .. })
+    }
+}
+
+impl fmt::Display for Gate {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Gate::Min { key, min } => write!(f, "{key} >= {min}"),
+            Gate::Max { key, max } => write!(f, "{key} <= {max}"),
+            Gate::Range { key, lo, hi } => write!(f, "{key} in [{lo}, {hi}]"),
+            Gate::GeKey { key, floor_key } => write!(f, "{key} >= {floor_key}"),
+            Gate::Drift { key, tol } => write!(f, "{key} within {:.0}% of baseline", tol * 100.0),
+            Gate::EqCell { key, other, other_key } => write!(f, "{key} == {other}.{other_key}"),
+            Gate::WithinCell { key, other, other_key, tol } => {
+                write!(f, "{key} within {:.1}% of {other}.{other_key}", tol * 100.0)
+            }
+            Gate::GeCell { key, other, other_key, slack } => {
+                write!(f, "{key} >= {other}.{other_key} (slack {:.1}%)", slack * 100.0)
+            }
+            Gate::LeCell { key, other, other_key, factor } => {
+                write!(f, "{key} <= {factor} x {other}.{other_key}")
+            }
+            Gate::RatioRange { key, other, other_key, lo, hi } => {
+                write!(f, "{key} / {other}.{other_key} in ({lo}, {hi}]")
+            }
+        }
+    }
+}
+
+/// One gate's outcome for one cell in one run.
+#[derive(Clone, Debug, PartialEq)]
+pub enum GateOutcome {
+    Pass,
+    /// Gate violated (or a required key missing from the fresh record) —
+    /// the detail names the gate and both values.
+    Fail(String),
+    /// Gate not enforceable this run (bootstrap, baseline predates the
+    /// key, or the peer cell was not selected) — never an error.
+    Skip(String),
+}
+
+/// Evaluate every gate of one cell. `baseline` is the cell's armed record
+/// (None while bootstrapping); `peers` maps cell name → fresh record for
+/// everything executed this run (including `fresh` itself).
+pub fn evaluate(
+    gates: &[Gate],
+    fresh: &CellRecord,
+    baseline: Option<&CellRecord>,
+    peers: &BTreeMap<String, CellRecord>,
+) -> Vec<(Gate, GateOutcome)> {
+    gates.iter().map(|g| (g.clone(), eval_one(g, fresh, baseline, peers))).collect()
+}
+
+fn eval_one(
+    gate: &Gate,
+    fresh: &CellRecord,
+    baseline: Option<&CellRecord>,
+    peers: &BTreeMap<String, CellRecord>,
+) -> GateOutcome {
+    let need = |key: &'static str| -> Result<f64, GateOutcome> {
+        fresh
+            .get(key)
+            .ok_or_else(|| GateOutcome::Fail(format!("fresh record lacks key {key:?}")))
+    };
+    let peer_val = |other: &'static str, key: &'static str| -> Result<f64, GateOutcome> {
+        let Some(peer) = peers.get(other) else {
+            return Err(GateOutcome::Skip(format!("peer cell {other} not in this run")));
+        };
+        peer.get(key)
+            .ok_or_else(|| GateOutcome::Fail(format!("peer {other} lacks key {key:?}")))
+    };
+    let res = match *gate {
+        Gate::Min { key, min } => need(key).map(|v| (v >= min, format!("{v} < {min}"))),
+        Gate::Max { key, max } => need(key).map(|v| (v <= max, format!("{v} > {max}"))),
+        Gate::Range { key, lo, hi } => {
+            need(key).map(|v| (v >= lo && v <= hi, format!("{v} outside [{lo}, {hi}]")))
+        }
+        Gate::GeKey { key, floor_key } => match (need(key), need(floor_key)) {
+            (Ok(v), Ok(floor)) => Ok((v >= floor, format!("{v} < {floor_key} = {floor}"))),
+            (Err(e), _) | (_, Err(e)) => Err(e),
+        },
+        Gate::Drift { key, tol } => {
+            let fresh_v = match need(key) {
+                Ok(v) => v,
+                Err(e) => return e,
+            };
+            let Some(base) = baseline else {
+                return GateOutcome::Skip("no armed baseline (bootstrap)".into());
+            };
+            let Some(base_v) = base.get(key) else {
+                return GateOutcome::Skip(format!("baseline predates key {key:?}"));
+            };
+            Ok((
+                within_rel(fresh_v, base_v, tol),
+                format!("{fresh_v} vs baseline {base_v} (tol {:.0}%)", tol * 100.0),
+            ))
+        }
+        Gate::EqCell { key, other, other_key } => match (need(key), peer_val(other, other_key)) {
+            (Ok(v), Ok(p)) => Ok((v == p, format!("{v} != {other}.{other_key} = {p}"))),
+            (Err(e), _) | (_, Err(e)) => Err(e),
+        },
+        Gate::WithinCell { key, other, other_key, tol } => {
+            match (need(key), peer_val(other, other_key)) {
+                (Ok(v), Ok(p)) => Ok((
+                    within_rel(v, p, tol),
+                    format!("{v} vs {other}.{other_key} = {p} (tol {:.1}%)", tol * 100.0),
+                )),
+                (Err(e), _) | (_, Err(e)) => Err(e),
+            }
+        }
+        Gate::GeCell { key, other, other_key, slack } => {
+            match (need(key), peer_val(other, other_key)) {
+                (Ok(v), Ok(p)) => {
+                    Ok((v >= p * (1.0 - slack), format!("{v} < {other}.{other_key} = {p}")))
+                }
+                (Err(e), _) | (_, Err(e)) => Err(e),
+            }
+        }
+        Gate::LeCell { key, other, other_key, factor } => {
+            match (need(key), peer_val(other, other_key)) {
+                (Ok(v), Ok(p)) => {
+                    Ok((v <= p * factor, format!("{v} > {factor} x {other}.{other_key} = {p}")))
+                }
+                (Err(e), _) | (_, Err(e)) => Err(e),
+            }
+        }
+        Gate::RatioRange { key, other, other_key, lo, hi } => {
+            match (need(key), peer_val(other, other_key)) {
+                (Ok(v), Ok(p)) => {
+                    let ratio = if p == 0.0 { f64::INFINITY } else { v / p };
+                    Ok((ratio > lo && ratio <= hi, format!("ratio {ratio:.4} outside ({lo}, {hi}]")))
+                }
+                (Err(e), _) | (_, Err(e)) => Err(e),
+            }
+        }
+    };
+    match res {
+        Ok((true, _)) => GateOutcome::Pass,
+        Ok((false, why)) => GateOutcome::Fail(format!("{gate}: {why}")),
+        Err(outcome) => outcome,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::record::keys;
+
+    fn rec(cell: &str, kv: &[(&'static str, f64)]) -> CellRecord {
+        let mut r = CellRecord::new(cell, "coarse", "test");
+        for (k, v) in kv {
+            r.set(k, *v);
+        }
+        r
+    }
+
+    fn peers(recs: &[CellRecord]) -> BTreeMap<String, CellRecord> {
+        recs.iter().map(|r| (r.cell.clone(), r.clone())).collect()
+    }
+
+    fn one(g: Gate, fresh: &CellRecord, base: Option<&CellRecord>) -> GateOutcome {
+        let p = peers(std::slice::from_ref(fresh));
+        evaluate(&[g], fresh, base, &p).pop().unwrap().1
+    }
+
+    #[test]
+    fn absolute_gates_hit_their_edges() {
+        let r = rec("a.x", &[(keys::STALE_EVENT_RATIO, 0.5), (keys::EVENTS, 10.0)]);
+        assert_eq!(one(Gate::Range { key: keys::STALE_EVENT_RATIO, lo: 0.0, hi: 0.5 }, &r, None), GateOutcome::Pass);
+        assert!(matches!(
+            one(Gate::Range { key: keys::STALE_EVENT_RATIO, lo: 0.0, hi: 0.49 }, &r, None),
+            GateOutcome::Fail(_)
+        ));
+        assert_eq!(one(Gate::Min { key: keys::EVENTS, min: 10.0 }, &r, None), GateOutcome::Pass);
+        assert!(matches!(one(Gate::Min { key: keys::EVENTS, min: 10.1 }, &r, None), GateOutcome::Fail(_)));
+        assert!(matches!(
+            one(Gate::Min { key: keys::UNRECOVERABLE_OPS, min: 1.0 }, &r, None),
+            GateOutcome::Fail(_)
+        ), "missing fresh key is a failure, not a skip");
+    }
+
+    #[test]
+    fn ge_key_compares_two_keys_of_one_record() {
+        let r = rec("svc.dedup", &[(keys::DEDUP_FACTOR_X, 32.0), (keys::DEDUP_CLIENTS, 8.0)]);
+        let g = Gate::GeKey { key: keys::DEDUP_FACTOR_X, floor_key: keys::DEDUP_CLIENTS };
+        assert_eq!(one(g, &r, None), GateOutcome::Pass);
+        let low = rec("svc.dedup", &[(keys::DEDUP_FACTOR_X, 7.9), (keys::DEDUP_CLIENTS, 8.0)]);
+        let g = Gate::GeKey { key: keys::DEDUP_FACTOR_X, floor_key: keys::DEDUP_CLIENTS };
+        assert!(matches!(one(g, &low, None), GateOutcome::Fail(_)));
+    }
+
+    #[test]
+    fn drift_skips_on_bootstrap_and_fails_past_tolerance() {
+        let fresh = rec("a.x", &[(keys::EVENTS, 110.0)]);
+        let g = Gate::drift(keys::EVENTS);
+        assert!(matches!(one(g.clone(), &fresh, None), GateOutcome::Skip(_)));
+        let base = rec("a.x", &[(keys::EVENTS, 100.0)]);
+        assert_eq!(one(g.clone(), &fresh, Some(&base)), GateOutcome::Pass, "exactly +10% passes");
+        let hot = rec("a.x", &[(keys::EVENTS, 111.0)]);
+        assert!(matches!(one(g.clone(), &hot, Some(&base)), GateOutcome::Fail(_)));
+        let stale_base = rec("a.x", &[(keys::SIM_TURNAROUND_S, 1.0)]);
+        assert!(
+            matches!(one(g, &fresh, Some(&stale_base)), GateOutcome::Skip(_)),
+            "baseline lacking the key skips, not fails"
+        );
+    }
+
+    #[test]
+    fn drift_vs_zero_baseline_requires_exact_match() {
+        let base = rec("f.c0", &[(keys::UNRECOVERABLE_OPS, 0.0)]);
+        let exact = rec("f.c0", &[(keys::UNRECOVERABLE_OPS, 0.0)]);
+        let off = rec("f.c0", &[(keys::UNRECOVERABLE_OPS, 1.0)]);
+        let g = Gate::drift(keys::UNRECOVERABLE_OPS);
+        assert_eq!(one(g.clone(), &exact, Some(&base)), GateOutcome::Pass);
+        assert!(matches!(one(g, &off, Some(&base)), GateOutcome::Fail(_)));
+    }
+
+    #[test]
+    fn cross_cell_gates_use_peer_records_from_the_same_run() {
+        let a = rec("curve.c0", &[(keys::SIM_TURNAROUND_S, 10.0), (keys::EVENTS, 500.0)]);
+        let b = rec("curve.c1", &[(keys::SIM_TURNAROUND_S, 9.96), (keys::EVENTS, 500.0)]);
+        let p = peers(&[a.clone(), b.clone()]);
+        // Monotone with 0.5% slack: 9.96 >= 10.0 * 0.995 just passes.
+        let g = Gate::ge_cell(keys::SIM_TURNAROUND_S, "curve.c0", 0.005);
+        assert_eq!(evaluate(&[g], &b, None, &p).pop().unwrap().1, GateOutcome::Pass);
+        let g = Gate::ge_cell(keys::SIM_TURNAROUND_S, "curve.c0", 0.001);
+        assert!(matches!(evaluate(&[g], &b, None, &p).pop().unwrap().1, GateOutcome::Fail(_)));
+        // Exact event-count equality across cells.
+        let g = Gate::eq_cell(keys::EVENTS, "curve.c0");
+        assert_eq!(evaluate(&[g], &b, None, &p).pop().unwrap().1, GateOutcome::Pass);
+        // Factor ceiling.
+        let g = Gate::le_cell(keys::SIM_TURNAROUND_S, "curve.c0", 3.0);
+        assert_eq!(evaluate(&[g], &b, None, &p).pop().unwrap().1, GateOutcome::Pass);
+    }
+
+    #[test]
+    fn ratio_range_is_exclusive_low_inclusive_high() {
+        let base = rec("i.s64", &[(keys::NS_PER_EVENT_MIN, 100.0)]);
+        let exact = rec("i.fs", &[(keys::NS_PER_EVENT_MIN, 110.0)]);
+        let p = peers(&[base.clone(), exact.clone()]);
+        let g = Gate::ratio_range(keys::NS_PER_EVENT_MIN, "i.s64", 0.0, 1.1);
+        assert_eq!(evaluate(&[g.clone()], &exact, None, &p).pop().unwrap().1, GateOutcome::Pass);
+        let over = rec("i.fs", &[(keys::NS_PER_EVENT_MIN, 110.2)]);
+        let p = peers(&[base.clone(), over.clone()]);
+        assert!(matches!(evaluate(&[g.clone()], &over, None, &p).pop().unwrap().1, GateOutcome::Fail(_)));
+        let zero = rec("i.fs", &[(keys::NS_PER_EVENT_MIN, 0.0)]);
+        let p = peers(&[base, zero.clone()]);
+        assert!(
+            matches!(evaluate(&[g], &zero, None, &p).pop().unwrap().1, GateOutcome::Fail(_)),
+            "ratio 0 is outside the exclusive low edge"
+        );
+    }
+
+    #[test]
+    fn missing_peer_is_a_skip_not_a_failure() {
+        let b = rec("curve.c1", &[(keys::EVENTS, 500.0)]);
+        let p = peers(std::slice::from_ref(&b));
+        let g = Gate::eq_cell(keys::EVENTS, "curve.c0");
+        assert!(matches!(evaluate(&[g], &b, None, &p).pop().unwrap().1, GateOutcome::Skip(_)));
+    }
+}

@@ -1,0 +1,41 @@
+//! The prediction barometer: a declarative benchmark registry, runner,
+//! record store, and gate DSL behind the `wfpred bench` subcommand.
+//!
+//! This module replaced the three ad-hoc bench binaries (`microbench`,
+//! `figures`, `ablations`) with one registry-driven harness. The moving
+//! parts, bottom-up:
+//!
+//! * [`record`] — [`record::CellRecord`]: one flat-JSON measurement
+//!   record per cell per run, with every metric key a documented
+//!   constant in [`record::keys`].
+//! * [`gate`] — [`gate::Gate`]: absolute, drift (vs the cell's own armed
+//!   baseline), and same-run cross-cell predicates.
+//! * [`registry`] — [`registry::CellDef`]: the full cell matrix as data;
+//!   `(workload × platform × fidelity/engine × fault-plan)` per cell,
+//!   selected by name glob.
+//! * [`runner`] — [`runner::run_cells`]: executes a selection, persists
+//!   records + per-cell history under `results/records/`, and evaluates
+//!   gates so a regression is reported *by cell name*.
+//!
+//! The narrative guide — cell taxonomy, record schema, gate semantics,
+//! how to add a cell, how baselines arm — is `rust/METHODOLOGY.md`,
+//! compiled into rustdoc below (so its links and examples are checked
+//! under `RUSTDOCFLAGS="-D warnings"`; see [`methodology`]).
+
+pub mod gate;
+pub mod record;
+pub mod registry;
+pub mod runner;
+
+pub use gate::{Gate, GateOutcome};
+pub use record::CellRecord;
+pub use registry::{glob_match, registry as cells, CellDef, CellKind};
+pub use runner::{list_cells, run_cells, RunOptions, RunReport};
+
+/// The benchmark methodology guide (`rust/METHODOLOGY.md`), verbatim.
+///
+/// Including it here makes the rustdoc build the guide's CI gate: broken
+/// intra-doc links fail under `-D warnings`, and its `rust` code blocks
+/// compile as doctests.
+#[doc = include_str!("../../METHODOLOGY.md")]
+pub mod methodology {}

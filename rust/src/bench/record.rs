@@ -1,0 +1,310 @@
+//! Flat, machine-readable benchmark records — one per cell per run.
+//!
+//! A [`CellRecord`] is the unit the whole barometer trades in: the runner
+//! emits one per executed cell, `results/records/<cell>.json` holds the
+//! armed baseline copy, `results/records/history/<cell>.jsonl` accumulates
+//! one line per recorded run, and the gate DSL ([`crate::bench::gate`])
+//! evaluates against them. Records are deliberately *flat* key → number
+//! maps (plus three reserved string keys) so they round-trip through the
+//! in-tree JSON substrate: [`crate::util::jsonw::Json::render_compact`]
+//! on the way out, [`crate::util::jsonw::parse_flat`] on the way in.
+//!
+//! Every metric key that may appear in a record is a named constant in
+//! [`keys`], and `rust/METHODOLOGY.md` documents each one; a unit test
+//! below fails the build if a key constant is missing from the guide, so
+//! the documented schema cannot drift from the code (the pre-records
+//! incast table in `results/README.md` did exactly that).
+
+use crate::util::jsonw::{parse_flat, Json, Scalar};
+
+/// Reserved string key: the cell name (`suite.cell` taxonomy).
+pub const FIELD_CELL: &str = "cell";
+/// Reserved string key: engine provenance ([`crate::service::EngineId`]
+/// label, or a derived label like `detailed-no_jitter` for ablation cells).
+pub const FIELD_ENGINE: &str = "engine";
+/// Reserved string key: run identity (`$GITHUB_SHA` in CI, `local` else).
+pub const FIELD_RUN: &str = "run";
+
+/// Every metric key a record may carry. Grouped by the cell kind that
+/// emits it; see `rust/METHODOLOGY.md` § Record schema for semantics.
+pub mod keys {
+    /// Simulation events processed (mean over reps for stochastic engines).
+    pub const EVENTS: &str = "events";
+    /// Completion announcements cancelled before firing (mean over reps).
+    pub const EVENTS_CANCELLED: &str = "events_cancelled";
+    /// `events_cancelled / (events + events_cancelled)`.
+    pub const STALE_EVENT_RATIO: &str = "stale_event_ratio";
+    /// Simulated turnaround in seconds (mean over reps).
+    pub const SIM_TURNAROUND_S: &str = "sim_turnaround_s";
+    /// Mean wallclock per rep (host-dependent; never drift-gated).
+    pub const WALL_SECS: &str = "wall_secs";
+    /// Min wallclock over reps — the least-interference estimator used by
+    /// same-run ratio gates.
+    pub const WALL_SECS_MIN: &str = "wall_secs_min";
+    /// `wall_secs * 1e9 / events`.
+    pub const NS_PER_EVENT: &str = "ns_per_event";
+    /// `wall_secs_min * 1e9 / events`.
+    pub const NS_PER_EVENT_MIN: &str = "ns_per_event_min";
+    /// `events / wall_secs`.
+    pub const EVENTS_PER_SEC: &str = "events_per_sec";
+    /// Timed repetitions this record aggregates.
+    pub const REPS: &str = "reps";
+    /// Chunk attempts re-issued after a degraded-mode timeout.
+    pub const FAULT_RETRIES: &str = "fault_retries";
+    /// Chunk attempts routed away from the fault-free target.
+    pub const FAULT_FAILOVERS: &str = "fault_failovers";
+    /// Per-chunk timeouts that fired.
+    pub const FAULT_TIMEOUTS: &str = "fault_timeouts";
+    /// Operations declared unrecoverable (every replica lost / budget spent).
+    pub const UNRECOVERABLE_OPS: &str = "unrecoverable_ops";
+    /// Tasks abandoned because an operation was unrecoverable.
+    pub const FAILED_TASKS: &str = "failed_tasks";
+    /// Config echo on fault cells: replication factor.
+    pub const REPLICATION: &str = "replication";
+    /// Config echo on fault cells: storage nodes crashed at t = 0.
+    pub const CRASHES: &str = "crashes";
+    /// Derived onto `incast.4096_fullstripe` after a run that also executed
+    /// `incast.4096`: `ns_per_event_min(fullstripe) / ns_per_event_min(stripe64)`.
+    pub const NS_PER_EVENT_VS_STRIPE64_X: &str = "ns_per_event_vs_stripe64_x";
+    /// Campaign trials executed (fixed-trial testbeds: min = max).
+    pub const TRIALS: &str = "trials";
+    /// Testbed campaign mean turnaround in seconds.
+    pub const ACTUAL_MEAN_S: &str = "actual_mean_s";
+    /// Testbed campaign turnaround standard deviation in seconds.
+    pub const ACTUAL_STD_S: &str = "actual_std_s";
+    /// Coarse-predictor turnaround for the same `(workload, config)`.
+    pub const PREDICTED_S: &str = "predicted_s";
+    /// `|predicted_s - actual_mean_s| / actual_mean_s`.
+    pub const REL_ERR: &str = "rel_err";
+    /// Wallclock the predictor itself spent (§3.3 speedup accounting).
+    pub const PREDICTOR_WALL_SECS: &str = "predictor_wall_secs";
+    /// `actual_mean_s / predictor_wall_secs` — time speedup vs measuring.
+    pub const TIME_RATIO: &str = "time_ratio";
+    /// `time_ratio * total_hosts` — resource-normalized speedup (§3.3).
+    pub const RESOURCE_RATIO: &str = "resource_ratio";
+    /// `actual_mean_s * total_hosts` in node-seconds.
+    pub const ACTUAL_COST_NODE_S: &str = "actual_cost_node_s";
+    /// Predicted allocation cost in node-seconds.
+    pub const PRED_COST_NODE_S: &str = "pred_cost_node_s";
+    /// Service probe: mean cold-evaluate latency (fresh cache), seconds.
+    pub const COLD_SECS: &str = "cold_secs";
+    /// Service probe: mean warm-hit latency, seconds.
+    pub const WARM_SECS: &str = "warm_secs";
+    /// `cold_secs / warm_secs`.
+    pub const WARM_SPEEDUP_X: &str = "warm_speedup_x";
+    /// Dedup probe: concurrent duplicate clients.
+    pub const DEDUP_CLIENTS: &str = "dedup_clients";
+    /// Dedup probe: total duplicate queries issued (clients × per-client).
+    pub const DEDUP_QUERIES: &str = "dedup_queries";
+    /// Dedup probe: simulations actually run (service cache misses).
+    pub const DEDUP_SIMS: &str = "dedup_sims";
+    /// `dedup_queries / dedup_sims`.
+    pub const DEDUP_FACTOR_X: &str = "dedup_factor_x";
+    /// Surrogate probe: off-grid queries issued.
+    pub const SURROGATE_QUERIES: &str = "surrogate_queries";
+    /// Surrogate probe: off-grid queries the interpolator answered.
+    pub const SURROGATE_ANSWERS: &str = "surrogate_answers";
+    /// Largest self-reported interpolation error estimate.
+    pub const SURROGATE_MAX_EST_ERR: &str = "surrogate_max_est_err";
+    /// Largest *observed* relative error vs an exact simulation of the
+    /// same off-grid point (deterministic, so drift-gateable).
+    pub const SURROGATE_MAX_REL_ERR: &str = "surrogate_max_rel_err";
+    /// Mean interpolation latency per answered query, seconds.
+    pub const SURROGATE_SECS_PER_QUERY: &str = "surrogate_secs_per_query";
+
+    /// Every key above, for schema-coverage tests and doc generation.
+    pub const ALL: &[&str] = &[
+        EVENTS,
+        EVENTS_CANCELLED,
+        STALE_EVENT_RATIO,
+        SIM_TURNAROUND_S,
+        WALL_SECS,
+        WALL_SECS_MIN,
+        NS_PER_EVENT,
+        NS_PER_EVENT_MIN,
+        EVENTS_PER_SEC,
+        REPS,
+        FAULT_RETRIES,
+        FAULT_FAILOVERS,
+        FAULT_TIMEOUTS,
+        UNRECOVERABLE_OPS,
+        FAILED_TASKS,
+        REPLICATION,
+        CRASHES,
+        NS_PER_EVENT_VS_STRIPE64_X,
+        TRIALS,
+        ACTUAL_MEAN_S,
+        ACTUAL_STD_S,
+        PREDICTED_S,
+        REL_ERR,
+        PREDICTOR_WALL_SECS,
+        TIME_RATIO,
+        RESOURCE_RATIO,
+        ACTUAL_COST_NODE_S,
+        PRED_COST_NODE_S,
+        COLD_SECS,
+        WARM_SECS,
+        WARM_SPEEDUP_X,
+        DEDUP_CLIENTS,
+        DEDUP_QUERIES,
+        DEDUP_SIMS,
+        DEDUP_FACTOR_X,
+        SURROGATE_QUERIES,
+        SURROGATE_ANSWERS,
+        SURROGATE_MAX_EST_ERR,
+        SURROGATE_MAX_REL_ERR,
+        SURROGATE_SECS_PER_QUERY,
+    ];
+}
+
+/// One cell's measurements from one run: three string fields plus an
+/// ordered flat map of numeric metrics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellRecord {
+    /// Cell name, `suite.cell` (e.g. `incast.4096_fullstripe`).
+    pub cell: String,
+    /// Engine provenance label (see [`FIELD_ENGINE`]).
+    pub engine: String,
+    /// Run identity (see [`FIELD_RUN`]).
+    pub run_id: String,
+    metrics: Vec<(String, f64)>,
+}
+
+impl CellRecord {
+    pub fn new(cell: &str, engine: &str, run_id: &str) -> CellRecord {
+        CellRecord {
+            cell: cell.to_string(),
+            engine: engine.to_string(),
+            run_id: run_id.to_string(),
+            metrics: Vec::new(),
+        }
+    }
+
+    /// Set a metric, replacing any previous value under the same key.
+    pub fn set(&mut self, key: &str, value: f64) -> &mut CellRecord {
+        if let Some(slot) = self.metrics.iter_mut().find(|(k, _)| k == key) {
+            slot.1 = value;
+        } else {
+            self.metrics.push((key.to_string(), value));
+        }
+        self
+    }
+
+    /// Look a metric up by key.
+    pub fn get(&self, key: &str) -> Option<f64> {
+        self.metrics.iter().find(|(k, _)| k == key).map(|(_, v)| *v)
+    }
+
+    /// The metrics in insertion order.
+    pub fn metrics(&self) -> &[(String, f64)] {
+        &self.metrics
+    }
+
+    /// Render as one compact flat-JSON line (the record/history format).
+    pub fn render_compact(&self) -> String {
+        let mut j = Json::obj()
+            .set(FIELD_CELL, self.cell.as_str())
+            .set(FIELD_ENGINE, self.engine.as_str())
+            .set(FIELD_RUN, self.run_id.as_str());
+        for (k, v) in &self.metrics {
+            j = j.set(k, *v);
+        }
+        j.render_compact()
+    }
+
+    /// Parse a record previously rendered by [`CellRecord::render_compact`].
+    ///
+    /// Strict on shape: nested objects are rejected by `parse_flat`
+    /// itself, and any non-numeric value outside the three reserved
+    /// string fields is an error — a baseline file that does not parse is
+    /// treated by the runner as missing (bootstrap), never half-read.
+    pub fn parse(text: &str) -> Result<CellRecord, String> {
+        let mut rec = CellRecord::new("", "", "");
+        for (key, val) in parse_flat(text)? {
+            match (key.as_str(), val) {
+                (FIELD_CELL, Scalar::Str(s)) => rec.cell = s,
+                (FIELD_ENGINE, Scalar::Str(s)) => rec.engine = s,
+                (FIELD_RUN, Scalar::Str(s)) => rec.run_id = s,
+                (_, Scalar::Num(v)) => {
+                    rec.metrics.push((key, v));
+                }
+                (k, other) => {
+                    return Err(format!("record key {k:?}: expected a number, got {other:?}"))
+                }
+            }
+        }
+        if rec.cell.is_empty() {
+            return Err("record has no \"cell\" field".into());
+        }
+        Ok(rec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CellRecord {
+        let mut r = CellRecord::new("incast.4096", "coarse", "deadbeef");
+        r.set(keys::EVENTS, 1.25e6)
+            .set(keys::SIM_TURNAROUND_S, 42.5)
+            .set(keys::STALE_EVENT_RATIO, 0.0625)
+            .set(keys::REPS, 3.0);
+        r
+    }
+
+    #[test]
+    fn round_trips_through_compact_json() {
+        let r = sample();
+        let back = CellRecord::parse(&r.render_compact()).expect("parse own rendering");
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn set_replaces_in_place() {
+        let mut r = sample();
+        let n = r.metrics().len();
+        r.set(keys::EVENTS, 2.0e6);
+        assert_eq!(r.metrics().len(), n, "no duplicate key");
+        assert_eq!(r.get(keys::EVENTS), Some(2.0e6));
+        assert_eq!(r.metrics()[0].0, keys::EVENTS, "order preserved");
+    }
+
+    #[test]
+    fn parse_rejects_non_numeric_metrics_and_missing_cell() {
+        let bad = "{\"cell\": \"x\", \"events\": \"lots\"}";
+        assert!(CellRecord::parse(bad).is_err());
+        let no_cell = "{\"events\": 1.0}";
+        assert!(CellRecord::parse(no_cell).is_err());
+    }
+
+    #[test]
+    fn key_constants_are_unique() {
+        for (i, a) in keys::ALL.iter().enumerate() {
+            for b in &keys::ALL[i + 1..] {
+                assert_ne!(a, b, "duplicate key constant");
+            }
+        }
+    }
+
+    /// The documented schema is generated from these constants: every key
+    /// that can appear in a record must be documented (as `` `key` ``) in
+    /// METHODOLOGY.md, or this test fails the build.
+    #[test]
+    fn methodology_documents_every_key() {
+        let guide = include_str!("../../METHODOLOGY.md");
+        for key in keys::ALL {
+            let marker = format!("`{key}`");
+            assert!(
+                guide.contains(&marker),
+                "METHODOLOGY.md does not document record key {key:?}"
+            );
+        }
+        for field in [FIELD_CELL, FIELD_ENGINE, FIELD_RUN] {
+            assert!(
+                guide.contains(&format!("`{field}`")),
+                "METHODOLOGY.md does not document reserved field {field:?}"
+            );
+        }
+    }
+}

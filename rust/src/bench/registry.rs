@@ -1,0 +1,933 @@
+//! The benchmark registry: every cell the barometer can run, as data.
+//!
+//! A **cell** is one declarative definition of a measurement —
+//! `(workload × platform × fidelity/engine × fault-plan)` — named
+//! `suite.cell` and carrying its own [`Gate`] list. Adding a row to the
+//! matrix is adding one [`CellDef`] to [`registry`]; the runner, the
+//! record schema, `--list`, CI gating, and METHODOLOGY's taxonomy all
+//! follow from the definition. Cells with `ci: true` form the default
+//! suite that `wfpred bench --check` gates on every push; the rest
+//! (`figures.*`, `ablations.*`) are paper-figure and sensitivity sweeps
+//! selected explicitly by glob.
+//!
+//! Specs are *descriptions*, not built objects: the runner materializes
+//! [`Workload`]/[`Config`]/[`Platform`]/[`Fidelity`] values from them at
+//! execution time, so the registry itself stays cheap to enumerate and
+//! trivially testable.
+
+use super::gate::Gate;
+use super::record::keys;
+use crate::model::{Config, FaultPlan, Fidelity, Placement, Platform};
+use crate::service::EngineId;
+use crate::util::units::{Bytes, SimTime};
+use crate::workload::blast::{blast, BlastParams};
+use crate::workload::montage::montage;
+use crate::workload::patterns::{broadcast, pipeline, reduce, PatternScale};
+use crate::workload::{FileSpec, TaskSpec, Workload};
+
+/// Which identified platform a cell runs against.
+#[derive(Clone, Debug)]
+pub enum PlatformSpec {
+    /// The paper's 20-node testbed characterization.
+    Paper,
+    /// The HDD-backed variant (Fig 10 scenarios).
+    Hdd,
+    /// Paper testbed with an overridden wire frame size (frames ablation).
+    FrameKb(u64),
+    /// Paper testbed with one host's compute scaled (heterogeneous rows).
+    HostSpeed { host: usize, mult: f64 },
+}
+
+impl PlatformSpec {
+    pub fn build(&self) -> Platform {
+        match *self {
+            PlatformSpec::Paper => Platform::paper_testbed(),
+            PlatformSpec::Hdd => Platform::paper_testbed_hdd(),
+            PlatformSpec::FrameKb(kb) => {
+                let mut p = Platform::paper_testbed();
+                p.frame_size = Bytes::kb(kb);
+                p
+            }
+            PlatformSpec::HostSpeed { host, mult } => {
+                Platform::paper_testbed().with_host_speed(host, mult)
+            }
+        }
+    }
+}
+
+/// Which workflow a cell replays.
+#[derive(Clone, Debug)]
+pub enum WorkloadSpec {
+    Pipeline { n: usize, scale: PatternScale, wass: bool },
+    Reduce { n: usize, scale: PatternScale, wass: bool },
+    Broadcast { n: usize, scale: PatternScale, replicas: u32 },
+    Blast { n_app: usize, queries: u32 },
+    Montage { tiles: usize },
+    /// One task streaming one prestaged file — the pure-read window probe.
+    SingleReader { mb: u64 },
+}
+
+impl WorkloadSpec {
+    pub fn build(&self) -> Workload {
+        match *self {
+            WorkloadSpec::Pipeline { n, scale, wass } => pipeline(n, scale, wass),
+            WorkloadSpec::Reduce { n, scale, wass } => reduce(n, scale, wass),
+            WorkloadSpec::Broadcast { n, scale, replicas } => broadcast(n, scale, replicas),
+            WorkloadSpec::Blast { n_app, queries } => {
+                blast(n_app, &BlastParams { queries, ..BlastParams::default() })
+            }
+            WorkloadSpec::Montage { tiles } => montage(tiles),
+            WorkloadSpec::SingleReader { mb } => {
+                let mut w = Workload::new("single-reader");
+                let f = w.add_file(FileSpec::new("big", Bytes::mb(mb)).prestaged());
+                w.add_task(TaskSpec::new("reader", 0).reads(f));
+                w
+            }
+        }
+    }
+}
+
+/// The storage-configuration decision a cell evaluates.
+#[derive(Clone, Debug)]
+pub struct ConfigSpec {
+    pub base: ConfigBase,
+    pub stripe: Option<usize>,
+    pub replication: Option<u32>,
+    pub chunk_kb: Option<u64>,
+    pub window: Option<usize>,
+    pub round_robin: bool,
+    /// Storage-node crashes spread at t = 0 (`FaultPlan::spread_crashes`);
+    /// 0 means a fault-free plan.
+    pub crashes: usize,
+}
+
+#[derive(Clone, Debug)]
+pub enum ConfigBase {
+    Dss(usize),
+    Wass(usize),
+    Partitioned { n_app: usize, n_storage: usize },
+}
+
+impl ConfigSpec {
+    pub fn dss(n: usize) -> ConfigSpec {
+        ConfigSpec::of(ConfigBase::Dss(n))
+    }
+    pub fn wass(n: usize) -> ConfigSpec {
+        ConfigSpec::of(ConfigBase::Wass(n))
+    }
+    pub fn partitioned(n_app: usize, n_storage: usize) -> ConfigSpec {
+        ConfigSpec::of(ConfigBase::Partitioned { n_app, n_storage })
+    }
+    fn of(base: ConfigBase) -> ConfigSpec {
+        ConfigSpec {
+            base,
+            stripe: None,
+            replication: None,
+            chunk_kb: None,
+            window: None,
+            round_robin: false,
+            crashes: 0,
+        }
+    }
+    pub fn stripe(mut self, w: usize) -> ConfigSpec {
+        self.stripe = Some(w);
+        self
+    }
+    pub fn replication(mut self, r: u32) -> ConfigSpec {
+        self.replication = Some(r);
+        self
+    }
+    pub fn chunk_kb(mut self, kb: u64) -> ConfigSpec {
+        self.chunk_kb = Some(kb);
+        self
+    }
+    pub fn window(mut self, w: usize) -> ConfigSpec {
+        self.window = Some(w);
+        self
+    }
+    pub fn round_robin(mut self) -> ConfigSpec {
+        self.round_robin = true;
+        self
+    }
+    pub fn crashes(mut self, n: usize) -> ConfigSpec {
+        self.crashes = n;
+        self
+    }
+
+    pub fn build(&self) -> Config {
+        let mut cfg = match self.base {
+            ConfigBase::Dss(n) => Config::dss(n),
+            ConfigBase::Wass(n) => Config::wass(n),
+            ConfigBase::Partitioned { n_app, n_storage } => {
+                Config::partitioned(n_app, n_storage, Bytes::kb(self.chunk_kb.unwrap_or(1024)))
+            }
+        };
+        if let (Some(kb), false) = (self.chunk_kb, matches!(self.base, ConfigBase::Partitioned { .. }))
+        {
+            cfg = cfg.with_chunk(Bytes::kb(kb));
+        }
+        if let Some(w) = self.stripe {
+            cfg = cfg.with_stripe(w);
+        }
+        if let Some(r) = self.replication {
+            cfg = cfg.with_replication(r);
+        }
+        if let Some(w) = self.window {
+            cfg = cfg.with_window(w);
+        }
+        if self.round_robin {
+            cfg.placement = Placement::RoundRobin;
+        }
+        if self.crashes > 0 {
+            let plan = FaultPlan::spread_crashes(cfg.n_storage, self.crashes, SimTime::ZERO);
+            cfg = cfg.with_fault_plan(plan);
+        }
+        cfg
+    }
+}
+
+/// A detailed-tier knob knocked out by an ablation cell.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AblationKnob {
+    ControlRounds,
+    Connections,
+    Mux,
+    Stagger,
+    Jitter,
+    Hetero,
+    ManagerContention,
+}
+
+impl AblationKnob {
+    pub fn label(self) -> &'static str {
+        match self {
+            AblationKnob::ControlRounds => "no_control_rounds",
+            AblationKnob::Connections => "no_connections",
+            AblationKnob::Mux => "no_mux",
+            AblationKnob::Stagger => "no_stagger",
+            AblationKnob::Jitter => "no_jitter",
+            AblationKnob::Hetero => "no_hetero",
+            AblationKnob::ManagerContention => "no_contention",
+        }
+    }
+
+    pub fn apply(self, seed: u64) -> Fidelity {
+        let mut f = Fidelity::detailed(seed);
+        match self {
+            AblationKnob::ControlRounds => f.control_rounds = false,
+            AblationKnob::Connections => f.connections = false,
+            AblationKnob::Mux => f.mux_eta = 0.0,
+            AblationKnob::Stagger => f.stagger_mean = SimTime::ZERO,
+            AblationKnob::Jitter => f.jitter_sigma = 0.0,
+            AblationKnob::Hetero => f.hetero_sigma = 0.0,
+            AblationKnob::ManagerContention => f.manager_contention = 0.0,
+        }
+        f
+    }
+}
+
+/// Which evaluation engine a `Sim` cell drives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineSpec {
+    Coarse,
+    CoarsePerFrame,
+    Detailed,
+    DetailedAggregated,
+    /// The detailed tier with one noise source knocked out.
+    DetailedMinus(AblationKnob),
+}
+
+impl EngineSpec {
+    pub fn fidelity(&self, seed: u64) -> Fidelity {
+        match *self {
+            EngineSpec::Coarse => Fidelity::coarse(),
+            EngineSpec::CoarsePerFrame => Fidelity::coarse_per_frame(),
+            EngineSpec::Detailed => Fidelity::detailed(seed),
+            EngineSpec::DetailedAggregated => Fidelity::detailed_aggregated(seed),
+            EngineSpec::DetailedMinus(k) => k.apply(seed),
+        }
+    }
+
+    /// Engine-provenance label stamped on the cell's records.
+    pub fn label(&self) -> String {
+        match *self {
+            EngineSpec::Coarse => EngineId::Coarse.as_str().to_string(),
+            EngineSpec::CoarsePerFrame => EngineId::CoarsePerFrame.as_str().to_string(),
+            EngineSpec::Detailed => EngineId::Detailed.as_str().to_string(),
+            EngineSpec::DetailedAggregated => EngineId::DetailedAggregated.as_str().to_string(),
+            EngineSpec::DetailedMinus(k) => {
+                format!("{}-{}", EngineId::Detailed.as_str(), k.label())
+            }
+        }
+    }
+}
+
+/// The service-layer probes (ported from the retired `microbench`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServiceProbe {
+    /// Cold evaluate vs warm sharded-LRU hit on the acceptance workload.
+    QueryPath,
+    /// Concurrent duplicate clients through single-flight dedup.
+    Dedup,
+    /// Seed a surrogate grid with exact samples, interpolate off-grid
+    /// points, and compare each answer against an exact simulation.
+    Surrogate,
+}
+
+/// How a cell is executed.
+#[derive(Clone, Debug)]
+pub enum CellKind {
+    /// Direct `simulate_fid` runs. For stochastic engines `reps` doubles
+    /// as the seed count and deterministic metrics are means over seeds.
+    Sim { workload: WorkloadSpec, config: ConfigSpec, engine: EngineSpec, reps: u32 },
+    /// A fixed-trial testbed campaign (min = max = `trials`, so the
+    /// Jain stopping rule never adds trials and the campaign mean is
+    /// deterministic) plus one coarse prediction of the same point.
+    Campaign { workload: WorkloadSpec, config: ConfigSpec, aggregated: bool, trials: u64 },
+    /// A service-layer probe.
+    Service(ServiceProbe),
+}
+
+/// One benchmark cell: a name, how to run it, and what must hold.
+#[derive(Clone, Debug)]
+pub struct CellDef {
+    /// `suite.cell` — globbable, and the record/history file stem.
+    pub name: String,
+    /// Member of the default CI suite (`wfpred bench --check` with no
+    /// globs)?
+    pub ci: bool,
+    /// One-line description for `--list` and regression reports.
+    pub note: String,
+    pub platform: PlatformSpec,
+    pub kind: CellKind,
+    pub gates: Vec<Gate>,
+}
+
+impl CellDef {
+    /// The engine-provenance label this cell stamps on its records.
+    pub fn engine_label(&self) -> String {
+        match &self.kind {
+            CellKind::Sim { engine, .. } => engine.label(),
+            CellKind::Campaign { aggregated, .. } => {
+                if *aggregated {
+                    format!("testbed_{}", EngineId::DetailedAggregated.as_str())
+                } else {
+                    format!("testbed_{}", EngineId::Detailed.as_str())
+                }
+            }
+            CellKind::Service(ServiceProbe::Surrogate) => {
+                EngineId::Surrogate.as_str().to_string()
+            }
+            CellKind::Service(_) => EngineId::Coarse.as_str().to_string(),
+        }
+    }
+}
+
+/// Glob match over cell names: `*` spans any run (including `.`), `?`
+/// matches one byte. `scale.*`, `faults.r?_c16`, `*fullstripe*` all work.
+pub fn glob_match(pat: &str, name: &str) -> bool {
+    fn rec(p: &[u8], n: &[u8]) -> bool {
+        match (p.first(), n.first()) {
+            (None, None) => true,
+            (Some(b'*'), _) => rec(&p[1..], n) || (!n.is_empty() && rec(p, &n[1..])),
+            (Some(b'?'), Some(_)) => rec(&p[1..], &n[1..]),
+            (Some(a), Some(b)) if a == b => rec(&p[1..], &n[1..]),
+            _ => false,
+        }
+    }
+    rec(pat.as_bytes(), name.as_bytes())
+}
+
+/// Resolve selection globs against the registry. An empty glob list
+/// selects the CI suite; a glob matching nothing is an error (typo
+/// protection — a check that silently gated zero cells would be green
+/// forever).
+pub fn select<'a>(cells: &'a [CellDef], globs: &[String]) -> Result<Vec<&'a CellDef>, String> {
+    if globs.is_empty() {
+        return Ok(cells.iter().filter(|c| c.ci).collect());
+    }
+    let mut picked: Vec<&CellDef> = Vec::new();
+    for g in globs {
+        let mut any = false;
+        for c in cells.iter().filter(|c| glob_match(g, &c.name)) {
+            any = true;
+            if !picked.iter().any(|p| p.name == c.name) {
+                picked.push(c);
+            }
+        }
+        if !any {
+            return Err(format!("glob {g:?} matches no cell (see `wfpred bench --list`)"));
+        }
+    }
+    Ok(picked)
+}
+
+/// The acceptance workload shared by the frame-path, engine-comparison
+/// and service suites: BLAST, 40 queries over 10 app nodes, 5 storage
+/// nodes, 1 MB chunks.
+const ACCEPT_N_APP: usize = 10;
+const ACCEPT_QUERIES: u32 = 40;
+
+fn accept_workload() -> WorkloadSpec {
+    WorkloadSpec::Blast { n_app: ACCEPT_N_APP, queries: ACCEPT_QUERIES }
+}
+
+fn accept_config() -> ConfigSpec {
+    ConfigSpec::partitioned(ACCEPT_N_APP, 5).chunk_kb(1024)
+}
+
+/// A CI `Sim` cell on the paper platform; use [`extra`] to demote a
+/// record-only sweep cell out of the CI suite.
+fn sim(
+    name: &str,
+    note: &str,
+    workload: WorkloadSpec,
+    config: ConfigSpec,
+    engine: EngineSpec,
+    reps: u32,
+    gates: Vec<Gate>,
+) -> CellDef {
+    CellDef {
+        name: name.to_string(),
+        ci: true,
+        note: note.to_string(),
+        platform: PlatformSpec::Paper,
+        kind: CellKind::Sim { workload, config, engine, reps },
+        gates,
+    }
+}
+
+/// A record-only `Campaign` cell; callers that gate it set `ci`/`gates`
+/// on the returned definition.
+fn campaign(
+    name: &str,
+    note: &str,
+    platform: PlatformSpec,
+    workload: WorkloadSpec,
+    config: ConfigSpec,
+    aggregated: bool,
+    trials: u64,
+) -> CellDef {
+    CellDef {
+        name: name.to_string(),
+        ci: false,
+        note: note.to_string(),
+        platform,
+        kind: CellKind::Campaign { workload, config, aggregated, trials },
+        gates: Vec::new(),
+    }
+}
+
+/// Demote a cell out of the CI suite (sweeps that only need records).
+fn extra(mut cell: CellDef) -> CellDef {
+    cell.ci = false;
+    cell
+}
+
+/// Standard drift pair for deterministic simulation cells.
+fn drift2() -> Vec<Gate> {
+    vec![Gate::drift(keys::EVENTS), Gate::drift(keys::SIM_TURNAROUND_S)]
+}
+
+/// Build the full registry. Deterministic and cheap — safe to call from
+/// tests, `--list`, and every runner invocation.
+pub fn registry() -> Vec<CellDef> {
+    let mut cells: Vec<CellDef> = Vec::new();
+
+    // ── frame_path: the PR-1/2 bulk-aggregation barometer ────────────────
+    cells.push(sim(
+        "frame_path.per_frame",
+        "acceptance workload, per-frame reference engine",
+        accept_workload(),
+        accept_config(),
+        EngineSpec::CoarsePerFrame,
+        5,
+        drift2(),
+    ));
+    {
+        let mut gates = drift2();
+        // Bulk aggregation must keep >= 5x fewer events than the per-frame
+        // reference (the old event_reduction_x >= 5, inverted) while
+        // reproducing its turnaround to 1% in the same run.
+        gates.push(Gate::le_cell(keys::EVENTS, "frame_path.per_frame", 0.2));
+        gates.push(Gate::within_cell(keys::SIM_TURNAROUND_S, "frame_path.per_frame", 0.01));
+        cells.push(sim(
+            "frame_path.bulk",
+            "acceptance workload, bulk frame-aggregated engine",
+            accept_workload(),
+            accept_config(),
+            EngineSpec::Coarse,
+            5,
+            gates,
+        ));
+    }
+
+    // ── scale: the pipeline scaling curve ────────────────────────────────
+    for hosts in [64usize, 256, 1024] {
+        cells.push(sim(
+            &format!("scale.hosts_{hosts}"),
+            "pipeline scaling curve point (DSS)",
+            WorkloadSpec::Pipeline { n: hosts - 1, scale: PatternScale::Small, wass: false },
+            ConfigSpec::dss(hosts - 1),
+            EngineSpec::Coarse,
+            3,
+            drift2(),
+        ));
+    }
+
+    // ── incast: reduce fan-in and stale-event accounting ─────────────────
+    for hosts in [256usize, 1024, 4096] {
+        let mut gates = drift2();
+        gates.push(Gate::Range { key: keys::STALE_EVENT_RATIO, lo: 0.0, hi: 0.5 });
+        cells.push(sim(
+            &format!("incast.{hosts}"),
+            "reduce incast point, stripe capped at 64",
+            WorkloadSpec::Reduce { n: hosts - 1, scale: PatternScale::Small, wass: false },
+            ConfigSpec::dss(hosts - 1).stripe(64.min(hosts - 1)),
+            EngineSpec::Coarse,
+            3,
+            gates,
+        ));
+    }
+    {
+        let mut gates = drift2();
+        gates.push(Gate::Range { key: keys::STALE_EVENT_RATIO, lo: 0.0, hi: 0.5 });
+        // Full-stripe placement may cost at most 10% more per event than
+        // the stripe-64 row from the same run (min-over-reps wallclock on
+        // both sides, so the bound is host-independent).
+        gates.push(Gate::ratio_range(keys::NS_PER_EVENT_MIN, "incast.4096", 0.0, 1.1));
+        cells.push(sim(
+            "incast.4096_fullstripe",
+            "worst-case interned placement: every write allocates the full ring",
+            WorkloadSpec::Reduce { n: 4095, scale: PatternScale::Small, wass: false },
+            ConfigSpec::dss(4095),
+            EngineSpec::Coarse,
+            3,
+            gates,
+        ));
+    }
+
+    // ── faults: degraded-mode invariants over (replication × crashes) ────
+    // Static name table so cross-cell gates can hold `&'static str` peers.
+    const FAULT_CELLS: [[&str; 4]; 3] = [
+        ["faults.r1_c0", "faults.r1_c1", "faults.r1_c4", "faults.r1_c16"],
+        ["faults.r2_c0", "faults.r2_c1", "faults.r2_c4", "faults.r2_c16"],
+        ["faults.r3_c0", "faults.r3_c1", "faults.r3_c4", "faults.r3_c16"],
+    ];
+    const CRASH_LEVELS: [usize; 4] = [0, 1, 4, 16];
+    for repl in [1u32, 2, 3] {
+        for (ci_idx, &crashes) in CRASH_LEVELS.iter().enumerate() {
+            let row = &FAULT_CELLS[repl as usize - 1];
+            let mut gates = drift2();
+            if repl == 1 && crashes == 0 {
+                // Fault-free plan must not perturb the engine at all.
+                gates.push(Gate::eq_cell(keys::EVENTS, "incast.1024"));
+            }
+            if repl == 1 && crashes > 0 {
+                gates.push(Gate::Min { key: keys::UNRECOVERABLE_OPS, min: 1.0 });
+            }
+            if repl >= 2 {
+                gates.push(Gate::Max { key: keys::UNRECOVERABLE_OPS, max: 0.0 });
+                if ci_idx > 0 {
+                    // Turnaround is monotone non-decreasing in crash count
+                    // (0.5% slack for degraded-mode rounding).
+                    gates.push(Gate::ge_cell(keys::SIM_TURNAROUND_S, row[ci_idx - 1], 0.005));
+                }
+                if crashes == 16 {
+                    gates.push(Gate::le_cell(keys::SIM_TURNAROUND_S, row[0], 3.0));
+                }
+            }
+            cells.push(sim(
+                row[ci_idx],
+                "1024-host reduce incast under spread crashes at t=0",
+                WorkloadSpec::Reduce { n: 1023, scale: PatternScale::Small, wass: false },
+                ConfigSpec::dss(1023).stripe(64).replication(repl).crashes(crashes),
+                EngineSpec::Coarse,
+                1,
+                gates,
+            ));
+        }
+    }
+
+    // ── service: the prediction-serving probes ───────────────────────────
+    cells.push(CellDef {
+        name: "service.query_path".into(),
+        ci: true,
+        note: "cold simulate vs warm sharded-LRU hit".into(),
+        platform: PlatformSpec::Paper,
+        kind: CellKind::Service(ServiceProbe::QueryPath),
+        gates: vec![Gate::Min { key: keys::WARM_SPEEDUP_X, min: 10.0 }],
+    });
+    cells.push(CellDef {
+        name: "service.dedup".into(),
+        ci: true,
+        note: "8 concurrent duplicate clients through single-flight".into(),
+        platform: PlatformSpec::Paper,
+        kind: CellKind::Service(ServiceProbe::Dedup),
+        gates: vec![Gate::GeKey { key: keys::DEDUP_FACTOR_X, floor_key: keys::DEDUP_CLIENTS }],
+    });
+    cells.push(CellDef {
+        name: "service.surrogate".into(),
+        ci: true,
+        note: "grid interpolation vs exact simulation on off-grid points".into(),
+        platform: PlatformSpec::Paper,
+        kind: CellKind::Service(ServiceProbe::Surrogate),
+        gates: vec![
+            Gate::Min { key: keys::SURROGATE_ANSWERS, min: 1.0 },
+            // Every answer must carry a self-estimate (key presence is the
+            // invariant; the estimate itself may be small).
+            Gate::Min { key: keys::SURROGATE_MAX_EST_ERR, min: 0.0 },
+            // Observed error vs exact is deterministic: bound and drift it.
+            Gate::Max { key: keys::SURROGATE_MAX_REL_ERR, max: 0.5 },
+            Gate::drift(keys::SURROGATE_MAX_REL_ERR),
+        ],
+    });
+
+    // ── engine: the same acceptance point on every engine ────────────────
+    {
+        let mut c = campaign(
+            "engine.accept.detailed",
+            "acceptance point on the per-frame stochastic testbed tier",
+            PlatformSpec::Paper,
+            accept_workload(),
+            accept_config(),
+            false,
+            4,
+        );
+        c.ci = true;
+        c.gates = vec![Gate::drift(keys::ACTUAL_MEAN_S)];
+        cells.push(c);
+        let mut c = campaign(
+            "engine.accept.detailed_aggregated",
+            "same point, frame-aggregated stochastic tier",
+            PlatformSpec::Paper,
+            accept_workload(),
+            accept_config(),
+            true,
+            4,
+        );
+        c.ci = true;
+        c.gates = vec![
+            Gate::drift(keys::ACTUAL_MEAN_S),
+            // Aggregation must not move the stochastic mean materially.
+            Gate::within_cell(keys::ACTUAL_MEAN_S, "engine.accept.detailed", 0.15),
+        ];
+        cells.push(c);
+        let mut gates = drift2();
+        // The coarse predictor must land inside the paper's accuracy
+        // envelope of the detailed tier's campaign mean, same run.
+        gates.push(Gate::RatioRange {
+            key: keys::SIM_TURNAROUND_S,
+            other: "engine.accept.detailed",
+            other_key: keys::ACTUAL_MEAN_S,
+            lo: 0.6,
+            hi: 1.4,
+        });
+        cells.push(sim(
+            "engine.accept.coarse",
+            "same point on the coarse bulk predictor",
+            accept_workload(),
+            accept_config(),
+            EngineSpec::Coarse,
+            3,
+            gates,
+        ));
+    }
+
+    // ── figures: the paper-figure sweeps (records only, no CI gates) ─────
+    for stripe in [1usize, 2, 4, 5, 8, 12, 16, 19] {
+        cells.push(campaign(
+            &format!("figures.fig1.stripe_{stripe}"),
+            "Fig 1: Montage turnaround vs stripe width",
+            PlatformSpec::Paper,
+            WorkloadSpec::Montage { tiles: 19 },
+            ConfigSpec::dss(19).stripe(stripe),
+            true,
+            6,
+        ));
+    }
+    for (tag, wass) in [("dss", false), ("wass", true)] {
+        cells.push(campaign(
+            &format!("figures.fig4.{tag}"),
+            "Fig 4: pipeline benchmark, predicted vs actual",
+            PlatformSpec::Paper,
+            WorkloadSpec::Pipeline { n: 19, scale: PatternScale::Medium, wass },
+            if wass { ConfigSpec::wass(19) } else { ConfigSpec::dss(19) },
+            false,
+            6,
+        ));
+    }
+    for (tag, wass) in [("dss", false), ("wass", true)] {
+        cells.push(campaign(
+            &format!("figures.fig5.med_{tag}"),
+            "Fig 5: reduce benchmark, medium workload",
+            PlatformSpec::Paper,
+            WorkloadSpec::Reduce { n: 19, scale: PatternScale::Medium, wass },
+            if wass { ConfigSpec::wass(19) } else { ConfigSpec::dss(19) },
+            true,
+            6,
+        ));
+        cells.push(campaign(
+            &format!("figures.fig5.lg_{tag}"),
+            "Fig 5: reduce benchmark, large workload on a heterogeneous platform",
+            PlatformSpec::HostSpeed { host: 1, mult: 1.5 },
+            WorkloadSpec::Reduce { n: 19, scale: PatternScale::Large, wass },
+            if wass { ConfigSpec::wass(19) } else { ConfigSpec::dss(19) },
+            true,
+            6,
+        ));
+    }
+    for replicas in [1u32, 2, 4] {
+        cells.push(campaign(
+            &format!("figures.fig6.r{replicas}"),
+            "Fig 6: broadcast benchmark vs replication (WASS, round-robin)",
+            PlatformSpec::Paper,
+            WorkloadSpec::Broadcast { n: 19, scale: PatternScale::Medium, replicas },
+            ConfigSpec::wass(19).replication(replicas).round_robin(),
+            true,
+            6,
+        ));
+    }
+    for chunk_kb in [256u64, 1024, 4096] {
+        for n_app in [1usize, 2, 4, 6, 8, 10, 12, 14, 16, 18] {
+            cells.push(campaign(
+                &format!("figures.fig8.c{chunk_kb}.a{n_app}"),
+                "Fig 8: BLAST partitioning sweep (19 workers + manager)",
+                PlatformSpec::Paper,
+                WorkloadSpec::Blast { n_app, queries: 200 },
+                ConfigSpec::partitioned(n_app, 19 - n_app).chunk_kb(chunk_kb),
+                true,
+                4,
+            ));
+        }
+    }
+    for total in [11usize, 17, 20] {
+        for n_app in (2..=18usize).step_by(2).filter(|a| a + 1 < total) {
+            for chunk_kb in [256u64, 1024] {
+                cells.push(campaign(
+                    &format!("figures.fig9.n{total}.a{n_app}.c{chunk_kb}"),
+                    "Fig 9: BLAST provisioning (total allocation sweep, cost rows)",
+                    PlatformSpec::Paper,
+                    WorkloadSpec::Blast { n_app, queries: 200 },
+                    ConfigSpec::partitioned(n_app, total - 1 - n_app).chunk_kb(chunk_kb),
+                    true,
+                    4,
+                ));
+            }
+        }
+    }
+    for (tag, scale, wass) in
+        [("med_dss", PatternScale::Medium, false), ("med_wass", PatternScale::Medium, true),
+         ("lg_dss", PatternScale::Large, false), ("lg_wass", PatternScale::Large, true)]
+    {
+        cells.push(campaign(
+            &format!("figures.fig10.{tag}"),
+            "Fig 10: reduce benchmark on the HDD-backed platform",
+            PlatformSpec::Hdd,
+            WorkloadSpec::Reduce { n: 19, scale, wass },
+            if wass { ConfigSpec::wass(19) } else { ConfigSpec::dss(19) },
+            true,
+            6,
+        ));
+    }
+    // §3.3 speedup scenarios: time_ratio / resource_ratio come for free on
+    // every campaign record; these three are the paper's quoted points.
+    cells.push(campaign(
+        "figures.speedup.pipeline_med",
+        "§3.3: prediction speedup on the medium pipeline",
+        PlatformSpec::Paper,
+        WorkloadSpec::Pipeline { n: 19, scale: PatternScale::Medium, wass: false },
+        ConfigSpec::dss(19),
+        true,
+        4,
+    ));
+    cells.push(campaign(
+        "figures.speedup.reduce_lg_wass",
+        "§3.3: prediction speedup on the large WASS reduce",
+        PlatformSpec::Paper,
+        WorkloadSpec::Reduce { n: 19, scale: PatternScale::Large, wass: true },
+        ConfigSpec::wass(19),
+        true,
+        4,
+    ));
+    cells.push(campaign(
+        "figures.speedup.blast_14",
+        "§3.3: prediction speedup on the 14-worker BLAST partition",
+        PlatformSpec::Paper,
+        WorkloadSpec::Blast { n_app: 14, queries: 200 },
+        ConfigSpec::partitioned(14, 5).chunk_kb(1024),
+        true,
+        4,
+    ));
+
+    // ── ablations: sensitivity sweeps (records only) ─────────────────────
+    cells.push(extra(sim(
+        "ablations.fidelity.full",
+        "detailed tier, all noise sources on (6 seeds)",
+        WorkloadSpec::Pipeline { n: 19, scale: PatternScale::Medium, wass: false },
+        ConfigSpec::dss(19),
+        EngineSpec::Detailed,
+        6,
+        Vec::new(),
+    )));
+    for knob in [
+        AblationKnob::ControlRounds,
+        AblationKnob::Connections,
+        AblationKnob::Mux,
+        AblationKnob::Stagger,
+        AblationKnob::Jitter,
+        AblationKnob::Hetero,
+        AblationKnob::ManagerContention,
+    ] {
+        cells.push(extra(sim(
+            &format!("ablations.fidelity.{}", knob.label()),
+            "detailed tier with one noise source knocked out (6 seeds)",
+            WorkloadSpec::Pipeline { n: 19, scale: PatternScale::Medium, wass: false },
+            ConfigSpec::dss(19),
+            EngineSpec::DetailedMinus(knob),
+            6,
+            Vec::new(),
+        )));
+    }
+    for kb in [16u64, 64, 256, 1024] {
+        cells.push(CellDef {
+            name: format!("ablations.frames.f{kb}"),
+            ci: false,
+            note: "coarse predictor sensitivity to the modeled wire frame size".into(),
+            platform: PlatformSpec::FrameKb(kb),
+            kind: CellKind::Sim {
+                workload: WorkloadSpec::Pipeline { n: 19, scale: PatternScale::Medium, wass: false },
+                config: ConfigSpec::dss(19),
+                engine: EngineSpec::Coarse,
+                reps: 1,
+            },
+            gates: Vec::new(),
+        });
+    }
+    for w in [1usize, 2, 4, 8, 16, 32] {
+        cells.push(extra(sim(
+            &format!("ablations.window.blast.w{w}"),
+            "chunk-window sweep on the 14-worker BLAST partition",
+            WorkloadSpec::Blast { n_app: 14, queries: 200 },
+            ConfigSpec::partitioned(14, 5).chunk_kb(256).window(w),
+            EngineSpec::Coarse,
+            1,
+            Vec::new(),
+        )));
+        cells.push(extra(sim(
+            &format!("ablations.window.single.w{w}"),
+            "chunk-window sweep on a single striped reader",
+            WorkloadSpec::SingleReader { mb: 512 },
+            ConfigSpec::partitioned(1, 8).chunk_kb(256).window(w),
+            EngineSpec::Coarse,
+            1,
+            Vec::new(),
+        )));
+    }
+
+    cells
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn glob_matching_covers_star_question_and_literal() {
+        assert!(glob_match("scale.*", "scale.hosts_64"));
+        assert!(glob_match("*", "anything.at_all"));
+        assert!(glob_match("faults.r?_c16", "faults.r2_c16"));
+        assert!(!glob_match("faults.r?_c16", "faults.r2_c1"));
+        assert!(glob_match("*fullstripe*", "incast.4096_fullstripe"));
+        assert!(glob_match("incast.4096", "incast.4096"));
+        assert!(!glob_match("incast.4096", "incast.4096_fullstripe"));
+        assert!(!glob_match("scale.*", "incast.256"));
+        assert!(!glob_match("x?", "x"));
+    }
+
+    #[test]
+    fn cell_names_are_unique_and_well_formed() {
+        let cells = registry();
+        let mut seen = BTreeSet::new();
+        for c in &cells {
+            assert!(seen.insert(c.name.clone()), "duplicate cell name {}", c.name);
+            assert!(
+                c.name.contains('.') && !c.name.contains(['*', '?', '/', ' ']),
+                "cell name {:?} must be suite.cell and glob/path-safe",
+                c.name
+            );
+        }
+    }
+
+    #[test]
+    fn cross_cell_gates_reference_cells_that_run_alongside() {
+        let cells = registry();
+        let by_name: std::collections::BTreeMap<&str, &CellDef> =
+            cells.iter().map(|c| (c.name.as_str(), c)).collect();
+        for c in &cells {
+            for g in &c.gates {
+                if let Some(peer) = g.peer() {
+                    let p = by_name
+                        .get(peer)
+                        .unwrap_or_else(|| panic!("{}: gate peer {peer:?} not registered", c.name));
+                    assert!(
+                        !c.ci || p.ci,
+                        "{}: CI cell gates against non-CI peer {peer}",
+                        c.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ci_suite_reproduces_the_retired_global_gate() {
+        let cells = registry();
+        let ci: Vec<&CellDef> = cells.iter().filter(|c| c.ci).collect();
+        // Every named row of the old BENCH_frame_path gate is a cell.
+        for name in [
+            "frame_path.bulk",
+            "frame_path.per_frame",
+            "scale.hosts_64",
+            "scale.hosts_256",
+            "scale.hosts_1024",
+            "incast.256",
+            "incast.1024",
+            "incast.4096",
+            "incast.4096_fullstripe",
+            "service.query_path",
+            "service.dedup",
+            "service.surrogate",
+        ] {
+            assert!(ci.iter().any(|c| c.name == name), "CI suite lost cell {name}");
+        }
+        for repl in [1, 2, 3] {
+            for crashes in [0, 1, 4, 16] {
+                let name = format!("faults.r{repl}_c{crashes}");
+                assert!(ci.iter().any(|c| c.name == name), "CI suite lost cell {name}");
+            }
+        }
+        // Deterministic sim cells all carry the drift pair.
+        for c in &ci {
+            if let CellKind::Sim { .. } = c.kind {
+                assert!(
+                    c.gates.iter().any(|g| g.needs_baseline()),
+                    "{}: deterministic CI cell without a drift gate",
+                    c.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn selection_defaults_to_ci_and_rejects_dead_globs() {
+        let cells = registry();
+        let ci = select(&cells, &[]).unwrap();
+        assert!(ci.iter().all(|c| c.ci));
+        assert!(ci.len() >= 20, "CI suite unexpectedly small: {}", ci.len());
+        let picked = select(&cells, &["scale.*".into(), "scale.hosts_64".into()]).unwrap();
+        assert_eq!(picked.len(), 3, "overlapping globs must not duplicate cells");
+        assert!(select(&cells, &["scale.hots_64".into()]).is_err(), "typo globs are errors");
+    }
+}

@@ -8,6 +8,7 @@
 //! wfpred batch    [--in FILE --store FILE ...]         serve query JSON in bulk
 //! wfpred serve    [--store FILE ...]                   line-protocol serving loop
 //! wfpred trace    --emit P --out FILE | --show FILE    workload trace tools
+//! wfpred bench    [globs…] [--check --list ...]        benchmark barometer (METHODOLOGY.md)
 //! ```
 
 use crate::ident::{identify, IdentConfig};
@@ -49,6 +50,9 @@ pub fn run(args: &[String]) -> i32 {
         "batch" => cmd_batch(rest),
         "serve" => cmd_serve(rest),
         "trace" => cmd_trace(rest),
+        // Bench has its own exit-code contract (1 = gate failure,
+        // 2 = usage error), so it bypasses the Result mapping below.
+        "bench" => return cmd_bench(rest),
         "--help" | "help" => {
             println!("{USAGE}");
             Ok(())
@@ -75,6 +79,7 @@ commands:
   batch      answer newline-delimited prediction queries through the service layer
   serve      read queries from stdin, stream one answer line per query
   trace      emit or inspect workload trace files
+  bench      run benchmark cells from the registry; --check gates per-cell baselines
 
 run `wfpred <command> --help` for flags.";
 
@@ -430,12 +435,13 @@ fn query_to_service(line: &str, plat: &Platform, extra_argv: &[String]) -> Resul
 
 fn answer_json(a: &Answer) -> Json {
     match a {
-        Answer::Exact { fp, turnaround_s, cost_node_s, source, failures } => Json::obj()
+        Answer::Exact { fp, turnaround_s, cost_node_s, source, engine, failures } => Json::obj()
             .set("fp", fp.to_string())
             .set("kind", "exact")
             .set("turnaround_s", *turnaround_s)
             .set("cost_node_s", *cost_node_s)
             .set("source", source.as_str())
+            .set("engine", engine.as_str())
             .set("fault_retries", failures.retries)
             .set("fault_failovers", failures.failovers)
             .set("fault_timeouts", failures.timeouts)
@@ -445,6 +451,7 @@ fn answer_json(a: &Answer) -> Json {
             .set("kind", "surrogate")
             .set("turnaround_s", *turnaround_s)
             .set("cost_node_s", *cost_node_s)
+            .set("engine", a.engine().as_str())
             .set("est_err", *est_err),
     }
 }
@@ -586,6 +593,60 @@ fn cmd_trace(args: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+/// `wfpred bench [globs…]` — the prediction barometer (see
+/// `rust/METHODOLOGY.md`). Exit 0 = ran (and, with `--check`, every gate
+/// passed), 1 = at least one gate failed, 2 = usage/selection error.
+fn cmd_bench(args: &[String]) -> i32 {
+    let parsed = Flags::new("wfpred bench")
+        .switch("check", "evaluate gates against per-cell baselines; exit 1 on failure")
+        .switch("list", "print the selected cells and their gates instead of running")
+        .switch("no-history", "skip appending to results/records/history/")
+        .flag("out", "results/records", "record/baseline directory")
+        .flag("threads", "1", "cell fan-out workers (1 keeps wallclock keys clean)")
+        .flag("run-id", "", "record tag (default $GITHUB_SHA, else \"local\")")
+        .flag("reps", "0", "override every cell's reps/trials (0 = registry values)")
+        .parse(args);
+    let f = match parsed {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    if f.get_bool("list") {
+        return match crate::bench::list_cells(&f.positionals) {
+            Ok(listing) => {
+                print!("{listing}");
+                0
+            }
+            Err(e) => {
+                eprintln!("wfpred bench: {e}");
+                2
+            }
+        };
+    }
+    let mut opts = crate::bench::RunOptions {
+        globs: f.positionals.clone(),
+        check: f.get_bool("check"),
+        out_dir: std::path::PathBuf::from(f.get("out")),
+        threads: f.get_u64("threads").max(1) as usize,
+        history: !f.get_bool("no-history"),
+        reps_override: f.get_u64("reps") as u32,
+        ..crate::bench::RunOptions::default()
+    };
+    if !f.get("run-id").is_empty() {
+        opts.run_id = f.get("run-id");
+    }
+    if opts.check && opts.threads > 1 {
+        eprintln!(
+            "wfpred bench: --threads {} under --check — wallclock-ratio gates may see \
+             cross-cell interference",
+            opts.threads
+        );
+    }
+    crate::bench::run_cells(&opts).exit_code
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -598,6 +659,14 @@ mod tests {
     fn unknown_command_fails() {
         assert_eq!(run(&argv(&["bogus"])), 2);
         assert_eq!(run(&[]), 2);
+    }
+
+    #[test]
+    fn bench_list_runs_and_dead_globs_exit_2() {
+        assert_eq!(run(&argv(&["bench", "--list"])), 0);
+        assert_eq!(run(&argv(&["bench", "--list", "scale.*"])), 0);
+        assert_eq!(run(&argv(&["bench", "--list", "no.such.cell"])), 2);
+        assert_eq!(run(&argv(&["bench", "--check", "no.such.cell"])), 2);
     }
 
     #[test]

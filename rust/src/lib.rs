@@ -42,6 +42,12 @@
 //! * [`coordinator`] — deterministic scoped-thread execution of
 //!   independent candidate simulations (the search layers fan out
 //!   through it; results stay byte-identical to sequential runs).
+//! * [`bench`] — the prediction barometer behind `wfpred bench`: a
+//!   declarative registry of benchmark cells
+//!   (workload × platform × engine × fault-plan), a runner that emits
+//!   one flat-JSON record per cell with per-cell history, and a gate DSL
+//!   that localizes regressions to a named cell (see
+//!   [`bench::methodology`], the compiled `rust/METHODOLOGY.md`).
 //!
 //! A file-level architecture guide — module map, a "life of a
 //! prediction" walkthrough, and a paper-section → module
@@ -72,6 +78,7 @@ pub mod runtime;
 pub mod coordinator;
 pub mod service;
 pub mod search;
+pub mod bench;
 pub mod cli;
 
 /// Convenience re-exports of the most used public types.

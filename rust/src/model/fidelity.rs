@@ -161,7 +161,7 @@ impl Fidelity {
 
     /// The predictor's fidelity with the bulk network fast path disabled:
     /// identical protocol, one event chain per wire frame. Used by the
-    /// equivalence tests and the frame-path microbench baseline.
+    /// equivalence tests and the `frame_path.per_frame` bench cell.
     pub fn coarse_per_frame() -> Fidelity {
         Fidelity { frame_aggregation: false, ..Fidelity::coarse() }
     }

@@ -7,8 +7,9 @@
 //! On an n-wide stripe that is O(stripe) allocations per write and
 //! O(n·stripe) work per workload: cheap at paper scale (20 nodes), but
 //! the term that dominated full-stripe 4096-host configurations after the
-//! virtual-time event core (PR 4) made the *event* cost flat — the incast
-//! microbench had to cap the stripe at 64 to isolate the event core.
+//! virtual-time event core (PR 4) made the *event* cost flat — the
+//! incast bench cells had to cap the stripe at 64 to isolate the event
+//! core.
 //!
 //! The fix is that placement decisions have almost no entropy. Every
 //! built-in policy — round-robin stripes, local-first, per-file

@@ -77,8 +77,9 @@ pub struct SimReport {
     /// weighted-fair in-NICs cancel the superseded announcement whenever
     /// an arrival changes the fair shares). Stale work the engine skipped
     /// for a slab-generation compare instead of a delivered event; the
-    /// microbench reports `events_cancelled / (events + events_cancelled)`
-    /// as the stale-event ratio.
+    /// `incast.*` bench cells report
+    /// `events_cancelled / (events + events_cancelled)` as the
+    /// stale-event ratio.
     pub events_cancelled: u64,
     /// Connection SYN retries (detailed fidelity only; 0 for the
     /// predictor — one of the paper's named sources of real-system noise).

@@ -80,10 +80,64 @@ impl Source {
     }
 }
 
-/// A served answer. Exact answers are attributed to their source and
-/// carry the run's degraded-mode failure accounting; surrogate answers
-/// always carry their error estimate (and no failure stats — they are
-/// interpolations, not runs).
+/// Which evaluation engine produced a number. Carried on every served
+/// [`Answer::Exact`], persisted with [`StoredAnswer`]s, and stamped on
+/// bench-cell records (`rust/METHODOLOGY.md`), so engine-vs-engine
+/// comparisons are attributed rather than inferred.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineId {
+    /// Bulk frame-aggregated deterministic model — the paper's predictor.
+    Coarse,
+    /// Per-frame deterministic reference tier.
+    CoarsePerFrame,
+    /// Per-frame stochastic tier (the emulated testbed).
+    Detailed,
+    /// Frame-aggregated stochastic tier.
+    DetailedAggregated,
+    /// Grid interpolation over exact samples — no simulation at all.
+    Surrogate,
+}
+
+impl EngineId {
+    /// Classify a fidelity: frame aggregation × stochastic noise sources
+    /// span the four simulation engines.
+    pub fn of_fidelity(f: &Fidelity) -> EngineId {
+        match (f.frame_aggregation, f.stochastic()) {
+            (true, false) => EngineId::Coarse,
+            (false, false) => EngineId::CoarsePerFrame,
+            (false, true) => EngineId::Detailed,
+            (true, true) => EngineId::DetailedAggregated,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EngineId::Coarse => "coarse",
+            EngineId::CoarsePerFrame => "coarse_per_frame",
+            EngineId::Detailed => "detailed",
+            EngineId::DetailedAggregated => "detailed_aggregated",
+            EngineId::Surrogate => "surrogate",
+        }
+    }
+
+    /// Inverse of [`EngineId::as_str`]; `None` for unknown labels (a
+    /// store written by a newer build).
+    pub fn parse(s: &str) -> Option<EngineId> {
+        Some(match s {
+            "coarse" => EngineId::Coarse,
+            "coarse_per_frame" => EngineId::CoarsePerFrame,
+            "detailed" => EngineId::Detailed,
+            "detailed_aggregated" => EngineId::DetailedAggregated,
+            "surrogate" => EngineId::Surrogate,
+            _ => return None,
+        })
+    }
+}
+
+/// A served answer. Exact answers are attributed to their source and the
+/// engine that computed them, and carry the run's degraded-mode failure
+/// accounting; surrogate answers always carry their error estimate (and
+/// no failure stats — they are interpolations, not runs).
 #[derive(Clone, Debug)]
 pub enum Answer {
     Exact {
@@ -91,6 +145,7 @@ pub enum Answer {
         turnaround_s: f64,
         cost_node_s: f64,
         source: Source,
+        engine: EngineId,
         failures: FailureStats,
     },
     Surrogate {
@@ -126,6 +181,15 @@ impl Answer {
 
     pub fn is_exact(&self) -> bool {
         matches!(self, Answer::Exact { .. })
+    }
+
+    /// The engine that produced this answer (surrogate answers are their
+    /// own engine).
+    pub fn engine(&self) -> EngineId {
+        match self {
+            Answer::Exact { engine, .. } => *engine,
+            Answer::Surrogate { .. } => EngineId::Surrogate,
+        }
     }
 
     /// `Some` only for surrogate answers — exact answers have no model
@@ -324,7 +388,7 @@ impl Service {
             self.counters.misses.fetch_add(1, Ordering::Relaxed);
             self.cache.insert(fp, pred.clone());
             if let Some(disk) = &self.disk {
-                disk.put(fp, &StoredAnswer::of(&pred));
+                disk.put(fp, &StoredAnswer::of(&pred, EngineId::of_fidelity(&self.fidelity)));
             }
             finish.flight.state.lock().unwrap_or_else(|e| e.into_inner()).result =
                 Some(pred.clone());
@@ -364,6 +428,7 @@ impl Service {
                 turnaround_s: p.turnaround.as_secs_f64(),
                 cost_node_s: p.cost_node_secs,
                 source: Source::Memory,
+                engine: EngineId::of_fidelity(&self.fidelity),
                 failures: FailureStats::of(&p.report),
             });
         }
@@ -374,6 +439,7 @@ impl Service {
             turnaround_s: a.turnaround.as_secs_f64(),
             cost_node_s: a.cost_node_s,
             source: Source::Disk,
+            engine: a.engine,
             failures: a.failures,
         })
     }
@@ -385,6 +451,7 @@ impl Service {
             turnaround_s: p.turnaround.as_secs_f64(),
             cost_node_s: p.cost_node_secs,
             source: Source::Simulated,
+            engine: EngineId::of_fidelity(&self.fidelity),
             failures: FailureStats::of(&p.report),
         }
     }

@@ -14,6 +14,7 @@
 //! successor.
 
 use super::fingerprint::Fingerprint;
+use super::EngineId;
 use crate::model::SimReport;
 use crate::predict::Prediction;
 use crate::util::jsonw::{self, Json, Scalar};
@@ -58,17 +59,22 @@ pub struct StoredAnswer {
     pub stage_times: Vec<SimTime>,
     pub events: u64,
     pub net_bytes: Bytes,
+    /// Which engine simulated this answer. Records written before engine
+    /// provenance existed parse as [`EngineId::Coarse`] — the only engine
+    /// the service ran at the time.
+    pub engine: EngineId,
     pub failures: FailureStats,
 }
 
 impl StoredAnswer {
-    pub fn of(p: &Prediction) -> StoredAnswer {
+    pub fn of(p: &Prediction, engine: EngineId) -> StoredAnswer {
         StoredAnswer {
             turnaround: p.turnaround,
             cost_node_s: p.cost_node_secs,
             stage_times: p.stage_times.clone(),
             events: p.report.events,
             net_bytes: p.report.net_bytes,
+            engine,
             failures: FailureStats::of(&p.report),
         }
     }
@@ -180,6 +186,7 @@ impl DiskStore {
             .set("stages_ns", Json::Arr(stages))
             .set("events", ans.events)
             .set("net_bytes", ans.net_bytes.as_u64())
+            .set("engine", ans.engine.as_str())
             .set("fault_retries", ans.failures.retries)
             .set("fault_failovers", ans.failures.failovers)
             .set("fault_timeouts", ans.failures.timeouts)
@@ -216,6 +223,14 @@ impl DiskStore {
             Scalar::NumArr(xs) => xs.iter().map(|&x| SimTime::from_ns(x as u64)).collect(),
             _ => return None,
         };
+        // The engine key is absent from pre-provenance stores, which were
+        // only ever written by the coarse engine; an unknown label (a
+        // newer build's store) also falls back rather than dropping the
+        // record.
+        let engine = match get("engine") {
+            Some(Scalar::Str(s)) => EngineId::parse(s).unwrap_or(EngineId::Coarse),
+            _ => EngineId::Coarse,
+        };
         // Failure keys are absent from pre-fault-injection stores; such
         // records are by construction fault-free, so default to zero.
         let failures = FailureStats {
@@ -232,6 +247,7 @@ impl DiskStore {
                 stage_times,
                 events: num("events")? as u64,
                 net_bytes: Bytes(num("net_bytes")? as u64),
+                engine,
                 failures,
             },
         ))
@@ -255,6 +271,7 @@ mod tests {
                 stage_times: vec![SimTime::from_ms(40), SimTime::from_ms(60 + i)],
                 events: 1000 + i,
                 net_bytes: Bytes::mb(i + 1),
+                engine: if i % 2 == 0 { EngineId::Coarse } else { EngineId::Detailed },
                 failures: FailureStats {
                     retries: i,
                     failovers: 2 * i,
@@ -341,6 +358,7 @@ mod tests {
         let ans = store.get(&fp).expect("legacy record parses");
         assert_eq!(ans.failures, FailureStats::default());
         assert!(!ans.failures.unrecoverable);
+        assert_eq!(ans.engine, EngineId::Coarse, "pre-provenance records were coarse-only");
         let _ = std::fs::remove_file(&path);
     }
 

@@ -1,9 +1,8 @@
-//! Hand-rolled benchmark harness (criterion is unavailable offline).
-//!
-//! `cargo bench` invokes the `[[bench]]` binaries (declared with
-//! `harness = false`); each uses [`BenchRunner`] for wallclock timing with
-//! warmup, repetition, and summary statistics, and writes machine-readable
-//! results under `results/`.
+//! Hand-rolled benchmark timing substrate (criterion is unavailable
+//! offline): [`BenchRunner`] for wallclock timing with warmup,
+//! repetition, and summary statistics, plus [`black_box`]. The
+//! measurement harness built on top of it is [`crate::bench`] (the
+//! `wfpred bench` cell registry).
 
 use crate::util::stats::Summary;
 use std::time::Instant;

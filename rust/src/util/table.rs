@@ -1,8 +1,8 @@
 //! ASCII table rendering for bench/report output.
 //!
-//! Every figure bench prints its series as a table whose rows mirror what
-//! the paper plots, so `cargo bench` output is directly comparable to the
-//! paper's figures.
+//! Figure-shaped output (the `figures.*` bench cells, `wfpred compare`)
+//! prints its series as tables whose rows mirror what the paper plots,
+//! so the output is directly comparable to the paper's figures.
 
 /// A simple column-aligned table.
 #[derive(Debug, Default)]

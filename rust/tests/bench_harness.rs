@@ -1,0 +1,110 @@
+//! End-to-end checks of the `wfpred bench` harness: per-cell bootstrap,
+//! per-cell baselines, trajectory history, and — the point of the whole
+//! design — a regression report that names exactly the cell that moved.
+
+use std::fs;
+use std::path::PathBuf;
+
+use wfpred::bench::record::keys;
+use wfpred::bench::{run_cells, CellRecord, RunOptions};
+
+fn temp_records_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("wfpred_bench_harness_{tag}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+fn opts(out_dir: &PathBuf) -> RunOptions {
+    RunOptions {
+        globs: vec!["scale.hosts_64".to_string(), "scale.hosts_256".to_string()],
+        check: true,
+        out_dir: out_dir.clone(),
+        reps_override: 1,
+        run_id: "test".to_string(),
+        ..RunOptions::default()
+    }
+}
+
+#[test]
+fn check_localizes_a_perturbed_cell_to_its_name() {
+    let dir = temp_records_dir("localize");
+
+    // First run: no baselines exist, so both cells bootstrap — drift
+    // gates skip, the run is green, and a record lands per cell.
+    let first = run_cells(&opts(&dir));
+    assert_eq!(first.exit_code, 0, "bootstrap run must pass: {:?}", first.failures);
+    assert!(first.failures.is_empty());
+    let mut booted = first.bootstrapped.clone();
+    booted.sort();
+    assert_eq!(booted, vec!["scale.hosts_256".to_string(), "scale.hosts_64".to_string()]);
+    assert_eq!(first.records.len(), 2);
+    for cell in ["scale.hosts_64", "scale.hosts_256"] {
+        assert!(dir.join(format!("{cell}.json")).is_file(), "missing record for {cell}");
+    }
+
+    // Second run against the armed baselines: deterministic engine, same
+    // seeds, so drift gates now evaluate and pass. Nothing bootstraps.
+    let second = run_cells(&opts(&dir));
+    assert_eq!(second.exit_code, 0, "armed re-run must pass: {:?}", second.failures);
+    assert!(second.bootstrapped.is_empty(), "both cells should be armed now");
+
+    // History accumulated one line per cell per run.
+    for cell in ["scale.hosts_64", "scale.hosts_256"] {
+        let hist = fs::read_to_string(dir.join("history").join(format!("{cell}.jsonl"))).unwrap();
+        assert_eq!(hist.lines().count(), 2, "{cell} history should hold both runs");
+        for line in hist.lines() {
+            let rec = CellRecord::parse(line).unwrap();
+            assert_eq!(rec.cell, cell);
+            assert_eq!(rec.run_id, "test");
+        }
+    }
+
+    // Perturb ONE cell's armed baseline, as if a regression had shifted
+    // its event count since the baseline was committed.
+    let victim = dir.join("scale.hosts_64.json");
+    let mut baseline = CellRecord::parse(&fs::read_to_string(&victim).unwrap()).unwrap();
+    let events = baseline.get(keys::EVENTS).unwrap();
+    baseline.set(keys::EVENTS, events * 1.5);
+    fs::write(&victim, baseline.render_compact() + "\n").unwrap();
+
+    // The check fails and the report names that cell — and only it.
+    let third = run_cells(&opts(&dir));
+    assert_eq!(third.exit_code, 1, "perturbed baseline must fail the check");
+    assert_eq!(third.failing_cells(), vec!["scale.hosts_64".to_string()]);
+    let (cell, detail) = &third.failures[0];
+    assert_eq!(cell, "scale.hosts_64");
+    assert!(detail.contains(keys::EVENTS), "failure should name the drifted key: {detail}");
+
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn selection_errors_exit_2_without_writing_records() {
+    let dir = temp_records_dir("badglob");
+    let report = run_cells(&RunOptions {
+        globs: vec!["no.such.cell".to_string()],
+        check: true,
+        out_dir: dir.clone(),
+        ..RunOptions::default()
+    });
+    assert_eq!(report.exit_code, 2);
+    assert!(report.records.is_empty());
+    assert!(!dir.exists(), "a failed selection must not create the records dir");
+}
+
+#[test]
+fn history_can_be_disabled_for_throwaway_runs() {
+    let dir = temp_records_dir("nohist");
+    let report = run_cells(&RunOptions {
+        globs: vec!["scale.hosts_64".to_string()],
+        out_dir: dir.clone(),
+        reps_override: 1,
+        history: false,
+        ..RunOptions::default()
+    });
+    assert_eq!(report.exit_code, 0);
+    assert!(dir.join("scale.hosts_64.json").is_file(), "the record itself is still written");
+    assert!(!dir.join("history").exists(), "history must stay untouched");
+    let _ = fs::remove_dir_all(&dir);
+}
