@@ -111,6 +111,24 @@ pub mod keys {
     pub const SURROGATE_MAX_REL_ERR: &str = "surrogate_max_rel_err";
     /// Mean interpolation latency per answered query, seconds.
     pub const SURROGATE_SECS_PER_QUERY: &str = "surrogate_secs_per_query";
+    /// Trace cells: spans the flight recorder captured.
+    pub const TRACE_SPANS: &str = "trace_spans";
+    /// Critical-path attribution (trace cells): client compute seconds on
+    /// the path ending at turnaround. The seven `cp_*_s` keys tile
+    /// `[0, turnaround]` exactly, so they sum to `sim_turnaround_s`.
+    pub const CP_CLIENT_COMPUTE_S: &str = "cp_client_compute_s";
+    /// Critical-path attribution: sender-NIC wait + service seconds.
+    pub const CP_OUT_NIC_S: &str = "cp_out_nic_s";
+    /// Critical-path attribution: receiver-NIC wait + service seconds.
+    pub const CP_IN_NIC_S: &str = "cp_in_nic_s";
+    /// Critical-path attribution: storage-service wait + service seconds.
+    pub const CP_STORAGE_S: &str = "cp_storage_s";
+    /// Critical-path attribution: manager control-message seconds.
+    pub const CP_MANAGER_S: &str = "cp_manager_s";
+    /// Critical-path attribution: timeout/retry/failover recovery seconds.
+    pub const CP_FAULT_RECOVERY_S: &str = "cp_fault_recovery_s";
+    /// Critical-path attribution: seconds with no task active at all.
+    pub const CP_IDLE_S: &str = "cp_idle_s";
 
     /// Every key above, for schema-coverage tests and doc generation.
     pub const ALL: &[&str] = &[
@@ -154,6 +172,14 @@ pub mod keys {
         SURROGATE_MAX_EST_ERR,
         SURROGATE_MAX_REL_ERR,
         SURROGATE_SECS_PER_QUERY,
+        TRACE_SPANS,
+        CP_CLIENT_COMPUTE_S,
+        CP_OUT_NIC_S,
+        CP_IN_NIC_S,
+        CP_STORAGE_S,
+        CP_MANAGER_S,
+        CP_FAULT_RECOVERY_S,
+        CP_IDLE_S,
     ];
 }
 

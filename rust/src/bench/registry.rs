@@ -286,6 +286,10 @@ pub enum CellKind {
     Campaign { workload: WorkloadSpec, config: ConfigSpec, aggregated: bool, trials: u64 },
     /// A service-layer probe.
     Service(ServiceProbe),
+    /// One `simulate_traced` run with critical-path attribution: records
+    /// the seven `cp_*_s` keys (which tile `[0, turnaround]` exactly)
+    /// alongside the usual simulation metrics.
+    Trace { workload: WorkloadSpec, config: ConfigSpec, engine: EngineSpec },
 }
 
 /// One benchmark cell: a name, how to run it, and what must hold.
@@ -307,7 +311,7 @@ impl CellDef {
     /// The engine-provenance label this cell stamps on its records.
     pub fn engine_label(&self) -> String {
         match &self.kind {
-            CellKind::Sim { engine, .. } => engine.label(),
+            CellKind::Sim { engine, .. } | CellKind::Trace { engine, .. } => engine.label(),
             CellKind::Campaign { aggregated, .. } => {
                 if *aggregated {
                     format!("testbed_{}", EngineId::DetailedAggregated.as_str())
@@ -760,6 +764,57 @@ pub fn registry() -> Vec<CellDef> {
         4,
     ));
 
+    // ── trace: flight-recorder overhead and attribution ──────────────────
+    {
+        let mut gates = drift2();
+        // The no-op probe must be free: this cell is spec-identical to
+        // `incast.1024` (which runs untraced `simulate_fid` — post-probe,
+        // that IS the no-op-probe path), so its per-event cost may exceed
+        // the peer's by at most 2% in the same run (min-over-reps
+        // wallclock on both sides keeps the bound host-independent).
+        gates.push(Gate::ratio_range(keys::NS_PER_EVENT_MIN, "incast.1024", 0.0, 1.02));
+        cells.push(sim(
+            "trace.overhead",
+            "incast.1024 spec re-run as the probe-overhead sentinel",
+            WorkloadSpec::Reduce { n: 1023, scale: PatternScale::Small, wass: false },
+            ConfigSpec::dss(1023).stripe(64),
+            EngineSpec::Coarse,
+            3,
+            gates,
+        ));
+    }
+    // Record-only attribution rows for the four paper workloads: where
+    // does the predicted critical path spend its time? (No gates — these
+    // feed analysis, not CI.)
+    let attribution: [(&str, WorkloadSpec, ConfigSpec); 4] = [
+        (
+            "trace.attribution.pipeline",
+            WorkloadSpec::Pipeline { n: 19, scale: PatternScale::Medium, wass: false },
+            ConfigSpec::dss(19),
+        ),
+        (
+            "trace.attribution.reduce",
+            WorkloadSpec::Reduce { n: 19, scale: PatternScale::Medium, wass: false },
+            ConfigSpec::dss(19),
+        ),
+        ("trace.attribution.montage", WorkloadSpec::Montage { tiles: 19 }, ConfigSpec::dss(19)),
+        (
+            "trace.attribution.blast",
+            WorkloadSpec::Blast { n_app: 14, queries: 200 },
+            ConfigSpec::partitioned(14, 5).chunk_kb(1024),
+        ),
+    ];
+    for (name, workload, config) in attribution {
+        cells.push(extra(CellDef {
+            name: name.to_string(),
+            ci: true,
+            note: "critical-path attribution of the coarse prediction".to_string(),
+            platform: PlatformSpec::Paper,
+            kind: CellKind::Trace { workload, config, engine: EngineSpec::Coarse },
+            gates: Vec::new(),
+        }));
+    }
+
     // ── ablations: sensitivity sweeps (records only) ─────────────────────
     cells.push(extra(sim(
         "ablations.fidelity.full",
@@ -917,6 +972,23 @@ mod tests {
                     c.name
                 );
             }
+        }
+    }
+
+    #[test]
+    fn trace_cells_are_wired_as_designed() {
+        let cells = registry();
+        let ov = cells.iter().find(|c| c.name == "trace.overhead").expect("overhead cell");
+        assert!(ov.ci, "the overhead sentinel must gate every CI run");
+        assert!(
+            ov.gates.iter().any(|g| g.peer() == Some("incast.1024")),
+            "overhead is a same-run ratio against incast.1024"
+        );
+        for wl in ["pipeline", "reduce", "montage", "blast"] {
+            let name = format!("trace.attribution.{wl}");
+            let c = cells.iter().find(|c| c.name == name).unwrap_or_else(|| panic!("{name}"));
+            assert!(!c.ci && c.gates.is_empty(), "{name}: attribution rows are record-only");
+            assert!(matches!(c.kind, CellKind::Trace { .. }));
         }
     }
 

@@ -27,9 +27,10 @@ use super::gate::{evaluate, GateOutcome};
 use super::record::{keys, CellRecord};
 use super::registry::{registry, select, CellDef, CellKind, ServiceProbe};
 use crate::coordinator;
-use crate::model::{simulate_fid, Config, Platform};
+use crate::model::{simulate_fid, simulate_traced, Config, Platform};
 use crate::predict::Predictor;
 use crate::service::{GridCoord, Service};
+use crate::trace::{critical_path, Class, N_CLASSES};
 use crate::testbed::Testbed;
 use crate::util::bench::black_box;
 use crate::util::jsonw::Json;
@@ -364,6 +365,35 @@ fn execute_cell(cell: &CellDef, run_id: &str, reps_override: u32) -> CellRecord 
         }
         CellKind::Service(probe) => {
             run_service_probe(*probe, &mut rec);
+        }
+        CellKind::Trace { workload, config, engine } => {
+            let wl = workload.build();
+            let cfg = config.build();
+            let t0 = Instant::now();
+            let (r, trace) = simulate_traced(&wl, &cfg, &plat, engine.fidelity(0));
+            let wall = t0.elapsed().as_secs_f64();
+            let attr = critical_path(&trace);
+            debug_assert!(attr.tiles_exactly(), "{}: attribution must tile", cell.name);
+            let totals = attr.totals();
+            // Keyed in Class::ALL order — one record key per class, so the
+            // seven cp_*_s values sum to sim_turnaround_s by construction.
+            const CP_KEYS: [&str; N_CLASSES] = [
+                keys::CP_CLIENT_COMPUTE_S,
+                keys::CP_OUT_NIC_S,
+                keys::CP_IN_NIC_S,
+                keys::CP_STORAGE_S,
+                keys::CP_MANAGER_S,
+                keys::CP_FAULT_RECOVERY_S,
+                keys::CP_IDLE_S,
+            ];
+            rec.set(keys::REPS, 1.0)
+                .set(keys::EVENTS, r.events as f64)
+                .set(keys::SIM_TURNAROUND_S, r.turnaround.as_secs_f64())
+                .set(keys::WALL_SECS, wall)
+                .set(keys::TRACE_SPANS, trace.n_spans() as f64);
+            for c in Class::ALL {
+                rec.set(CP_KEYS[c.index()], totals[c.index()] as f64 / 1e9);
+            }
         }
     }
     rec

@@ -2,7 +2,8 @@
 //!
 //! ```text
 //! wfpred identify [--file-size-mb N --chunk-kb N]      system identification (§2.5)
-//! wfpred predict  --pattern P [--scale S --wass ...]   one prediction (coarse model)
+//! wfpred predict  --pattern P [--scale S --trace F ..]  one prediction (coarse model)
+//! wfpred explain  --pattern P [--json --trace F]       critical-path attribution
 //! wfpred run      --pattern P [--trials N ...]         "actual" testbed campaign
 //! wfpred search   [--allocations 11,17,20 ...]         configuration-space search
 //! wfpred batch    [--in FILE --store FILE ...]         serve query JSON in bulk
@@ -12,11 +13,12 @@
 //! ```
 
 use crate::ident::{identify, IdentConfig};
-use crate::model::{Config, FaultPlan, Placement, Platform};
+use crate::model::{simulate_traced, Config, FaultPlan, Fidelity, Placement, Platform};
 use crate::predict::Predictor;
 use crate::runtime::{ScorerRuntime, StageDesc};
 use crate::search::{SearchSpace, Searcher};
-use crate::service::{Answer, Query, Service};
+use crate::service::{Answer, Query, Service, StatsSnapshot};
+use crate::trace::{chrome_trace, critical_path, Class};
 use crate::testbed::Testbed;
 use crate::util::flags::Flags;
 use crate::util::hash::Fnv64;
@@ -44,6 +46,7 @@ pub fn run(args: &[String]) -> i32 {
     let result = match cmd.as_str() {
         "identify" => cmd_identify(rest),
         "predict" => cmd_predict(rest),
+        "explain" => cmd_explain(rest),
         "run" => cmd_run(rest),
         "compare" => cmd_compare(rest),
         "search" => cmd_search(rest),
@@ -73,6 +76,7 @@ const USAGE: &str = "wfpred — predicting intermediate storage performance for 
 commands:
   identify   run the system-identification procedure against the in-tree TCP store
   predict    predict a workload's turnaround with the queue-based model
+  explain    attribute the predicted turnaround to its critical path by component class
   run        measure a workload on the emulated testbed (mean ± std over trials)
   compare    actual vs predicted side by side, with energy estimates
   search     explore the provisioning/partitioning/configuration space (BLAST)
@@ -201,10 +205,12 @@ fn cmd_identify(args: &[String]) -> Result<(), String> {
 }
 
 fn cmd_predict(args: &[String]) -> Result<(), String> {
-    let f = pattern_flags(Flags::new("wfpred predict")).parse(args)?;
+    let f = pattern_flags(Flags::new("wfpred predict"))
+        .flag("trace", "", "write Chrome trace-event JSON of the run here (open in Perfetto)")
+        .parse(args)?;
     let (wl, cfg) = build_workload(&f)?;
     let plat = platform_by_name(&f.get("platform"))?;
-    let pred = Predictor::new(plat).predict(&wl, &cfg);
+    let pred = Predictor::new(plat.clone()).predict(&wl, &cfg);
     println!("workload {:<24} config {}", wl.name, cfg.label);
     println!("predicted turnaround: {}", pred.turnaround);
     for (s, t) in pred.stage_times.iter().enumerate() {
@@ -212,6 +218,104 @@ fn cmd_predict(args: &[String]) -> Result<(), String> {
     }
     println!("cost: {:.1} node-seconds", pred.cost_node_secs);
     println!("predictor wallclock: {:.3}s ({} events)", pred.predictor_wallclock_secs, pred.report.events);
+    let tpath = f.get("trace");
+    if !tpath.is_empty() {
+        // The traced re-run reproduces the prediction above bit for bit
+        // (probes observe, they never feed back), so the trace describes
+        // exactly the run whose numbers were just printed.
+        let (_, rec) = simulate_traced(&wl, &cfg, &plat, Fidelity::coarse());
+        std::fs::write(&tpath, chrome_trace(&rec)).map_err(|e| e.to_string())?;
+        println!("wrote trace: {tpath} ({} spans)", rec.n_spans());
+    }
+    Ok(())
+}
+
+fn cmd_explain(args: &[String]) -> Result<(), String> {
+    let f = pattern_flags(Flags::new("wfpred explain"))
+        .switch("json", "emit one flat-JSON line instead of tables")
+        .flag("trace", "", "also write Chrome trace-event JSON here (open in Perfetto)")
+        .parse(args)?;
+    let (wl, cfg) = build_workload(&f)?;
+    let plat = platform_by_name(&f.get("platform"))?;
+    let (report, rec) = simulate_traced(&wl, &cfg, &plat, Fidelity::coarse());
+    let attr = critical_path(&rec);
+    if !attr.tiles_exactly() {
+        return Err("internal error: attribution does not tile [0, turnaround]".into());
+    }
+    let tpath = f.get("trace");
+    if !tpath.is_empty() {
+        std::fs::write(&tpath, chrome_trace(&rec)).map_err(|e| e.to_string())?;
+    }
+    let secs = |ns: u64| ns as f64 / 1e9;
+    let totals = attr.totals();
+    let waits = attr.waits();
+    let turn_ns = report.turnaround.as_ns();
+    // Per-stage windows: first task start to last task end of each stage
+    // (stages may overlap; each window clips the one attributed path).
+    let windows: Vec<(u64, u64)> = (0..report.n_stages())
+        .map(|s| {
+            report.tasks.iter().filter(|t| t.stage == s).fold((u64::MAX, 0u64), |(lo, hi), t| {
+                (lo.min(t.start.as_ns()), hi.max(t.end.as_ns()))
+            })
+        })
+        .collect();
+    if f.get_bool("json") {
+        let mut j = Json::obj()
+            .set("workload", wl.name.clone())
+            .set("config", cfg.label.clone())
+            .set("turnaround_s", secs(turn_ns));
+        for c in Class::ALL {
+            j = j.set(&format!("cp_{}_s", c.as_str()), secs(totals[c.index()]));
+            j = j.set(&format!("cp_{}_wait_s", c.as_str()), secs(waits[c.index()]));
+        }
+        for (s, &(lo, hi)) in windows.iter().enumerate() {
+            if lo >= hi {
+                continue;
+            }
+            let t = attr.totals_in(lo, hi);
+            for c in Class::ALL {
+                j = j.set(&format!("stage{s}_{}_s", c.as_str()), secs(t[c.index()]));
+            }
+        }
+        println!("{}", j.render_compact());
+        return Ok(());
+    }
+    println!("workload {:<24} config {}", wl.name, cfg.label);
+    println!("turnaround {} — critical-path attribution (segments tile [0, turnaround]):", report.turnaround);
+    let mut t = Table::new(&["class", "time (s)", "share", "of which wait (s)"]);
+    for c in Class::ALL {
+        if totals[c.index()] == 0 {
+            continue;
+        }
+        t.row(&[
+            c.as_str().into(),
+            format!("{:.3}", secs(totals[c.index()])),
+            format!("{:.1}%", totals[c.index()] as f64 / turn_ns.max(1) as f64 * 100.0),
+            format!("{:.3}", secs(waits[c.index()])),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("\nper-stage breakdown (path time inside each stage window, s):");
+    let mut hdr: Vec<&str> = vec!["stage", "window (s)"];
+    for c in Class::ALL {
+        hdr.push(c.as_str());
+    }
+    let mut t = Table::new(&hdr);
+    for (s, &(lo, hi)) in windows.iter().enumerate() {
+        if lo >= hi {
+            continue;
+        }
+        let per = attr.totals_in(lo, hi);
+        let mut row = vec![s.to_string(), format!("{:.3}–{:.3}", secs(lo), secs(hi))];
+        for c in Class::ALL {
+            row.push(format!("{:.3}", secs(per[c.index()])));
+        }
+        t.row(&row);
+    }
+    print!("{}", t.render());
+    if !tpath.is_empty() {
+        println!("wrote trace: {tpath} ({} spans)", rec.n_spans());
+    }
     Ok(())
 }
 
@@ -219,6 +323,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     let f = pattern_flags(Flags::new("wfpred run"))
         .flag("trials", "15", "minimum trials")
         .flag("threads", "0", "campaign worker threads (0 = all cores; results identical)")
+        .flag("trace", "", "write Chrome trace-event JSON of trial 0 here (open in Perfetto)")
         .parse(args)?;
     let (wl, cfg) = build_workload(&f)?;
     let plat = platform_by_name(&f.get("platform"))?;
@@ -233,6 +338,15 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         println!("  stage {s}: {:.3}s ± {:.3}s", st.mean(), st.std());
     }
     println!("conn retries/trial: {:.1}", stats.mean_conn_retries);
+    let tpath = f.get("trace");
+    if !tpath.is_empty() {
+        // One representative trial: the campaign's fidelity on trial 0's
+        // seed stream, so the trace is a run the campaign actually took.
+        let fid = Fidelity { seed: tb.trial_seed(0), ..tb.fidelity.clone() };
+        let (_, rec) = simulate_traced(&wl, &cfg, &tb.platform, fid);
+        std::fs::write(&tpath, chrome_trace(&rec)).map_err(|e| e.to_string())?;
+        println!("wrote trace: {tpath} (trial 0, {} spans)", rec.n_spans());
+    }
     Ok(())
 }
 
@@ -473,6 +587,23 @@ fn service_query_defaults(f: &Flags) -> Vec<String> {
     extra
 }
 
+/// The serving-tier counter line `batch` and `serve` print on exit:
+/// answer attribution plus the raw shard-level cache probe counters.
+fn eprint_service_stats(queries: usize, s: &StatsSnapshot) {
+    eprintln!(
+        "[service] {queries} queries: {} simulated, {} memory hits, {} disk hits, {} deduped, \
+         {} surrogate; cache probes {} hit / {} miss / {} evicted",
+        s.misses,
+        s.hits,
+        s.disk_hits,
+        s.dedup_waits,
+        s.surrogate_answers,
+        s.cache.hits,
+        s.cache.misses,
+        s.cache.evictions
+    );
+}
+
 fn open_service(f: &Flags, plat: &Platform) -> Result<Service, String> {
     let service = Service::new(Predictor::new(plat.clone()));
     if f.get("store").is_empty() {
@@ -512,17 +643,7 @@ fn cmd_batch(args: &[String]) -> Result<(), String> {
     for a in &answers {
         println!("{}", answer_json(a).render_compact());
     }
-    let s = service.stats();
-    eprintln!(
-        "[service] {} queries: {} simulated, {} memory hits, {} disk hits, {} deduped, \
-         {} surrogate",
-        queries.len(),
-        s.misses,
-        s.hits,
-        s.disk_hits,
-        s.dedup_waits,
-        s.surrogate_answers
-    );
+    eprint_service_stats(queries.len(), &service.stats());
     Ok(())
 }
 
@@ -534,6 +655,7 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
     let gate = f.get_f64("surrogate");
     let stdin = std::io::stdin();
     let mut line = String::new();
+    let mut served = 0usize;
     loop {
         line.clear();
         let n = stdin.read_line(&mut line).map_err(|e| e.to_string())?;
@@ -549,6 +671,7 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
         }
         let out = match query_to_service(l, &plat, &extra) {
             Ok(q) => {
+                served += 1;
                 let answers = service.serve_batch(std::slice::from_ref(&q), 1, gate);
                 answer_json(&answers[0])
             }
@@ -559,6 +682,7 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
         use std::io::Write as _;
         let _ = std::io::stdout().flush();
     }
+    eprint_service_stats(served, &service.stats());
     Ok(())
 }
 
@@ -672,6 +796,36 @@ mod tests {
     #[test]
     fn predict_pipeline_runs() {
         assert_eq!(run(&argv(&["predict", "--pattern", "pipeline", "--nodes", "4", "--scale", "small"])), 0);
+    }
+
+    #[test]
+    fn explain_runs_tables_and_json() {
+        assert_eq!(
+            run(&argv(&["explain", "--pattern", "reduce", "--nodes", "4", "--scale", "small"])),
+            0
+        );
+        assert_eq!(
+            run(&argv(&["explain", "--pattern", "montage", "--nodes", "5", "--json"])),
+            0
+        );
+    }
+
+    #[test]
+    fn predict_emits_chrome_trace() {
+        let path =
+            std::env::temp_dir().join(format!("wfpred_cli_chrome_{}.json", std::process::id()));
+        let p = path.to_str().unwrap().to_string();
+        assert_eq!(
+            run(&argv(&[
+                "predict", "--pattern", "pipeline", "--nodes", "4", "--scale", "small",
+                "--trace", &p,
+            ])),
+            0
+        );
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("[\n") && text.trim_end().ends_with(']'));
+        assert!(text.contains("\"ph\": \"X\""), "trace events are complete spans");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -12,6 +12,12 @@
 //! * [`sim`] — a discrete-event simulation core: virtual clock, event
 //!   queue, and FIFO single-server service stations (the "queues" of the
 //!   paper's queue-based model).
+//! * [`trace`] — the flight recorder: a zero-cost [`trace::Probe`]
+//!   threaded through the model engine (no-op by default, bit-identical
+//!   predictions), a recording probe capturing op → chunk-attempt →
+//!   station-residency spans with queue-wait vs service splits,
+//!   critical-path attribution that tiles `[0, turnaround]` exactly
+//!   (`wfpred explain`), and Chrome trace-event output for Perfetto.
 //! * [`model`] — **the paper's contribution**: the coarse queue-based
 //!   model of a distributed object-based storage system (manager, storage
 //!   nodes, client SAIs, per-host network in/out queues) plus the
@@ -68,6 +74,7 @@
 //! ```
 pub mod util;
 pub mod sim;
+pub mod trace;
 pub mod model;
 pub mod workload;
 pub mod testbed;

@@ -12,6 +12,7 @@ use crate::model::engine::{Ev, World};
 use crate::model::proto::OpKind;
 use crate::model::report::TaskRecord;
 use crate::sim::Scheduler;
+use crate::trace::{Probe, TaskPhase};
 use crate::util::units::SimTime;
 use crate::workload::{Workload, TaskId};
 use std::collections::VecDeque;
@@ -91,7 +92,7 @@ impl DriverState {
     }
 }
 
-impl<'a> World<'a> {
+impl<'a, P: Probe> World<'a, P> {
     /// A file committed at the manager: notify waiting tasks.
     pub(crate) fn file_committed(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, file: usize) {
         let waiters = std::mem::take(&mut self.driver.waiting[file]);
@@ -172,6 +173,7 @@ impl<'a> World<'a> {
         self.driver.task_client[task] = client;
         self.driver.task_start[task] = now;
         self.driver.phase[task] = Phase::Reading(0);
+        self.probe.task_phase(now, task, client, TaskPhase::Read);
         self.advance_task(sched, now, task);
     }
 
@@ -188,6 +190,7 @@ impl<'a> World<'a> {
     pub(crate) fn driver_compute_done(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, task: TaskId) {
         debug_assert_eq!(self.driver.phase[task], Phase::Computing);
         self.driver.phase[task] = Phase::Writing(0);
+        self.probe.task_phase(now, task, self.driver.task_client[task], TaskPhase::Write);
         self.advance_task(sched, now, task);
     }
 
@@ -202,12 +205,14 @@ impl<'a> World<'a> {
                     self.start_op(sched, now, OpKind::Read, client, task, f);
                 } else if spec.compute > SimTime::ZERO {
                     self.driver.phase[task] = Phase::Computing;
+                    self.probe.task_phase(now, task, client, TaskPhase::Compute);
                     // Detailed fidelity: compute times jitter like any
                     // other service (OS scheduling, cache effects).
                     let t = SimTime::from_secs_f64(spec.compute.as_secs_f64() * self.jitter());
                     sched.after(t, Ev::ComputeDone(task));
                 } else {
                     self.driver.phase[task] = Phase::Writing(0);
+                    self.probe.task_phase(now, task, client, TaskPhase::Write);
                     self.advance_task(sched, now, task);
                 }
             }
@@ -231,6 +236,7 @@ impl<'a> World<'a> {
         let client = self.driver.task_client[task];
         debug_assert_ne!(client, usize::MAX, "abandoning a task that never started");
         self.driver.phase[task] = Phase::Done;
+        self.probe.task_phase(now, task, client, TaskPhase::Done);
         self.driver.busy[client] = false;
         self.driver.failed += 1;
         self.try_assign(sched, now);
@@ -239,6 +245,7 @@ impl<'a> World<'a> {
     fn finish_task(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, task: TaskId) {
         let client = self.driver.task_client[task];
         self.driver.phase[task] = Phase::Done;
+        self.probe.task_phase(now, task, client, TaskPhase::Done);
         self.driver.busy[client] = false;
         self.driver.finished += 1;
         self.task_records.push(TaskRecord {

@@ -81,6 +81,7 @@ use crate::model::platform::Platform;
 use crate::model::proto::*;
 use crate::model::report::{OpRecord, SimReport, TaskRecord, UtilReport};
 use crate::sim::{EventToken, FairStation, Scheduler, SimState, Simulation, Station, StationStats};
+use crate::trace::{Lane, MsgTag, NoopProbe, Probe, Recorder, NO_OP};
 use crate::util::rng::Rng;
 use crate::util::units::{Bytes, SimTime};
 use crate::workload::{FileHint, Workload};
@@ -210,7 +211,46 @@ struct PendingChunk {
     attempt: u32,
 }
 
-pub struct World<'a> {
+/// The probe [`Lane`] a component's service queue reports as.
+fn lane_of(c: CompId) -> Lane {
+    match c {
+        CompId::Manager => Lane::Manager,
+        CompId::Storage(s) => Lane::Storage(s as u32),
+        CompId::Client(c) => Lane::Client(c as u32),
+    }
+}
+
+/// The probe [`MsgTag`] describing a payload (kind + op/chunk lineage).
+fn tag_of(p: &Payload) -> MsgTag {
+    match *p {
+        Payload::AppIssue { op } => MsgTag::ctrl("AppIssue", op),
+        Payload::WriteAlloc { op } => MsgTag::ctrl("WriteAlloc", op),
+        Payload::WriteAllocResp { op } => MsgTag::ctrl("WriteAllocResp", op),
+        Payload::ChunkPut { op, chunk, attempt, .. } => {
+            MsgTag::data("ChunkPut", op, chunk, attempt)
+        }
+        Payload::ChunkPutAck { op, chunk, attempt } => {
+            MsgTag { kind: "ChunkPutAck", ctrl: true, op, chunk, attempt }
+        }
+        Payload::ChunkCommit { op } => MsgTag::ctrl("ChunkCommit", op),
+        Payload::CommitAck { op } => MsgTag::ctrl("CommitAck", op),
+        Payload::ReadLookup { op } => MsgTag::ctrl("ReadLookup", op),
+        Payload::ReadLookupResp { op } => MsgTag::ctrl("ReadLookupResp", op),
+        Payload::ChunkGet { op, chunk, attempt, .. } => {
+            MsgTag { kind: "ChunkGet", ctrl: true, op, chunk, attempt }
+        }
+        Payload::ChunkData { op, chunk, attempt, .. } => {
+            MsgTag::data("ChunkData", op, chunk, attempt)
+        }
+        Payload::Open { op } => MsgTag::ctrl("Open", op),
+        Payload::OpenResp { op } => MsgTag::ctrl("OpenResp", op),
+        Payload::Close { op } => MsgTag::ctrl("Close", op),
+        Payload::CloseResp { op } => MsgTag::ctrl("CloseResp", op),
+        Payload::MetaPing => MsgTag::ctrl("MetaPing", NO_OP),
+    }
+}
+
+pub struct World<'a, P: Probe = NoopProbe> {
     pub(crate) cfg: &'a Config,
     pub(crate) plat: &'a Platform,
     pub(crate) wl: &'a Workload,
@@ -260,6 +300,18 @@ pub struct World<'a> {
     pub(crate) net_frames: u64,
     pub(crate) op_records: Vec<OpRecord>,
     pub(crate) task_records: Vec<TaskRecord>,
+    /// Per-host in-NIC queue-integral over-count under bulk aggregation
+    /// (ns·frames): a train posting `u` frame-units at a *busy* fair
+    /// in-NIC charges its whole backlog for the full wait, where the
+    /// per-frame path paces those frames in one unit-service apart —
+    /// ramping the same backlog up gradually. The analytic excess,
+    /// `unit · u(u−1)/2` per busy arrival, is accumulated here and
+    /// subtracted when reporting `nic_qlen` (see `model/report.rs`).
+    nic_in_pacing_overcount: Vec<u128>,
+
+    /// Tracing probe (zero-cost [`NoopProbe`] by default — its empty
+    /// `#[inline(always)]` hooks monomorphize away, see `trace/`).
+    pub(crate) probe: P,
 
     // Degraded-mode state. All of it is inert when `cfg.faults` is empty:
     // `dead` stays all-false, no timers are armed, and every counter
@@ -278,6 +330,20 @@ pub struct World<'a> {
 
 impl<'a> World<'a> {
     pub fn new(wl: &'a Workload, cfg: &'a Config, plat: &'a Platform, fid: Fidelity) -> World<'a> {
+        World::with_probe(wl, cfg, plat, fid, NoopProbe)
+    }
+}
+
+impl<'a, P: Probe> World<'a, P> {
+    /// Build a world reporting into `probe` (the untraced path goes
+    /// through [`World::new`], which plugs in the zero-cost [`NoopProbe`]).
+    pub fn with_probe(
+        wl: &'a Workload,
+        cfg: &'a Config,
+        plat: &'a Platform,
+        fid: Fidelity,
+        probe: P,
+    ) -> World<'a, P> {
         let h = cfg.n_hosts();
         let mut rng = Rng::new(fid.seed ^ 0x5EED_CAFE);
         let speed_mult = (0..h)
@@ -325,6 +391,8 @@ impl<'a> World<'a> {
             net_frames: 0,
             op_records: Vec::new(),
             task_records: Vec::new(),
+            nic_in_pacing_overcount: vec![0; h],
+            probe,
             dead: vec![false; cfg.n_storage],
             pending_chunks: BTreeMap::new(),
             op_failed: Vec::new(),
@@ -452,7 +520,9 @@ impl<'a> World<'a> {
         let local = src == dst;
         let needs_conn = self.fid.connections && !local && payload.data_path_op().is_some();
         let msg_id = self.msgs.len();
+        let tag = tag_of(&payload);
         self.msgs.push(Msg { from, to, payload, local });
+        self.probe.msg(msg_id, tag);
 
         // Lossy links (fault plan): the drop decision is a pure hash of
         // (plan seed, src, dst, msg id), so it is identical across runs
@@ -544,6 +614,7 @@ impl<'a> World<'a> {
             let frame =
                 Frame { msg: msg_id, bytes: Bytes(total), frames: n_frames as u32, last: true };
             let ts = self.train_svc(&frame, local);
+            self.probe.station_arrive(now, Lane::NicOut(src as u32), msg_id, ts.total);
             if let Some(t) = self.nic_out[src].arrive_train(now, frame, ts.total, n_frames, ts.unit)
             {
                 sched.at(t, Ev::NicOutDone(src));
@@ -559,6 +630,7 @@ impl<'a> World<'a> {
                 let frame =
                     Frame { msg: msg_id, bytes: Bytes(b), frames: 1, last: i == n_frames - 1 };
                 let svc = self.frame_svc(b, local);
+                self.probe.station_arrive(now, Lane::NicOut(src as u32), msg_id, svc);
                 if let Some(t) = self.nic_out[src].arrive(now, frame, svc) {
                     sched.at(t, Ev::NicOutDone(src));
                 }
@@ -602,6 +674,9 @@ impl<'a> World<'a> {
 
     fn on_nic_out_done(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, host: usize) {
         let (frame, next) = self.nic_out[host].complete(now);
+        if frame.last {
+            self.probe.station_depart(now, Lane::NicOut(host as u32), frame.msg);
+        }
         if let Some(t) = next {
             sched.at(t, Ev::NicOutDone(host));
             if self.fid.frame_aggregation {
@@ -640,6 +715,7 @@ impl<'a> World<'a> {
             let q = self.nic_in[host].queue_len() as f64 * self.fid.train_qlen_scale;
             svc = SimTime((svc.0 as f64 * (1.0 + self.fid.mux_eta * (1.0 + q).ln())) as u64);
         }
+        self.probe.station_arrive(now, Lane::NicIn(host as u32), frame.msg, svc);
         match &mut self.nic_in[host] {
             NicIn::Fifo(st) => {
                 // Per-frame path: frames pace in at the service rate and
@@ -658,6 +734,18 @@ impl<'a> World<'a> {
                 let tail_wait =
                     if frame.frames > 1 { ts.unit.as_ns() - ts.last.as_ns() } else { 0 };
                 let weight = frame.bytes.as_u64().max(1);
+                // The bulk train posts all `u` frame-units at once; the
+                // per-frame path would pace them in one unit-service
+                // apart, so a train joining a *busy* queue over-charges
+                // the queue-length integral by `unit · u(u−1)/2` (the
+                // waiting ramp). An idle arrival starts service
+                // immediately on both paths — no excess (the uncontended
+                // exactness proptests pin this term to zero).
+                if frame.frames > 1 && st.is_busy() {
+                    let u = frame.frames as u128;
+                    self.nic_in_pacing_overcount[host] +=
+                        ts.unit.as_ns() as u128 * (u * (u - 1) / 2);
+                }
                 let t = st.arrive(now, frame, svc, frame.frames as u64, weight, tail_wait);
                 // The new shares move the head's completion: withdraw the
                 // superseded announcement and schedule the live one. The
@@ -682,6 +770,7 @@ impl<'a> World<'a> {
             sched.at(t, Ev::NicInDone(host));
         }
         if frame.last {
+            self.probe.station_depart(now, Lane::NicIn(host as u32), frame.msg);
             // Message fully assembled: hand to destination component queue.
             let to = self.msgs[frame.msg].to;
             self.comp_arrive(sched, now, to, frame.msg);
@@ -701,6 +790,7 @@ impl<'a> World<'a> {
             *pending = Some(sched.at_cancellable(t, Ev::NicInFairDone(host)));
         }
         if frame.last {
+            self.probe.station_depart(now, Lane::NicIn(host as u32), frame.msg);
             // Message fully assembled: hand to destination component queue.
             let to = self.msgs[frame.msg].to;
             self.comp_arrive(sched, now, to, frame.msg);
@@ -747,6 +837,7 @@ impl<'a> World<'a> {
             }
         }
         let svc = self.comp_service(comp, msg);
+        self.probe.station_arrive(now, lane_of(comp), msg, svc);
         let st = match comp {
             CompId::Manager => &mut self.manager_st,
             CompId::Storage(s) => &mut self.storage_st[s],
@@ -767,6 +858,7 @@ impl<'a> World<'a> {
         if let Some(t) = next {
             sched.at(t, Ev::CompDone(comp));
         }
+        self.probe.station_depart(now, lane_of(comp), msg);
         // A service that was in flight when its node crashed completes
         // without effect (the crash drained the rest of the queue, so
         // `next` is None and the station idles forever).
@@ -935,6 +1027,7 @@ impl<'a> World<'a> {
                 if !self.cfg.faults.is_empty() && !self.settle_chunk(sched, op, chunk, attempt) {
                     return;
                 }
+                self.probe.chunk_settle(now, op, chunk, attempt);
                 self.ops[op].done += 1;
                 if self.ops[op].next < self.ops[op].n_chunks {
                     self.issue_next_chunk(sched, now, op);
@@ -1053,6 +1146,7 @@ impl<'a> World<'a> {
         if self.op_failed[op] {
             return; // failed mid-burst: the window loop keeps calling
         }
+        self.probe.chunk_issue(now, op, chunk, attempt);
         let faulty = !self.cfg.faults.is_empty();
         let size = self.ops[op].chunk_bytes(chunk, self.cfg.chunk_size);
         let c = self.ops[op].client;
@@ -1210,6 +1304,7 @@ impl<'a> World<'a> {
         }
         self.op_failed[op] = true;
         self.unrecoverable_ops += 1;
+        self.probe.op_abandoned(now, op);
         let stale: Vec<u32> = self
             .pending_chunks
             .range((op, 0)..=(op, u32::MAX))
@@ -1243,6 +1338,7 @@ impl<'a> World<'a> {
 
     /// A whole-file operation completed at the client.
     fn op_finished(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, op: OpId) {
+        self.probe.op_end(now, op);
         let o = &self.ops[op];
         self.op_records.push(OpRecord {
             client: o.client,
@@ -1290,10 +1386,12 @@ impl<'a> World<'a> {
             payload: Payload::AppIssue { op },
             local: true,
         });
+        self.probe.msg(msg_id, MsgTag::ctrl("AppIssue", op));
+        self.probe.op_start(now, op, task, client, kind == OpKind::Write, size.as_u64());
         self.comp_arrive(sched, now, CompId::Client(client), msg_id);
     }
 
-    fn finish_report(mut self, end: SimTime, events: u64, events_cancelled: u64) -> SimReport {
+    fn finish_report(&mut self, end: SimTime, events: u64, events_cancelled: u64) -> SimReport {
         for st in self.nic_out.iter_mut() {
             st.finish(end);
         }
@@ -1328,14 +1426,21 @@ impl<'a> World<'a> {
                 .nic_out
                 .iter()
                 .zip(self.nic_in.iter())
-                .map(|(o, i)| (o.stats.mean_qlen(end), i.stats().mean_qlen(end)))
+                .zip(self.nic_in_pacing_overcount.iter())
+                .map(|((o, i), &oc)| {
+                    // In-NIC depth under bulk aggregation: subtract the
+                    // analytic pacing over-count so the reported mean is
+                    // the per-frame path's (see the field doc and
+                    // `model/report.rs`).
+                    (o.stats.mean_qlen(end), i.stats().mean_qlen_corrected(end, oc))
+                })
                 .collect(),
         };
         SimReport {
             config_label: self.cfg.label.clone(),
             turnaround: end,
-            ops: self.op_records,
-            tasks: self.task_records,
+            ops: std::mem::take(&mut self.op_records),
+            tasks: std::mem::take(&mut self.task_records),
             net_bytes: Bytes(self.net_bytes),
             net_frames: self.net_frames,
             stored: self.stored.iter().map(|&b| Bytes(b)).collect(),
@@ -1355,7 +1460,7 @@ impl<'a> World<'a> {
     }
 }
 
-impl<'a> SimState for World<'a> {
+impl<'a, P: Probe> SimState for World<'a, P> {
     type Ev = Ev;
 
     fn handle(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, ev: Ev) {
@@ -1389,14 +1494,47 @@ pub fn simulate(wl: &Workload, cfg: &Config, plat: &Platform) -> SimReport {
 }
 
 /// Run one simulation at an explicit fidelity (the testbed uses
-/// `Fidelity::detailed(seed)` per trial).
+/// `Fidelity::detailed(seed)` per trial). This is the untraced path: the
+/// [`NoopProbe`]'s empty inline hooks monomorphize away, so it is the
+/// exact event sequence — and the exact report, bit for bit — of the
+/// engine before the probe existed (pinned by
+/// `prop_noop_probe_and_recorder_are_bit_identical`).
 pub fn simulate_fid(wl: &Workload, cfg: &Config, plat: &Platform, fid: Fidelity) -> SimReport {
+    run_sim(wl, cfg, plat, fid, NoopProbe).0
+}
+
+/// Run one simulation with the flight recorder attached and return the
+/// finished recording alongside the report. Recording cannot perturb the
+/// prediction — probes observe, they never feed back — so the report is
+/// identical to [`simulate_fid`]'s.
+pub fn simulate_traced(
+    wl: &Workload,
+    cfg: &Config,
+    plat: &Platform,
+    fid: Fidelity,
+) -> (SimReport, Recorder) {
+    let (report, mut rec) = run_sim(wl, cfg, plat, fid, Recorder::new());
+    rec.finish(report.turnaround);
+    (report, rec)
+}
+
+/// The engine entry point, generic over the probe: validate, arm the
+/// fault schedule, release the initial tasks, run to completion, and
+/// hand back the report plus the probe (so recording probes can be
+/// harvested).
+fn run_sim<P: Probe>(
+    wl: &Workload,
+    cfg: &Config,
+    plat: &Platform,
+    fid: Fidelity,
+    probe: P,
+) -> (SimReport, P) {
     cfg.validate().unwrap_or_else(|e| panic!("invalid config: {e}"));
     plat.validate().unwrap_or_else(|e| panic!("invalid platform: {e}"));
     wl.validate().unwrap_or_else(|e| panic!("invalid workload: {e}"));
 
     let stagger = fid.stagger_mean;
-    let mut sim = Simulation::new(World::new(wl, cfg, plat, fid));
+    let mut sim = Simulation::new(World::with_probe(wl, cfg, plat, fid, probe));
     // Pre-size the event arena past the initial burst so the frame-path
     // hot loop runs entirely on recycled slots.
     sim.sched.reserve(256 + wl.tasks.len() * 4);
@@ -1439,5 +1577,7 @@ pub fn simulate_fid(wl: &Workload, cfg: &Config, plat: &Platform, fid: Fidelity)
             cfg.label
         );
     }
-    sim.state.finish_report(end, events, cancelled)
+    let mut state = sim.state;
+    let report = state.finish_report(end, events, cancelled);
+    (report, state.probe)
 }

@@ -42,7 +42,7 @@ pub mod report;
 pub use config::{Config, Placement};
 pub use faults::{Crash, FaultPlan, LinkLoss, Straggler};
 pub use placement::{AllocId, GroupId, PlacementArena, RefPlacement};
-pub use engine::{simulate, simulate_fid};
+pub use engine::{simulate, simulate_fid, simulate_traced};
 pub use energy::PowerModel;
 pub use fidelity::Fidelity;
 pub use platform::{DiskKind, Platform};

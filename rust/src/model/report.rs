@@ -46,9 +46,12 @@ pub struct UtilReport {
     /// Trains are unit-weighted and intra-train waiting is accounted
     /// analytically (see `sim::station`), so under bulk aggregation these
     /// integrals match the per-frame path exactly at uncontended stations
-    /// (property-tested); at a backlogged in-NIC a queued train counts all
-    /// its frames as waiting while the per-frame path still paces them at
-    /// the sender, so depths can read higher there (see ROADMAP follow-ons).
+    /// (property-tested). At a *backlogged* in-NIC a queued train posts
+    /// all its frames at once while the per-frame path still paces them
+    /// in at the sender; the engine accumulates that analytic excess
+    /// (`unit · u(u−1)/2` per busy train arrival) and subtracts it here
+    /// (`StationStats::mean_qlen_corrected`), so the reported in-NIC
+    /// depth is the paced one in both modes.
     pub nic_qlen: Vec<(f64, f64)>,
 }
 
@@ -113,14 +116,19 @@ impl SimReport {
     }
 
     /// Makespan of one stage: last task end − first task start.
+    /// Single-pass fold — the bench runner calls this per cell, so it
+    /// must not allocate.
     pub fn stage_time(&self, stage: u32) -> SimTime {
-        let xs: Vec<&TaskRecord> = self.tasks.iter().filter(|t| t.stage == stage).collect();
-        if xs.is_empty() {
-            return SimTime::ZERO;
+        let (start, end) = self
+            .tasks
+            .iter()
+            .filter(|t| t.stage == stage)
+            .fold((SimTime::MAX, SimTime::ZERO), |(s, e), t| (s.min(t.start), e.max(t.end)));
+        if start > end {
+            SimTime::ZERO // no tasks in this stage
+        } else {
+            end - start
         }
-        let start = xs.iter().map(|t| t.start).min().unwrap();
-        let end = xs.iter().map(|t| t.end).max().unwrap();
-        end - start
     }
 
     pub fn n_stages(&self) -> u32 {
@@ -137,18 +145,18 @@ impl SimReport {
         self.stored.iter().copied().max().unwrap_or(Bytes::ZERO)
     }
 
-    /// Mean operation latency for reads or writes.
+    /// Mean operation latency for reads or writes. Single-pass fold —
+    /// called per cell in the bench runner, so it must not allocate.
     pub fn mean_op_latency(&self, writes: bool) -> SimTime {
-        let xs: Vec<u64> = self
+        let (sum, n) = self
             .ops
             .iter()
             .filter(|o| o.is_write == writes)
-            .map(|o| o.latency().as_ns())
-            .collect();
-        if xs.is_empty() {
+            .fold((0u64, 0u64), |(s, n), o| (s + o.latency().as_ns(), n + 1));
+        if n == 0 {
             SimTime::ZERO
         } else {
-            SimTime(xs.iter().sum::<u64>() / xs.len() as u64)
+            SimTime(sum / n)
         }
     }
 }

@@ -16,6 +16,29 @@ use std::sync::{Arc, Mutex};
 
 pub const DEFAULT_SHARDS: usize = 16;
 
+/// Monotonic per-shard probe counters. Each shard mutates its own copy
+/// under the shard lock it already holds (no extra atomics on the hot
+/// path); [`ShardedLru::counters`] sums them for the serving-tier stats
+/// line.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheCounters {
+    /// Probes that found their fingerprint in the shard.
+    pub hits: u64,
+    /// Probes that found nothing.
+    pub misses: u64,
+    /// Entries displaced to make room (refreshing an existing key never
+    /// counts — it evicts nothing).
+    pub evictions: u64,
+}
+
+impl CacheCounters {
+    fn add(&mut self, o: &CacheCounters) {
+        self.hits += o.hits;
+        self.misses += o.misses;
+        self.evictions += o.evictions;
+    }
+}
+
 /// Vacant link slot.
 const NIL: u32 = u32::MAX;
 
@@ -36,11 +59,19 @@ struct Shard {
     head: u32,
     /// Least recently used — the eviction victim (NIL when empty).
     tail: u32,
+    stats: CacheCounters,
 }
 
 impl Default for Shard {
     fn default() -> Shard {
-        Shard { map: HashMap::new(), nodes: Vec::new(), free: Vec::new(), head: NIL, tail: NIL }
+        Shard {
+            map: HashMap::new(),
+            nodes: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            stats: CacheCounters::default(),
+        }
     }
 }
 
@@ -103,6 +134,7 @@ impl Shard {
         let n = self.nodes[i as usize].take().expect("tail slot is occupied");
         self.map.remove(&n.fp);
         self.free.push(i);
+        self.stats.evictions += 1;
     }
 
     /// Place a brand-new node at the MRU position, reusing a free slot.
@@ -157,7 +189,14 @@ impl ShardedLru {
 
     pub fn get(&self, fp: &Fingerprint) -> Option<Arc<Prediction>> {
         let mut s = self.shard(fp);
-        let i = *s.map.get(fp)?;
+        let i = match s.map.get(fp) {
+            Some(&i) => i,
+            None => {
+                s.stats.misses += 1;
+                return None;
+            }
+        };
+        s.stats.hits += 1;
         s.touch(i);
         Some(s.node(i).value.clone())
     }
@@ -179,6 +218,15 @@ impl ShardedLru {
 
     pub fn len(&self) -> usize {
         self.shards.iter().map(|s| s.lock().unwrap_or_else(|e| e.into_inner()).map.len()).sum()
+    }
+
+    /// Sum of the per-shard probe counters (hit/miss/evict).
+    pub fn counters(&self) -> CacheCounters {
+        let mut total = CacheCounters::default();
+        for s in &self.shards {
+            total.add(&s.lock().unwrap_or_else(|e| e.into_inner()).stats);
+        }
+        total
     }
 
     pub fn is_empty(&self) -> bool {
@@ -270,6 +318,22 @@ mod tests {
         assert!(c.get(&fp(2)).is_some());
         assert!(c.get(&fp(5)).is_some());
         assert!(c.get(&fp(6)).is_some());
+    }
+
+    #[test]
+    fn counters_track_hits_misses_and_evictions() {
+        let c = ShardedLru::with_shards(2, 1);
+        let p = pred();
+        assert_eq!(c.counters(), CacheCounters::default());
+        assert!(c.get(&fp(1)).is_none()); // miss
+        c.insert(fp(1), p.clone());
+        c.insert(fp(2), p.clone());
+        assert!(c.get(&fp(1)).is_some()); // hit
+        c.insert(fp(2), p.clone()); // refresh: no eviction
+        c.insert(fp(3), p.clone()); // evicts 2 (LRU after 1 was touched)
+        assert!(c.get(&fp(2)).is_none()); // miss
+        let s = c.counters();
+        assert_eq!(s, CacheCounters { hits: 1, misses: 2, evictions: 1 });
     }
 
     #[test]

@@ -46,6 +46,7 @@ pub mod fingerprint;
 pub mod store;
 pub mod surrogate;
 
+pub use cache::CacheCounters;
 pub use fingerprint::{fingerprint, Fingerprint};
 pub use store::{DiskStore, FailureStats, StoredAnswer};
 pub use surrogate::{Estimate, GridCoord, SurrogateGrid};
@@ -245,6 +246,20 @@ pub struct StatsSnapshot {
     pub disk_hits: u64,
     /// Surrogate interpolations that passed their error gate.
     pub surrogate_answers: u64,
+    /// Raw shard-level cache probes (hit/miss/evict), summed across
+    /// shards. Distinct from `hits`/`misses` above: those classify served
+    /// answers, these count every cache probe — including the
+    /// single-flight double-check under the inflight lock — so
+    /// `cache.hits >= hits`.
+    pub cache: CacheCounters,
+}
+
+impl StatsSnapshot {
+    /// Answers backed by a real run (any source) — the complement of
+    /// [`surrogate_answers`](StatsSnapshot::surrogate_answers).
+    pub fn exact_answers(&self) -> u64 {
+        self.hits + self.misses + self.disk_hits + self.dedup_waits
+    }
 }
 
 /// Per-fingerprint single-flight rendezvous.
@@ -314,6 +329,7 @@ impl Service {
             dedup_waits: self.counters.dedup_waits.load(Ordering::Relaxed),
             disk_hits: self.counters.disk_hits.load(Ordering::Relaxed),
             surrogate_answers: self.counters.surrogate_answers.load(Ordering::Relaxed),
+            cache: self.cache.counters(),
         }
     }
 
@@ -561,6 +577,10 @@ mod tests {
         assert_eq!(s.misses, 1);
         assert_eq!(s.hits, 1);
         assert_eq!(svc.cache_len(), 1);
+        assert!(s.cache.hits >= s.hits, "shard probes include every served hit");
+        assert!(s.cache.misses >= s.misses, "the one simulation probed and missed first");
+        assert_eq!(s.cache.evictions, 0);
+        assert_eq!(s.exact_answers(), 2);
     }
 
     #[test]

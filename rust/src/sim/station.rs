@@ -110,6 +110,20 @@ impl StationStats {
             self.qlen_ns as f64 / horizon.as_ns() as f64
         }
     }
+
+    /// [`StationStats::mean_qlen`] with an externally accounted
+    /// over-count (ns·units) subtracted from the queue integral first.
+    /// The model engine uses this to report analytically-paced in-NIC
+    /// depths under bulk frame aggregation, where a whole train posts its
+    /// frame-units at once instead of pacing them in (the integral itself
+    /// stays raw so the lockstep Ref* oracles keep matching bit-for-bit).
+    pub fn mean_qlen_corrected(&self, horizon: SimTime, overcount_ns: u128) -> f64 {
+        if horizon.as_ns() == 0 {
+            0.0
+        } else {
+            self.qlen_ns.saturating_sub(overcount_ns) as f64 / horizon.as_ns() as f64
+        }
+    }
 }
 
 /// A waiting entry: the item, its service time, its unit count, and the

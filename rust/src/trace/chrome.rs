@@ -1,0 +1,192 @@
+//! Chrome trace-event rendering of a recorded run (loadable in
+//! `chrome://tracing` and Perfetto).
+//!
+//! Output is the plain trace-event *array* format: `[` … `]` with one
+//! complete event per line. Every event is a flat object — nested `args`
+//! are flattened to `arg_*` top-level keys — so each line (brackets and
+//! trailing commas stripped) round-trips [`crate::util::jsonw::parse_flat`],
+//! which the schema test exploits. Timestamps and durations are in
+//! microseconds, per the trace-event spec.
+//!
+//! Process/thread layout: pid 1 is the application (one tid per client,
+//! carrying task phases, ops, chunk attempts, and fault-recovery spans);
+//! pid 2 is the station fabric (one tid per lane, in [`Lane`] order,
+//! carrying residency spans tagged with their queue-wait split).
+
+use crate::trace::recorder::Recorder;
+use crate::trace::{Lane, MsgTag};
+use crate::util::jsonw::Json;
+use std::collections::BTreeMap;
+
+const PID_APP: u64 = 1;
+const PID_STATIONS: u64 = 2;
+
+fn us(ns: u64) -> f64 {
+    ns as f64 / 1000.0
+}
+
+/// One complete-span event (`ph: "X"`) as a flat single-line object.
+fn span(name: &str, cat: &str, pid: u64, tid: u64, start: u64, end: u64) -> Json {
+    Json::obj()
+        .set("name", name)
+        .set("cat", cat)
+        .set("ph", "X")
+        .set("ts", us(start))
+        .set("dur", us(end.saturating_sub(start)))
+        .set("pid", pid)
+        .set("tid", tid)
+}
+
+/// Render the full span log as Chrome trace-event JSON.
+pub fn chrome_trace(rec: &Recorder) -> String {
+    let mut events: Vec<String> = Vec::new();
+
+    for p in &rec.phases {
+        let e = span(p.phase.as_str(), "phase", PID_APP, p.client as u64, p.start, p.end)
+            .set("arg_task", p.task as u64);
+        events.push(e.render_compact());
+    }
+
+    for o in &rec.ops {
+        let name = if o.is_write { "write-op" } else { "read-op" };
+        let e = span(name, "op", PID_APP, o.client as u64, o.start, o.end)
+            .set("arg_op", o.op as u64)
+            .set("arg_task", o.task as u64)
+            .set("arg_bytes", o.bytes)
+            .set("arg_abandoned", o.abandoned);
+        events.push(e.render_compact());
+    }
+
+    for a in &rec.attempts {
+        let client = rec.ops[a.op].client as u64;
+        let e = span("chunk-attempt", "chunk", PID_APP, client, a.issue, a.settle)
+            .set("arg_op", a.op as u64)
+            .set("arg_chunk", a.chunk as u64)
+            .set("arg_attempt", a.attempt as u64);
+        events.push(e.render_compact());
+    }
+
+    for f in &rec.faults {
+        let client = rec.ops[f.op].client as u64;
+        let e = span("fault-recovery", "fault", PID_APP, client, f.start, f.end)
+            .set("arg_op", f.op as u64)
+            .set("arg_chunk", f.chunk as u64);
+        events.push(e.render_compact());
+    }
+
+    // Stable per-lane thread ids, in Lane order.
+    let mut lane_tid: BTreeMap<Lane, u64> = BTreeMap::new();
+    for v in &rec.visits {
+        let next = lane_tid.len() as u64;
+        lane_tid.entry(v.lane).or_insert(next);
+    }
+    for v in &rec.visits {
+        let tag = rec.tags.get(v.msg).copied().unwrap_or_else(MsgTag::default);
+        let e = span(tag.kind, "station", PID_STATIONS, lane_tid[&v.lane], v.arrive, v.depart)
+            .set("arg_lane", v.lane.label())
+            .set("arg_msg", v.msg as u64)
+            .set("arg_ctrl", tag.ctrl)
+            .set("arg_wait_us", us(v.wait()))
+            .set("arg_svc_us", us(v.svc));
+        events.push(e.render_compact());
+    }
+
+    let mut out = String::with_capacity(events.len() * 96 + 4);
+    out.push_str("[\n");
+    for (i, e) in events.iter().enumerate() {
+        out.push_str(e);
+        if i + 1 < events.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str("]\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Probe, TaskPhase};
+    use crate::util::jsonw::{parse_flat, Scalar};
+    use crate::util::units::SimTime;
+
+    fn t(ns: u64) -> SimTime {
+        SimTime::from_ns(ns)
+    }
+
+    fn sample() -> Recorder {
+        let mut r = Recorder::new();
+        r.task_phase(t(0), 0, 0, TaskPhase::Write);
+        r.op_start(t(0), 0, 0, 0, true, 4096);
+        r.msg(0, MsgTag::data("ChunkPut", 0, 0, 0));
+        r.chunk_issue(t(5), 0, 0, 0);
+        r.station_arrive(t(5), Lane::NicOut(0), 0, t(10));
+        r.station_depart(t(15), Lane::NicOut(0), 0);
+        r.station_arrive(t(15), Lane::Storage(1), 0, t(40));
+        r.station_depart(t(80), Lane::Storage(1), 0);
+        r.chunk_settle(t(100), 0, 0, 0);
+        r.op_end(t(110), 0);
+        r.task_phase(t(110), 0, 0, TaskPhase::Done);
+        r.finish(t(110));
+        r
+    }
+
+    /// The schema contract: every line of the array body is one flat
+    /// object `parse_flat` accepts, carrying the required trace-event
+    /// fields with the right types.
+    #[test]
+    fn every_event_line_roundtrips_parse_flat() {
+        let text = chrome_trace(&sample());
+        let body: Vec<&str> = text
+            .lines()
+            .filter(|l| !l.is_empty() && *l != "[" && *l != "]")
+            .collect();
+        assert_eq!(body.len(), 2 + 1 + 1 + 2, "phase, op, attempt, two visits");
+        for line in body {
+            let kv = parse_flat(line.trim_end_matches(',')).unwrap_or_else(|e| {
+                panic!("line is not a flat object: {e}\n{line}");
+            });
+            let get = |k: &str| kv.iter().find(|(key, _)| key == k).map(|(_, v)| v.clone());
+            assert!(matches!(get("name"), Some(Scalar::Str(_))));
+            assert_eq!(get("ph"), Some(Scalar::Str("X".into())));
+            assert!(matches!(get("ts"), Some(Scalar::Num(_))));
+            assert!(matches!(get("dur"), Some(Scalar::Num(d)) if d >= 0.0));
+            assert!(matches!(get("pid"), Some(Scalar::Num(_))));
+            assert!(matches!(get("tid"), Some(Scalar::Num(_))));
+        }
+    }
+
+    #[test]
+    fn timestamps_are_microseconds_and_waits_surface() {
+        let text = chrome_trace(&sample());
+        // Storage visit: arrive 15ns, svc 40ns, depart 80ns → wait 25ns.
+        let line = text.lines().find(|l| l.contains("storage:1")).expect("storage visit event");
+        let kv = parse_flat(line.trim_end_matches(',')).unwrap();
+        let get = |k: &str| {
+            kv.iter()
+                .find_map(|(key, v)| match v {
+                    Scalar::Num(x) if key == k => Some(*x),
+                    _ => None,
+                })
+                .unwrap_or_else(|| panic!("missing numeric {k}"))
+        };
+        assert!((get("ts") - 0.015).abs() < 1e-12);
+        assert!((get("dur") - 0.065).abs() < 1e-12);
+        assert!((get("arg_svc_us") - 0.040).abs() < 1e-12);
+        assert!((get("arg_wait_us") - 0.025).abs() < 1e-12);
+    }
+
+    #[test]
+    fn whole_output_is_a_json_array() {
+        let text = chrome_trace(&sample());
+        assert!(text.starts_with("[\n"));
+        assert!(text.ends_with("]\n"));
+        // Commas separate events (none after the last).
+        let body: Vec<&str> =
+            text.lines().filter(|l| !l.is_empty() && *l != "[" && *l != "]").collect();
+        for (i, l) in body.iter().enumerate() {
+            assert_eq!(l.ends_with(','), i + 1 < body.len(), "comma placement at line {i}");
+        }
+    }
+}

@@ -1,0 +1,363 @@
+//! Critical-path extraction: walk the span chain that ends at turnaround
+//! backwards and attribute every nanosecond of `[0, turnaround]` to a
+//! component [`Class`].
+//!
+//! The walk is a covering-span recursion. At the top level the task
+//! intervals (from the recorder's phase spans, so abandoned tasks count
+//! too) cover the timeline; gaps with no active task are `Idle`. Inside
+//! a task, its phase spans tile the interval by construction: `Compute`
+//! is client compute outright, while `Read`/`Write` descend into the
+//! task's op sub-spans — station residencies (split wait vs service) and
+//! fault-recovery spans. At each step the walker picks the sub-span
+//! covering the current instant that extends furthest (ties to the
+//! latest start) and clips to it; an uncovered gap below a span is
+//! attributed to that span's class, so e.g. network propagation between
+//! an out-NIC departure and the matching in-NIC arrival folds into the
+//! out-NIC class. Every step strictly decreases the cursor and every
+//! emitted segment abuts the previous one, so the attribution tiles the
+//! window *exactly* — the unit tests assert the invariant with `==`, and
+//! `prop_noop_probe_and_recorder_are_bit_identical` re-checks it on
+//! random workloads.
+
+use crate::trace::recorder::Recorder;
+use crate::trace::{Class, TaskPhase, N_CLASSES, NO_OP};
+use std::collections::HashMap;
+
+/// One attributed segment of the critical path. Segments are ascending,
+/// contiguous, and tile `[0, turnaround]` exactly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Segment {
+    pub start: u64,
+    pub end: u64,
+    pub class: Class,
+    /// Queue-wait portion of a station residency (vs service / other).
+    pub wait: bool,
+}
+
+/// The attributed critical path of one run.
+#[derive(Clone, Debug, Default)]
+pub struct Attribution {
+    pub turnaround: u64,
+    pub segments: Vec<Segment>,
+}
+
+impl Attribution {
+    /// Nanoseconds attributed to each class (indexed by [`Class::index`]).
+    pub fn totals(&self) -> [u64; N_CLASSES] {
+        self.totals_in(0, self.turnaround)
+    }
+
+    /// Queue-wait nanoseconds per class.
+    pub fn waits(&self) -> [u64; N_CLASSES] {
+        let mut acc = [0u64; N_CLASSES];
+        for s in &self.segments {
+            if s.wait {
+                acc[s.class.index()] += s.end - s.start;
+            }
+        }
+        acc
+    }
+
+    /// Per-class overlap with `[lo, hi)` — the per-stage breakdown
+    /// clips segments against each stage's makespan window.
+    pub fn totals_in(&self, lo: u64, hi: u64) -> [u64; N_CLASSES] {
+        let mut acc = [0u64; N_CLASSES];
+        for s in &self.segments {
+            let (a, b) = (s.start.max(lo), s.end.min(hi));
+            if b > a {
+                acc[s.class.index()] += b - a;
+            }
+        }
+        acc
+    }
+
+    /// The tiling invariant: segments are contiguous from 0 to
+    /// turnaround, so the class totals sum to turnaround exactly.
+    pub fn tiles_exactly(&self) -> bool {
+        let mut cursor = 0u64;
+        for s in &self.segments {
+            if s.start != cursor || s.end <= s.start {
+                return false;
+            }
+            cursor = s.end;
+        }
+        cursor == self.turnaround
+    }
+}
+
+/// A sub-span candidate inside an op walk.
+#[derive(Clone, Copy, Debug)]
+struct Sub {
+    start: u64,
+    end: u64,
+    class: Class,
+    wait: bool,
+}
+
+/// Extract and attribute the critical path from a finished recording
+/// (call [`Recorder::finish`] first so turnaround and stalled spans are
+/// closed).
+pub fn critical_path(rec: &Recorder) -> Attribution {
+    // Task intervals and per-task phase lists, from the phase log (pushed
+    // chronologically per task, so each list is start-sorted).
+    let mut phases: HashMap<usize, Vec<usize>> = HashMap::new();
+    let mut intervals: Vec<(usize, u64, u64)> = Vec::new();
+    let mut seen: HashMap<usize, usize> = HashMap::new();
+    for (i, p) in rec.phases.iter().enumerate() {
+        phases.entry(p.task).or_default().push(i);
+        match seen.get(&p.task) {
+            Some(&slot) => {
+                let iv = &mut intervals[slot];
+                iv.1 = iv.1.min(p.start);
+                iv.2 = iv.2.max(p.end);
+            }
+            None => {
+                seen.insert(p.task, intervals.len());
+                intervals.push((p.task, p.start, p.end));
+            }
+        }
+    }
+
+    // Op sub-spans, bucketed by (task, is_write) so a read phase only
+    // walks read-op activity and a write phase only write-op activity.
+    let mut subs: HashMap<(usize, bool), Vec<Sub>> = HashMap::new();
+    for v in &rec.visits {
+        let tag = match rec.tags.get(v.msg) {
+            Some(t) if t.op != NO_OP => *t,
+            _ => continue, // pure-load messages ride no op's chain
+        };
+        let o = &rec.ops[tag.op];
+        let bucket = subs.entry((o.task, o.is_write)).or_default();
+        let class = v.lane.class();
+        let mid = v.svc_start();
+        if mid > v.arrive {
+            bucket.push(Sub { start: v.arrive, end: mid, class, wait: true });
+        }
+        if v.depart > mid {
+            bucket.push(Sub { start: mid, end: v.depart, class, wait: false });
+        }
+    }
+    for f in &rec.faults {
+        let o = &rec.ops[f.op];
+        if f.end > f.start {
+            subs.entry((o.task, o.is_write)).or_default().push(Sub {
+                start: f.start,
+                end: f.end,
+                class: Class::FaultRecovery,
+                wait: false,
+            });
+        }
+    }
+
+    // Walk backwards from turnaround, emitting segments in descending
+    // order (reversed at the end).
+    let turn = rec.turnaround;
+    let mut segs: Vec<Segment> = Vec::new();
+    let mut t = turn;
+    while t > 0 {
+        let best = intervals
+            .iter()
+            .filter(|iv| iv.1 < t)
+            .max_by_key(|iv| (iv.2.min(t), iv.1));
+        match best {
+            None => {
+                push(&mut segs, 0, t, Class::Idle, false);
+                t = 0;
+            }
+            Some(&(task, start, end)) if end >= t => {
+                attribute_task(rec, &phases, &subs, task, start, t, &mut segs);
+                t = start;
+            }
+            Some(&(_, _, end)) => {
+                push(&mut segs, end, t, Class::Idle, false);
+                t = end;
+            }
+        }
+    }
+    segs.reverse();
+    let attr = Attribution { turnaround: turn, segments: segs };
+    debug_assert!(attr.tiles_exactly(), "critical path must tile [0, turnaround]");
+    attr
+}
+
+/// Attribute `[lo, hi]` of one task by walking its phase spans backwards.
+fn attribute_task(
+    rec: &Recorder,
+    phases: &HashMap<usize, Vec<usize>>,
+    subs: &HashMap<(usize, bool), Vec<Sub>>,
+    task: usize,
+    lo: u64,
+    hi: u64,
+    segs: &mut Vec<Segment>,
+) {
+    static EMPTY: Vec<usize> = Vec::new();
+    let list = phases.get(&task).unwrap_or(&EMPTY);
+    let mut t = hi;
+    for &pi in list.iter().rev() {
+        if t <= lo {
+            return;
+        }
+        let p = &rec.phases[pi];
+        if p.start >= t {
+            continue;
+        }
+        let phi = p.end.min(t);
+        let plo = p.start.max(lo);
+        if t > phi {
+            // Slack between phases (never happens for the contiguous
+            // driver, but keeps the tiling total): the client holds it.
+            push(segs, phi, t, Class::ClientCompute, false);
+        }
+        if phi > plo {
+            match p.phase {
+                TaskPhase::Compute => push(segs, plo, phi, Class::ClientCompute, false),
+                TaskPhase::Read => {
+                    attribute_interval(subs.get(&(task, false)), plo, phi, segs)
+                }
+                TaskPhase::Write | TaskPhase::Done => {
+                    attribute_interval(subs.get(&(task, true)), plo, phi, segs)
+                }
+            }
+        }
+        t = plo;
+    }
+    if t > lo {
+        push(segs, lo, t, Class::ClientCompute, false);
+    }
+}
+
+/// The within-op covering-span walk over `[a, b]`.
+fn attribute_interval(subs: Option<&Vec<Sub>>, a: u64, b: u64, segs: &mut Vec<Segment>) {
+    static NONE: Vec<Sub> = Vec::new();
+    let subs = subs.unwrap_or(&NONE);
+    let mut t = b;
+    while t > a {
+        let best = subs
+            .iter()
+            .filter(|s| s.start < t)
+            .max_by_key(|s| (s.end.min(t), s.start));
+        match best {
+            None => {
+                // No recorded activity at all below t: the client is
+                // orchestrating (issuing the op, processing locally).
+                push(segs, a, t, Class::ClientCompute, false);
+                t = a;
+            }
+            Some(s) if s.end >= t => {
+                let cut = s.start.max(a);
+                push(segs, cut, t, s.class, s.wait);
+                t = cut;
+            }
+            Some(s) => {
+                // Gap above the latest-ending span: the time directly
+                // after that activity (e.g. wire propagation after an
+                // out-NIC departure) is charged to its class.
+                let cut = s.end.max(a);
+                push(segs, cut, t, s.class, false);
+                t = cut;
+            }
+        }
+    }
+}
+
+fn push(segs: &mut Vec<Segment>, start: u64, end: u64, class: Class, wait: bool) {
+    debug_assert!(start < end, "empty segment [{start}, {end})");
+    debug_assert!(
+        segs.last().map(|s| s.start == end).unwrap_or(true),
+        "segments must abut (descending build)"
+    );
+    segs.push(Segment { start, end, class, wait });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Lane, MsgTag, Probe, TaskPhase};
+    use crate::util::units::SimTime;
+
+    fn t(ns: u64) -> SimTime {
+        SimTime::from_ns(ns)
+    }
+
+    /// Hand-built run: one task, read [0,100], compute [100,200],
+    /// write [200,400]; the write rides one storage visit [210,300]
+    /// (svc 40) and one out-NIC visit [200,210] (svc 10).
+    fn tiny_recording() -> Recorder {
+        let mut r = Recorder::new();
+        r.task_phase(t(0), 0, 0, TaskPhase::Read);
+        r.op_start(t(0), 0, 0, 0, false, 64);
+        r.op_end(t(100), 0);
+        r.task_phase(t(100), 0, 0, TaskPhase::Compute);
+        r.task_phase(t(200), 0, 0, TaskPhase::Write);
+        r.op_start(t(200), 1, 0, 0, true, 64);
+        r.msg(0, MsgTag::data("ChunkPut", 1, 0, 0));
+        r.station_arrive(t(200), Lane::NicOut(0), 0, t(10));
+        r.station_depart(t(210), Lane::NicOut(0), 0);
+        r.station_arrive(t(210), Lane::Storage(0), 0, t(40));
+        r.station_depart(t(300), Lane::Storage(0), 0);
+        r.op_end(t(400), 1);
+        r.task_phase(t(400), 0, 0, TaskPhase::Done);
+        r.finish(t(400));
+        r
+    }
+
+    #[test]
+    fn attribution_tiles_and_classifies() {
+        let attr = critical_path(&tiny_recording());
+        assert!(attr.tiles_exactly(), "segments: {:?}", attr.segments);
+        let totals = attr.totals();
+        assert_eq!(totals.iter().sum::<u64>(), 400, "classes tile [0, turnaround]");
+        // Read phase had no recorded activity → client compute; compute
+        // phase → client compute; write: out-NIC 10, storage 90 (50 wait
+        // + 40 service), gap [300,400] charged to storage (preceding
+        // activity).
+        assert_eq!(totals[Class::ClientCompute.index()], 200);
+        assert_eq!(totals[Class::OutNic.index()], 10);
+        assert_eq!(totals[Class::Storage.index()], 190);
+        assert_eq!(totals[Class::Idle.index()], 0);
+        let waits = attr.waits();
+        assert_eq!(waits[Class::Storage.index()], 50, "queue-wait split survives the walk");
+    }
+
+    #[test]
+    fn idle_fills_gaps_with_no_active_task() {
+        let mut r = Recorder::new();
+        r.task_phase(t(100), 0, 0, TaskPhase::Read);
+        r.task_phase(t(150), 0, 0, TaskPhase::Done);
+        r.finish(t(300));
+        let attr = critical_path(&r);
+        assert!(attr.tiles_exactly());
+        let totals = attr.totals();
+        assert_eq!(totals[Class::Idle.index()], 250, "[0,100) and (150,300]");
+        assert_eq!(totals.iter().sum::<u64>(), 300);
+    }
+
+    #[test]
+    fn fault_spans_win_the_covering_walk() {
+        let mut r = Recorder::new();
+        r.task_phase(t(0), 0, 0, TaskPhase::Write);
+        r.op_start(t(0), 0, 0, 0, true, 64);
+        r.chunk_issue(t(10), 0, 0, 0);
+        r.chunk_issue(t(510), 0, 0, 1); // fault span [10, 510]
+        r.chunk_settle(t(520), 0, 0, 1);
+        r.op_end(t(530), 0);
+        r.task_phase(t(530), 0, 0, TaskPhase::Done);
+        r.finish(t(530));
+        let attr = critical_path(&r);
+        assert!(attr.tiles_exactly());
+        // Retry window [10, 510] plus the trailing gap (510, 530] with no
+        // later span, which the walk charges to the preceding activity.
+        assert_eq!(attr.totals()[Class::FaultRecovery.index()], 520);
+    }
+
+    #[test]
+    fn per_window_totals_clip() {
+        let attr = critical_path(&tiny_recording());
+        let head = attr.totals_in(0, 100);
+        assert_eq!(head.iter().sum::<u64>(), 100);
+        assert_eq!(head[Class::ClientCompute.index()], 100);
+        let tail = attr.totals_in(250, 400);
+        assert_eq!(tail.iter().sum::<u64>(), 150);
+        assert_eq!(tail[Class::Storage.index()], 150);
+    }
+}

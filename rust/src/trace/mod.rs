@@ -1,0 +1,279 @@
+//! Flight recorder: zero-cost probe points through the simulation core.
+//!
+//! The model engine is generic over a [`Probe`] — a set of hook methods
+//! called at every semantically meaningful instant of a run: message
+//! creation, station arrivals/departures, whole-file operation and
+//! per-chunk-attempt lifecycles, task phase transitions. The default
+//! [`NoopProbe`] has empty bodies, so the monomorphized engine compiles
+//! the hooks away entirely: `simulate_fid` runs the exact event sequence
+//! it ran before this module existed (pinned bit-for-bit by
+//! `prop_noop_probe_and_recorder_are_bit_identical`, the same lockstep
+//! style as `RefFairStation`/`RefPlacement`).
+//!
+//! The [`Recorder`] probe assembles the hook stream into structured
+//! spans — op → chunk attempt (including fault retries and failovers) →
+//! per-station residency split into queue-wait vs service, plus manager
+//! control-message spans and windowed utilization series per station.
+//! On top of the span log, [`critical_path`] walks the dependency chain
+//! that ends at turnaround and attributes every nanosecond of
+//! `[0, turnaround]` to a component [`Class`] — the tiling is exact by
+//! construction, not within a tolerance. [`chrome_trace`] renders the
+//! span log as Chrome trace-event JSON (loadable in Perfetto), one flat
+//! object per line so each event round-trips `util::jsonw::parse_flat`.
+//!
+//! Dependency direction: `model` depends on `trace`, never the reverse —
+//! the probe vocabulary here is plain data ([`Lane`], [`MsgTag`],
+//! [`TaskPhase`]) that the engine maps its own types onto.
+
+mod chrome;
+mod critical;
+mod recorder;
+
+pub use chrome::chrome_trace;
+pub use critical::{critical_path, Attribution, Segment};
+pub use recorder::{AttemptSpan, FaultSpan, OpSpan, PhaseSpan, Recorder, StationVisit, UtilSeries};
+
+use crate::util::units::SimTime;
+
+/// Sentinel for "message belongs to no operation" (e.g. `MetaPing`).
+pub const NO_OP: usize = usize::MAX;
+
+/// One station queue somewhere in the modeled system. Plain data so the
+/// probe vocabulary stays independent of the engine's station types.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Lane {
+    /// Host `h`'s transmit NIC queue.
+    NicOut(u32),
+    /// Host `h`'s receive NIC queue.
+    NicIn(u32),
+    /// The metadata manager's service queue.
+    Manager,
+    /// Storage node `s`'s service queue.
+    Storage(u32),
+    /// Client `c`'s service queue.
+    Client(u32),
+}
+
+impl Lane {
+    /// The attribution class residency in this lane belongs to.
+    pub fn class(self) -> Class {
+        match self {
+            Lane::NicOut(_) => Class::OutNic,
+            Lane::NicIn(_) => Class::InNic,
+            Lane::Manager => Class::Manager,
+            Lane::Storage(_) => Class::Storage,
+            Lane::Client(_) => Class::ClientCompute,
+        }
+    }
+
+    /// Human-readable lane label (`out-nic:3`, `manager`, …).
+    pub fn label(self) -> String {
+        match self {
+            Lane::NicOut(h) => format!("out-nic:{h}"),
+            Lane::NicIn(h) => format!("in-nic:{h}"),
+            Lane::Manager => "manager".to_string(),
+            Lane::Storage(s) => format!("storage:{s}"),
+            Lane::Client(c) => format!("client:{c}"),
+        }
+    }
+}
+
+/// Component classes the critical path is attributed to. `Idle` absorbs
+/// wall-clock with no active task on the walked chain (delayed releases;
+/// zero on the paper workloads, which release everything at t=0), so the
+/// classes always tile `[0, turnaround]` exactly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Class {
+    ClientCompute,
+    OutNic,
+    InNic,
+    Storage,
+    Manager,
+    FaultRecovery,
+    Idle,
+}
+
+/// Number of attribution classes (`Class::ALL.len()`).
+pub const N_CLASSES: usize = 7;
+
+impl Class {
+    pub const ALL: [Class; N_CLASSES] = [
+        Class::ClientCompute,
+        Class::OutNic,
+        Class::InNic,
+        Class::Storage,
+        Class::Manager,
+        Class::FaultRecovery,
+        Class::Idle,
+    ];
+
+    /// Stable snake_case name (bench record keys, JSON output).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Class::ClientCompute => "client_compute",
+            Class::OutNic => "out_nic",
+            Class::InNic => "in_nic",
+            Class::Storage => "storage",
+            Class::Manager => "manager",
+            Class::FaultRecovery => "fault_recovery",
+            Class::Idle => "idle",
+        }
+    }
+
+    /// Dense index into `[T; N_CLASSES]` accumulators.
+    pub fn index(self) -> usize {
+        Class::ALL.iter().position(|&c| c == self).expect("class in ALL")
+    }
+}
+
+/// Per-task execution phase, as the driver reports it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum TaskPhase {
+    Read,
+    Compute,
+    Write,
+    /// Terminal marker: finished or abandoned. Never opens a span.
+    Done,
+}
+
+impl TaskPhase {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TaskPhase::Read => "read",
+            TaskPhase::Compute => "compute",
+            TaskPhase::Write => "write",
+            TaskPhase::Done => "done",
+        }
+    }
+}
+
+/// What a message is, attributed: the payload kind plus the operation /
+/// chunk / attempt it serves (control messages carry the op they belong
+/// to; pure-load messages like `MetaPing` carry [`NO_OP`]).
+#[derive(Clone, Copy, Debug)]
+pub struct MsgTag {
+    /// Stable payload-kind name (`ChunkPut`, `WriteAlloc`, …).
+    pub kind: &'static str,
+    /// Control-plane message (metadata round trips, acks) vs data chunk.
+    pub ctrl: bool,
+    pub op: usize,
+    pub chunk: u32,
+    pub attempt: u32,
+}
+
+impl MsgTag {
+    /// A control message belonging to `op` ([`NO_OP`] for pure load).
+    pub fn ctrl(kind: &'static str, op: usize) -> MsgTag {
+        MsgTag { kind, ctrl: true, op, chunk: u32::MAX, attempt: 0 }
+    }
+
+    /// A data-path message carrying one chunk attempt.
+    pub fn data(kind: &'static str, op: usize, chunk: u32, attempt: u32) -> MsgTag {
+        MsgTag { kind, ctrl: false, op, chunk, attempt }
+    }
+}
+
+impl Default for MsgTag {
+    fn default() -> MsgTag {
+        MsgTag::ctrl("?", NO_OP)
+    }
+}
+
+/// Probe points the simulation core reports into. Every method has an
+/// empty default body and is `#[inline(always)]`: a probe that overrides
+/// nothing (the [`NoopProbe`]) monomorphizes to zero instructions, so the
+/// untraced engine pays nothing — not a branch, not a load. Probes must
+/// never influence the simulation (they get `&mut self` only, no access
+/// to the world or scheduler), so recording cannot perturb a prediction.
+pub trait Probe {
+    /// A message was created (before any station sees it).
+    #[inline(always)]
+    fn msg(&mut self, _msg: usize, _tag: MsgTag) {}
+
+    /// A message (or frame train) joined a station queue. `svc` is the
+    /// service it will consume there; per-frame NIC paths report one
+    /// arrival per frame and the recorder accumulates the service.
+    #[inline(always)]
+    fn station_arrive(&mut self, _now: SimTime, _lane: Lane, _msg: usize, _svc: SimTime) {}
+
+    /// A message fully departed a station (its last frame, on NIC lanes).
+    #[inline(always)]
+    fn station_depart(&mut self, _now: SimTime, _lane: Lane, _msg: usize) {}
+
+    /// A whole-file operation was issued at a client.
+    #[inline(always)]
+    fn op_start(
+        &mut self,
+        _now: SimTime,
+        _op: usize,
+        _task: usize,
+        _client: usize,
+        _is_write: bool,
+        _bytes: u64,
+    ) {
+    }
+
+    /// A whole-file operation completed.
+    #[inline(always)]
+    fn op_end(&mut self, _now: SimTime, _op: usize) {}
+
+    /// A whole-file operation was declared unrecoverable (degraded mode).
+    #[inline(always)]
+    fn op_abandoned(&mut self, _now: SimTime, _op: usize) {}
+
+    /// One chunk attempt was issued (attempt 0 and every retry).
+    #[inline(always)]
+    fn chunk_issue(&mut self, _now: SimTime, _op: usize, _chunk: u32, _attempt: u32) {}
+
+    /// The live attempt of a chunk was acknowledged.
+    #[inline(always)]
+    fn chunk_settle(&mut self, _now: SimTime, _op: usize, _chunk: u32, _attempt: u32) {}
+
+    /// A task moved into `phase` ([`TaskPhase::Done`] on finish/abandon).
+    #[inline(always)]
+    fn task_phase(&mut self, _now: SimTime, _task: usize, _client: usize, _phase: TaskPhase) {}
+}
+
+/// The default probe: records nothing, costs nothing.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoopProbe;
+
+impl Probe for NoopProbe {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_index_round_trips() {
+        for (i, c) in Class::ALL.iter().enumerate() {
+            assert_eq!(c.index(), i);
+        }
+        assert_eq!(Class::ALL.len(), N_CLASSES);
+    }
+
+    #[test]
+    fn lane_class_mapping() {
+        assert_eq!(Lane::NicOut(0).class(), Class::OutNic);
+        assert_eq!(Lane::NicIn(3).class(), Class::InNic);
+        assert_eq!(Lane::Manager.class(), Class::Manager);
+        assert_eq!(Lane::Storage(1).class(), Class::Storage);
+        assert_eq!(Lane::Client(2).class(), Class::ClientCompute);
+        assert_eq!(Lane::NicOut(3).label(), "out-nic:3");
+        assert_eq!(Lane::Manager.label(), "manager");
+    }
+
+    #[test]
+    fn noop_probe_accepts_every_hook() {
+        let mut p = NoopProbe;
+        p.msg(0, MsgTag::default());
+        p.station_arrive(SimTime::ZERO, Lane::Manager, 0, SimTime::ZERO);
+        p.station_depart(SimTime::ZERO, Lane::Manager, 0);
+        p.op_start(SimTime::ZERO, 0, 0, 0, true, 1);
+        p.op_end(SimTime::ZERO, 0);
+        p.op_abandoned(SimTime::ZERO, 0);
+        p.chunk_issue(SimTime::ZERO, 0, 0, 0);
+        p.chunk_settle(SimTime::ZERO, 0, 0, 0);
+        p.task_phase(SimTime::ZERO, 0, 0, TaskPhase::Read);
+    }
+}

@@ -1,0 +1,374 @@
+//! The recording probe: assembles the hook stream into structured spans.
+//!
+//! Spans are closed in event order, so every vector here is
+//! deterministic for a deterministic run; the open-span maps are only
+//! ever *keyed into* (never iterated into output), so `HashMap` ordering
+//! cannot leak into results.
+
+use crate::trace::{Lane, MsgTag, Probe, TaskPhase, NO_OP};
+use crate::util::units::SimTime;
+use std::collections::{BTreeMap, HashMap};
+
+/// One message's full residency in one station queue, with the
+/// queue-wait vs service split. `svc` is the dedicated service the
+/// station charged (summed over frames on per-frame NIC paths); the wait
+/// is everything else: `depart − arrive − svc`, i.e. FIFO queueing at
+/// single-server stations and the analytic share-starvation of the
+/// weighted-fair in-NIC (a GPS server never finishes a train before
+/// `arrive + svc`, so the split is well defined there too).
+#[derive(Clone, Copy, Debug)]
+pub struct StationVisit {
+    pub lane: Lane,
+    pub msg: usize,
+    pub arrive: u64,
+    pub depart: u64,
+    pub svc: u64,
+}
+
+impl StationVisit {
+    /// Instant service began: `depart − svc`, clamped into the visit.
+    pub fn svc_start(&self) -> u64 {
+        self.depart.saturating_sub(self.svc).max(self.arrive)
+    }
+
+    /// Queue-wait nanoseconds (residency minus service).
+    pub fn wait(&self) -> u64 {
+        self.svc_start() - self.arrive
+    }
+}
+
+/// One whole-file operation's lifetime at its client.
+#[derive(Clone, Copy, Debug)]
+pub struct OpSpan {
+    pub op: usize,
+    pub task: usize,
+    pub client: usize,
+    pub is_write: bool,
+    pub bytes: u64,
+    pub start: u64,
+    pub end: u64,
+    /// Declared unrecoverable instead of completing (degraded mode).
+    pub abandoned: bool,
+}
+
+/// One chunk attempt, issue to acknowledgment.
+#[derive(Clone, Copy, Debug)]
+pub struct AttemptSpan {
+    pub op: usize,
+    pub chunk: u32,
+    pub attempt: u32,
+    pub issue: u64,
+    pub settle: u64,
+}
+
+/// Time lost to fault recovery for one chunk: from the issue of a doomed
+/// attempt to the issue of its replacement (covering the attempt's wasted
+/// transfers, the timeout wait, and the backoff delay) — or to the
+/// instant the op was abandoned, for the final attempt of a failed op.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultSpan {
+    pub op: usize,
+    pub chunk: u32,
+    pub start: u64,
+    pub end: u64,
+}
+
+/// One task-phase residency (read / compute / write). Per task, phase
+/// spans are contiguous from task start to task end by construction.
+#[derive(Clone, Copy, Debug)]
+pub struct PhaseSpan {
+    pub task: usize,
+    pub client: usize,
+    pub phase: TaskPhase,
+    pub start: u64,
+    pub end: u64,
+}
+
+/// Windowed utilization of one lane: fraction of each `window_ns`-wide
+/// window spent in service, over `[0, turnaround]`.
+#[derive(Clone, Debug)]
+pub struct UtilSeries {
+    pub lane: Lane,
+    pub window_ns: u64,
+    pub busy: Vec<f64>,
+}
+
+/// The flight recorder. Implements [`Probe`] by appending spans; after
+/// the run, [`Recorder::finish`] closes whatever is still open at
+/// turnaround (stalled ops and phases of degraded runs).
+#[derive(Debug, Default)]
+pub struct Recorder {
+    /// Message tags, indexed by message id.
+    pub tags: Vec<MsgTag>,
+    /// Closed station visits, in departure order.
+    pub visits: Vec<StationVisit>,
+    /// Operation spans, indexed by op id.
+    pub ops: Vec<OpSpan>,
+    /// Settled chunk attempts, in settle order.
+    pub attempts: Vec<AttemptSpan>,
+    /// Fault-recovery spans, in retry/abandon order.
+    pub faults: Vec<FaultSpan>,
+    /// Closed task-phase spans, in close order.
+    pub phases: Vec<PhaseSpan>,
+    /// Turnaround the run ended at (set by [`Recorder::finish`]).
+    pub turnaround: u64,
+
+    open_visits: HashMap<(Lane, usize), (u64, u64)>,
+    open_attempts: HashMap<(usize, u32), (u64, u32)>,
+    open_phases: HashMap<usize, (u64, usize, TaskPhase)>,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::default()
+    }
+
+    /// Close everything still open at the end of the run. Open phases and
+    /// ops (stalled by unrecoverable failures) are clipped to turnaround;
+    /// open attempts of abandoned ops were already folded into fault
+    /// spans, and in-flight station residencies are dropped — nothing
+    /// that never departed can sit on the critical path.
+    pub fn finish(&mut self, turnaround: SimTime) {
+        self.turnaround = turnaround.as_ns();
+        let mut open: Vec<usize> = self.open_phases.keys().copied().collect();
+        open.sort_unstable();
+        for task in open {
+            let (start, client, phase) = self.open_phases.remove(&task).expect("key just listed");
+            self.phases.push(PhaseSpan { task, client, phase, start, end: self.turnaround });
+        }
+        for o in self.ops.iter_mut() {
+            if o.end == u64::MAX {
+                o.end = self.turnaround;
+            }
+        }
+        self.open_visits.clear();
+        self.open_attempts.clear();
+    }
+
+    /// Per-lane windowed service-time series over `[0, turnaround]`,
+    /// lanes in [`Lane`] order. Service intervals (`depart − svc` to
+    /// `depart`) are credited exactly across window boundaries.
+    pub fn utilization(&self, window_ns: u64) -> Vec<UtilSeries> {
+        let window_ns = window_ns.max(1);
+        let horizon = self.turnaround.max(1);
+        let n_windows = horizon.div_ceil(window_ns) as usize;
+        let mut lanes: BTreeMap<Lane, Vec<u64>> = BTreeMap::new();
+        for v in &self.visits {
+            let (mut lo, hi) = (v.svc_start(), v.depart.min(horizon));
+            let buckets = lanes.entry(v.lane).or_insert_with(|| vec![0u64; n_windows]);
+            while lo < hi {
+                let w = (lo / window_ns) as usize;
+                let w_end = ((w as u64 + 1) * window_ns).min(hi);
+                buckets[w.min(n_windows - 1)] += w_end - lo;
+                lo = w_end;
+            }
+        }
+        lanes
+            .into_iter()
+            .map(|(lane, busy_ns)| UtilSeries {
+                lane,
+                window_ns,
+                busy: busy_ns
+                    .into_iter()
+                    .enumerate()
+                    .map(|(w, ns)| {
+                        let span = window_ns.min(horizon - (w as u64 * window_ns).min(horizon));
+                        if span == 0 {
+                            0.0
+                        } else {
+                            ns as f64 / span as f64
+                        }
+                    })
+                    .collect(),
+            })
+            .collect()
+    }
+
+    /// Total recorded spans (a cheap size signal for stats output).
+    pub fn n_spans(&self) -> usize {
+        self.visits.len() + self.attempts.len() + self.faults.len() + self.phases.len()
+            + self.ops.len()
+    }
+}
+
+impl Probe for Recorder {
+    fn msg(&mut self, msg: usize, tag: MsgTag) {
+        if msg >= self.tags.len() {
+            self.tags.resize_with(msg + 1, MsgTag::default);
+        }
+        self.tags[msg] = tag;
+    }
+
+    fn station_arrive(&mut self, now: SimTime, lane: Lane, msg: usize, svc: SimTime) {
+        let e = self.open_visits.entry((lane, msg)).or_insert((now.as_ns(), 0));
+        e.1 += svc.as_ns();
+    }
+
+    fn station_depart(&mut self, now: SimTime, lane: Lane, msg: usize) {
+        if let Some((arrive, svc)) = self.open_visits.remove(&(lane, msg)) {
+            self.visits.push(StationVisit { lane, msg, arrive, depart: now.as_ns(), svc });
+        }
+    }
+
+    fn op_start(
+        &mut self,
+        now: SimTime,
+        op: usize,
+        task: usize,
+        client: usize,
+        is_write: bool,
+        bytes: u64,
+    ) {
+        debug_assert_eq!(op, self.ops.len(), "ops are issued in id order");
+        self.ops.push(OpSpan {
+            op,
+            task,
+            client,
+            is_write,
+            bytes,
+            start: now.as_ns(),
+            end: u64::MAX,
+            abandoned: false,
+        });
+    }
+
+    fn op_end(&mut self, now: SimTime, op: usize) {
+        self.ops[op].end = now.as_ns();
+    }
+
+    fn op_abandoned(&mut self, now: SimTime, op: usize) {
+        self.ops[op].end = now.as_ns();
+        self.ops[op].abandoned = true;
+        // The final attempt never settles: fold it into a fault span
+        // ending at the abandonment, like every earlier doomed attempt.
+        let mut stale: Vec<(usize, u32)> =
+            self.open_attempts.keys().filter(|k| k.0 == op).copied().collect();
+        stale.sort_unstable();
+        for key in stale {
+            let (issue, _) = self.open_attempts.remove(&key).expect("key just listed");
+            self.faults.push(FaultSpan { op, chunk: key.1, start: issue, end: now.as_ns() });
+        }
+    }
+
+    fn chunk_issue(&mut self, now: SimTime, op: usize, chunk: u32, attempt: u32) {
+        if let Some((prev_issue, _)) = self.open_attempts.insert((op, chunk), (now.as_ns(), attempt))
+        {
+            // A re-issue supersedes a doomed attempt: everything since
+            // that attempt's issue — its wasted transfers, the timeout
+            // wait, the backoff — was fault recovery.
+            debug_assert!(attempt > 0, "attempt 0 re-issued");
+            self.faults.push(FaultSpan { op, chunk, start: prev_issue, end: now.as_ns() });
+        }
+    }
+
+    fn chunk_settle(&mut self, now: SimTime, op: usize, chunk: u32, attempt: u32) {
+        if let Some((issue, a)) = self.open_attempts.remove(&(op, chunk)) {
+            debug_assert_eq!(a, attempt, "settle of a non-live attempt");
+            self.attempts.push(AttemptSpan { op, chunk, attempt, issue, settle: now.as_ns() });
+        }
+    }
+
+    fn task_phase(&mut self, now: SimTime, task: usize, client: usize, phase: TaskPhase) {
+        if let Some((start, c, prev)) = self.open_phases.remove(&task) {
+            self.phases.push(PhaseSpan { task, client: c, phase: prev, start, end: now.as_ns() });
+        }
+        if phase != TaskPhase::Done {
+            self.open_phases.insert(task, (now.as_ns(), client, phase));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Class;
+
+    fn t(ns: u64) -> SimTime {
+        SimTime::from_ns(ns)
+    }
+
+    #[test]
+    fn visit_splits_wait_and_service() {
+        let mut r = Recorder::new();
+        r.station_arrive(t(100), Lane::Storage(0), 7, t(30));
+        r.station_depart(t(200), Lane::Storage(0), 7);
+        assert_eq!(r.visits.len(), 1);
+        let v = r.visits[0];
+        assert_eq!(v.svc, 30);
+        assert_eq!(v.wait(), 70, "residency 100ns minus 30ns service");
+        assert_eq!(v.svc_start(), 170);
+        assert_eq!(v.lane.class(), Class::Storage);
+    }
+
+    #[test]
+    fn per_frame_arrivals_accumulate_service() {
+        let mut r = Recorder::new();
+        // Three frames of one message pace into an in-NIC.
+        r.station_arrive(t(0), Lane::NicIn(1), 3, t(10));
+        r.station_arrive(t(10), Lane::NicIn(1), 3, t(10));
+        r.station_arrive(t(20), Lane::NicIn(1), 3, t(10));
+        r.station_depart(t(30), Lane::NicIn(1), 3);
+        let v = r.visits[0];
+        assert_eq!((v.arrive, v.depart, v.svc), (0, 30, 30));
+        assert_eq!(v.wait(), 0, "uncontended pacing is all service");
+    }
+
+    #[test]
+    fn retry_produces_fault_span_and_final_settle() {
+        let mut r = Recorder::new();
+        r.op_start(t(0), 0, 0, 0, true, 1024);
+        r.chunk_issue(t(10), 0, 2, 0);
+        r.chunk_issue(t(500), 0, 2, 1); // timeout + backoff later
+        r.chunk_settle(t(600), 0, 2, 1);
+        assert_eq!(r.faults.len(), 1);
+        assert_eq!((r.faults[0].start, r.faults[0].end), (10, 500));
+        assert_eq!(r.attempts.len(), 1);
+        assert_eq!((r.attempts[0].issue, r.attempts[0].settle, r.attempts[0].attempt), (500, 600, 1));
+    }
+
+    #[test]
+    fn abandonment_closes_the_final_attempt_as_fault_time() {
+        let mut r = Recorder::new();
+        r.op_start(t(0), 0, 3, 1, false, 64);
+        r.chunk_issue(t(5), 0, 0, 0);
+        r.op_abandoned(t(90), 0);
+        assert!(r.ops[0].abandoned);
+        assert_eq!(r.ops[0].end, 90);
+        assert_eq!(r.faults.len(), 1);
+        assert_eq!((r.faults[0].start, r.faults[0].end), (5, 90));
+        assert!(r.attempts.is_empty());
+    }
+
+    #[test]
+    fn phases_are_contiguous_and_close_at_finish() {
+        let mut r = Recorder::new();
+        r.task_phase(t(0), 4, 2, TaskPhase::Read);
+        r.task_phase(t(100), 4, 2, TaskPhase::Compute);
+        r.task_phase(t(250), 4, 2, TaskPhase::Write);
+        r.finish(t(400));
+        assert_eq!(r.phases.len(), 3);
+        assert_eq!(
+            r.phases.iter().map(|p| (p.phase, p.start, p.end)).collect::<Vec<_>>(),
+            vec![
+                (TaskPhase::Read, 0, 100),
+                (TaskPhase::Compute, 100, 250),
+                (TaskPhase::Write, 250, 400),
+            ]
+        );
+    }
+
+    #[test]
+    fn utilization_windows_credit_service_exactly() {
+        let mut r = Recorder::new();
+        r.station_arrive(t(0), Lane::NicOut(0), 0, t(150));
+        r.station_depart(t(150), Lane::NicOut(0), 0);
+        r.finish(t(200));
+        let series = r.utilization(100);
+        assert_eq!(series.len(), 1);
+        let s = &series[0];
+        assert_eq!(s.lane, Lane::NicOut(0));
+        assert_eq!(s.busy.len(), 2);
+        assert!((s.busy[0] - 1.0).abs() < 1e-12, "first window fully busy");
+        assert!((s.busy[1] - 0.5).abs() < 1e-12, "half of the second window");
+    }
+}

@@ -815,6 +815,71 @@ fn prop_empty_fault_plan_matches_baseline() {
 }
 
 #[test]
+fn prop_noop_probe_and_recorder_are_bit_identical() {
+    // The flight recorder must observe, never participate: attaching the
+    // recording probe yields the *same prediction*, bit for bit, as the
+    // probe-free path (`simulate_fid` compiles the no-op probe away).
+    // Lockstep over random workloads × configs × fidelity tiers, every
+    // float compared by bit pattern, no tolerances — and the span log the
+    // recorder kept must explain the whole turnaround (exact critical-path
+    // tiling over the component classes).
+    use wfpred::model::simulate_traced;
+    use wfpred::trace::critical_path;
+    check("recording probe is invisible", 25, |g| {
+        let wl = random_workload(g, 3);
+        if wl.validate().is_err() {
+            return;
+        }
+        let cfg = random_config(g);
+        let plat = Platform::paper_testbed();
+        let fid = if g.bool() {
+            Fidelity::coarse()
+        } else {
+            Fidelity::detailed(g.u64(0, 1 << 40))
+        };
+        let a = simulate_fid(&wl, &cfg, &plat, fid.clone());
+        let (b, rec) = simulate_traced(&wl, &cfg, &plat, fid);
+
+        assert_eq!(a.turnaround, b.turnaround, "tracing shifted turnaround");
+        assert_eq!(a.events, b.events, "tracing created or removed events");
+        assert_eq!(a.events_cancelled, b.events_cancelled);
+        assert_eq!(a.net_bytes, b.net_bytes);
+        assert_eq!(a.net_frames, b.net_frames);
+        assert_eq!(a.stored, b.stored);
+        assert_eq!(a.tasks.len(), b.tasks.len());
+        assert_eq!(a.ops.len(), b.ops.len());
+        for (x, y) in a.ops.iter().zip(b.ops.iter()) {
+            assert_eq!((x.start, x.end), (y.start, y.end), "op interval moved");
+        }
+        assert_eq!(a.util.manager_util.to_bits(), b.util.manager_util.to_bits());
+        assert_eq!(a.util.manager_mean_qlen.to_bits(), b.util.manager_mean_qlen.to_bits());
+        for (h, (x, y)) in a.util.storage.iter().zip(b.util.storage.iter()).enumerate() {
+            assert_eq!(x.0.to_bits(), y.0.to_bits(), "storage {h} utilization");
+            assert_eq!(x.1.to_bits(), y.1.to_bits(), "storage {h} qlen");
+        }
+        for (h, (x, y)) in a.util.nic.iter().zip(b.util.nic.iter()).enumerate() {
+            assert_eq!(x.0.to_bits(), y.0.to_bits(), "host {h} out-NIC utilization");
+            assert_eq!(x.1.to_bits(), y.1.to_bits(), "host {h} in-NIC utilization");
+        }
+        for (h, (x, y)) in a.util.nic_qlen.iter().zip(b.util.nic_qlen.iter()).enumerate() {
+            assert_eq!(x.0.to_bits(), y.0.to_bits(), "host {h} out-NIC qlen integral");
+            assert_eq!(x.1.to_bits(), y.1.to_bits(), "host {h} in-NIC qlen integral");
+        }
+
+        // The recorder closed at the run's turnaround and its span log
+        // decomposes it exactly.
+        assert_eq!(rec.turnaround, b.turnaround.as_ns(), "recorder horizon");
+        let attr = critical_path(&rec);
+        assert!(attr.tiles_exactly(), "attributed segments must tile [0, turnaround]");
+        assert_eq!(
+            attr.totals().iter().sum::<u64>(),
+            rec.turnaround,
+            "class totals sum to turnaround"
+        );
+    });
+}
+
+#[test]
 fn prop_faulty_runs_are_deterministic_and_account_consistently() {
     // A non-empty plan is a point of the configuration space like any
     // other: the same plan must reproduce byte-identical predictions and

@@ -1,0 +1,142 @@
+//! Integration tests for the flight recorder: critical-path attribution
+//! tiles `[0, turnaround]` exactly on the four paper workloads, a
+//! deliberate straggler shifts attributed time into fault recovery, and
+//! the Chrome trace-event export is flat JSON that `jsonw::parse_flat`
+//! accepts line by line (the schema Perfetto loads).
+
+use wfpred::model::{simulate_traced, Config, FaultPlan, Fidelity, Platform};
+use wfpred::trace::{chrome_trace, critical_path, Class, Recorder};
+use wfpred::util::jsonw::{parse_flat, Scalar};
+use wfpred::util::units::Bytes;
+use wfpred::workload::blast::{blast, BlastParams};
+use wfpred::workload::montage::montage;
+use wfpred::workload::patterns::{pipeline, reduce, PatternScale};
+use wfpred::workload::{FileSpec, TaskSpec, Workload};
+
+fn assert_tiles(rec: &Recorder, label: &str) {
+    let attr = critical_path(rec);
+    assert!(attr.tiles_exactly(), "{label}: attribution must tile [0, turnaround]");
+    assert_eq!(attr.turnaround, rec.turnaround, "{label}: horizons agree");
+    let sum: u64 = attr.totals().iter().sum();
+    assert_eq!(sum, attr.turnaround, "{label}: class totals must sum to turnaround");
+}
+
+#[test]
+fn critical_path_tiles_exactly_on_the_four_paper_workloads() {
+    // The acceptance bar from the issue: on every paper workload the
+    // attributed segments partition the predicted turnaround with no gap
+    // and no overlap, so the per-class totals are an exact decomposition
+    // (not an estimate) of where the prediction spends its time.
+    let plat = Platform::paper_testbed();
+    let cases: [(&str, Workload, Config); 4] = [
+        ("pipeline", pipeline(19, PatternScale::Medium, false), Config::dss(19)),
+        ("reduce", reduce(19, PatternScale::Medium, false), Config::dss(19)),
+        ("montage", montage(19), Config::dss(19)),
+        (
+            "blast",
+            blast(14, &BlastParams { queries: 200, ..BlastParams::default() }),
+            Config::partitioned(14, 5, Bytes::kb(1024)),
+        ),
+    ];
+    for (label, wl, cfg) in &cases {
+        let (rep, rec) = simulate_traced(wl, cfg, &plat, Fidelity::coarse());
+        assert_eq!(rep.tasks.len(), wl.tasks.len(), "{label}: all tasks finish");
+        assert!(rec.n_spans() > 0, "{label}: the recorder saw the run");
+        assert_tiles(&rec, label);
+        // A healthy run recovers from nothing.
+        let attr = critical_path(&rec);
+        assert_eq!(
+            attr.totals()[Class::FaultRecovery.index()],
+            0,
+            "{label}: no fault plan, no fault-recovery time"
+        );
+    }
+}
+
+#[test]
+fn straggler_shifts_attribution_into_fault_recovery() {
+    // A 1000x slowdown on the only storage node stretches every chunk
+    // service past the 5 s per-attempt timeout, so the run advances
+    // through timeout + backoff + re-issue. Those recovery intervals must
+    // surface in the `fault_recovery` class — and the walk must still
+    // tile exactly, retries and all.
+    let plat = Platform::paper_testbed_hdd();
+    let mut wl = Workload::new("straggler-rw");
+    let a = wl.add_file(FileSpec::new("in", Bytes::mb(8)).prestaged());
+    let b = wl.add_file(FileSpec::new("out", Bytes::mb(8)));
+    wl.add_task(TaskSpec::new("t", 0).reads(a).writes(b));
+    let cfg = Config::partitioned(1, 1, Bytes::mb(1));
+    let host = cfg.storage_host(0);
+
+    let (clean_rep, clean_rec) = simulate_traced(&wl, &cfg, &plat, Fidelity::coarse());
+    assert_tiles(&clean_rec, "clean");
+    assert_eq!(clean_rep.fault_timeouts, 0);
+    assert_eq!(
+        critical_path(&clean_rec).totals()[Class::FaultRecovery.index()],
+        0,
+        "clean run attributes nothing to recovery"
+    );
+
+    let plan = FaultPlan::parse(&format!("slow={host}@0x0.001")).unwrap();
+    let slow_cfg = cfg.clone().with_fault_plan(plan);
+    let (rep, rec) = simulate_traced(&wl, &slow_cfg, &plat, Fidelity::coarse());
+    assert!(rep.fault_timeouts > 0, "the straggler must fire timeouts");
+    assert_tiles(&rec, "straggler");
+    let attr = critical_path(&rec);
+    assert!(
+        attr.totals()[Class::FaultRecovery.index()] > 0,
+        "timeout + backoff + re-issue time must be attributed to fault recovery"
+    );
+}
+
+#[test]
+fn chrome_trace_of_a_real_run_is_flat_json_line_by_line() {
+    // The export is one complete JSON array, but each event is also a
+    // self-contained flat object on its own line — exactly the shape
+    // `jsonw::parse_flat` accepts — so the schema test needs no external
+    // JSON parser. Every event carries the Chrome trace-event required
+    // fields with `ph: "X"` (complete events) and microsecond timestamps
+    // within the run.
+    let plat = Platform::paper_testbed();
+    let wl = pipeline(4, PatternScale::Small, false);
+    let cfg = Config::dss(4);
+    let (rep, rec) = simulate_traced(&wl, &cfg, &plat, Fidelity::coarse());
+    let text = chrome_trace(&rec);
+
+    assert!(text.starts_with("[\n"), "array opener on its own line");
+    assert!(text.trim_end().ends_with(']'), "array closes");
+    let horizon_us = rep.turnaround.as_ns() as f64 / 1000.0;
+    let mut events = 0usize;
+    for line in text.lines() {
+        let line = line.trim().trim_end_matches(',');
+        if line.is_empty() || line == "[" || line == "]" {
+            continue;
+        }
+        let kv = parse_flat(line).unwrap_or_else(|e| panic!("unparseable event: {e}\n{line}"));
+        events += 1;
+        for key in ["name", "cat", "ph", "ts", "dur", "pid", "tid"] {
+            assert!(kv.iter().any(|(k, _)| k == key), "event missing `{key}`: {line}");
+        }
+        for (k, v) in &kv {
+            match (k.as_str(), v) {
+                ("ph", Scalar::Str(s)) => assert_eq!(s, "X", "complete events only"),
+                ("ts", Scalar::Num(ts)) => {
+                    assert!(*ts >= 0.0 && *ts <= horizon_us, "ts {ts} outside the run")
+                }
+                ("dur", Scalar::Num(d)) => assert!(*d >= 0.0, "negative duration"),
+                ("pid", Scalar::Num(p)) => assert!(*p == 1.0 || *p == 2.0, "unknown pid {p}"),
+                _ => {}
+            }
+        }
+    }
+    assert_eq!(events, rec.n_spans(), "one event per recorded span");
+    // The recorder's windowed utilization covers every station lane and
+    // stays a fraction.
+    let series = rec.utilization(1_000_000);
+    assert!(!series.is_empty(), "utilization series exist");
+    for s in &series {
+        for w in &s.busy {
+            assert!((0.0..=1.0 + 1e-9).contains(w), "utilization {w} out of range");
+        }
+    }
+}
