@@ -129,6 +129,25 @@ pub mod keys {
     pub const CP_FAULT_RECOVERY_S: &str = "cp_fault_recovery_s";
     /// Critical-path attribution: seconds with no task active at all.
     pub const CP_IDLE_S: &str = "cp_idle_s";
+    /// Delta probe: campaign evaluations per wallclock second.
+    pub const EVALS_PER_SEC: &str = "evals_per_sec";
+    /// Delta probe: evaluations answered by a delta warm-start (spliced
+    /// from a neighbor's stage checkpoints) instead of a cold run.
+    pub const DELTA_HITS: &str = "delta_hits";
+    /// Delta probe: stages skipped (restored from checkpoints) across the
+    /// campaign's delta warm-starts.
+    pub const DELTA_STAGES_SKIPPED: &str = "delta_stages_skipped";
+    /// Delta probe: stages actually re-simulated across the campaign's
+    /// delta warm-starts.
+    pub const DELTA_STAGES_REPLAYED: &str = "delta_stages_replayed";
+    /// `delta_stages_skipped / (delta_stages_skipped +
+    /// delta_stages_replayed)` — the fraction of delta-warm-start stage
+    /// work answered from checkpoints (0 when no warm-start happened).
+    pub const STAGES_SKIPPED_RATIO: &str = "stages_skipped_ratio";
+    /// Delta probe: sum of predicted turnarounds over the sweep, seconds.
+    /// Deterministic, so exact cross-cell equality pins bit-identity of
+    /// the delta path against the cold reference.
+    pub const TURNAROUND_SUM_S: &str = "turnaround_sum_s";
 
     /// Every key above, for schema-coverage tests and doc generation.
     pub const ALL: &[&str] = &[
@@ -180,6 +199,12 @@ pub mod keys {
         CP_MANAGER_S,
         CP_FAULT_RECOVERY_S,
         CP_IDLE_S,
+        EVALS_PER_SEC,
+        DELTA_HITS,
+        DELTA_STAGES_SKIPPED,
+        DELTA_STAGES_REPLAYED,
+        STAGES_SKIPPED_RATIO,
+        TURNAROUND_SUM_S,
     ];
 }
 

@@ -272,6 +272,14 @@ pub enum ServiceProbe {
     /// Seed a surrogate grid with exact samples, interpolate off-grid
     /// points, and compare each answer against an exact simulation.
     Surrogate,
+    /// Single-knob stripe sweep through a delta-enabled service: the
+    /// first point simulates cold and captures stage checkpoints, every
+    /// neighbor warm-starts from them (incremental re-simulation).
+    DeltaSweep,
+    /// The same stripe sweep through [`crate::service::Service::without_delta`]
+    /// — the cold reference the sweep cell gates its throughput and
+    /// bit-identity against in the same run.
+    DeltaCold,
 }
 
 /// How a cell is executed.
@@ -584,6 +592,49 @@ pub fn registry() -> Vec<CellDef> {
             // Observed error vs exact is deterministic: bound and drift it.
             Gate::Max { key: keys::SURROGATE_MAX_REL_ERR, max: 0.5 },
             Gate::drift(keys::SURROGATE_MAX_REL_ERR),
+        ],
+    });
+
+    // ── search.delta: incremental re-simulation on a single-knob sweep ───
+    // The sweep perturbs only the stripe width, so every neighbor shares
+    // the heavy first stage's fingerprint with the first (cold) point and
+    // replays only the cheap stripe-sensitive tail. `search.delta.cold`
+    // runs the identical sweep with delta warm-starts disabled; the sweep
+    // cell gates bit-identity (exact turnaround-sum equality) and the
+    // >= 2x campaign-throughput floor against it in the same run.
+    const DELTA_COLD: &str = "search.delta.cold";
+    cells.push(CellDef {
+        name: DELTA_COLD.into(),
+        ci: true,
+        note: "stripe sweep with delta warm-starts disabled (cold reference)".into(),
+        platform: PlatformSpec::Paper,
+        kind: CellKind::Service(ServiceProbe::DeltaCold),
+        gates: vec![
+            // A delta-disabled service must never warm-start.
+            Gate::Max { key: keys::DELTA_HITS, max: 0.0 },
+            Gate::drift(keys::TURNAROUND_SUM_S),
+        ],
+    });
+    cells.push(CellDef {
+        name: "search.delta.sweep".into(),
+        ci: true,
+        note: "same stripe sweep with delta warm-starts on".into(),
+        platform: PlatformSpec::Paper,
+        kind: CellKind::Service(ServiceProbe::DeltaSweep),
+        gates: vec![
+            // Bit-identity with the cold path: the answers are the same
+            // doubles summed in the same order, so equality is exact.
+            Gate::eq_cell(keys::TURNAROUND_SUM_S, DELTA_COLD),
+            // The tentpole's acceptance floor: >= 2x evaluations/sec vs
+            // the cold sweep of the same run (host-independent ratio).
+            Gate::ratio_range(keys::EVALS_PER_SEC, DELTA_COLD, 2.0, f64::INFINITY),
+            // Every non-cold point of a single-knob sweep must warm-start,
+            // and warm-starts must actually skip stage work.
+            Gate::Min { key: keys::DELTA_HITS, min: 1.0 },
+            Gate::Min { key: keys::STAGES_SKIPPED_RATIO, min: 0.25 },
+            // The counters are deterministic: pin them against drift.
+            Gate::drift(keys::DELTA_HITS),
+            Gate::drift(keys::STAGES_SKIPPED_RATIO),
         ],
     });
 
@@ -954,6 +1005,8 @@ mod tests {
             "service.query_path",
             "service.dedup",
             "service.surrogate",
+            "search.delta.cold",
+            "search.delta.sweep",
         ] {
             assert!(ci.iter().any(|c| c.name == name), "CI suite lost cell {name}");
         }

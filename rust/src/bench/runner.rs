@@ -263,7 +263,8 @@ fn derive_cross_cell_keys(by_name: &mut BTreeMap<String, CellRecord>) {
 fn summary_line(rec: &CellRecord) -> String {
     let mut parts: Vec<String> = Vec::new();
     for key in [keys::EVENTS, keys::SIM_TURNAROUND_S, keys::ACTUAL_MEAN_S, keys::REL_ERR,
-        keys::WARM_SPEEDUP_X, keys::DEDUP_FACTOR_X, keys::SURROGATE_MAX_REL_ERR]
+        keys::WARM_SPEEDUP_X, keys::DEDUP_FACTOR_X, keys::SURROGATE_MAX_REL_ERR,
+        keys::EVALS_PER_SEC, keys::STAGES_SKIPPED_RATIO]
     {
         if let Some(v) = rec.get(key) {
             parts.push(format!("{key}={v:.6}"));
@@ -491,7 +492,68 @@ fn run_service_probe(probe: ServiceProbe, rec: &mut CellRecord) {
                 .set(keys::SURROGATE_MAX_REL_ERR, max_rel_err)
                 .set(keys::SURROGATE_SECS_PER_QUERY, spent / queries.max(1) as f64);
         }
+        ServiceProbe::DeltaSweep | ServiceProbe::DeltaCold => {
+            run_delta_probe(matches!(probe, ServiceProbe::DeltaSweep), rec);
+        }
     }
+}
+
+/// The delta-probe workload: a heavy stripe-insensitive stage (node-pinned
+/// files, so its fingerprint ignores the stripe width) feeding one tiny
+/// stripe-sensitive aggregation. Single-knob stripe neighbors then share
+/// the expensive stage-0 prefix and replay only the cheap tail.
+fn delta_sweep_workload() -> crate::workload::Workload {
+    use crate::util::units::SimTime;
+    use crate::workload::{FileHint, FileSpec, TaskSpec, Workload};
+    let mut w = Workload::new("delta-sweep");
+    let db = w.add_file(FileSpec::new("db", Bytes::mb(16)).hint(FileHint::OnNode(0)).prestaged());
+    let mut mids = Vec::new();
+    for i in 0..12usize {
+        let f = w
+            .add_file(FileSpec::new(format!("mid{i}"), Bytes::mb(1)).hint(FileHint::OnNode(i % 8)));
+        mids.push(f);
+        w.add_task(
+            TaskSpec::new(format!("t0-{i}"), 0).reads(db).writes(f).compute(SimTime::from_ms(5)),
+        );
+    }
+    let out = w.add_file(FileSpec::new("out", Bytes::mb(1)));
+    let mut agg = TaskSpec::new("t1", 1).writes(out);
+    for &m in &mids {
+        agg = agg.reads(m);
+    }
+    w.add_task(agg);
+    w
+}
+
+/// The `search.delta.*` cells: the same single-knob stripe sweep through
+/// a delta-enabled (`delta = true`) or delta-disabled service. The sweep
+/// cell's gates compare the two records from the same run.
+fn run_delta_probe(delta: bool, rec: &mut CellRecord) {
+    let wl = delta_sweep_workload();
+    let mut svc = Service::new(Predictor::new(Platform::paper_testbed()));
+    if !delta {
+        svc = svc.without_delta();
+    }
+    let stripes = [1usize, 2, 3, 4, 5, 6, 7, 8];
+    let t0 = Instant::now();
+    // Sum in sweep order: delta answers are bit-identical to cold ones,
+    // so identical doubles summed in identical order give exact cross-
+    // cell equality on `turnaround_sum_s`.
+    let mut sum_s = 0.0f64;
+    for &w in &stripes {
+        let cfg = Config::partitioned(4, 8, Bytes::mb(1)).with_stripe(w);
+        sum_s += svc.evaluate(&wl, &cfg).turnaround.as_secs_f64();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let s = svc.stats();
+    let stage_work = (s.delta_stages_skipped + s.delta_stages_replayed).max(1);
+    rec.set(keys::EVALS_PER_SEC, stripes.len() as f64 / wall.max(1e-12))
+        .set(keys::TURNAROUND_SUM_S, sum_s)
+        .set(keys::DELTA_HITS, s.delta_hits as f64)
+        .set(keys::DELTA_STAGES_SKIPPED, s.delta_stages_skipped as f64)
+        .set(keys::DELTA_STAGES_REPLAYED, s.delta_stages_replayed as f64)
+        .set(keys::STAGES_SKIPPED_RATIO, s.delta_stages_skipped as f64 / stage_work as f64)
+        .set(keys::WALL_SECS, wall);
 }
 
 // ── the legacy summary view ─────────────────────────────────────────────

@@ -142,6 +142,8 @@ fn build_workload(f: &Flags) -> Result<(Workload, Config), String> {
     } else {
         Config::dss(n).with_chunk(chunk)
     };
+    let stripe = f.get_u64("stripe") as usize;
+    let cfg = if stripe == 0 { cfg } else { cfg.with_stripe(stripe.min(cfg.n_storage)) };
     let plan = f.get("fault-plan");
     let cfg = if plan.is_empty() {
         cfg
@@ -170,6 +172,7 @@ fn pattern_flags(f: Flags) -> Flags {
         .switch("wass", "workflow-aware configuration (placement hints + locality)")
         .flag("replicas", "1", "broadcast-file replicas")
         .flag("chunk-kb", "1024", "chunk size in KB")
+        .flag("stripe", "0", "stripe width override (0 = deployment default; capped at storage nodes)")
         .flag("queries", "200", "BLAST query count")
         .flag("app-nodes", "14", "BLAST application nodes")
         .flag("platform", "paper", "paper|hdd|ssd|10g")
@@ -237,6 +240,11 @@ fn cmd_explain(args: &[String]) -> Result<(), String> {
         .parse(args)?;
     let (wl, cfg) = build_workload(&f)?;
     let plat = platform_by_name(&f.get("platform"))?;
+    // Attribution needs every event probed, so explain always runs one
+    // cold traced simulation — the delta warm-start path and the service
+    // caches are deliberately not consulted (batch/serve report their
+    // cold/delta/memo composition on their own stats lines).
+    eprintln!("[explain] cold traced run: delta re-simulation and service caches bypassed");
     let (report, rec) = simulate_traced(&wl, &cfg, &plat, Fidelity::coarse());
     let attr = critical_path(&rec);
     if !attr.tiles_exactly() {
@@ -549,17 +557,25 @@ fn query_to_service(line: &str, plat: &Platform, extra_argv: &[String]) -> Resul
 
 fn answer_json(a: &Answer) -> Json {
     match a {
-        Answer::Exact { fp, turnaround_s, cost_node_s, source, engine, failures } => Json::obj()
-            .set("fp", fp.to_string())
-            .set("kind", "exact")
-            .set("turnaround_s", *turnaround_s)
-            .set("cost_node_s", *cost_node_s)
-            .set("source", source.as_str())
-            .set("engine", engine.as_str())
-            .set("fault_retries", failures.retries)
-            .set("fault_failovers", failures.failovers)
-            .set("fault_timeouts", failures.timeouts)
-            .set("unrecoverable", failures.unrecoverable),
+        Answer::Exact { fp, turnaround_s, cost_node_s, source, engine, failures, delta } => {
+            let mut o = Json::obj()
+                .set("fp", fp.to_string())
+                .set("kind", "exact")
+                .set("turnaround_s", *turnaround_s)
+                .set("cost_node_s", *cost_node_s)
+                .set("source", source.as_str())
+                .set("engine", engine.as_str())
+                .set("fault_retries", failures.retries)
+                .set("fault_failovers", failures.failovers)
+                .set("fault_timeouts", failures.timeouts)
+                .set("unrecoverable", failures.unrecoverable);
+            if let Some(d) = delta {
+                o = o
+                    .set("delta_stages_skipped", d.stages_skipped as u64)
+                    .set("delta_stages_replayed", d.stages_replayed as u64);
+            }
+            o
+        }
         Answer::Surrogate { fp, turnaround_s, cost_node_s, est_err } => Json::obj()
             .set("fp", fp.to_string())
             .set("kind", "surrogate")
@@ -591,13 +607,18 @@ fn service_query_defaults(f: &Flags) -> Vec<String> {
 /// answer attribution plus the raw shard-level cache probe counters.
 fn eprint_service_stats(queries: usize, s: &StatsSnapshot) {
     eprintln!(
-        "[service] {queries} queries: {} simulated, {} memory hits, {} disk hits, {} deduped, \
-         {} surrogate; cache probes {} hit / {} miss / {} evicted",
+        "[service] {queries} queries: {} simulated ({} cold / {} delta warm-started), \
+         {} memory hits, {} disk hits, {} deduped, {} surrogate; \
+         delta stages {} skipped / {} replayed; cache probes {} hit / {} miss / {} evicted",
         s.misses,
+        s.misses.saturating_sub(s.delta_hits),
+        s.delta_hits,
         s.hits,
         s.disk_hits,
         s.dedup_waits,
         s.surrogate_answers,
+        s.delta_stages_skipped,
+        s.delta_stages_replayed,
         s.cache.hits,
         s.cache.misses,
         s.cache.evictions
@@ -931,6 +952,34 @@ mod tests {
         assert_eq!(std::fs::read_to_string(&spath).unwrap().lines().count(), 2);
         let _ = std::fs::remove_file(&qpath);
         let _ = std::fs::remove_file(&spath);
+    }
+
+    #[test]
+    fn stripe_flag_feeds_config_and_a_stripe_sweep_warm_starts() {
+        let parse = |stripe: &str| {
+            let f = pattern_flags(Flags::new("t"))
+                .parse(&argv(&[
+                    "--pattern", "reduce", "--nodes", "4", "--scale", "small", "--wass",
+                    "--stripe", stripe,
+                ]))
+                .unwrap();
+            build_workload(&f).unwrap()
+        };
+        let (wl1, c1) = parse("1");
+        let (wl2, c2) = parse("2");
+        assert_eq!(c1.stripe_width, 1);
+        assert_eq!(c2.stripe_width, 2);
+        // The two-point campaign the CI workflow smoke-tests end to end:
+        // every file of a WASS reduce carries a node-pinned or node-local
+        // hint (all projections stripe-insensitive), so a stripe-only
+        // perturbation shares the whole stage-fingerprint prefix and the
+        // second point warm-starts.
+        let svc = Service::new(Predictor::new(Platform::paper_testbed()));
+        let _ = svc.evaluate(&wl1, &c1);
+        let _ = svc.evaluate(&wl2, &c2);
+        let st = svc.stats();
+        assert_eq!(st.misses, 2, "stripe is a distinct service fingerprint");
+        assert_eq!(st.delta_hits, 1, "the second point must warm-start");
     }
 
     #[test]

@@ -1,0 +1,729 @@
+//! Incremental re-simulation: stage-boundary checkpoints and delta
+//! warm-starts for search campaigns.
+//!
+//! Search neighbors differ by one knob (stripe width, replication, chunk
+//! size), so most of a neighbor's simulation is identical work re-done:
+//! every stage whose files don't observe the changed knob unfolds
+//! event-for-event the same. This module makes that sharing explicit:
+//!
+//! * [`stage_fingerprints`] — a per-stage fingerprint of *exactly the
+//!   inputs stages `0..=s` can observe*: the full workload / platform /
+//!   fidelity / fault plan, the config's global knobs, and a **per-file
+//!   projection** of the value-dependent knobs (chunking pattern,
+//!   effective replication, stripe width where the file's placement is
+//!   stripe-sensitive) restricted to files touched by tasks of stage
+//!   `<= s` plus all prestaged files. Two configs that agree on a prefix
+//!   of stage fingerprints provably produce the identical event sequence
+//!   over that prefix.
+//! * [`DeltaBase::capture`] — a cold simulation that additionally
+//!   snapshots the whole simulation (`Simulation<World>` is `Clone` since
+//!   the world owns its inputs) at every stage boundary, labeled with the
+//!   deepest stage fully incorporated so far.
+//! * [`DeltaBase::resume`] — given a neighbor config, verifies the
+//!   stage-fingerprint prefix match, splices the deepest valid snapshot
+//!   (rebinding the owned config — [`World::rebind_config`]), and replays
+//!   only the suffix.
+//!
+//! ## Exactness (the house rule)
+//!
+//! The cold path is the reference oracle: a delta answer must be
+//! **bit-identical** to a cold simulation of the same config — no
+//! tolerances. This holds by construction: the capture loop is the plain
+//! run loop (same `prepare_sim`, same delivery order — peeking and
+//! cloning never perturb the queue), a snapshot is the entire state
+//! including the RNG stream position and the scheduler's
+//! processed/cancelled totals, and a snapshot is only resumed under a
+//! config whose fingerprint prefix proves every decision taken so far
+//! would have been identical. Pinned by `prop_delta_resim_matches_cold`
+//! (single-knob perturbations × fault plans × fidelity modes).
+//!
+//! ## Boundary rule
+//!
+//! Tasks enter the event stream only through `Ev::Release` (the driver
+//! releases a task when its inputs commit), so just before delivering the
+//! first `Release` of a task of stage `s_next >` every stage released so
+//! far, the state contains work of stages `<= max_released` only. That
+//! instant is snapshotted with label `max_released` — the *weakest* sound
+//! validity requirement, so a neighbor differing only in later stages can
+//! still splice. Stages releasing out of order (wide DAG fan-in) simply
+//! yield fewer checkpoints, never unsound ones.
+//!
+//! ## Memory
+//!
+//! Snapshots are in-memory only and hold the full message arena of the
+//! prefix, so a base costs O(prefix events) bytes per snapshot. The
+//! answer store persists only the compact [`StageCheckpoint`] summaries
+//! (fingerprint, boundary time, station integrals, RNG position) — enough
+//! to prove prefix sharing across processes and warm-start *accounting*,
+//! not to resume; resumption needs a live base captured this process
+//! (the serving layer keeps the most recent one, see `service/`).
+
+use crate::model::config::{Config, Placement};
+use crate::model::engine::{self, Ev, World};
+use crate::model::faults::FaultPlan;
+use crate::model::fidelity::Fidelity;
+use crate::model::platform::{DiskKind, Platform};
+use crate::model::report::SimReport;
+use crate::sim::Simulation;
+use crate::trace::NoopProbe;
+use crate::util::hash::Fnv64;
+use crate::workload::{FileHint, FileSpec, Workload};
+use std::fmt;
+use std::sync::Arc;
+
+/// 128-bit per-stage fingerprint (two independently-seeded FNV-1a
+/// streams, like the service's evaluation-point fingerprint but over the
+/// stage-restricted input projection).
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct StageFp {
+    pub hi: u64,
+    pub lo: u64,
+}
+
+impl StageFp {
+    /// Parse the 32-hex-digit form produced by `Display`.
+    pub fn parse(s: &str) -> Option<StageFp> {
+        if s.len() != 32 || !s.is_ascii() {
+            return None;
+        }
+        let hi = u64::from_str_radix(&s[..16], 16).ok()?;
+        let lo = u64::from_str_radix(&s[16..], 16).ok()?;
+        Some(StageFp { hi, lo })
+    }
+}
+
+impl fmt::Display for StageFp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:016x}{:016x}", self.hi, self.lo)
+    }
+}
+
+impl fmt::Debug for StageFp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "StageFp({self})")
+    }
+}
+
+/// Two independently-seeded FNV-1a streams fed the same byte sequence.
+/// Seeded differently from the service fingerprint's pair so the two
+/// families never collide by construction.
+struct H2 {
+    a: Fnv64,
+    b: Fnv64,
+}
+
+impl H2 {
+    fn new() -> H2 {
+        H2 { a: Fnv64::with_seed(0x5EED_0011), b: Fnv64::with_seed(0x5EED_0012) }
+    }
+
+    fn u32(&mut self, x: u32) {
+        self.a.write_u32(x);
+        self.b.write_u32(x);
+    }
+
+    fn u64(&mut self, x: u64) {
+        self.a.write_u64(x);
+        self.b.write_u64(x);
+    }
+
+    fn usize(&mut self, x: usize) {
+        self.u64(x as u64);
+    }
+
+    fn f64(&mut self, x: f64) {
+        self.u64(x.to_bits());
+    }
+
+    fn bool(&mut self, x: bool) {
+        self.a.write_bool(x);
+        self.b.write_bool(x);
+    }
+
+    fn str(&mut self, s: &str) {
+        self.a.write_str(s);
+        self.b.write_str(s);
+    }
+
+    fn finish(&self) -> (u64, u64) {
+        (self.a.finish(), self.b.finish())
+    }
+
+    fn fp(&self) -> StageFp {
+        StageFp { hi: self.a.finish(), lo: self.b.finish() }
+    }
+}
+
+/// Full positional workload hash. Deliberately *more* discriminating than
+/// the service fingerprint's order-canonical one: within a campaign the
+/// workload object is shared verbatim, and a false mismatch only costs a
+/// cold fallback — a false match would cost correctness.
+fn hash_workload(h: &mut H2, wl: &Workload) {
+    h.str(&wl.name);
+    h.usize(wl.files.len());
+    for f in &wl.files {
+        h.str(&f.name);
+        h.u64(f.size.as_u64());
+        match f.hint {
+            FileHint::Default => h.u32(0),
+            FileHint::Local => h.u32(1),
+            FileHint::OnNode(n) => {
+                h.u32(2);
+                h.usize(n);
+            }
+            FileHint::Striped => h.u32(3),
+        }
+        match f.replication {
+            None => h.u32(0),
+            Some(r) => {
+                h.u32(1);
+                h.u32(r);
+            }
+        }
+        h.bool(f.prestaged);
+    }
+    h.usize(wl.tasks.len());
+    for t in &wl.tasks {
+        h.str(&t.name);
+        h.u32(t.stage);
+        h.u64(t.compute.as_ns());
+        h.u64(t.release.as_ns());
+        match t.pin_client {
+            None => h.u32(0),
+            Some(c) => {
+                h.u32(1);
+                h.usize(c);
+            }
+        }
+        h.usize(t.reads.len());
+        for &f in &t.reads {
+            h.usize(f);
+        }
+        h.usize(t.writes.len());
+        for &f in &t.writes {
+            h.usize(f);
+        }
+    }
+}
+
+/// Every `Platform` field feeds the hash (keep in sync with the struct;
+/// the service fingerprint hashes the same list).
+fn hash_platform(h: &mut H2, p: &Platform) {
+    h.str(&p.label);
+    h.f64(p.net_remote_bps);
+    h.f64(p.net_local_bps);
+    h.u64(p.net_latency.as_ns());
+    h.u64(p.net_latency_local.as_ns());
+    h.u64(p.frame_size.as_u64());
+    h.f64(p.storage_ns_per_byte_write);
+    h.f64(p.storage_ns_per_byte_read);
+    h.u64(p.storage_op.as_ns());
+    h.u64(p.manager_op.as_ns());
+    h.u64(p.client_op.as_ns());
+    h.u64(p.hdd_seek.as_ns());
+    h.u64(p.host_speed.len() as u64);
+    for &s in &p.host_speed {
+        h.f64(s);
+    }
+    h.u64(p.node_capacity.as_u64());
+    h.u32(match p.disk {
+        DiskKind::Ram => 0,
+        DiskKind::Hdd => 1,
+        DiskKind::Ssd => 2,
+    });
+}
+
+/// Every `Fidelity` switch feeds the hash (any of them can change the
+/// event sequence from the very first event — RNG draws at world
+/// construction included).
+fn hash_fidelity(h: &mut H2, f: &Fidelity) {
+    h.bool(f.frame_aggregation);
+    h.bool(f.control_rounds);
+    h.u32(f.alloc_batch);
+    h.bool(f.connections);
+    h.u64(f.conn_timeout.as_ns());
+    h.usize(f.syn_drop_qlen);
+    h.usize(f.syn_drop_full);
+    h.u64(f.stagger_mean.as_ns());
+    h.f64(f.jitter_sigma);
+    h.f64(f.manager_contention);
+    h.f64(f.hetero_sigma);
+    h.f64(f.mux_eta);
+    h.u64(f.per_target_setup.as_ns());
+    h.f64(f.train_qlen_scale);
+    h.bool(f.random_placement);
+    h.u64(f.seed);
+}
+
+/// The whole fault plan, seed included, feeds every stage fingerprint:
+/// crash/straggle events are armed at t=0 and link-loss verdicts hash the
+/// plan seed, so *any* plan change can perturb the very first stage — a
+/// changed plan must invalidate the whole prefix (cold fallback).
+fn hash_faults(h: &mut H2, plan: &FaultPlan) {
+    h.bool(plan.is_empty());
+    if plan.is_empty() {
+        return;
+    }
+    h.u64(plan.seed);
+    h.usize(plan.crashes.len());
+    for c in &plan.crashes {
+        h.usize(c.storage);
+        h.u64(c.at.as_ns());
+    }
+    h.usize(plan.stragglers.len());
+    for s in &plan.stragglers {
+        h.usize(s.host);
+        h.u64(s.at.as_ns());
+        h.f64(s.slowdown);
+    }
+    h.usize(plan.links.len());
+    for l in &plan.links {
+        h.usize(l.src);
+        h.usize(l.dst);
+        h.u64(l.from.as_ns());
+        h.u64(l.until.as_ns());
+        h.f64(l.prob);
+    }
+}
+
+/// Per-file projection of the value-dependent config knobs: what the
+/// protocol can actually observe about this file. Chunk size enters as
+/// the chunking *pattern* (count, full-chunk bytes when more than one
+/// chunk, last-chunk bytes), effective replication resolves the per-file
+/// override, and the stripe width is hashed only where the file's
+/// placement is stripe-sensitive — so a stripe sweep leaves stages whose
+/// files are all node-pinned with identical fingerprints.
+fn file_projection(h: &mut H2, f: &FileSpec, cfg: &Config) {
+    let full = cfg.chunk_size.as_u64();
+    let n_chunks = f.size.chunks(cfg.chunk_size);
+    h.u64(n_chunks);
+    h.u64(if n_chunks > 1 { full } else { 0 });
+    let last = if f.size.as_u64() == 0 { 0 } else { f.size.as_u64() - (n_chunks - 1) * full };
+    h.u64(last);
+    h.u32(f.replication.unwrap_or(cfg.replication));
+    match f.hint {
+        FileHint::OnNode(s) => {
+            h.u32(1);
+            h.usize(s % cfg.n_storage);
+        }
+        FileHint::Local => h.u32(2),
+        FileHint::Striped => {
+            h.u32(3);
+            h.usize(cfg.stripe_width.min(cfg.n_storage));
+        }
+        FileHint::Default => match cfg.placement {
+            Placement::RoundRobin => {
+                h.u32(4);
+                h.usize(cfg.stripe_width.min(cfg.n_storage));
+            }
+            Placement::Local => h.u32(5),
+        },
+    }
+}
+
+/// Per-stage fingerprints of one evaluation point: entry `s` commits to
+/// everything stages `0..=s` can observe. Two configs with equal entries
+/// `0..=s` produce the identical event sequence until the first release
+/// of a task of stage `> s` (see the module doc's boundary rule).
+///
+/// The config `label` is deliberately excluded: it flows only into the
+/// final report, which the resume path produces under the neighbor's own
+/// (rebound) config.
+pub fn stage_fingerprints(wl: &Workload, cfg: &Config, plat: &Platform, fid: &Fidelity) -> Vec<StageFp> {
+    let n = wl.n_stages() as usize;
+    let mut ctx = H2::new();
+    ctx.str("wfpred.stagefp.v1");
+    hash_workload(&mut ctx, wl);
+    hash_platform(&mut ctx, plat);
+    hash_fidelity(&mut ctx, fid);
+    hash_faults(&mut ctx, &cfg.faults);
+    // Config globals every protocol path reads, whatever the stage.
+    ctx.usize(cfg.n_app);
+    ctx.usize(cfg.n_storage);
+    ctx.bool(cfg.collocated);
+    ctx.u32(match cfg.placement {
+        Placement::RoundRobin => 0,
+        Placement::Local => 1,
+    });
+    ctx.bool(cfg.location_aware);
+    ctx.usize(cfg.io_window);
+    let (ca, cb) = ctx.finish();
+
+    // First stage that can touch each file (prestaged files are committed
+    // at t=0 and consume placement state, so they belong to every stage).
+    let mut first_touch: Vec<Option<u32>> = vec![None; wl.files.len()];
+    for (i, f) in wl.files.iter().enumerate() {
+        if f.prestaged {
+            first_touch[i] = Some(0);
+        }
+    }
+    for t in &wl.tasks {
+        for &f in t.reads.iter().chain(t.writes.iter()) {
+            let e = &mut first_touch[f];
+            *e = Some(e.map_or(t.stage, |s| s.min(t.stage)));
+        }
+    }
+
+    (0..n as u32)
+        .map(|s| {
+            let mut h = H2::new();
+            h.u64(ca);
+            h.u64(cb);
+            h.u32(s);
+            for (i, f) in wl.files.iter().enumerate() {
+                match first_touch[i] {
+                    Some(fs) if fs <= s => {}
+                    _ => continue,
+                }
+                h.usize(i);
+                file_projection(&mut h, f, cfg);
+            }
+            h.fp()
+        })
+        .collect()
+}
+
+/// Compact summary of one stage-boundary snapshot — what the answer
+/// store persists (fingerprinted per stage, so two configs can be *seen*
+/// to share a prefix across processes) and what the stats lines report.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StageCheckpoint {
+    /// Snapshot label: deepest stage fully incorporated in the state.
+    pub stage: u32,
+    /// `stage_fingerprints(..)[stage]` of the captured config.
+    pub fp: StageFp,
+    /// Virtual time of the boundary (ns).
+    pub t_ns: u64,
+    /// Events delivered up to the boundary.
+    pub events: u64,
+    /// Tasks finished up to the boundary.
+    pub tasks_finished: u32,
+    /// Network bytes modeled up to the boundary.
+    pub net_bytes: u64,
+    /// Interned placement outcomes so far (distinct allocations/groups —
+    /// the `AllocId`/`GroupId` population of `placement.rs`).
+    pub n_allocs: u32,
+    pub n_groups: u32,
+    /// Manager-station busy integral at the boundary (ns).
+    pub manager_busy_ns: u64,
+    /// Summed storage-station busy integral at the boundary (ns).
+    pub storage_busy_ns: u64,
+    /// Exact RNG stream position (xoshiro256** state words).
+    pub rng: [u64; 4],
+}
+
+/// What a delta warm-start did, surfaced on the answer and the campaign
+/// stats lines. Stage counts use the snapshot label as the boundary:
+/// `stages_skipped` were spliced from the checkpoint, `stages_replayed`
+/// were simulated (a stage released concurrently with an earlier one
+/// counts as replayed — attribution is conservative).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DeltaOutcome {
+    pub stages_skipped: u32,
+    pub stages_replayed: u32,
+}
+
+/// A resumed neighbor evaluation: the (bit-identical-to-cold) report,
+/// the skip attribution, and the matched prefix's checkpoint summaries
+/// (valid for the resumed config — their fingerprints matched — so the
+/// store can persist them under its answer too).
+pub struct DeltaResult {
+    pub report: SimReport,
+    pub outcome: DeltaOutcome,
+    pub checkpoints: Vec<StageCheckpoint>,
+}
+
+/// One in-memory stage-boundary snapshot: the compact summary plus the
+/// full cloned simulation it summarizes.
+struct Snapshot {
+    ck: StageCheckpoint,
+    sim: Simulation<World<NoopProbe>>,
+}
+
+/// A captured base simulation: the cold answer's stage fingerprints plus
+/// resumable snapshots at every stage boundary.
+pub struct DeltaBase {
+    wl: Arc<Workload>,
+    plat: Arc<Platform>,
+    fid: Fidelity,
+    n_stages: u32,
+    fps: Vec<StageFp>,
+    snaps: Vec<Snapshot>,
+}
+
+fn checkpoint_of(label: u32, fp: StageFp, sim: &Simulation<World<NoopProbe>>) -> StageCheckpoint {
+    let w = &sim.state;
+    StageCheckpoint {
+        stage: label,
+        fp,
+        t_ns: sim.sched.now().as_ns(),
+        events: sim.sched.processed(),
+        tasks_finished: w.driver.finished_tasks() as u32,
+        net_bytes: w.net_bytes,
+        n_allocs: w.placement.n_allocs() as u32,
+        n_groups: w.placement.n_groups() as u32,
+        manager_busy_ns: w.manager_st.stats.busy_ns,
+        storage_busy_ns: w.storage_st.iter().map(|s| s.stats.busy_ns).sum(),
+        rng: w.rng.state_words(),
+    }
+}
+
+impl DeltaBase {
+    /// Run a cold simulation, capturing a resumable snapshot at every
+    /// stage boundary. The report is bit-identical to
+    /// [`crate::model::simulate_fid`] on the same inputs: the loop is the
+    /// same prepare → deliver-in-order → finalize sequence, and peeking /
+    /// cloning never perturbs delivery.
+    pub fn capture(wl: &Workload, cfg: &Config, plat: &Platform, fid: Fidelity) -> (SimReport, DeltaBase) {
+        let wl = Arc::new(wl.clone());
+        let cfg = Arc::new(cfg.clone());
+        let plat = Arc::new(plat.clone());
+        let n_stages = wl.n_stages();
+        let fps = stage_fingerprints(&wl, &cfg, &plat, &fid);
+        let mut sim =
+            engine::prepare_sim(wl.clone(), cfg.clone(), plat.clone(), fid.clone(), NoopProbe);
+        let mut snaps: Vec<Snapshot> = Vec::new();
+        let mut max_released: i64 = -1;
+        let mut n = 0u64;
+        loop {
+            // Boundary rule: snapshot just before the first release of a
+            // task of a not-yet-seen-higher stage (see module doc).
+            let boundary = match sim.sched.peek() {
+                None => break,
+                Some((_, Ev::Release(t))) => {
+                    let s = wl.tasks[*t].stage as i64;
+                    if s > max_released { Some(s) } else { None }
+                }
+                Some(_) => None,
+            };
+            if let Some(s_next) = boundary {
+                if max_released >= 0 {
+                    let label = max_released as u32;
+                    let ck = checkpoint_of(label, fps[label as usize], &sim);
+                    snaps.push(Snapshot { ck, sim: sim.clone() });
+                }
+                max_released = s_next;
+            }
+            let stepped = sim.step();
+            debug_assert!(stepped, "peek saw a live event but step found none");
+            n += 1;
+            if n >= engine::MAX_SIM_EVENTS {
+                panic!("simulation exceeded {} events — livelock?", engine::MAX_SIM_EVENTS);
+            }
+        }
+        let end = sim.sched.now();
+        let (report, _probe) = engine::finalize_sim(sim, end);
+        (report, DeltaBase { wl, plat, fid, n_stages, fps, snaps })
+    }
+
+    /// Warm-start a neighbor: verify the stage-fingerprint prefix match,
+    /// splice the deepest valid snapshot under the neighbor's config, and
+    /// replay only the suffix. `None` when no prefix matches (changed
+    /// fault plan, changed workload, changed global knob, or a first-stage
+    /// knob difference) — the caller falls back to the cold path.
+    ///
+    /// The neighbor's fingerprints are computed over the *caller's*
+    /// workload: a workload differing anywhere from the base's perturbs
+    /// the context hash and with it every stage fingerprint, so prefix
+    /// length 0 forces the cold fallback rather than replaying the wrong
+    /// DAG.
+    pub fn resume(&self, wl: &Workload, cfg: &Config) -> Option<DeltaResult> {
+        cfg.validate().ok()?;
+        let theirs = stage_fingerprints(wl, cfg, &self.plat, &self.fid);
+        let mut matched = 0usize;
+        while matched < self.fps.len()
+            && matched < theirs.len()
+            && self.fps[matched] == theirs[matched]
+        {
+            matched += 1;
+        }
+        // Deepest snapshot whose incorporated stages all matched.
+        let snap = self.snaps.iter().rev().find(|s| (s.ck.stage as usize) < matched)?;
+        let mut sim = snap.sim.clone();
+        sim.state.rebind_config(Arc::new(cfg.clone()));
+        let end = sim.run_capped(engine::MAX_SIM_EVENTS);
+        let (report, _probe) = engine::finalize_sim(sim, end);
+        let skipped = snap.ck.stage + 1;
+        let checkpoints =
+            self.snaps.iter().filter(|s| (s.ck.stage as usize) < matched).map(|s| s.ck.clone()).collect();
+        Some(DeltaResult {
+            report,
+            outcome: DeltaOutcome {
+                stages_skipped: skipped,
+                stages_replayed: self.n_stages.saturating_sub(skipped),
+            },
+            checkpoints,
+        })
+    }
+
+    /// The captured run's compact checkpoint summaries (for persistence).
+    pub fn checkpoints(&self) -> Vec<StageCheckpoint> {
+        self.snaps.iter().map(|s| s.ck.clone()).collect()
+    }
+
+    /// The workload this base was captured from.
+    pub fn workload(&self) -> &Workload {
+        &self.wl
+    }
+
+    /// Per-stage fingerprints of the captured config.
+    pub fn stage_fps(&self) -> &[StageFp] {
+        &self.fps
+    }
+
+    /// Resumable snapshots captured (≤ stages − 1; fewer when stages
+    /// release out of order).
+    pub fn n_snapshots(&self) -> usize {
+        self.snaps.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::engine::simulate_fid;
+    use crate::util::units::{Bytes, SimTime};
+    use crate::workload::TaskSpec;
+
+    /// Stage 0 writes node-pinned files (stripe-insensitive); stage 1
+    /// reads them and writes a round-robin (stripe-sensitive) output.
+    fn two_stage_wl(n_stage0: usize) -> Workload {
+        let mut w = Workload::new("delta-test");
+        // Node-pinned so stage 0's fingerprint is stripe-insensitive.
+        let db =
+            w.add_file(FileSpec::new("db", Bytes::mb(2)).hint(FileHint::OnNode(0)).prestaged());
+        let mut mids = Vec::new();
+        for i in 0..n_stage0 {
+            let f = w.add_file(
+                FileSpec::new(format!("mid{i}"), Bytes::mb(4)).hint(FileHint::OnNode(i)),
+            );
+            mids.push(f);
+            w.add_task(TaskSpec::new(format!("t0-{i}"), 0).reads(db).writes(f).compute(SimTime::from_ms(5)));
+        }
+        let out = w.add_file(FileSpec::new("out", Bytes::mb(1)));
+        let mut agg = TaskSpec::new("t1", 1).writes(out);
+        for &m in &mids {
+            agg = agg.reads(m);
+        }
+        w.add_task(agg);
+        w
+    }
+
+    fn plat() -> Platform {
+        Platform::paper_testbed()
+    }
+
+    fn base_cfg() -> Config {
+        Config::partitioned(4, 4, Bytes::mb(1)).with_label("delta-base").with_stripe(1)
+    }
+
+    fn assert_reports_identical(a: &SimReport, b: &SimReport) {
+        // Bit-identity, no tolerances: Debug formats f64 with shortest
+        // round-trip precision, so equal strings ⇒ equal bits here.
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    }
+
+    #[test]
+    fn capture_report_matches_cold_exactly() {
+        let wl = two_stage_wl(3);
+        let cfg = base_cfg();
+        let cold = simulate_fid(&wl, &cfg, &plat(), Fidelity::coarse());
+        let (captured, base) = DeltaBase::capture(&wl, &cfg, &plat(), Fidelity::coarse());
+        assert_reports_identical(&cold, &captured);
+        assert_eq!(base.n_snapshots(), 1, "one boundary between two stages");
+        let cks = base.checkpoints();
+        assert_eq!(cks[0].stage, 0);
+        assert!(cks[0].t_ns > 0 && cks[0].events > 0);
+        assert_eq!(cks[0].fp, base.stage_fps()[0]);
+    }
+
+    #[test]
+    fn stripe_perturbation_resumes_bit_identical() {
+        let wl = two_stage_wl(3);
+        let (_, base) = DeltaBase::capture(&wl, &base_cfg(), &plat(), Fidelity::coarse());
+        for stripe in [2usize, 3, 4] {
+            let neighbor = Config::partitioned(4, 4, Bytes::mb(1))
+                .with_label("delta-neighbor")
+                .with_stripe(stripe);
+            let r = base.resume(&wl, &neighbor).expect("stage-0 prefix must match");
+            let cold = simulate_fid(&wl, &neighbor, &plat(), Fidelity::coarse());
+            assert_reports_identical(&cold, &r.report);
+            assert_eq!(r.outcome, DeltaOutcome { stages_skipped: 1, stages_replayed: 1 });
+            assert_eq!(r.checkpoints.len(), 1, "matched prefix summaries travel along");
+        }
+    }
+
+    #[test]
+    fn stage_fps_isolate_stripe_sensitivity() {
+        let wl = two_stage_wl(2);
+        let a = stage_fingerprints(&wl, &base_cfg(), &plat(), &Fidelity::coarse());
+        let b = stage_fingerprints(
+            &wl,
+            &Config::partitioned(4, 4, Bytes::mb(1)).with_label("other").with_stripe(3),
+            &plat(),
+            &Fidelity::coarse(),
+        );
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[0], b[0], "stage 0 files are node-pinned — stripe-insensitive");
+        assert_ne!(a[1], b[1], "stage 1 output is round-robin — stripe-sensitive");
+        // The label is not part of the stage fingerprint (it only names
+        // the final report).
+        let relabeled = stage_fingerprints(
+            &wl,
+            &base_cfg().with_label("renamed"),
+            &plat(),
+            &Fidelity::coarse(),
+        );
+        assert_eq!(a, relabeled);
+    }
+
+    #[test]
+    fn changed_fault_plan_invalidates_the_whole_prefix() {
+        let wl = two_stage_wl(2);
+        let (_, base) = DeltaBase::capture(&wl, &base_cfg(), &plat(), Fidelity::coarse());
+        let faulty = base_cfg().with_fault_plan(FaultPlan::parse("crash=1@2").unwrap());
+        assert!(base.resume(&wl, &faulty).is_none(), "a changed plan must fall back to cold");
+        // And the reverse: a base captured *with* the plan rejects the
+        // plan-free neighbor.
+        let (_, fbase) = DeltaBase::capture(&wl, &faulty, &plat(), Fidelity::coarse());
+        assert!(fbase.resume(&wl, &base_cfg()).is_none());
+    }
+
+    #[test]
+    fn changed_global_knob_invalidates_the_whole_prefix() {
+        let wl = two_stage_wl(2);
+        let (_, base) = DeltaBase::capture(&wl, &base_cfg(), &plat(), Fidelity::coarse());
+        let wider =
+            Config::partitioned(4, 5, Bytes::mb(1)).with_label("delta-base").with_stripe(1);
+        assert!(base.resume(&wl, &wider).is_none(), "n_storage is read from the first event on");
+    }
+
+    #[test]
+    fn changed_workload_invalidates_the_whole_prefix() {
+        let wl = two_stage_wl(2);
+        let (_, base) = DeltaBase::capture(&wl, &base_cfg(), &plat(), Fidelity::coarse());
+        let other = two_stage_wl(3);
+        assert!(
+            base.resume(&other, &base_cfg()).is_none(),
+            "a different DAG must never splice the base's state"
+        );
+    }
+
+    #[test]
+    fn faulty_base_resumes_bit_identical_when_plan_is_shared() {
+        // Same fault plan on both sides: the prefix matches and the
+        // degraded-mode suffix replays under the neighbor's stripe.
+        let wl = two_stage_wl(3);
+        let plan = FaultPlan::parse("seed=7;crash=2@30").unwrap();
+        let cfg_a = base_cfg().with_fault_plan(plan.clone());
+        let (_, base) = DeltaBase::capture(&wl, &cfg_a, &plat(), Fidelity::coarse());
+        let neighbor = Config::partitioned(4, 4, Bytes::mb(1))
+            .with_label("delta-neighbor")
+            .with_stripe(2)
+            .with_fault_plan(plan);
+        if let Some(r) = base.resume(&wl, &neighbor) {
+            let cold = simulate_fid(&wl, &neighbor, &plat(), Fidelity::coarse());
+            assert_reports_identical(&cold, &r.report);
+        }
+    }
+}

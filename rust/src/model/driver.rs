@@ -32,7 +32,7 @@ enum Phase {
 }
 
 /// Driver bookkeeping, separated from the protocol state of `World`.
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 pub struct DriverState {
     /// Per task: number of input files not yet committed.
     deps_left: Vec<usize>,
@@ -92,7 +92,7 @@ impl DriverState {
     }
 }
 
-impl<'a, P: Probe> World<'a, P> {
+impl<P: Probe> World<P> {
     /// A file committed at the manager: notify waiting tasks.
     pub(crate) fn file_committed(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, file: usize) {
         let waiters = std::mem::take(&mut self.driver.waiting[file]);

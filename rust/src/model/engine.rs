@@ -86,6 +86,7 @@ use crate::util::rng::Rng;
 use crate::util::units::{Bytes, SimTime};
 use crate::workload::{FileHint, Workload};
 use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
 
 /// Connection key: canonical (host, host) pair. Data-path connections are
 /// pooled per host pair (as the real SAI does) and persist for the run;
@@ -94,7 +95,7 @@ use std::collections::{BTreeMap, HashMap};
 pub(crate) type ConnKey = (usize, usize);
 
 /// State of a per-(op, host-pair) data connection (detailed fidelity).
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 pub(crate) enum ConnState {
     /// Awaiting SYN/ACK; messages queue up. `dst` is the passive side
     /// whose in-NIC congestion governs SYN loss.
@@ -124,6 +125,7 @@ struct TrainSvc {
 /// (`pending`): an arrival changes the fair shares, so the superseded
 /// event is cancelled at the engine and the new announcement scheduled in
 /// its place — stale completions never reach the handler.
+#[derive(Clone)]
 pub(crate) enum NicIn {
     Fifo(Station<Frame>),
     Fair { st: FairStation<Frame>, pending: Option<EventToken> },
@@ -250,10 +252,17 @@ fn tag_of(p: &Payload) -> MsgTag {
     }
 }
 
-pub struct World<'a, P: Probe = NoopProbe> {
-    pub(crate) cfg: &'a Config,
-    pub(crate) plat: &'a Platform,
-    pub(crate) wl: &'a Workload,
+/// The model state is fully owned (`Arc`-shared inputs, value state
+/// everywhere else) and `Clone`: cloning a `Simulation<World<P>>`
+/// snapshots the entire simulation mid-flight. The delta re-simulation
+/// path (`model/delta.rs`) captures such snapshots at stage boundaries
+/// and resumes them under a neighboring config by rebinding `cfg` — see
+/// [`World::rebind_config`].
+#[derive(Clone)]
+pub struct World<P: Probe = NoopProbe> {
+    pub(crate) cfg: Arc<Config>,
+    pub(crate) plat: Arc<Platform>,
+    pub(crate) wl: Arc<Workload>,
     pub(crate) fid: Fidelity,
     pub(crate) rng: Rng,
     /// Per-host speed multiplier drawn per trial (heterogeneity knob).
@@ -328,23 +337,24 @@ pub struct World<'a, P: Probe = NoopProbe> {
     unrecoverable_ops: u64,
 }
 
-impl<'a> World<'a> {
-    pub fn new(wl: &'a Workload, cfg: &'a Config, plat: &'a Platform, fid: Fidelity) -> World<'a> {
+impl World {
+    pub fn new(wl: Arc<Workload>, cfg: Arc<Config>, plat: Arc<Platform>, fid: Fidelity) -> World {
         World::with_probe(wl, cfg, plat, fid, NoopProbe)
     }
 }
 
-impl<'a, P: Probe> World<'a, P> {
+impl<P: Probe> World<P> {
     /// Build a world reporting into `probe` (the untraced path goes
     /// through [`World::new`], which plugs in the zero-cost [`NoopProbe`]).
     pub fn with_probe(
-        wl: &'a Workload,
-        cfg: &'a Config,
-        plat: &'a Platform,
+        wl: Arc<Workload>,
+        cfg: Arc<Config>,
+        plat: Arc<Platform>,
         fid: Fidelity,
         probe: P,
-    ) -> World<'a, P> {
+    ) -> World<P> {
         let h = cfg.n_hosts();
+        let (n_app, n_storage) = (cfg.n_app, cfg.n_storage);
         let mut rng = Rng::new(fid.seed ^ 0x5EED_CAFE);
         let speed_mult = (0..h)
             .map(|_| {
@@ -357,9 +367,6 @@ impl<'a, P: Probe> World<'a, P> {
             .collect();
         let aggregated = fid.frame_aggregation;
         let mut w = World {
-            cfg,
-            plat,
-            wl,
             fid,
             rng,
             speed_mult,
@@ -378,22 +385,22 @@ impl<'a, P: Probe> World<'a, P> {
                 })
                 .collect(),
             manager_st: Station::new(),
-            storage_st: (0..cfg.n_storage).map(|_| Station::new()).collect(),
-            client_st: (0..cfg.n_app).map(|_| Station::new()).collect(),
+            storage_st: (0..n_storage).map(|_| Station::new()).collect(),
+            client_st: (0..n_app).map(|_| Station::new()).collect(),
             msgs: Vec::with_capacity(1024),
             meta: vec![None; wl.files.len()],
             rr_cursor: 0,
-            placement: PlacementArena::new(cfg.n_storage),
+            placement: PlacementArena::new(n_storage),
             ops: Vec::with_capacity(wl.tasks.len() * 4),
-            driver: DriverState::new(wl, cfg),
-            stored: vec![0; cfg.n_storage],
+            driver: DriverState::new(&wl, &cfg),
+            stored: vec![0; n_storage],
             net_bytes: 0,
             net_frames: 0,
             op_records: Vec::new(),
             task_records: Vec::new(),
             nic_in_pacing_overcount: vec![0; h],
             probe,
-            dead: vec![false; cfg.n_storage],
+            dead: vec![false; n_storage],
             pending_chunks: BTreeMap::new(),
             op_failed: Vec::new(),
             fault_retries: 0,
@@ -402,16 +409,31 @@ impl<'a, P: Probe> World<'a, P> {
             fault_msgs_dropped: 0,
             fault_work_lost: 0,
             unrecoverable_ops: 0,
+            cfg,
+            plat,
+            wl,
         };
         w.prestage_files();
         w
+    }
+
+    /// Swap in a different owned config without touching any other state.
+    ///
+    /// This is the delta warm-start splice point: a snapshot captured
+    /// under config A is resumed under neighbor B after
+    /// `model/delta.rs` has proven (via the per-stage fingerprints) that
+    /// every decision taken *so far* — placement, chunking, timeouts,
+    /// RNG draws — would have been identical under B, so only the
+    /// not-yet-simulated suffix can observe the difference.
+    pub(crate) fn rebind_config(&mut self, cfg: Arc<Config>) {
+        self.cfg = cfg;
     }
 
     /// Commit prestaged files' metadata at t=0 (e.g., the BLAST database
     /// "already loaded in intermediate storage"). Bytes are accounted but
     /// no traffic is generated.
     fn prestage_files(&mut self) {
-        let wl = self.wl;
+        let wl = self.wl.clone();
         for (fid, f) in wl.files.iter().enumerate() {
             if !f.prestaged {
                 continue;
@@ -1460,7 +1482,7 @@ impl<'a, P: Probe> World<'a, P> {
     }
 }
 
-impl<'a, P: Probe> SimState for World<'a, P> {
+impl<P: Probe> SimState for World<P> {
     type Ev = Ev;
 
     fn handle(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, ev: Ev) {
@@ -1518,6 +1540,86 @@ pub fn simulate_traced(
     (report, rec)
 }
 
+/// Runaway guard shared by every run loop over a [`World`] (the plain
+/// path here and the stepping capture loop in `model/delta.rs`).
+pub(crate) const MAX_SIM_EVENTS: u64 = 50_000_000_000;
+
+/// Build a ready-to-run simulation: validate, construct the world, arm
+/// the fault schedule, and schedule the initial task releases. Shared
+/// verbatim by the plain path ([`simulate_fid`]) and the delta
+/// checkpoint-capture path (`model/delta.rs`), so both produce the exact
+/// same event sequence.
+pub(crate) fn prepare_sim<P: Probe>(
+    wl: Arc<Workload>,
+    cfg: Arc<Config>,
+    plat: Arc<Platform>,
+    fid: Fidelity,
+    probe: P,
+) -> Simulation<World<P>> {
+    cfg.validate().unwrap_or_else(|e| panic!("invalid config: {e}"));
+    plat.validate().unwrap_or_else(|e| panic!("invalid platform: {e}"));
+    wl.validate().unwrap_or_else(|e| panic!("invalid workload: {e}"));
+
+    let stagger = fid.stagger_mean;
+    let n_tasks = wl.tasks.len();
+    let faults = cfg.faults.clone();
+    let mut sim = Simulation::new(World::with_probe(wl, cfg, plat, fid, probe));
+    // Pre-size the event arena past the initial burst so the frame-path
+    // hot loop runs entirely on recycled slots.
+    sim.sched.reserve(256 + n_tasks * 4);
+    // Arm the fault schedule (an empty plan schedules nothing, keeping
+    // event sequence numbers — and hence same-time ordering — identical
+    // to the pre-fault engine).
+    if !faults.is_empty() {
+        for c in &faults.crashes {
+            sim.sched.at(c.at, Ev::Crash(c.storage));
+        }
+        for (i, s) in faults.stragglers.iter().enumerate() {
+            sim.sched.at(s.at, Ev::Straggle(i));
+        }
+    }
+    // Release initially-runnable tasks (staggered under detailed fidelity:
+    // "coordination overheads make them slightly staggered", §5).
+    let initial = sim.state.driver.initially_ready();
+    for t in initial {
+        // Workload-declared release time (richer description, §5) plus
+        // the testbed's stochastic coordination stagger.
+        let mut at = sim.state.wl.tasks[t].release;
+        if stagger > SimTime::ZERO {
+            at += SimTime::from_secs_f64(sim.state.rng.exp(stagger.as_secs_f64()));
+        }
+        sim.sched.at(at, Ev::Release(t));
+    }
+    sim
+}
+
+/// Tear a drained simulation down into its report (+ probe): checks the
+/// fault-free drain invariant and finishes every station at `end`.
+/// Shared by the plain path and both delta paths (capture and resume),
+/// so the accounting — including the scheduler's processed/cancelled
+/// totals, which a resumed clone carries over from the shared prefix —
+/// is identical everywhere.
+pub(crate) fn finalize_sim<P: Probe>(sim: Simulation<World<P>>, end: SimTime) -> (SimReport, P) {
+    let events = sim.sched.processed();
+    let cancelled = sim.sched.cancelled();
+    let done = sim.state.driver.finished_tasks();
+    // Under a fault plan, unrecoverable ops legitimately strand their
+    // task (and its dependents); fault-free, an undrained workload is a
+    // deadlock bug.
+    if sim.state.cfg.faults.is_empty() {
+        assert_eq!(
+            done,
+            sim.state.wl.tasks.len(),
+            "simulation drained with {done}/{} tasks finished — workload deadlock (config {})",
+            sim.state.wl.tasks.len(),
+            sim.state.cfg.label
+        );
+    }
+    let mut state = sim.state;
+    let report = state.finish_report(end, events, cancelled);
+    (report, state.probe)
+}
+
 /// The engine entry point, generic over the probe: validate, arm the
 /// fault schedule, release the initial tasks, run to completion, and
 /// hand back the report plus the probe (so recording probes can be
@@ -1529,55 +1631,15 @@ fn run_sim<P: Probe>(
     fid: Fidelity,
     probe: P,
 ) -> (SimReport, P) {
-    cfg.validate().unwrap_or_else(|e| panic!("invalid config: {e}"));
-    plat.validate().unwrap_or_else(|e| panic!("invalid platform: {e}"));
-    wl.validate().unwrap_or_else(|e| panic!("invalid workload: {e}"));
-
-    let stagger = fid.stagger_mean;
-    let mut sim = Simulation::new(World::with_probe(wl, cfg, plat, fid, probe));
-    // Pre-size the event arena past the initial burst so the frame-path
-    // hot loop runs entirely on recycled slots.
-    sim.sched.reserve(256 + wl.tasks.len() * 4);
-    // Arm the fault schedule (an empty plan schedules nothing, keeping
-    // event sequence numbers — and hence same-time ordering — identical
-    // to the pre-fault engine).
-    if !cfg.faults.is_empty() {
-        for c in &cfg.faults.crashes {
-            sim.sched.at(c.at, Ev::Crash(c.storage));
-        }
-        for (i, s) in cfg.faults.stragglers.iter().enumerate() {
-            sim.sched.at(s.at, Ev::Straggle(i));
-        }
-    }
-    // Release initially-runnable tasks (staggered under detailed fidelity:
-    // "coordination overheads make them slightly staggered", §5).
-    let initial = sim.state.driver.initially_ready();
-    for t in initial {
-        // Workload-declared release time (richer description, §5) plus
-        // the testbed's stochastic coordination stagger.
-        let mut at = wl.tasks[t].release;
-        if stagger > SimTime::ZERO {
-            at += SimTime::from_secs_f64(sim.state.rng.exp(stagger.as_secs_f64()));
-        }
-        sim.sched.at(at, Ev::Release(t));
-    }
-    let end = sim.run_capped(50_000_000_000);
-    let events = sim.sched.processed();
-    let cancelled = sim.sched.cancelled();
-    let done = sim.state.driver.finished_tasks();
-    // Under a fault plan, unrecoverable ops legitimately strand their
-    // task (and its dependents); fault-free, an undrained workload is a
-    // deadlock bug.
-    if cfg.faults.is_empty() {
-        assert_eq!(
-            done,
-            wl.tasks.len(),
-            "simulation drained with {done}/{} tasks finished — workload deadlock (config {})",
-            wl.tasks.len(),
-            cfg.label
-        );
-    }
-    let mut state = sim.state;
-    let report = state.finish_report(end, events, cancelled);
-    (report, state.probe)
+    // The world owns its inputs (so mid-flight snapshots are 'static and
+    // cloneable); one clone per simulation is noise next to the run itself.
+    let mut sim = prepare_sim(
+        Arc::new(wl.clone()),
+        Arc::new(cfg.clone()),
+        Arc::new(plat.clone()),
+        fid,
+        probe,
+    );
+    let end = sim.run_capped(MAX_SIM_EVENTS);
+    finalize_sim(sim, end)
 }

@@ -25,6 +25,10 @@
 //!   stations, manager metadata, client operations.
 //! * [`driver`] — the application driver: releases tasks when their input
 //!   files exist, with optional data-location-aware scheduling (WASS).
+//! * [`delta`] — incremental re-simulation: per-stage input fingerprints,
+//!   stage-boundary checkpoints, and delta warm-starts that replay only
+//!   the stages a neighbor config actually changes (bit-identical to the
+//!   cold path by construction).
 //! * [`report`] — simulation output: turnaround, per-stage/per-task times,
 //!   transfer and storage accounting, per-component utilization.
 
@@ -37,9 +41,11 @@ pub mod energy;
 pub mod faults;
 pub mod engine;
 pub mod driver;
+pub mod delta;
 pub mod report;
 
 pub use config::{Config, Placement};
+pub use delta::{stage_fingerprints, DeltaBase, DeltaOutcome, DeltaResult, StageCheckpoint, StageFp};
 pub use faults::{Crash, FaultPlan, LinkLoss, Straggler};
 pub use placement::{AllocId, GroupId, PlacementArena, RefPlacement};
 pub use engine::{simulate, simulate_fid, simulate_traced};

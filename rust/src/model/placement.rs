@@ -109,7 +109,7 @@ enum AllocDef {
 /// resolves to ids into this arena, and each distinct group or
 /// allocation is stored exactly once regardless of how many chunks,
 /// files, or operations share it.
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 pub struct PlacementArena {
     n_storage: u32,
     groups: Vec<GroupDef>,

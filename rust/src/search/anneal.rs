@@ -13,6 +13,12 @@
 //! best state (parallel-tempering-style broadcast) at a deterministic
 //! barrier — cheap now that the service cache absorbs the revisits an
 //! adopted state causes.
+//!
+//! Fresh points ride the service's incremental re-simulation path
+//! (`crate::model::delta`): annealing moves perturb one knob at a time,
+//! so a neighbor usually shares a stage-fingerprint prefix with the
+//! point it came from and replays only the suffix of stages the knob
+//! touches. [`AnnealResult::delta_hits`] reports how often that paid off.
 
 use crate::coordinator;
 use crate::model::Config;
@@ -29,9 +35,20 @@ pub struct AnnealResult {
     pub best_time_s: f64,
     /// Distinct DES simulations issued through the service. Chains share
     /// the cache, so a point visited by several chains counts once.
+    /// Delta warm-starts count here too — they are real simulations, just
+    /// cheaper ones.
     pub evaluations: usize,
     /// (time_s per accepted step) — the winning chain's descent trace.
     pub trace: Vec<f64>,
+    /// Of `evaluations`, how many were delta warm-starts spliced from a
+    /// neighbor's stage checkpoints (see `crate::model::delta`) instead
+    /// of cold simulations. Annealing moves perturb one knob at a time,
+    /// which is exactly the access pattern the delta path favors.
+    pub delta_hits: u64,
+    /// Total stages skipped across this run's delta warm-starts.
+    pub delta_stages_skipped: u64,
+    /// Total stages re-simulated across this run's delta warm-starts.
+    pub delta_stages_replayed: u64,
 }
 
 /// Simulated annealing over (allocation, partitioning, chunk, replication).
@@ -138,7 +155,7 @@ impl Annealer {
         // Cap workers at the core count; slot-by-index results make the
         // outcome independent of how many threads actually run.
         let workers = coordinator::available_threads().min(chains);
-        let misses0 = service.stats().misses;
+        let stats0 = service.stats();
 
         let mut states = coordinator::par_map_indexed(chains, workers, |i| {
             // Chain 0 reproduces the single-chain run bit-for-bit.
@@ -173,11 +190,15 @@ impl Annealer {
             }
         }
         let winner = states.swap_remove(best_idx);
+        let stats1 = service.stats();
         AnnealResult {
             best: winner.best,
             best_time_s: winner.best_t,
-            evaluations: (service.stats().misses - misses0) as usize,
+            evaluations: (stats1.misses - stats0.misses) as usize,
             trace: winner.trace,
+            delta_hits: stats1.delta_hits - stats0.delta_hits,
+            delta_stages_skipped: stats1.delta_stages_skipped - stats0.delta_stages_skipped,
+            delta_stages_replayed: stats1.delta_stages_replayed - stats0.delta_stages_replayed,
         }
     }
 

@@ -15,6 +15,14 @@
 //! byte-identical to direct prediction; with [`Searcher::with_surrogate`]
 //! the interior of the grid can instead be answered by gated
 //! interpolation, paying full simulation only near the frontier.
+//!
+//! Campaign evaluations additionally ride the service's **incremental
+//! re-simulation** path (`crate::model::delta`): each cold simulation
+//! captures stage-boundary checkpoints, and a neighbor candidate whose
+//! stage-fingerprint prefix matches replays only the suffix of stages its
+//! knobs actually perturb — bit-identical to a cold run by construction.
+//! [`SearchReport::delta_hits`] / `delta_stages_skipped` /
+//! `delta_stages_replayed` account for what the sweep saved.
 
 pub mod anneal;
 
@@ -22,7 +30,7 @@ use crate::coordinator;
 use crate::model::{Config, FaultPlan};
 use crate::predict::{Prediction, Predictor};
 use crate::runtime::{encode_config, encode_platform, Score, ScorerRuntime, StageDesc};
-use crate::service::{Estimate, GridCoord, Service};
+use crate::service::{Estimate, GridCoord, Service, StatsSnapshot};
 use crate::util::units::Bytes;
 use crate::workload::Workload;
 use std::collections::HashMap;
@@ -155,6 +163,18 @@ pub struct SearchReport {
     /// How many candidates the prescreen pruned before refinement.
     pub pruned: usize,
     pub wallclock_secs: f64,
+    /// Of the simulations this search issued, how many were answered by
+    /// the service's incremental re-simulation path (delta warm-starts
+    /// spliced from a neighbor's stage checkpoints) rather than a cold
+    /// run. Counter deltas over this search only; all three are zero when
+    /// the service was built [`Service::without_delta`].
+    pub delta_hits: u64,
+    /// Total stages skipped (replayed from checkpoints) across this
+    /// search's delta warm-starts.
+    pub delta_stages_skipped: u64,
+    /// Total stages actually re-simulated across this search's delta
+    /// warm-starts.
+    pub delta_stages_replayed: u64,
 }
 
 /// The search engine.
@@ -246,8 +266,14 @@ impl<'a> Searcher<'a> {
                 &owned_service
             }
         };
+        // Neighbor evaluations ride the service's incremental
+        // re-simulation path by default (see `model::delta`): the counter
+        // deltas over this search become the report's delta_* fields.
+        let stats0 = service.stats();
         if let Some(bound) = self.surrogate {
-            return self.search_surrogate(space, bound, service, &workload_for, t0);
+            let mut report = self.search_surrogate(space, bound, service, &workload_for, t0);
+            stamp_delta(&mut report, &stats0, &service.stats());
+            return report;
         }
         let configs = space.enumerate();
         assert!(!configs.is_empty(), "empty search space");
@@ -313,7 +339,9 @@ impl<'a> Searcher<'a> {
                 surrogate: None,
             });
         }
-        assemble_report(candidates, pruned, t0)
+        let mut report = assemble_report(candidates, pruned, t0);
+        stamp_delta(&mut report, &stats0, &service.stats());
+        report
     }
 
     /// The surrogate-gated search: exact seed evaluations pin each
@@ -498,7 +526,19 @@ fn assemble_report(
         pareto: front,
         pruned,
         wallclock_secs: t0.elapsed().as_secs_f64(),
+        delta_hits: 0,
+        delta_stages_skipped: 0,
+        delta_stages_replayed: 0,
     }
+}
+
+/// Stamp the service's incremental re-simulation counter deltas for this
+/// search onto its report. Counters are monotone, so the subtraction is
+/// exact even on a shared warm handle.
+fn stamp_delta(report: &mut SearchReport, before: &StatsSnapshot, after: &StatsSnapshot) {
+    report.delta_hits = after.delta_hits - before.delta_hits;
+    report.delta_stages_skipped = after.delta_stages_skipped - before.delta_stages_skipped;
+    report.delta_stages_replayed = after.delta_stages_replayed - before.delta_stages_replayed;
 }
 
 /// Ranking agreement between prescreen and refined estimates over a

@@ -52,13 +52,14 @@ pub use store::{DiskStore, FailureStats, StoredAnswer};
 pub use surrogate::{Estimate, GridCoord, SurrogateGrid};
 
 use crate::coordinator;
-use crate::model::{Config, Fidelity};
+use crate::model::{Config, DeltaBase, DeltaOutcome, Fidelity, SimReport, StageCheckpoint};
 use crate::predict::{Prediction, Predictor};
 use crate::workload::Workload;
 use cache::ShardedLru;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 /// Default in-memory cache budget (whole `Prediction`s, LRU-evicted).
 pub const DEFAULT_CACHE_CAPACITY: usize = 4096;
@@ -148,6 +149,10 @@ pub enum Answer {
         source: Source,
         engine: EngineId,
         failures: FailureStats,
+        /// `Some` when the simulation behind this answer was computed by a
+        /// delta warm-start this process (how many stages were spliced vs
+        /// replayed); `None` for cold simulations and disk-store answers.
+        delta: Option<DeltaOutcome>,
     },
     Surrogate {
         fp: Fingerprint,
@@ -210,6 +215,15 @@ impl Answer {
             Answer::Surrogate { .. } => None,
         }
     }
+
+    /// The delta warm-start attribution, when the simulation behind this
+    /// answer was resumed from a checkpoint rather than run cold.
+    pub fn delta(&self) -> Option<DeltaOutcome> {
+        match self {
+            Answer::Exact { delta, .. } => *delta,
+            Answer::Surrogate { .. } => None,
+        }
+    }
 }
 
 /// One query of the batch/serve protocol. `family` namespaces the
@@ -231,6 +245,9 @@ struct Counters {
     dedup_waits: AtomicU64,
     disk_hits: AtomicU64,
     surrogate_answers: AtomicU64,
+    delta_hits: AtomicU64,
+    delta_stages_skipped: AtomicU64,
+    delta_stages_replayed: AtomicU64,
 }
 
 /// Monotonic service counters (a snapshot; see [`Service::stats`]).
@@ -246,6 +263,14 @@ pub struct StatsSnapshot {
     pub disk_hits: u64,
     /// Surrogate interpolations that passed their error gate.
     pub surrogate_answers: u64,
+    /// Simulations served by a delta warm-start instead of a cold run
+    /// (always `<= misses`: a warm-started simulation is still a
+    /// simulation — bit-identical to the cold one, just cheaper).
+    pub delta_hits: u64,
+    /// Stages spliced from checkpoints across all delta warm-starts.
+    pub delta_stages_skipped: u64,
+    /// Stages actually re-simulated across all delta warm-starts.
+    pub delta_stages_replayed: u64,
     /// Raw shard-level cache probes (hit/miss/evict), summed across
     /// shards. Distinct from `hits`/`misses` above: those classify served
     /// answers, these count every cache probe — including the
@@ -285,6 +310,17 @@ pub struct Service {
     inflight: Mutex<HashMap<Fingerprint, Arc<Flight>>>,
     grids: Mutex<HashMap<u64, SurrogateGrid>>,
     counters: Counters,
+    /// Incremental re-simulation toggle (on by default; benches keep a
+    /// cold-path control cell via [`Service::without_delta`]).
+    delta_enabled: bool,
+    /// The most recent captured base simulation. One slot, most-recent
+    /// wins: search campaigns evaluate neighbors of the point they just
+    /// evaluated, so the last base is the one whose prefix they share.
+    /// A delta hit keeps the base; a cold run replaces it.
+    delta_base: Mutex<Option<Arc<DeltaBase>>>,
+    /// Delta attribution per answered fingerprint, kept service-side so
+    /// `Prediction` itself stays byte-comparable with the cold path.
+    delta_outcomes: Mutex<HashMap<Fingerprint, DeltaOutcome>>,
 }
 
 impl Service {
@@ -301,7 +337,19 @@ impl Service {
             inflight: Mutex::new(HashMap::new()),
             grids: Mutex::new(HashMap::new()),
             counters: Counters::default(),
+            delta_enabled: true,
+            delta_base: Mutex::new(None),
+            delta_outcomes: Mutex::new(HashMap::new()),
         }
+    }
+
+    /// Disable the incremental re-simulation path: every miss runs the
+    /// cold predictor. Answers are bit-identical either way (that is the
+    /// delta invariant); this exists for the cold control cell of the
+    /// `search.delta.*` benches and for A/B debugging.
+    pub fn without_delta(mut self) -> Service {
+        self.delta_enabled = false;
+        self
     }
 
     /// Attach (and replay) the append-only JSONL store at `path`.
@@ -329,8 +377,17 @@ impl Service {
             dedup_waits: self.counters.dedup_waits.load(Ordering::Relaxed),
             disk_hits: self.counters.disk_hits.load(Ordering::Relaxed),
             surrogate_answers: self.counters.surrogate_answers.load(Ordering::Relaxed),
+            delta_hits: self.counters.delta_hits.load(Ordering::Relaxed),
+            delta_stages_skipped: self.counters.delta_stages_skipped.load(Ordering::Relaxed),
+            delta_stages_replayed: self.counters.delta_stages_replayed.load(Ordering::Relaxed),
             cache: self.cache.counters(),
         }
+    }
+
+    /// The delta warm-start attribution of `fp`, when the simulation
+    /// behind it was resumed from a checkpoint this process.
+    pub fn delta_outcome(&self, fp: Fingerprint) -> Option<DeltaOutcome> {
+        self.delta_outcomes.lock().unwrap_or_else(|e| e.into_inner()).get(&fp).copied()
     }
 
     /// The canonical fingerprint of `(workload, config)` under this
@@ -400,11 +457,16 @@ impl Service {
             }
             let finish = FinishFlight { service: self, fp, flight: &flight };
             // Simulate outside every lock; followers wait on the flight.
-            let pred = Arc::new(self.predictor.predict(workload, config));
+            let (p, checkpoints) = self.predict_point(fp, workload, config);
+            let pred = Arc::new(p);
             self.counters.misses.fetch_add(1, Ordering::Relaxed);
             self.cache.insert(fp, pred.clone());
             if let Some(disk) = &self.disk {
-                disk.put(fp, &StoredAnswer::of(&pred, EngineId::of_fidelity(&self.fidelity)));
+                disk.put(
+                    fp,
+                    &StoredAnswer::of(&pred, EngineId::of_fidelity(&self.fidelity))
+                        .with_checkpoints(checkpoints),
+                );
             }
             finish.flight.state.lock().unwrap_or_else(|e| e.into_inner()).result =
                 Some(pred.clone());
@@ -434,6 +496,49 @@ impl Service {
         }
     }
 
+    /// One simulation, through the incremental re-simulation path when
+    /// enabled: resume from the most recent captured base when the
+    /// stage-fingerprint prefix matches (replaying only the changed
+    /// suffix), otherwise run cold and capture a fresh base. The answer
+    /// is bit-identical either way — `prop_delta_resim_matches_cold` pins
+    /// this — so both arms count as `misses` ("simulations actually
+    /// executed") and campaign accounting is unchanged. Returns the
+    /// checkpoint summaries worth persisting alongside the answer.
+    fn predict_point(
+        &self,
+        fp: Fingerprint,
+        workload: &Workload,
+        config: &Config,
+    ) -> (Prediction, Vec<StageCheckpoint>) {
+        if !self.delta_enabled {
+            return (self.predictor.predict(workload, config), Vec::new());
+        }
+        let t0 = Instant::now();
+        let base = self.delta_base.lock().unwrap_or_else(|e| e.into_inner()).clone();
+        if let Some(base) = base {
+            if let Some(r) = base.resume(workload, config) {
+                self.counters.delta_hits.fetch_add(1, Ordering::Relaxed);
+                self.counters
+                    .delta_stages_skipped
+                    .fetch_add(r.outcome.stages_skipped as u64, Ordering::Relaxed);
+                self.counters
+                    .delta_stages_replayed
+                    .fetch_add(r.outcome.stages_replayed as u64, Ordering::Relaxed);
+                self.delta_outcomes
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .insert(fp, r.outcome);
+                let p = prediction_of(r.report, config, t0.elapsed().as_secs_f64());
+                return (p, r.checkpoints);
+            }
+        }
+        let (report, new_base) =
+            DeltaBase::capture(workload, config, &self.predictor.platform, self.fidelity.clone());
+        let checkpoints = new_base.checkpoints();
+        *self.delta_base.lock().unwrap_or_else(|e| e.into_inner()) = Some(Arc::new(new_base));
+        (prediction_of(report, config, t0.elapsed().as_secs_f64()), checkpoints)
+    }
+
     /// Memory- or disk-hit answer for a known point, if any (one probe
     /// of each layer, counted).
     fn lookup(&self, fp: Fingerprint) -> Option<Answer> {
@@ -446,6 +551,7 @@ impl Service {
                 source: Source::Memory,
                 engine: EngineId::of_fidelity(&self.fidelity),
                 failures: FailureStats::of(&p.report),
+                delta: self.delta_outcome(fp),
             });
         }
         let a = self.disk.as_ref().and_then(|d| d.get(&fp))?;
@@ -457,6 +563,7 @@ impl Service {
             source: Source::Disk,
             engine: a.engine,
             failures: a.failures,
+            delta: None,
         })
     }
 
@@ -469,6 +576,7 @@ impl Service {
             source: Source::Simulated,
             engine: EngineId::of_fidelity(&self.fidelity),
             failures: FailureStats::of(&p.report),
+            delta: self.delta_outcome(fp),
         }
     }
 
@@ -546,6 +654,22 @@ impl Service {
         } else {
             None
         }
+    }
+}
+
+/// Assemble a [`Prediction`] from a finished report exactly the way
+/// `Predictor::predict` does, so delta and cold answers are
+/// indistinguishable downstream (only the wallclock — which the predictor
+/// measures, not computes — differs).
+fn prediction_of(report: SimReport, config: &Config, wall: f64) -> Prediction {
+    let stage_times = (0..report.n_stages()).map(|s| report.stage_time(s)).collect();
+    let cost = config.n_hosts() as f64 * report.turnaround.as_secs_f64();
+    Prediction {
+        turnaround: report.turnaround,
+        stage_times,
+        cost_node_secs: cost,
+        predictor_wallclock_secs: wall,
+        report,
     }
 }
 

@@ -15,7 +15,7 @@
 
 use super::fingerprint::Fingerprint;
 use super::EngineId;
-use crate::model::SimReport;
+use crate::model::{SimReport, StageCheckpoint, StageFp};
 use crate::predict::Prediction;
 use crate::util::jsonw::{self, Json, Scalar};
 use crate::util::units::{Bytes, SimTime};
@@ -64,6 +64,13 @@ pub struct StoredAnswer {
     /// the service ran at the time.
     pub engine: EngineId,
     pub failures: FailureStats,
+    /// Per-stage checkpoint summaries of the run behind this answer
+    /// (`model/delta.rs`): stage fingerprints prove prefix sharing across
+    /// processes, the integrals document where the boundaries fell.
+    /// Records written before incremental re-simulation existed — or
+    /// whose `ckpts` field a newer/older build mangled — parse with an
+    /// empty list, which downstream means "cold path only".
+    pub checkpoints: Vec<StageCheckpoint>,
 }
 
 impl StoredAnswer {
@@ -76,8 +83,75 @@ impl StoredAnswer {
             net_bytes: p.report.net_bytes,
             engine,
             failures: FailureStats::of(&p.report),
+            checkpoints: Vec::new(),
         }
     }
+
+    pub fn with_checkpoints(mut self, checkpoints: Vec<StageCheckpoint>) -> StoredAnswer {
+        self.checkpoints = checkpoints;
+        self
+    }
+}
+
+/// Checkpoints travel as one compact string — `;`-separated checkpoints
+/// of `:`-separated hex fields — because every quantity here (RNG state
+/// words, 64-bit fingerprint halves, ns integrals) must round-trip
+/// *exactly*, and flat-JSON numbers are f64-backed (53-bit mantissa).
+fn encode_checkpoints(cks: &[StageCheckpoint]) -> String {
+    cks.iter()
+        .map(|c| {
+            format!(
+                "{:x}:{}:{:x}:{:x}:{:x}:{:x}:{:x}:{:x}:{:x}:{:x}:{:x}:{:x}:{:x}:{:x}",
+                c.stage,
+                c.fp,
+                c.t_ns,
+                c.events,
+                c.tasks_finished,
+                c.net_bytes,
+                c.n_allocs,
+                c.n_groups,
+                c.manager_busy_ns,
+                c.storage_busy_ns,
+                c.rng[0],
+                c.rng[1],
+                c.rng[2],
+                c.rng[3],
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(";")
+}
+
+/// Inverse of [`encode_checkpoints`]. Lenient by design: any malformation
+/// yields `None` (the caller stores an empty list and the answer itself
+/// survives) — checkpoint summaries are an optimization substrate, never
+/// worth losing a record over.
+fn decode_checkpoints(s: &str) -> Option<Vec<StageCheckpoint>> {
+    if s.is_empty() {
+        return Some(Vec::new());
+    }
+    let mut out = Vec::new();
+    for part in s.split(';') {
+        let f: Vec<&str> = part.split(':').collect();
+        if f.len() != 14 {
+            return None;
+        }
+        let hex = |i: usize| u64::from_str_radix(f[i], 16).ok();
+        out.push(StageCheckpoint {
+            stage: hex(0)? as u32,
+            fp: StageFp::parse(f[1])?,
+            t_ns: hex(2)?,
+            events: hex(3)?,
+            tasks_finished: hex(4)? as u32,
+            net_bytes: hex(5)?,
+            n_allocs: hex(6)? as u32,
+            n_groups: hex(7)? as u32,
+            manager_busy_ns: hex(8)?,
+            storage_busy_ns: hex(9)?,
+            rng: [hex(10)?, hex(11)?, hex(12)?, hex(13)?],
+        });
+    }
+    Some(out)
 }
 
 /// The store: a replayed in-memory index plus an append-only writer.
@@ -86,6 +160,7 @@ pub struct DiskStore {
     writer: Mutex<BufWriter<File>>,
     loaded: Mutex<HashMap<Fingerprint, StoredAnswer>>,
     salvaged: usize,
+    reclaimed: usize,
 }
 
 impl DiskStore {
@@ -101,6 +176,7 @@ impl DiskStore {
         let path = path.as_ref().to_path_buf();
         let mut loaded = HashMap::new();
         let mut salvaged = 0usize;
+        let mut parsed = 0usize;
         if let Ok(text) = std::fs::read_to_string(&path) {
             let lines: Vec<&str> = text.lines().collect();
             for (idx, raw) in lines.iter().enumerate() {
@@ -110,6 +186,10 @@ impl DiskStore {
                 }
                 match Self::parse_line(line) {
                     Some((fp, ans)) => {
+                        parsed += 1;
+                        // Last record wins: a later append for the same
+                        // fingerprint (another process, or a richer
+                        // format) supersedes the earlier one.
                         loaded.insert(fp, ans);
                     }
                     None if idx + 1 == lines.len() => {
@@ -129,6 +209,35 @@ impl DiskStore {
                 }
             }
         }
+        // Compact-on-open: when replay found superseded records (several
+        // appenders, or repeated campaigns over one store), rewrite the
+        // file as exactly the surviving newest-per-fingerprint set. A
+        // clean store is left byte-untouched — no rewrite churn on the
+        // common path — and a failed rewrite is only a warning: the
+        // in-memory index is already correct either way.
+        let reclaimed = parsed - loaded.len();
+        if reclaimed > 0 {
+            let mut fps: Vec<&Fingerprint> = loaded.keys().collect();
+            fps.sort();
+            let mut text = String::new();
+            for fp in fps {
+                text.push_str(&Self::render_record(*fp, &loaded[fp]));
+                text.push('\n');
+            }
+            let tmp = path.with_extension("compact.tmp");
+            let rewrote = std::fs::write(&tmp, &text)
+                .and_then(|_| std::fs::rename(&tmp, &path));
+            match rewrote {
+                Ok(()) => eprintln!(
+                    "[service] compacted {}: reclaimed {reclaimed} superseded record{}",
+                    path.display(),
+                    if reclaimed == 1 { "" } else { "s" }
+                ),
+                Err(e) => {
+                    eprintln!("[service] store compaction of {} failed: {e}", path.display())
+                }
+            }
+        }
         let file = OpenOptions::new()
             .create(true)
             .append(true)
@@ -139,6 +248,7 @@ impl DiskStore {
             writer: Mutex::new(BufWriter::new(file)),
             loaded: Mutex::new(loaded),
             salvaged,
+            reclaimed,
         })
     }
 
@@ -151,6 +261,12 @@ impl DiskStore {
     /// crash-recovery path, not data damage).
     pub fn salvaged(&self) -> usize {
         self.salvaged
+    }
+
+    /// Superseded records reclaimed by compact-on-open (0 when the store
+    /// was already one record per fingerprint and was left untouched).
+    pub fn reclaimed(&self) -> usize {
+        self.reclaimed
     }
 
     pub fn len(&self) -> usize {
@@ -177,21 +293,7 @@ impl DiskStore {
             }
             m.insert(fp, ans.clone());
         }
-        let stages: Vec<Json> =
-            ans.stage_times.iter().map(|t| Json::Num(t.as_ns() as f64)).collect();
-        let line = Json::obj()
-            .set("fp", fp.to_string())
-            .set("turnaround_ns", ans.turnaround.as_ns())
-            .set("cost_node_s", ans.cost_node_s)
-            .set("stages_ns", Json::Arr(stages))
-            .set("events", ans.events)
-            .set("net_bytes", ans.net_bytes.as_u64())
-            .set("engine", ans.engine.as_str())
-            .set("fault_retries", ans.failures.retries)
-            .set("fault_failovers", ans.failures.failovers)
-            .set("fault_timeouts", ans.failures.timeouts)
-            .set("unrecoverable", ans.failures.unrecoverable)
-            .render_compact();
+        let line = Self::render_record(fp, ans);
         let mut w = self.writer.lock().unwrap_or_else(|e| e.into_inner());
         let wrote = writeln!(w, "{line}").and_then(|_| w.flush());
         drop(w);
@@ -206,6 +308,30 @@ impl DiskStore {
     /// shrugged off: the guarded maps are always left key-consistent.
     fn lock_loaded(&self) -> std::sync::MutexGuard<'_, HashMap<Fingerprint, StoredAnswer>> {
         self.loaded.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Render one record exactly as [`DiskStore::put`] appends it (also
+    /// used verbatim by compact-on-open, so a compacted store replays to
+    /// the same index).
+    fn render_record(fp: Fingerprint, ans: &StoredAnswer) -> String {
+        let stages: Vec<Json> =
+            ans.stage_times.iter().map(|t| Json::Num(t.as_ns() as f64)).collect();
+        let mut line = Json::obj()
+            .set("fp", fp.to_string())
+            .set("turnaround_ns", ans.turnaround.as_ns())
+            .set("cost_node_s", ans.cost_node_s)
+            .set("stages_ns", Json::Arr(stages))
+            .set("events", ans.events)
+            .set("net_bytes", ans.net_bytes.as_u64())
+            .set("engine", ans.engine.as_str())
+            .set("fault_retries", ans.failures.retries)
+            .set("fault_failovers", ans.failures.failovers)
+            .set("fault_timeouts", ans.failures.timeouts)
+            .set("unrecoverable", ans.failures.unrecoverable);
+        if !ans.checkpoints.is_empty() {
+            line = line.set("ckpts", encode_checkpoints(&ans.checkpoints));
+        }
+        line.render_compact()
     }
 
     fn parse_line(line: &str) -> Option<(Fingerprint, StoredAnswer)> {
@@ -239,6 +365,13 @@ impl DiskStore {
             timeouts: num("fault_timeouts").unwrap_or(0.0) as u64,
             unrecoverable: matches!(get("unrecoverable"), Some(Scalar::Bool(true))),
         };
+        // The ckpts key is absent from pre-delta stores (PR 9), and a
+        // mangled value degrades to "no checkpoints" rather than losing
+        // the answer — the same leniency the engine/fault keys get.
+        let checkpoints = match get("ckpts") {
+            Some(Scalar::Str(s)) => decode_checkpoints(s).unwrap_or_default(),
+            _ => Vec::new(),
+        };
         Some((
             fp,
             StoredAnswer {
@@ -249,6 +382,7 @@ impl DiskStore {
                 net_bytes: Bytes(num("net_bytes")? as u64),
                 engine,
                 failures,
+                checkpoints,
             },
         ))
     }
@@ -260,6 +394,24 @@ mod tests {
 
     fn tmp(name: &str) -> PathBuf {
         std::env::temp_dir().join(format!("wfpred_store_{}_{name}.jsonl", std::process::id()))
+    }
+
+    fn ckpt(i: u64) -> StageCheckpoint {
+        StageCheckpoint {
+            stage: i as u32,
+            // Extreme u64s on purpose: they do not round-trip through f64,
+            // so this pins the hex encoding.
+            fp: StageFp { hi: u64::MAX - i, lo: 0x0123_4567_89AB_CDEF ^ i },
+            t_ns: u64::MAX - 7 * i,
+            events: (1 << 60) + i,
+            tasks_finished: 40 + i as u32,
+            net_bytes: (1 << 55) + i,
+            n_allocs: 12 + i as u32,
+            n_groups: 3 + i as u32,
+            manager_busy_ns: (1 << 54) + i,
+            storage_busy_ns: (1 << 53) + i,
+            rng: [u64::MAX - i, i.wrapping_mul(0x9E37), 1 + i, u64::MAX / 3 + i],
+        }
     }
 
     fn sample(i: u64) -> (Fingerprint, StoredAnswer) {
@@ -278,6 +430,7 @@ mod tests {
                     timeouts: i,
                     unrecoverable: i % 2 == 1,
                 },
+                checkpoints: (0..i % 3).map(ckpt).collect(),
             },
         )
     }
@@ -359,6 +512,74 @@ mod tests {
         assert_eq!(ans.failures, FailureStats::default());
         assert!(!ans.failures.unrecoverable);
         assert_eq!(ans.engine, EngineId::Coarse, "pre-provenance records were coarse-only");
+        assert!(ans.checkpoints.is_empty(), "pre-delta records carry no checkpoints");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn pre_delta_records_parse_and_mangled_ckpts_degrade() {
+        // A verbatim pre-PR-9 store line (engine key present, no ckpts)
+        // plus a record whose ckpts value was mangled: both must parse,
+        // the latter with its checkpoints dropped, never the answer.
+        let path = tmp("predelta");
+        let a = Fingerprint { hi: 1, lo: 2 };
+        let b = Fingerprint { hi: 3, lo: 4 };
+        std::fs::write(
+            &path,
+            format!(
+                "{{\"fp\": \"{a}\", \"turnaround_ns\": 2000000, \"cost_node_s\": 4.5, \
+                 \"stages_ns\": [2000000], \"events\": 10, \"net_bytes\": 2048, \
+                 \"engine\": \"coarse\", \"fault_retries\": 0, \"fault_failovers\": 0, \
+                 \"fault_timeouts\": 0, \"unrecoverable\": false}}\n\
+                 {{\"fp\": \"{b}\", \"turnaround_ns\": 3000000, \"cost_node_s\": 6.5, \
+                 \"stages_ns\": [3000000], \"events\": 11, \"net_bytes\": 4096, \
+                 \"engine\": \"coarse\", \"fault_retries\": 0, \"fault_failovers\": 0, \
+                 \"fault_timeouts\": 0, \"unrecoverable\": false, \
+                 \"ckpts\": \"0:tooshort\"}}\n"
+            ),
+        )
+        .unwrap();
+        let store = DiskStore::open(&path).unwrap();
+        assert_eq!(store.salvaged(), 0, "both records are healthy answers");
+        assert_eq!(store.reclaimed(), 0);
+        assert!(store.get(&a).expect("pre-delta record parses").checkpoints.is_empty());
+        assert!(
+            store.get(&b).expect("the answer outlives its mangled ckpts").checkpoints.is_empty()
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn compact_on_open_keeps_newest_record_per_fingerprint() {
+        let path = tmp("compact");
+        let _ = std::fs::remove_file(&path);
+        let (fp, old) = sample(1);
+        let (fp2, keep) = sample(2);
+        let newer = StoredAnswer { cost_node_s: 99.0, checkpoints: vec![ckpt(5)], ..old.clone() };
+        // Simulate two appenders racing on one store: the same
+        // fingerprint appended twice (newer record last), plus a normal
+        // record.
+        let text = format!(
+            "{}\n{}\n{}\n",
+            DiskStore::render_record(fp, &old),
+            DiskStore::render_record(fp2, &keep),
+            DiskStore::render_record(fp, &newer),
+        );
+        std::fs::write(&path, text).unwrap();
+        let store = DiskStore::open(&path).unwrap();
+        assert_eq!(store.reclaimed(), 1, "one superseded record reclaimed");
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.get(&fp), Some(newer.clone()), "newest record wins");
+        assert_eq!(store.get(&fp2), Some(keep.clone()));
+        drop(store);
+        // The rewritten file holds exactly the survivors and replays to
+        // the same index with nothing left to reclaim.
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2, "compaction rewrote the file");
+        let reopened = DiskStore::open(&path).unwrap();
+        assert_eq!(reopened.reclaimed(), 0, "a clean store is left untouched");
+        assert_eq!(reopened.get(&fp), Some(newer));
+        assert_eq!(reopened.get(&fp2), Some(keep));
         let _ = std::fs::remove_file(&path);
     }
 

@@ -25,6 +25,7 @@ use std::collections::BinaryHeap;
 /// An event-queue key: min-heap by (time, seq). The payload stays in the
 /// slab; `seq` doubles as the slot generation (it is unique per scheduled
 /// event, so a key whose `seq` no longer matches its slot is dead).
+#[derive(Clone)]
 struct HeapKey {
     time: SimTime,
     seq: u64,
@@ -51,6 +52,7 @@ impl Ord for HeapKey {
 
 /// A slab slot: `seq` identifies the event currently occupying it
 /// ([`FREE_SEQ`] when vacant), `ev` its payload.
+#[derive(Clone)]
 struct Slot<Ev> {
     seq: u64,
     ev: Option<Ev>,
@@ -71,6 +73,15 @@ pub struct EventToken {
 }
 
 /// Schedules future events; handed to [`SimState::handle`].
+///
+/// Cloning a `Scheduler` (requires `Ev: Clone`) snapshots the entire
+/// queue — heap keys, slab payloads, free list, clock, and the
+/// processed/cancelled counters — so a paused simulation can be forked
+/// and resumed down divergent futures. The delta re-simulation path
+/// (`model/delta.rs`) relies on this: counters travel with the clone,
+/// which keeps `SimReport::events`/`events_cancelled` bit-identical to a
+/// cold run that replayed the shared prefix itself.
+#[derive(Clone)]
 pub struct Scheduler<Ev> {
     heap: BinaryHeap<HeapKey>,
     slots: Vec<Slot<Ev>>,
@@ -214,6 +225,30 @@ impl<Ev> Scheduler<Ev> {
         self.at(self.now, ev);
     }
 
+    /// Time of the next live event without delivering it. Dead keys
+    /// (cancelled events) surfacing at the top are retired here, exactly
+    /// as [`Scheduler::pop`] would — peeking never changes what `pop`
+    /// returns next, only when the lazy skip happens.
+    pub fn peek_time(&mut self) -> Option<SimTime> {
+        while let Some(k) = self.heap.peek() {
+            if self.slots[k.slot as usize].seq != k.seq {
+                self.heap.pop();
+                continue;
+            }
+            return Some(k.time);
+        }
+        None
+    }
+
+    /// The next live event (time and a borrow of its payload) without
+    /// delivering it. The clock does not advance.
+    pub fn peek(&mut self) -> Option<(SimTime, &Ev)> {
+        let t = self.peek_time()?;
+        let k = self.heap.peek().expect("peek_time found a live key");
+        let ev = self.slots[k.slot as usize].ev.as_ref().expect("live slot without a payload");
+        Some((t, ev))
+    }
+
     fn pop(&mut self) -> Option<(SimTime, Ev)> {
         while let Some(k) = self.heap.pop() {
             let s = &mut self.slots[k.slot as usize];
@@ -254,9 +289,33 @@ pub struct Simulation<S: SimState> {
     pub state: S,
 }
 
+impl<S: SimState + Clone> Clone for Simulation<S>
+where
+    S::Ev: Clone,
+{
+    fn clone(&self) -> Self {
+        Simulation { sched: self.sched.clone(), state: self.state.clone() }
+    }
+}
+
 impl<S: SimState> Simulation<S> {
     pub fn new(state: S) -> Self {
         Simulation { sched: Scheduler::new(), state }
+    }
+
+    /// Deliver exactly one event. Returns `false` when the queue is
+    /// drained. Interleaving `step` with [`Scheduler::peek`] between
+    /// steps is observationally identical to [`Simulation::run`] — the
+    /// delta re-simulation capture loop uses this to snapshot state at
+    /// stage boundaries without perturbing delivery order.
+    pub fn step(&mut self) -> bool {
+        match self.sched.pop() {
+            Some((t, ev)) => {
+                self.state.handle(&mut self.sched, t, ev);
+                true
+            }
+            None => false,
+        }
     }
 
     /// Run until the event queue drains (or `max_events` is hit, as a
@@ -456,6 +515,46 @@ mod tests {
             "steady-state chain grew the arena to {} slots",
             sim.sched.slots.len()
         );
+    }
+
+    #[test]
+    fn peek_and_step_match_run() {
+        let mut sim = Simulation::new(Recorder { seen: vec![], chain_left: 3 });
+        sim.sched.at(SimTime::from_ns(30), 3);
+        sim.sched.at(SimTime::from_ns(10), 99);
+        let tok = sim.sched.at_cancellable(SimTime::from_ns(5), 7);
+        assert!(sim.sched.cancel(tok));
+        // Peek skips the dead key and reports the first live event.
+        assert_eq!(sim.sched.peek(), Some((SimTime::from_ns(10), &99)));
+        assert_eq!(sim.sched.peek_time(), Some(SimTime::from_ns(10)));
+        let mut reference = Simulation::new(Recorder { seen: vec![], chain_left: 3 });
+        reference.sched.at(SimTime::from_ns(30), 3);
+        reference.sched.at(SimTime::from_ns(10), 99);
+        reference.run();
+        while sim.step() {}
+        assert_eq!(sim.state.seen, reference.state.seen, "step-driven == run-driven");
+        assert_eq!(sim.sched.peek_time(), None);
+        assert!(!sim.step(), "drained queue steps false");
+    }
+
+    #[test]
+    fn cloned_scheduler_resumes_identically() {
+        // Fork a mid-flight simulation; both copies must finish with the
+        // same trace and the same processed/cancelled totals.
+        let mut sim = Simulation::new(Recorder { seen: vec![], chain_left: 10 });
+        sim.sched.at(SimTime::ZERO, 99);
+        let tok = sim.sched.at_cancellable(SimTime::from_ns(1), 1);
+        assert!(sim.sched.cancel(tok));
+        for _ in 0..4 {
+            assert!(sim.step());
+        }
+        let mut fork = sim.clone();
+        sim.run();
+        fork.run();
+        assert_eq!(sim.state.seen, fork.state.seen);
+        assert_eq!(sim.sched.processed(), fork.sched.processed());
+        assert_eq!(sim.sched.cancelled(), fork.sched.cancelled());
+        assert_eq!(sim.sched.now(), fork.sched.now());
     }
 
     #[test]

@@ -129,7 +129,7 @@ impl StationStats {
 /// A waiting entry: the item, its service time, its unit count, and the
 /// per-unit service time used for the analytic intra-train wait when it
 /// eventually starts service.
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 struct Waiter<T> {
     item: T,
     svc: SimTime,
@@ -138,7 +138,7 @@ struct Waiter<T> {
 }
 
 /// A FIFO single-server queue of items `T`.
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 pub struct Station<T> {
     in_service: Option<(T, u64)>,
     waiting: VecDeque<Waiter<T>>,
@@ -307,7 +307,7 @@ pub mod vtmath {
 /// An active train in virtual-time weighted-fair service. The finish tag
 /// is assigned once, at arrival, and never changes; the heap orders by
 /// `(tag, seq)`.
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 struct VtEntry<T> {
     /// Virtual finish tag: `arrival_vt + svc / weight`.
     tag: f64,
@@ -368,7 +368,7 @@ impl<T> Ord for VtEntry<T> {
 /// withdraw the old event (the model uses `Scheduler::at_cancellable` /
 /// `cancel`) and schedule the new one. `complete` must consequently only
 /// ever fire for the one live announcement.
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 pub struct FairStation<T> {
     /// Active trains, min-heap by (finish tag, seq).
     active: BinaryHeap<VtEntry<T>>,

@@ -33,6 +33,20 @@ impl Rng {
         Rng { s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()] }
     }
 
+    /// The four xoshiro256** state words, in order. Exposed so the delta
+    /// re-simulation checkpoints (`model/delta.rs`) can persist the exact
+    /// stream position a stage boundary was reached at; restoring via
+    /// [`Rng::from_state_words`] continues the identical sequence.
+    pub fn state_words(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator at an exact stream position previously captured
+    /// with [`Rng::state_words`].
+    pub fn from_state_words(s: [u64; 4]) -> Self {
+        Rng { s }
+    }
+
     /// Derive an independent stream, e.g. per trial or per host.
     pub fn fork(&mut self, stream: u64) -> Rng {
         Rng::new(self.next_u64() ^ stream.wrapping_mul(0xA24BAED4963EE407))

@@ -1,0 +1,191 @@
+//! Integration tests for incremental re-simulation: a delta-enabled
+//! service answers single-knob sweeps bit-identically to a delta-disabled
+//! one while actually warm-starting; changed fault plans and changed
+//! workloads invalidate the stage-fingerprint prefix (cold fallback, not
+//! a wrong answer); stage checkpoints round-trip through the JSONL
+//! answer store; and `Answer` carries the warm-start attribution.
+
+use wfpred::model::{stage_fingerprints, Config, FaultPlan, Fidelity, Platform};
+use wfpred::predict::Predictor;
+use wfpred::service::{Answer, DiskStore, Query, Service, Source};
+use wfpred::util::units::{Bytes, SimTime};
+use wfpred::workload::{FileHint, FileSpec, TaskSpec, Workload};
+
+fn predictor() -> Predictor {
+    Predictor::new(Platform::paper_testbed())
+}
+
+/// Stage 0 writes node-pinned files (stripe-insensitive fingerprint);
+/// stage 1 reads them all and writes one round-robin (stripe-sensitive)
+/// output — the smallest workload where a stripe sweep shares a prefix.
+fn two_stage_wl() -> Workload {
+    let mut w = Workload::new("delta-itest");
+    let db = w.add_file(FileSpec::new("db", Bytes::mb(2)).hint(FileHint::OnNode(0)).prestaged());
+    let mut mids = Vec::new();
+    for i in 0..3usize {
+        let f =
+            w.add_file(FileSpec::new(format!("mid{i}"), Bytes::mb(4)).hint(FileHint::OnNode(i)));
+        mids.push(f);
+        w.add_task(
+            TaskSpec::new(format!("t0-{i}"), 0).reads(db).writes(f).compute(SimTime::from_ms(5)),
+        );
+    }
+    let out = w.add_file(FileSpec::new("out", Bytes::mb(1)));
+    let mut agg = TaskSpec::new("t1", 1).writes(out);
+    for &m in &mids {
+        agg = agg.reads(m);
+    }
+    w.add_task(agg);
+    w
+}
+
+fn cfg(stripe: usize) -> Config {
+    Config::partitioned(4, 4, Bytes::mb(1)).with_stripe(stripe)
+}
+
+#[test]
+fn delta_service_matches_cold_service_bit_for_bit_and_warm_starts() {
+    let wl = two_stage_wl();
+    let delta_svc = Service::new(predictor());
+    let cold_svc = Service::new(predictor()).without_delta();
+
+    for stripe in 1..=4usize {
+        let a = delta_svc.evaluate(&wl, &cfg(stripe));
+        let b = cold_svc.evaluate(&wl, &cfg(stripe));
+        assert_eq!(
+            a.turnaround, b.turnaround,
+            "stripe {stripe}: delta answer must be bit-identical to cold"
+        );
+        assert_eq!(a.stage_times, b.stage_times, "stripe {stripe}");
+        assert_eq!(a.cost_node_secs.to_bits(), b.cost_node_secs.to_bits(), "stripe {stripe}");
+        assert_eq!(a.report.events, b.report.events, "stripe {stripe}");
+        assert_eq!(a.report.net_bytes, b.report.net_bytes, "stripe {stripe}");
+    }
+
+    let ds = delta_svc.stats();
+    let cs = cold_svc.stats();
+    assert_eq!(ds.misses, 4, "every sweep point is a distinct fingerprint");
+    assert_eq!(cs.misses, 4);
+    assert_eq!(ds.delta_hits, 3, "all but the first point must warm-start");
+    assert_eq!(ds.delta_stages_skipped, 3, "each hit skips the shared stage 0");
+    assert_eq!(ds.delta_stages_replayed, 3, "each hit replays only stage 1");
+    assert_eq!(cs.delta_hits, 0, "without_delta must never warm-start");
+    assert_eq!(cs.delta_stages_skipped, 0);
+}
+
+#[test]
+fn batch_answers_carry_the_warm_start_attribution() {
+    let wl = two_stage_wl();
+    let svc = Service::new(predictor());
+    let queries: Vec<Query> = (1..=3usize)
+        .map(|s| Query { workload: wl.clone(), config: cfg(s), family: 1 })
+        .collect();
+    let answers = svc.serve_batch(&queries, 1, 0.0);
+    assert_eq!(answers.len(), 3);
+    match &answers[0] {
+        Answer::Exact { source: Source::Simulated, delta, .. } => {
+            assert!(delta.is_none(), "the first point simulates cold");
+        }
+        other => panic!("expected a simulated answer, got {other:?}"),
+    }
+    for (i, a) in answers.iter().enumerate().skip(1) {
+        match a {
+            Answer::Exact { source: Source::Simulated, delta: Some(d), .. } => {
+                assert_eq!(d.stages_skipped, 1, "answer {i}");
+                assert_eq!(d.stages_replayed, 1, "answer {i}");
+            }
+            other => panic!("answer {i}: expected a delta-attributed answer, got {other:?}"),
+        }
+    }
+    // A memory hit of a warm-started point keeps its attribution.
+    let again = svc.serve_batch(&queries[1..2], 1, 0.0);
+    match &again[0] {
+        Answer::Exact { source: Source::Memory, delta: Some(d), .. } => {
+            assert_eq!(d.stages_skipped, 1);
+        }
+        other => panic!("expected an attributed memory hit, got {other:?}"),
+    }
+}
+
+#[test]
+fn changed_fault_plan_invalidates_the_prefix_but_stays_correct() {
+    let wl = two_stage_wl();
+    let svc = Service::new(predictor());
+    let p = predictor();
+
+    let _ = svc.evaluate(&wl, &cfg(1));
+    assert_eq!(svc.stats().delta_hits, 0);
+
+    // Same knobs plus a crash plan: the plan is part of every stage's
+    // context hash, so no prefix survives — cold fallback, right answer.
+    let faulted = cfg(1).with_fault_plan(FaultPlan::parse("crash=1@2").expect("plan"));
+    let a = svc.evaluate(&wl, &faulted);
+    assert_eq!(svc.stats().delta_hits, 0, "a changed plan must not warm-start");
+    assert_eq!(svc.stats().misses, 2);
+    let direct = p.predict(&wl, &faulted);
+    assert_eq!(a.turnaround, direct.turnaround);
+    assert_eq!(a.report.fault_retries, direct.report.fault_retries);
+
+    // And back: the faulted capture is now the base; the fault-free
+    // config must not splice from it either.
+    let b = svc.evaluate(&wl, &cfg(2));
+    assert_eq!(svc.stats().delta_hits, 0, "plan removal must not warm-start");
+    assert_eq!(b.turnaround, p.predict(&wl, &cfg(2)).turnaround);
+
+    // A *shared* plan warm-starts again: capture the faulted base, then
+    // perturb only the stripe on top of the identical plan.
+    let faulted2 = cfg(2).with_fault_plan(FaultPlan::parse("crash=1@2").expect("plan"));
+    let c = svc.evaluate(&wl, &faulted2);
+    assert_eq!(svc.stats().delta_hits, 1, "shared plans share the stage-0 prefix");
+    assert_eq!(c.turnaround, p.predict(&wl, &faulted2).turnaround);
+}
+
+#[test]
+fn changed_workload_invalidates_the_prefix() {
+    let wl = two_stage_wl();
+    let svc = Service::new(predictor());
+    let _ = svc.evaluate(&wl, &cfg(1));
+
+    let mut other = two_stage_wl();
+    let extra = other.add_file(FileSpec::new("extra", Bytes::mb(8)).prestaged());
+    other.add_task(TaskSpec::new("t0-x", 0).reads(extra));
+    let a = svc.evaluate(&other, &cfg(2));
+    assert_eq!(svc.stats().delta_hits, 0, "a different workload must not warm-start");
+    assert_eq!(a.turnaround, predictor().predict(&other, &cfg(2)).turnaround);
+}
+
+#[test]
+fn checkpoints_round_trip_through_the_disk_store() {
+    let path = std::env::temp_dir()
+        .join(format!("wfpred_delta_resim_store_{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let wl = two_stage_wl();
+
+    let (fp_base, fp_nb) = {
+        let svc = Service::new(predictor()).with_disk_store(&path).unwrap();
+        let _ = svc.evaluate(&wl, &cfg(1)); // cold capture
+        let _ = svc.evaluate(&wl, &cfg(2)); // delta warm-start
+        assert_eq!(svc.stats().delta_hits, 1);
+        assert_eq!(svc.disk_len(), 2);
+        (svc.fingerprint(&wl, &cfg(1)), svc.fingerprint(&wl, &cfg(2)))
+    };
+
+    // A fresh store replays both records with their checkpoints intact.
+    let store = DiskStore::open(&path).expect("reopen");
+    assert_eq!(store.len(), 2);
+    assert_eq!(store.reclaimed(), 0, "no duplicates — compaction must not rewrite");
+    let plat = Platform::paper_testbed();
+    for (fp, stripe) in [(fp_base, 1usize), (fp_nb, 2)] {
+        let ans = store.get(&fp).expect("stored answer");
+        assert_eq!(ans.checkpoints.len(), 1, "one boundary between two stages");
+        let ck = &ans.checkpoints[0];
+        assert_eq!(ck.stage, 0);
+        assert!(ck.t_ns > 0 && ck.events > 0);
+        // The persisted fingerprint is the stage-0 fingerprint of the
+        // answer's own config (identical across the sweep by design —
+        // stage 0 is stripe-insensitive, which is why stripe 2 spliced).
+        let fps = stage_fingerprints(&wl, &cfg(stripe), &plat, &Fidelity::coarse());
+        assert_eq!(ck.fp, fps[0]);
+    }
+    let _ = std::fs::remove_file(&path);
+}

@@ -945,3 +945,93 @@ fn prop_faulty_runs_are_deterministic_and_account_consistently() {
         }
     });
 }
+
+#[test]
+fn prop_delta_resim_matches_cold() {
+    // The incremental re-simulation contract, end to end: capture is
+    // bit-identical to a cold run; resuming a single-knob neighbor —
+    // when the stage-fingerprint prefix admits it — is bit-identical to
+    // cold-simulating that neighbor (reports AND fault ledgers, via
+    // Debug-string equality: f64 Debug is shortest-round-trip, so equal
+    // strings ⇒ equal bits); a changed fault plan always invalidates the
+    // whole prefix. Swept across fault plans and fidelity modes.
+    use wfpred::model::{DeltaBase, FaultPlan};
+    check("delta resim bit-identity", 35, |g| {
+        let wl = random_workload(g, 3);
+        if wl.validate().is_err() {
+            return;
+        }
+        let n_app = g.usize(1, 4);
+        let n_storage = g.usize(2, 6);
+        let mut base =
+            Config::partitioned(n_app, n_storage, Bytes::kb(*g.choose(&[256, 1024])));
+        base.stripe_width = g.usize(1, n_storage);
+        base.replication = g.u64(1, 2.min(n_storage as u64)) as u32;
+        let plan_txt = *g.choose(&["", "crash=0@1", "seed=5;slow=1@0.5x2.0"]);
+        if !plan_txt.is_empty() {
+            let plan = FaultPlan::parse(plan_txt).expect("plan parses");
+            if plan.validate(n_storage, base.n_hosts()).is_err() {
+                return;
+            }
+            base = base.with_fault_plan(plan);
+        }
+        if base.validate().is_err() {
+            return;
+        }
+        let fid = match g.u64(0, 2) {
+            0 => Fidelity::coarse(),
+            1 => Fidelity::coarse_per_frame(),
+            _ => Fidelity::detailed(g.u64(0, 1 << 32)),
+        };
+        let plat = Platform::paper_testbed();
+
+        // Capture is the cold path plus snapshots — same answer, always.
+        let cold_base = simulate_fid(&wl, &base, &plat, fid.clone());
+        let (captured, dbase) = DeltaBase::capture(&wl, &base, &plat, fid.clone());
+        assert_eq!(
+            format!("{cold_base:?}"),
+            format!("{captured:?}"),
+            "capture must not perturb the simulation"
+        );
+
+        // Single-knob neighbor: stripe / replication / chunk / window.
+        let mut nb = base.clone();
+        match g.u64(0, 3) {
+            0 => nb.stripe_width = g.usize(1, n_storage),
+            1 => nb.replication = g.u64(1, n_storage as u64) as u32,
+            2 => nb.chunk_size = Bytes::kb(*g.choose(&[256, 512, 1024, 2048])),
+            _ => nb.io_window = g.usize(1, 16),
+        }
+        if nb.validate().is_err() {
+            return;
+        }
+        let cold_nb = simulate_fid(&wl, &nb, &plat, fid.clone());
+        if let Some(r) = dbase.resume(&wl, &nb) {
+            assert_eq!(
+                format!("{cold_nb:?}"),
+                format!("{:?}", r.report),
+                "delta warm-start must be bit-identical to the cold run"
+            );
+            let n_stages = dbase.stage_fps().len() as u32;
+            assert_eq!(
+                r.outcome.stages_skipped + r.outcome.stages_replayed,
+                n_stages,
+                "skip/replay accounting must tile the stage list"
+            );
+            assert!(r.outcome.stages_skipped >= 1, "a hit always skips at least one stage");
+            for ck in &r.checkpoints {
+                assert_eq!(ck.fp, dbase.stage_fps()[ck.stage as usize]);
+            }
+        }
+
+        // A different fault plan (never one of the base choices above)
+        // perturbs the shared context hash, so no prefix survives.
+        let other = nb.clone().with_fault_plan(FaultPlan::parse("crash=1@2").expect("plan"));
+        if other.validate().is_ok() {
+            assert!(
+                dbase.resume(&wl, &other).is_none(),
+                "a changed fault plan must invalidate the whole prefix"
+            );
+        }
+    });
+}
