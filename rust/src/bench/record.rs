@@ -114,13 +114,16 @@ pub mod keys {
     /// Trace cells: spans the flight recorder captured.
     pub const TRACE_SPANS: &str = "trace_spans";
     /// Critical-path attribution (trace cells): client compute seconds on
-    /// the path ending at turnaround. The seven `cp_*_s` keys tile
+    /// the path ending at turnaround. The eight `cp_*_s` keys tile
     /// `[0, turnaround]` exactly, so they sum to `sim_turnaround_s`.
     pub const CP_CLIENT_COMPUTE_S: &str = "cp_client_compute_s";
     /// Critical-path attribution: sender-NIC wait + service seconds.
     pub const CP_OUT_NIC_S: &str = "cp_out_nic_s";
     /// Critical-path attribution: receiver-NIC wait + service seconds.
     pub const CP_IN_NIC_S: &str = "cp_in_nic_s";
+    /// Critical-path attribution: core-fabric-link wait + service seconds
+    /// (always 0 under the star topology, which has no core links).
+    pub const CP_CORE_LINK_S: &str = "cp_core_link_s";
     /// Critical-path attribution: storage-service wait + service seconds.
     pub const CP_STORAGE_S: &str = "cp_storage_s";
     /// Critical-path attribution: manager control-message seconds.
@@ -195,6 +198,7 @@ pub mod keys {
         CP_CLIENT_COMPUTE_S,
         CP_OUT_NIC_S,
         CP_IN_NIC_S,
+        CP_CORE_LINK_S,
         CP_STORAGE_S,
         CP_MANAGER_S,
         CP_FAULT_RECOVERY_S,

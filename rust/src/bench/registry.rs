@@ -17,7 +17,7 @@
 
 use super::gate::Gate;
 use super::record::keys;
-use crate::model::{Config, FaultPlan, Fidelity, Placement, Platform};
+use crate::model::{Config, FaultPlan, Fidelity, Placement, Platform, Topology};
 use crate::service::EngineId;
 use crate::util::units::{Bytes, SimTime};
 use crate::workload::blast::{blast, BlastParams};
@@ -36,6 +36,11 @@ pub enum PlatformSpec {
     FrameKb(u64),
     /// Paper testbed with one host's compute scaled (heterogeneous rows).
     HostSpeed { host: usize, mult: f64 },
+    /// Paper testbed routed through the two-tier rack + core fabric
+    /// (`Topology::Rack`). A `rack_size` covering every host lays out a
+    /// single rack, which degenerates to the star — the identity cells
+    /// exploit exactly that.
+    RackTopo { rack_size: usize, oversub: f64 },
 }
 
 impl PlatformSpec {
@@ -50,6 +55,11 @@ impl PlatformSpec {
             }
             PlatformSpec::HostSpeed { host, mult } => {
                 Platform::paper_testbed().with_host_speed(host, mult)
+            }
+            PlatformSpec::RackTopo { rack_size, oversub } => {
+                let mut p = Platform::paper_testbed();
+                p.topology = Topology::Rack { rack_size, oversub };
+                p
             }
         }
     }
@@ -295,7 +305,7 @@ pub enum CellKind {
     /// A service-layer probe.
     Service(ServiceProbe),
     /// One `simulate_traced` run with critical-path attribution: records
-    /// the seven `cp_*_s` keys (which tile `[0, turnaround]` exactly)
+    /// the eight `cp_*_s` keys (which tile `[0, turnaround]` exactly)
     /// alongside the usual simulation metrics.
     Trace { workload: WorkloadSpec, config: ConfigSpec, engine: EngineSpec },
 }
@@ -517,6 +527,93 @@ pub fn registry() -> Vec<CellDef> {
             3,
             gates,
         ));
+    }
+
+    // ── topology: routed-fabric identity and oversubscription curves ─────
+    // The star-identity cells run a *degenerate* rack layout (one rack
+    // covering every host, oversubscription 1) through the routed-fabric
+    // code path; the fabric plans zero core links there, so the runs must
+    // reproduce their star counterparts from the same run exactly — the
+    // registry-level face of the `RefStarFabric` lockstep oracle.
+    {
+        let mut gates = drift2();
+        gates.push(Gate::Range { key: keys::STALE_EVENT_RATIO, lo: 0.0, hi: 0.5 });
+        gates.push(Gate::eq_cell(keys::EVENTS, "incast.1024"));
+        gates.push(Gate::eq_cell(keys::SIM_TURNAROUND_S, "incast.1024"));
+        cells.push(CellDef {
+            name: "topology.star_identity".into(),
+            ci: true,
+            note: "incast.1024 spec on a degenerate one-rack fabric (must equal star)".into(),
+            platform: PlatformSpec::RackTopo { rack_size: 2048, oversub: 1.0 },
+            kind: CellKind::Sim {
+                workload: WorkloadSpec::Reduce { n: 1023, scale: PatternScale::Small, wass: false },
+                config: ConfigSpec::dss(1023).stripe(64),
+                engine: EngineSpec::Coarse,
+                reps: 3,
+            },
+            gates,
+        });
+    }
+    {
+        let mut gates = drift2();
+        gates.push(Gate::eq_cell(keys::EVENTS, "frame_path.bulk"));
+        gates.push(Gate::eq_cell(keys::SIM_TURNAROUND_S, "frame_path.bulk"));
+        cells.push(CellDef {
+            name: "topology.star_identity_accept".into(),
+            ci: true,
+            note: "acceptance workload on a degenerate one-rack fabric (must equal star)".into(),
+            platform: PlatformSpec::RackTopo { rack_size: 64, oversub: 1.0 },
+            kind: CellKind::Sim {
+                workload: accept_workload(),
+                config: accept_config(),
+                engine: EngineSpec::Coarse,
+                reps: 5,
+            },
+            gates,
+        });
+    }
+    // Oversubscribed cores on the 1024-host incast: racks of 8 share an
+    // uplink/downlink pair provisioned at `rack_size / oversub` NIC rates,
+    // so the concurrent write phase serializes on the core and turnaround
+    // grows monotonically with the ratio.
+    {
+        let mut gates = drift2();
+        gates.push(Gate::Range { key: keys::STALE_EVENT_RATIO, lo: 0.0, hi: 0.5 });
+        gates.push(Gate::ge_cell(keys::SIM_TURNAROUND_S, "incast.1024", 0.0));
+        cells.push(CellDef {
+            name: "topology.oversub_2x".into(),
+            ci: true,
+            note: "incast.1024 spec on racks of 8 with a 2x-oversubscribed core".into(),
+            platform: PlatformSpec::RackTopo { rack_size: 8, oversub: 2.0 },
+            kind: CellKind::Sim {
+                workload: WorkloadSpec::Reduce { n: 1023, scale: PatternScale::Small, wass: false },
+                config: ConfigSpec::dss(1023).stripe(64),
+                engine: EngineSpec::Coarse,
+                reps: 3,
+            },
+            gates,
+        });
+    }
+    {
+        let mut gates = drift2();
+        gates.push(Gate::Range { key: keys::STALE_EVENT_RATIO, lo: 0.0, hi: 0.5 });
+        gates.push(Gate::ge_cell(keys::SIM_TURNAROUND_S, "topology.oversub_2x", 0.0));
+        // The acceptance criterion: an oversubscribed core must cost
+        // *measurably* more than the star on the same workload, same run.
+        gates.push(Gate::ratio_range(keys::SIM_TURNAROUND_S, "incast.1024", 1.02, f64::INFINITY));
+        cells.push(CellDef {
+            name: "topology.oversub_8x".into(),
+            ci: true,
+            note: "incast.1024 spec on racks of 8 with an 8x-oversubscribed core".into(),
+            platform: PlatformSpec::RackTopo { rack_size: 8, oversub: 8.0 },
+            kind: CellKind::Sim {
+                workload: WorkloadSpec::Reduce { n: 1023, scale: PatternScale::Small, wass: false },
+                config: ConfigSpec::dss(1023).stripe(64),
+                engine: EngineSpec::Coarse,
+                reps: 3,
+            },
+            gates,
+        });
     }
 
     // ── faults: degraded-mode invariants over (replication × crashes) ────
@@ -1043,6 +1140,54 @@ mod tests {
             assert!(!c.ci && c.gates.is_empty(), "{name}: attribution rows are record-only");
             assert!(matches!(c.kind, CellKind::Trace { .. }));
         }
+    }
+
+    #[test]
+    fn topology_cells_are_wired_as_designed() {
+        let cells = registry();
+        let get = |name: &str| {
+            cells.iter().find(|c| c.name == name).unwrap_or_else(|| panic!("{name} missing"))
+        };
+        // Identity cells: degenerate one-rack layouts, EqCell-pinned to
+        // their star counterparts in the same run.
+        for (name, peer) in
+            [("topology.star_identity", "incast.1024"), ("topology.star_identity_accept", "frame_path.bulk")]
+        {
+            let c = get(name);
+            assert!(c.ci, "{name} must gate every CI run");
+            let PlatformSpec::RackTopo { rack_size, oversub } = c.platform else {
+                panic!("{name}: expected a RackTopo platform");
+            };
+            assert_eq!(oversub, 1.0);
+            let cfg = match &c.kind {
+                CellKind::Sim { config, .. } => config.build(),
+                _ => panic!("{name}: expected a Sim cell"),
+            };
+            assert!(rack_size >= cfg.n_hosts(), "{name}: one rack must cover every host");
+            for key in [keys::EVENTS, keys::SIM_TURNAROUND_S] {
+                assert!(
+                    c.gates.iter().any(|g| matches!(
+                        g,
+                        Gate::EqCell { key: k, other, .. } if *k == key && *other == peer
+                    )),
+                    "{name}: missing EqCell({key}) vs {peer}"
+                );
+            }
+        }
+        // Oversubscription curve: monotone vs star, and the 8x point must
+        // show a measurable increase (the PR's acceptance floor).
+        let c2 = get("topology.oversub_2x");
+        assert!(c2.gates.iter().any(|g| g.peer() == Some("incast.1024")));
+        let c8 = get("topology.oversub_8x");
+        assert!(c8.gates.iter().any(|g| g.peer() == Some("topology.oversub_2x")));
+        assert!(
+            c8.gates.iter().any(|g| matches!(
+                g,
+                Gate::RatioRange { key, other, lo, .. }
+                    if *key == keys::SIM_TURNAROUND_S && *other == "incast.1024" && *lo > 1.0
+            )),
+            "oversub_8x must demand a measurable turnaround increase over star"
+        );
     }
 
     #[test]

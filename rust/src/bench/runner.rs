@@ -377,11 +377,12 @@ fn execute_cell(cell: &CellDef, run_id: &str, reps_override: u32) -> CellRecord 
             debug_assert!(attr.tiles_exactly(), "{}: attribution must tile", cell.name);
             let totals = attr.totals();
             // Keyed in Class::ALL order — one record key per class, so the
-            // seven cp_*_s values sum to sim_turnaround_s by construction.
+            // eight cp_*_s values sum to sim_turnaround_s by construction.
             const CP_KEYS: [&str; N_CLASSES] = [
                 keys::CP_CLIENT_COMPUTE_S,
                 keys::CP_OUT_NIC_S,
                 keys::CP_IN_NIC_S,
+                keys::CP_CORE_LINK_S,
                 keys::CP_STORAGE_S,
                 keys::CP_MANAGER_S,
                 keys::CP_FAULT_RECOVERY_S,

@@ -13,7 +13,7 @@
 //! ```
 
 use crate::ident::{identify, IdentConfig};
-use crate::model::{simulate_traced, Config, FaultPlan, Fidelity, Placement, Platform};
+use crate::model::{simulate_traced, Config, FaultPlan, Fidelity, Placement, Platform, Topology};
 use crate::predict::Predictor;
 use crate::runtime::{ScorerRuntime, StageDesc};
 use crate::search::{SearchSpace, Searcher};
@@ -97,6 +97,40 @@ fn platform_by_name(name: &str) -> Result<Platform, String> {
     }
 }
 
+/// Parse `--topology`: `star` (the single shared-medium network every
+/// paper scenario uses), or `rack:<rack-size>:<oversub>` — racks of
+/// `rack-size` hosts behind an uplink/downlink pair provisioned at
+/// `rack_size / oversub` NIC rates (see `sim::FabricPlan`).
+fn topology_by_name(name: &str) -> Result<Topology, String> {
+    if name == "star" {
+        return Ok(Topology::Star);
+    }
+    if let Some(spec) = name.strip_prefix("rack:") {
+        let mut it = spec.split(':');
+        let (Some(rs), Some(ov), None) = (it.next(), it.next(), it.next()) else {
+            return Err(format!("bad topology {name:?} (want rack:<rack-size>:<oversub>)"));
+        };
+        let rack_size = rs
+            .parse::<usize>()
+            .map_err(|_| format!("bad rack size {rs:?} in --topology {name:?}"))?;
+        let oversub = ov
+            .parse::<f64>()
+            .map_err(|_| format!("bad oversubscription ratio {ov:?} in --topology {name:?}"))?;
+        return Ok(Topology::Rack { rack_size, oversub });
+    }
+    Err(format!("unknown topology {name:?} (star | rack:<rack-size>:<oversub>)"))
+}
+
+/// The platform a command runs against: `--platform` resolved by name,
+/// then routed through the `--topology` fabric and re-validated (so a
+/// zero rack size or non-finite ratio is a flag error, not a panic).
+fn platform_from_flags(f: &Flags) -> Result<Platform, String> {
+    let mut plat = platform_by_name(&f.get("platform"))?;
+    plat.topology = topology_by_name(&f.get("topology"))?;
+    plat.validate().map_err(|e| format!("--topology: {e}"))?;
+    Ok(plat)
+}
+
 fn scale_by_name(name: &str) -> Result<PatternScale, String> {
     match name {
         "small" => Ok(PatternScale::Small),
@@ -176,6 +210,7 @@ fn pattern_flags(f: Flags) -> Flags {
         .flag("queries", "200", "BLAST query count")
         .flag("app-nodes", "14", "BLAST application nodes")
         .flag("platform", "paper", "paper|hdd|ssd|10g")
+        .flag("topology", "star", "network fabric: star | rack:<rack-size>:<oversub>")
         .flag(
             "fault-plan",
             "",
@@ -212,7 +247,7 @@ fn cmd_predict(args: &[String]) -> Result<(), String> {
         .flag("trace", "", "write Chrome trace-event JSON of the run here (open in Perfetto)")
         .parse(args)?;
     let (wl, cfg) = build_workload(&f)?;
-    let plat = platform_by_name(&f.get("platform"))?;
+    let plat = platform_from_flags(&f)?;
     let pred = Predictor::new(plat.clone()).predict(&wl, &cfg);
     println!("workload {:<24} config {}", wl.name, cfg.label);
     println!("predicted turnaround: {}", pred.turnaround);
@@ -239,7 +274,7 @@ fn cmd_explain(args: &[String]) -> Result<(), String> {
         .flag("trace", "", "also write Chrome trace-event JSON here (open in Perfetto)")
         .parse(args)?;
     let (wl, cfg) = build_workload(&f)?;
-    let plat = platform_by_name(&f.get("platform"))?;
+    let plat = platform_from_flags(&f)?;
     // Attribution needs every event probed, so explain always runs one
     // cold traced simulation — the delta warm-start path and the service
     // caches are deliberately not consulted (batch/serve report their
@@ -334,7 +369,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         .flag("trace", "", "write Chrome trace-event JSON of trial 0 here (open in Perfetto)")
         .parse(args)?;
     let (wl, cfg) = build_workload(&f)?;
-    let plat = platform_by_name(&f.get("platform"))?;
+    let plat = platform_from_flags(&f)?;
     let trials = f.get_u64("trials");
     let tb = Testbed::new(plat)
         .with_trials(trials, trials * 3)
@@ -364,7 +399,7 @@ fn cmd_compare(args: &[String]) -> Result<(), String> {
         .flag("threads", "0", "campaign worker threads (0 = all cores; results identical)")
         .parse(args)?;
     let (wl, cfg) = build_workload(&f)?;
-    let plat = platform_by_name(&f.get("platform"))?;
+    let plat = platform_from_flags(&f)?;
     let trials = f.get_u64("trials");
     let tb = Testbed::new(plat.clone())
         .with_trials(trials, trials * 3)
@@ -399,11 +434,12 @@ fn cmd_search(args: &[String]) -> Result<(), String> {
         .flag("queries", "200", "BLAST query count")
         .flag("top-k", "12", "candidates refined with the DES predictor")
         .flag("platform", "paper", "paper|hdd|ssd|10g")
+        .flag("topology", "star", "network fabric: star | rack:<rack-size>:<oversub>")
         .flag("artifact", "artifacts/predictor.hlo.txt", "AOT scorer (empty to disable)")
         .flag("surrogate", "0", "surrogate error gate, e.g. 0.3 (0 = off: refine exactly)")
         .flag("fault-plan", "", "fault plan applied to every candidate (empty = fault-free)")
         .parse(args)?;
-    let plat = platform_by_name(&f.get("platform"))?;
+    let plat = platform_from_flags(&f)?;
     let chunks: Vec<Bytes> = f.get_u64_list("chunks-kb").into_iter().map(Bytes::kb).collect();
     let mut space = SearchSpace::elastic(
         f.get_u64_list("allocations").into_iter().map(|x| x as usize).collect(),
@@ -532,6 +568,15 @@ fn query_family(f: &Flags, plat: &Platform) -> u64 {
     // (or with differently-faulted ones).
     h.write_str(&f.get("fault-plan"));
     h.write_str(&plat.label);
+    // A routed fabric reshapes the whole response surface, so rack
+    // families never share a surrogate grid with star families (or with
+    // differently-dimensioned racks). Star hashes nothing: pre-fabric
+    // family keys stay valid.
+    if let Topology::Rack { rack_size, oversub } = plat.topology {
+        h.write_str("rack");
+        h.write_u64(rack_size as u64);
+        h.write_u64(oversub.to_bits());
+    }
     h.finish()
 }
 
@@ -588,6 +633,7 @@ fn answer_json(a: &Answer) -> Json {
 
 fn service_flags(f: Flags) -> Flags {
     f.flag("platform", "paper", "paper|hdd|ssd|10g")
+        .flag("topology", "star", "network fabric: star | rack:<rack-size>:<oversub>")
         .flag("store", "", "append-only JSONL prediction store (warm-starts across runs)")
         .flag("surrogate", "0", "surrogate error gate, e.g. 0.3 (0 = off: always exact)")
         .flag("fault-plan", "", "fault plan for queries without their own (empty = fault-free)")
@@ -639,7 +685,7 @@ fn cmd_batch(args: &[String]) -> Result<(), String> {
         .flag("in", "", "newline-delimited query JSON file (empty = read stdin)")
         .flag("threads", "0", "worker threads (0 = all cores; answers stay in input order)")
         .parse(args)?;
-    let plat = platform_by_name(&f.get("platform"))?;
+    let plat = platform_from_flags(&f)?;
     let text = if f.get("in").is_empty() {
         let mut s = String::new();
         std::io::Read::read_to_string(&mut std::io::stdin(), &mut s).map_err(|e| e.to_string())?;
@@ -670,7 +716,7 @@ fn cmd_batch(args: &[String]) -> Result<(), String> {
 
 fn cmd_serve(args: &[String]) -> Result<(), String> {
     let f = service_flags(Flags::new("wfpred serve")).parse(args)?;
-    let plat = platform_by_name(&f.get("platform"))?;
+    let plat = platform_from_flags(&f)?;
     let service = open_service(&f, &plat)?;
     let extra = service_query_defaults(&f);
     let gate = f.get_f64("surrogate");
@@ -882,6 +928,42 @@ mod tests {
     #[test]
     fn predict_rejects_bad_pattern() {
         assert_eq!(run(&argv(&["predict", "--pattern", "nope"])), 2);
+    }
+
+    #[test]
+    fn predict_runs_end_to_end_on_a_rack_topology() {
+        // The tier-1 smoke for the routed fabric: a full prediction over
+        // racks of 8 with a 4x-oversubscribed core.
+        assert_eq!(
+            run(&argv(&[
+                "predict", "--pattern", "reduce", "--nodes", "8", "--scale", "small",
+                "--topology", "rack:8:4",
+            ])),
+            0
+        );
+        // `star` is accepted explicitly and stays the default.
+        assert_eq!(
+            run(&argv(&[
+                "predict", "--pattern", "pipeline", "--nodes", "4", "--scale", "small",
+                "--topology", "star",
+            ])),
+            0
+        );
+    }
+
+    #[test]
+    fn predict_rejects_bad_topologies() {
+        for topo in ["rack", "rack:8", "rack:0:4", "rack:8:0", "rack:8:inf", "rack:8:4:2", "mesh:4"]
+        {
+            assert_eq!(
+                run(&argv(&[
+                    "predict", "--pattern", "pipeline", "--nodes", "4", "--scale", "small",
+                    "--topology", topo,
+                ])),
+                2,
+                "{topo:?} must be rejected"
+            );
+        }
     }
 
     #[test]

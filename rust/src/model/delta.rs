@@ -62,7 +62,7 @@ use crate::model::config::{Config, Placement};
 use crate::model::engine::{self, Ev, World};
 use crate::model::faults::FaultPlan;
 use crate::model::fidelity::Fidelity;
-use crate::model::platform::{DiskKind, Platform};
+use crate::model::platform::{DiskKind, Platform, Topology};
 use crate::model::report::SimReport;
 use crate::sim::Simulation;
 use crate::trace::NoopProbe;
@@ -231,6 +231,15 @@ fn hash_platform(h: &mut H2, p: &Platform) {
         DiskKind::Hdd => 1,
         DiskKind::Ssd => 2,
     });
+    // Star hashes nothing (pre-fabric fingerprints stay valid); any rack
+    // layout perturbs the context hash and with it *every* stage
+    // fingerprint, so a topology change always empties the warm-start
+    // prefix — spliced state can never leak across topologies.
+    if let Topology::Rack { rack_size, oversub } = p.topology {
+        h.str("topology.v1");
+        h.usize(rack_size);
+        h.f64(oversub);
+    }
 }
 
 /// Every `Fidelity` switch feeds the hash (any of them can change the
@@ -696,6 +705,22 @@ mod tests {
         let wider =
             Config::partitioned(4, 5, Bytes::mb(1)).with_label("delta-base").with_stripe(1);
         assert!(base.resume(&wl, &wider).is_none(), "n_storage is read from the first event on");
+    }
+
+    #[test]
+    fn changed_topology_perturbs_every_stage_fingerprint() {
+        let wl = two_stage_wl(2);
+        let star = stage_fingerprints(&wl, &base_cfg(), &plat(), &Fidelity::coarse());
+        let mut rack_plat = plat();
+        rack_plat.topology = Topology::Rack { rack_size: 2, oversub: 4.0 };
+        let rack = stage_fingerprints(&wl, &base_cfg(), &rack_plat, &Fidelity::coarse());
+        for (s, (a, b)) in star.iter().zip(rack.iter()).enumerate() {
+            assert_ne!(a, b, "stage {s} fingerprint must observe the topology");
+        }
+        let mut other_rack = plat();
+        other_rack.topology = Topology::Rack { rack_size: 2, oversub: 8.0 };
+        let other = stage_fingerprints(&wl, &base_cfg(), &other_rack, &Fidelity::coarse());
+        assert_ne!(rack[0], other[0], "oversubscription ratio is part of the point");
     }
 
     #[test]

@@ -36,6 +36,22 @@
 //!   analytically, so turnaround and every station integral agree for
 //!   arbitrary wire sizes on uncontended paths (property-tested).
 //!
+//! ## Routed fabric (topologies beyond the star)
+//!
+//! Under [`Topology::Rack`] cross-rack transfers are routed over core
+//! links — the source rack's uplink, then the destination rack's
+//! downlink — each a weighted-fair station serving `rack_size /
+//! oversub` host lines (see `sim::fabric`). Bulk trains cut-through
+//! every hop (one leading-frame service each; path latency charged
+//! once) and deliver when the *last* gating station finishes the train,
+//! so routing stays O(1) events per train per hop; the per-frame path
+//! store-and-forwards individual frames through FIFO link stations. The
+//! star — and any rack layout that fits in a single rack — resolves to
+//! an empty link set and schedules *no* link events, keeping it
+//! bit-identical to the pre-fabric engine (pinned by
+//! `prop_star_fabric_matches_reference` and the `fabric_topology`
+//! integration suite).
+//!
 //! ## Degraded mode (fault injection)
 //!
 //! When the config carries a non-empty [`faults::FaultPlan`], the engine
@@ -77,10 +93,12 @@ use crate::model::driver::DriverState;
 use crate::model::faults;
 use crate::model::fidelity::Fidelity;
 use crate::model::placement::{AllocId, GroupId, PlacementArena};
-use crate::model::platform::Platform;
+use crate::model::platform::{Platform, Topology};
 use crate::model::proto::*;
 use crate::model::report::{OpRecord, SimReport, TaskRecord, UtilReport};
-use crate::sim::{EventToken, FairStation, Scheduler, SimState, Simulation, Station, StationStats};
+use crate::sim::{
+    EventToken, FabricPlan, FairStation, Scheduler, SimState, Simulation, Station, StationStats,
+};
 use crate::trace::{Lane, MsgTag, NoopProbe, Probe, Recorder, NO_OP};
 use crate::util::rng::Rng;
 use crate::util::units::{Bytes, SimTime};
@@ -180,6 +198,14 @@ pub enum Ev {
     NicInFairDone(usize),
     /// A frame arrives at the destination host (post-latency).
     FrameArrive(usize, Frame),
+    /// A frame (or bulk train) reaches a core fabric link on its route
+    /// (routed topologies only; the star schedules none of these).
+    LinkArrive(usize, Frame),
+    /// A frame finished service at a core link (per-frame FIFO path).
+    LinkDone(usize),
+    /// A train finished weighted-fair service at a core link (bulk
+    /// path; cancellable, like `NicInFairDone`).
+    LinkFairDone(usize),
     /// A component station finished serving a message.
     CompDone(CompId),
     /// A task's dependencies are satisfied.
@@ -281,6 +307,12 @@ pub struct World<P: Probe = NoopProbe> {
     // follows the fidelity's frame path.
     pub(crate) nic_out: Vec<Station<Frame>>,
     pub(crate) nic_in: Vec<NicIn>,
+    // Routed fabric: the resolved topology plan and one station per
+    // core link (same receive-discipline split as the in-NICs: fair for
+    // bulk trains, FIFO for per-frame). Both are empty under the star
+    // and under any rack layout that fits in one rack.
+    pub(crate) fabric: FabricPlan,
+    pub(crate) link_st: Vec<NicIn>,
     // Component stations.
     pub(crate) manager_st: Station<MsgId>,
     pub(crate) storage_st: Vec<Station<MsgId>>,
@@ -317,6 +349,13 @@ pub struct World<P: Probe = NoopProbe> {
     /// `unit · u(u−1)/2` per busy arrival, is accumulated here and
     /// subtracted when reporting `nic_qlen` (see `model/report.rs`).
     nic_in_pacing_overcount: Vec<u128>,
+    /// Per-link analogue of `nic_in_pacing_overcount`: a bulk train
+    /// posts its frame-units at once at a busy core link too.
+    link_pacing_overcount: Vec<u128>,
+    /// Routed bulk messages: remaining gating-station completions (core
+    /// links on the route + the destination in-NIC) before the message
+    /// is handed to its component. Star messages never enter this map.
+    pending_hops: HashMap<MsgId, u32>,
 
     /// Tracing probe (zero-cost [`NoopProbe`] by default — its empty
     /// `#[inline(always)]` hooks monomorphize away, see `trace/`).
@@ -366,6 +405,13 @@ impl<P: Probe> World<P> {
             })
             .collect();
         let aggregated = fid.frame_aggregation;
+        let fabric = match plat.topology {
+            Topology::Star => FabricPlan::star(),
+            Topology::Rack { rack_size, oversub } => {
+                FabricPlan::rack(h, rack_size, oversub, 1e9 / plat.net_remote_bps)
+            }
+        };
+        let n_links = fabric.n_links();
         let mut w = World {
             fid,
             rng,
@@ -376,6 +422,16 @@ impl<P: Probe> World<P> {
             ns_per_byte_local: 1e9 / plat.net_local_bps,
             nic_out: (0..h).map(|_| Station::new()).collect(),
             nic_in: (0..h)
+                .map(|_| {
+                    if aggregated {
+                        NicIn::Fair { st: FairStation::new(), pending: None }
+                    } else {
+                        NicIn::Fifo(Station::new())
+                    }
+                })
+                .collect(),
+            fabric,
+            link_st: (0..n_links)
                 .map(|_| {
                     if aggregated {
                         NicIn::Fair { st: FairStation::new(), pending: None }
@@ -399,6 +455,8 @@ impl<P: Probe> World<P> {
             op_records: Vec::new(),
             task_records: Vec::new(),
             nic_in_pacing_overcount: vec![0; h],
+            link_pacing_overcount: vec![0; n_links],
+            pending_hops: HashMap::new(),
             probe,
             dead: vec![false; n_storage],
             pending_chunks: BTreeMap::new(),
@@ -602,11 +660,15 @@ impl<P: Probe> World<P> {
         TrainSvc { total, first, unit: full, last }
     }
 
-    /// Schedule a train's arrival at the destination in-NIC: one
+    /// Schedule a train's arrival at its first post-out-NIC station, one
     /// frame-service after its out-NIC service *starts* (when the leading
     /// frame lands), preserving the per-frame path's pipelined overlap.
+    /// Star and in-rack pairs land straight on the destination in-NIC —
+    /// the pre-fabric path, verbatim; cross-rack pairs land on the first
+    /// core link of their route (the path latency is charged once, here)
+    /// and register the delivery gate over every gating station.
     fn schedule_train_arrival(
-        &self,
+        &mut self,
         sched: &mut Scheduler<Ev>,
         start: SimTime,
         frame: Frame,
@@ -614,8 +676,16 @@ impl<P: Probe> World<P> {
     ) {
         let msg = &self.msgs[frame.msg];
         let dst = self.host_of(msg.to);
+        let src = self.host_of(msg.from);
         let lat = if msg.local { self.plat.net_latency_local } else { self.plat.net_latency };
-        sched.at(start + first_svc + lat, Ev::FrameArrive(dst, frame));
+        let route = self.fabric.route(src, dst);
+        match route.first() {
+            None => sched.at(start + first_svc + lat, Ev::FrameArrive(dst, frame)),
+            Some(link) => {
+                self.pending_hops.insert(frame.msg, route.len() as u32 + 1);
+                sched.at(start + first_svc + lat, Ev::LinkArrive(link, frame));
+            }
+        }
     }
 
     /// Fragment a message into frames and enqueue at the source out-NIC —
@@ -704,7 +774,8 @@ impl<P: Probe> World<P> {
             if self.fid.frame_aggregation {
                 // The next train starts service now — schedule its
                 // cut-through arrival at the destination.
-                if let Some(&nf) = self.nic_out[host].in_service() {
+                let nf = self.nic_out[host].in_service().copied();
+                if let Some(nf) = nf {
                     let local = self.msgs[nf.msg].local;
                     let ts = self.train_svc(&nf, local);
                     self.schedule_train_arrival(sched, now, nf, ts.first);
@@ -714,10 +785,137 @@ impl<P: Probe> World<P> {
         if !self.fid.frame_aggregation {
             let msg = &self.msgs[frame.msg];
             let dst = self.host_of(msg.to);
+            let src = self.host_of(msg.from);
             let lat = if msg.local { self.plat.net_latency_local } else { self.plat.net_latency };
-            sched.at(now + lat, Ev::FrameArrive(dst, frame));
+            // Routed pairs store-and-forward each frame over the core
+            // links; the path latency is still charged exactly once.
+            match self.fabric.route(src, dst).first() {
+                None => sched.at(now + lat, Ev::FrameArrive(dst, frame)),
+                Some(link) => sched.at(now + lat, Ev::LinkArrive(link, frame)),
+            }
         }
         // Bulk trains already had their arrival scheduled at service start.
+    }
+
+    /// [`World::train_svc`] at the core-link rate: a cross-rack hop
+    /// serves frames at `rack_size / oversub` host lines (see
+    /// [`FabricPlan`]). Routed messages are never loopback-local, so
+    /// there is no local variant.
+    #[inline(always)]
+    fn link_train_svc(&self, frame: &Frame) -> TrainSvc {
+        let nspb = self.fabric.ns_per_byte_link();
+        let n_frames = frame.frames as u64;
+        debug_assert!(n_frames >= 1);
+        let cap = self.plat.frame_size.as_u64();
+        let full = SimTime((cap as f64 * nspb) as u64);
+        let last = SimTime((frame.tail_frame_bytes(cap) as f64 * nspb) as u64);
+        let total = SimTime(full.0 * (n_frames - 1)) + last;
+        let first = if n_frames > 1 { full } else { last };
+        TrainSvc { total, first, unit: full, last }
+    }
+
+    /// The event that carries `frame` onward from core link `link`: the
+    /// next link on its route, or the destination in-NIC.
+    fn next_hop_ev(&self, link: usize, frame: Frame) -> Ev {
+        let msg = &self.msgs[frame.msg];
+        let dst = self.host_of(msg.to);
+        let src = self.host_of(msg.from);
+        match self.fabric.route(src, dst).after(link) {
+            Some(next) => Ev::LinkArrive(next, frame),
+            None => Ev::FrameArrive(dst, frame),
+        }
+    }
+
+    /// A frame (or bulk train) reaches a core link on its route.
+    fn on_link_arrive(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, link: usize, frame: Frame) {
+        let ts = self.link_train_svc(&frame);
+        let next_ev = self.next_hop_ev(link, frame);
+        self.probe.station_arrive(now, Lane::Link(link as u32), frame.msg, ts.total);
+        match &mut self.link_st[link] {
+            NicIn::Fifo(st) => {
+                // Per-frame path: store-and-forward — the frame moves on
+                // when the link finishes serving it (on_link_done).
+                if let Some(t) = st.arrive(now, frame, ts.total) {
+                    sched.at(t, Ev::LinkDone(link));
+                }
+            }
+            NicIn::Fair { st, pending } => {
+                // Bulk path: the whole train shares the link weighted by
+                // its wire bytes (the fair in-NIC's exact bookkeeping,
+                // at the link rate) and cut-throughs into the next hop
+                // one link-rate leading-frame service after arriving.
+                // The train's completion *here* co-gates final delivery,
+                // so a contended link delays the message even though
+                // downstream stations started early.
+                let tail_wait =
+                    if frame.frames > 1 { ts.unit.as_ns() - ts.last.as_ns() } else { 0 };
+                let weight = frame.bytes.as_u64().max(1);
+                if frame.frames > 1 && st.is_busy() {
+                    let u = frame.frames as u128;
+                    self.link_pacing_overcount[link] +=
+                        ts.unit.as_ns() as u128 * (u * (u - 1) / 2);
+                }
+                let t = st.arrive(now, frame, ts.total, frame.frames as u64, weight, tail_wait);
+                if let Some(tok) = pending.take() {
+                    let withdrawn = sched.cancel(tok);
+                    debug_assert!(withdrawn, "pending link completion was already spent");
+                }
+                *pending = Some(sched.at_cancellable(t, Ev::LinkFairDone(link)));
+                sched.at(now + ts.first, next_ev);
+            }
+        }
+    }
+
+    /// Per-frame path: a frame finished service at a core link.
+    fn on_link_done(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, link: usize) {
+        let st = match &mut self.link_st[link] {
+            NicIn::Fifo(st) => st,
+            NicIn::Fair { .. } => unreachable!("per-frame completion on a fair link"),
+        };
+        let (frame, next) = st.complete(now);
+        if let Some(t) = next {
+            sched.at(t, Ev::LinkDone(link));
+        }
+        if frame.last {
+            self.probe.station_depart(now, Lane::Link(link as u32), frame.msg);
+        }
+        // Store-and-forward: the frame enters the next hop immediately
+        // (the path latency was charged on the first hop).
+        let ev = self.next_hop_ev(link, frame);
+        sched.at(now, ev);
+    }
+
+    /// Bulk path: a train finished weighted-fair service at a core link.
+    fn on_link_fair_done(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, link: usize) {
+        let (st, pending) = match &mut self.link_st[link] {
+            NicIn::Fair { st, pending } => (st, pending),
+            NicIn::Fifo(_) => unreachable!("fair completion on a per-frame link"),
+        };
+        // This event was the live announcement; its token is now spent.
+        *pending = None;
+        let (frame, next) = st.complete(now);
+        if let Some(t) = next {
+            *pending = Some(sched.at_cancellable(t, Ev::LinkFairDone(link)));
+        }
+        self.probe.station_depart(now, Lane::Link(link as u32), frame.msg);
+        self.deliver(sched, now, frame.msg);
+    }
+
+    /// A message finished at one of its gating stations (each core link
+    /// on its route plus the destination in-NIC). Routed bulk messages
+    /// deliver when their *last* gate opens — the bottleneck station
+    /// sets the delivery time; star messages (never in the gate map)
+    /// pass straight through to their component.
+    fn deliver(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, msg_id: MsgId) {
+        if let Some(left) = self.pending_hops.get_mut(&msg_id) {
+            *left -= 1;
+            if *left > 0 {
+                return;
+            }
+            self.pending_hops.remove(&msg_id);
+        }
+        let to = self.msgs[msg_id].to;
+        self.comp_arrive(sched, now, to, msg_id);
     }
 
     fn on_frame_arrive(&mut self, sched: &mut Scheduler<Ev>, now: SimTime, host: usize, frame: Frame) {
@@ -793,9 +991,9 @@ impl<P: Probe> World<P> {
         }
         if frame.last {
             self.probe.station_depart(now, Lane::NicIn(host as u32), frame.msg);
-            // Message fully assembled: hand to destination component queue.
-            let to = self.msgs[frame.msg].to;
-            self.comp_arrive(sched, now, to, frame.msg);
+            // Message fully assembled: deliver it (routed bulk messages
+            // additionally wait for their core-link gates to open).
+            self.deliver(sched, now, frame.msg);
         }
     }
 
@@ -813,9 +1011,9 @@ impl<P: Probe> World<P> {
         }
         if frame.last {
             self.probe.station_depart(now, Lane::NicIn(host as u32), frame.msg);
-            // Message fully assembled: hand to destination component queue.
-            let to = self.msgs[frame.msg].to;
-            self.comp_arrive(sched, now, to, frame.msg);
+            // Message fully assembled: deliver it (routed bulk messages
+            // additionally wait for their core-link gates to open).
+            self.deliver(sched, now, frame.msg);
         }
     }
 
@@ -1420,6 +1618,9 @@ impl<P: Probe> World<P> {
         for q in self.nic_in.iter_mut() {
             q.finish(end);
         }
+        for l in self.link_st.iter_mut() {
+            l.finish(end);
+        }
         self.manager_st.finish(end);
         for st in self.storage_st.iter_mut().chain(self.client_st.iter_mut()) {
             st.finish(end);
@@ -1457,6 +1658,14 @@ impl<P: Probe> World<P> {
                     (o.stats.mean_qlen(end), i.stats().mean_qlen_corrected(end, oc))
                 })
                 .collect(),
+            links: self
+                .link_st
+                .iter()
+                .zip(self.link_pacing_overcount.iter())
+                .map(|(l, &oc)| {
+                    (l.stats().utilization(end), l.stats().mean_qlen_corrected(end, oc))
+                })
+                .collect(),
         };
         SimReport {
             config_label: self.cfg.label.clone(),
@@ -1491,6 +1700,9 @@ impl<P: Probe> SimState for World<P> {
             Ev::NicInDone(h) => self.on_nic_in_done(sched, now, h),
             Ev::NicInFairDone(h) => self.on_nic_in_fair_done(sched, now, h),
             Ev::FrameArrive(h, f) => self.on_frame_arrive(sched, now, h, f),
+            Ev::LinkArrive(l, f) => self.on_link_arrive(sched, now, l, f),
+            Ev::LinkDone(l) => self.on_link_done(sched, now, l),
+            Ev::LinkFairDone(l) => self.on_link_fair_done(sched, now, l),
             Ev::CompDone(c) => self.on_comp_done(sched, now, c),
             Ev::Release(t) => self.driver_release(sched, now, t),
             Ev::ComputeDone(t) => self.driver_compute_done(sched, now, t),

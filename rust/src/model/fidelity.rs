@@ -23,6 +23,14 @@
 //!
 //! Every knob is independent, so `benches/ablations.rs` can attribute the
 //! prediction error to individual mechanisms.
+//!
+//! The network topology is *not* a fidelity knob: it lives on
+//! [`Platform`](crate::model::Platform) because it describes the
+//! machine, not the simulation detail level. Every tier — bulk-train
+//! coarse, per-frame, detailed — routes through the same
+//! [`crate::sim::FabricPlan`], and the frame-aggregation knob below
+//! only selects whether core links serve whole trains (weighted-fair)
+//! or individual frames (FIFO store-and-forward).
 
 use crate::util::units::SimTime;
 

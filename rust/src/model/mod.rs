@@ -51,5 +51,5 @@ pub use placement::{AllocId, GroupId, PlacementArena, RefPlacement};
 pub use engine::{simulate, simulate_fid, simulate_traced};
 pub use energy::PowerModel;
 pub use fidelity::Fidelity;
-pub use platform::{DiskKind, Platform};
+pub use platform::{DiskKind, Platform, Topology};
 pub use report::SimReport;

@@ -22,6 +22,35 @@ pub enum DiskKind {
     Ssd,
 }
 
+/// Network topology of the deployment.
+///
+/// The paper's testbed is a single non-blocking switch, so every
+/// transfer crosses exactly one out-NIC/in-NIC station pair — the
+/// [`Topology::Star`] default, and the shape every pre-fabric prediction
+/// was made under. [`Topology::Rack`] models the two-tier rack + core
+/// fabrics the paper could not explore (§5 "larger scales"): hosts are
+/// packed into racks of `rack_size`, in-rack traffic still only crosses
+/// the NIC pair, and cross-rack traffic is additionally routed over a
+/// rack-uplink and a rack-downlink core link, each a weighted-fair
+/// server whose capacity is `rack_size / oversub` host lines
+/// (`oversub` = 1 is a non-blocking core; larger ratios model
+/// oversubscription). A `Rack` that fits every host into one rack
+/// degenerates to the star — bit-identically (see `sim::fabric`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Topology {
+    /// Single switching domain (the paper's testbed; the default).
+    Star,
+    /// Two-tier rack + core with an oversubscription ratio.
+    Rack {
+        /// Hosts per rack (hosts `[k·rack_size, (k+1)·rack_size)` share
+        /// rack `k`).
+        rack_size: usize,
+        /// Core oversubscription ratio: each rack's uplink/downlink
+        /// carries `rack_size / oversub` host lines of bandwidth.
+        oversub: f64,
+    },
+}
+
 /// Everything system identification tells the simulator about the
 /// deployment platform.
 #[derive(Clone, Debug)]
@@ -62,6 +91,8 @@ pub struct Platform {
     /// overflow. 0 = unlimited.
     pub node_capacity: Bytes,
     pub disk: DiskKind,
+    /// Network topology (star, or routed two-tier rack + core).
+    pub topology: Topology,
 }
 
 impl Platform {
@@ -92,6 +123,8 @@ impl Platform {
             // 4 GB RAM machines: ~3 GB usable as RAMdisk.
             node_capacity: Bytes::gb(3),
             disk: DiskKind::Ram,
+            // One non-blocking switch (the other presets inherit this).
+            topology: Topology::Star,
         }
     }
 
@@ -190,6 +223,14 @@ impl Platform {
         if self.host_speed.iter().any(|&s| s <= 0.0) {
             return Err("host speed factors must be positive".into());
         }
+        if let Topology::Rack { rack_size, oversub } = self.topology {
+            if rack_size == 0 {
+                return Err("rack size must be at least 1".into());
+            }
+            if !(oversub > 0.0 && oversub.is_finite()) {
+                return Err("core oversubscription ratio must be positive and finite".into());
+            }
+        }
         Ok(())
     }
 }
@@ -241,5 +282,30 @@ mod tests {
         assert!(p.validate().is_err());
         let p2 = Platform::paper_testbed().with_host_speed(1, 0.0);
         assert!(p2.validate().is_err());
+    }
+
+    #[test]
+    fn presets_default_to_star() {
+        for p in [
+            Platform::paper_testbed(),
+            Platform::paper_testbed_hdd(),
+            Platform::paper_testbed_ssd(),
+            Platform::paper_testbed_10g(),
+        ] {
+            assert_eq!(p.topology, Topology::Star, "{}", p.label);
+        }
+    }
+
+    #[test]
+    fn rack_topology_validates() {
+        let mut p = Platform::paper_testbed();
+        p.topology = Topology::Rack { rack_size: 8, oversub: 4.0 };
+        assert!(p.validate().is_ok());
+        p.topology = Topology::Rack { rack_size: 0, oversub: 4.0 };
+        assert!(p.validate().is_err());
+        p.topology = Topology::Rack { rack_size: 8, oversub: 0.0 };
+        assert!(p.validate().is_err());
+        p.topology = Topology::Rack { rack_size: 8, oversub: f64::INFINITY };
+        assert!(p.validate().is_err());
     }
 }

@@ -7,6 +7,14 @@
 //! puts to storage (round-robin over the allocated stripe, chained
 //! replication) → chunk-map commit at the manager. Reads are lookup →
 //! per-chunk gets.
+//!
+//! Messages name hosts, not links: how a message physically reaches its
+//! destination — directly under the star topology, or via a rack
+//! uplink/downlink pair under a routed [`Topology`] — is resolved per
+//! hop by the engine through [`crate::sim::FabricPlan`], so the
+//! protocol layer is topology-agnostic by construction.
+//!
+//! [`Topology`]: crate::model::Topology
 
 use crate::model::placement::{AllocId, GroupId};
 use crate::util::units::Bytes;

@@ -53,6 +53,11 @@ pub struct UtilReport {
     /// (`StationStats::mean_qlen_corrected`), so the reported in-NIC
     /// depth is the paced one in both modes.
     pub nic_qlen: Vec<(f64, f64)>,
+    /// (utilization, mean queue length) per core-fabric link, in rack
+    /// layout order (uplink then downlink per rack). Empty under the
+    /// star topology — the star fabric has no core links, which is what
+    /// keeps star reports bit-identical to the pre-fabric engine.
+    pub links: Vec<(f64, f64)>,
 }
 
 /// Full output of one simulated run.
@@ -181,6 +186,7 @@ mod tests {
                 storage: vec![],
                 nic: vec![],
                 nic_qlen: vec![],
+                links: vec![],
             },
             events: 0,
             events_cancelled: 0,

@@ -19,7 +19,7 @@
 //! sequence) keeps the accidental-collision probability negligible at
 //! millions of stored predictions.
 
-use crate::model::{Config, DiskKind, Fidelity, Placement, Platform};
+use crate::model::{Config, DiskKind, Fidelity, Placement, Platform, Topology};
 use crate::util::hash::{mix64, Fnv64};
 use crate::workload::{FileSpec, TaskSpec, Workload};
 use std::fmt;
@@ -235,6 +235,17 @@ fn hash_platform(h: &mut H2, p: &Platform) {
         DiskKind::Hdd => 1,
         DiskKind::Ssd => 2,
     });
+    // The topology is hashed only when it is not the star, so a star
+    // platform keeps the fingerprint it had before the routed fabric
+    // existed — warm-start stores stay valid (same contract as the
+    // `faults.v1` block in `hash_config`). Any rack layout is a distinct
+    // evaluation point: memoized answers must never leak across
+    // topologies.
+    if let Topology::Rack { rack_size, oversub } = p.topology {
+        h.str("topology.v1");
+        h.usize(rack_size);
+        h.f64(oversub);
+    }
 }
 
 fn hash_fidelity(h: &mut H2, f: &Fidelity) {
@@ -387,6 +398,29 @@ mod tests {
         let reseeded =
             Config::dss(4).with_fault_plan(FaultPlan::parse("seed=9;crash=1@2").unwrap());
         assert_ne!(fp_crash, fingerprint(&w, &reseeded, &plat, &fid));
+    }
+
+    #[test]
+    fn rack_topologies_are_distinct_points_but_star_is_free() {
+        let w = wl();
+        let fid = Fidelity::coarse();
+        let cfg = Config::dss(4);
+        let base = fp_of(&w);
+        // Star is the pre-fabric default: same fingerprint as before the
+        // topology knob existed.
+        let mut star = Platform::paper_testbed();
+        star.topology = Topology::Star;
+        assert_eq!(base, fingerprint(&w, &cfg, &star, &fid));
+        let mut rack = Platform::paper_testbed();
+        rack.topology = Topology::Rack { rack_size: 8, oversub: 4.0 };
+        let fp_rack = fingerprint(&w, &cfg, &rack, &fid);
+        assert_ne!(base, fp_rack, "a rack layout is a distinct evaluation point");
+        let mut wider = Platform::paper_testbed();
+        wider.topology = Topology::Rack { rack_size: 16, oversub: 4.0 };
+        assert_ne!(fp_rack, fingerprint(&w, &cfg, &wider, &fid));
+        let mut leaner = Platform::paper_testbed();
+        leaner.topology = Topology::Rack { rack_size: 8, oversub: 2.0 };
+        assert_ne!(fp_rack, fingerprint(&w, &cfg, &leaner, &fid));
     }
 
     #[test]

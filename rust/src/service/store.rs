@@ -603,4 +603,68 @@ mod tests {
         assert_eq!(store.get(&fp), Some(ans));
         let _ = std::fs::remove_file(&path);
     }
+
+    #[test]
+    fn compact_on_open_interleaves_corruption_with_superseded_records() {
+        // The worst replay: corrupt lines *between* the superseded and
+        // superseding appends, plus a crash-truncated tail. Salvage and
+        // reclaim must account independently, the newest record must
+        // still win, and the compaction rewrite must purge the corrupt
+        // lines along with the superseded ones.
+        let path = tmp("interleaved");
+        let _ = std::fs::remove_file(&path);
+        let (fp, old) = sample(1);
+        let (fp2, keep) = sample(2);
+        let newer =
+            StoredAnswer { cost_node_s: 123.0, checkpoints: vec![ckpt(1)], ..old.clone() };
+        let text = format!(
+            "not json at all\n{}\n{{\"fp\": \"mangled\"}}\n{}\n{}\n{{\"fp",
+            DiskStore::render_record(fp, &old),
+            DiskStore::render_record(fp2, &keep),
+            DiskStore::render_record(fp, &newer),
+        );
+        std::fs::write(&path, text).unwrap();
+        let store = DiskStore::open(&path).unwrap();
+        assert_eq!(store.salvaged(), 2, "interior corruption counted; the crashed tail is not");
+        assert_eq!(store.reclaimed(), 1, "one superseded record reclaimed");
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.get(&fp), Some(newer.clone()), "newest record wins across corruption");
+        assert_eq!(store.get(&fp2), Some(keep.clone()));
+        drop(store);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2, "the rewrite holds exactly the survivors");
+        let reopened = DiskStore::open(&path).unwrap();
+        assert_eq!(reopened.salvaged(), 0, "corrupt lines are gone after compaction");
+        assert_eq!(reopened.reclaimed(), 0, "nothing left to reclaim");
+        assert_eq!(reopened.get(&fp), Some(newer));
+        assert_eq!(reopened.get(&fp2), Some(keep));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn truncated_ckpts_hex_field_falls_back_cold() {
+        // A ckpts entry with the right field count but a truncated
+        // stage-fingerprint hex value (31 chars, not 32) must fail the
+        // codec — and at the store level degrade to "answer intact,
+        // checkpoints empty": a cold warm-start, never a lost record.
+        let short = "0:fffffffffffffffa0123456789abcde:1:2:3:4:5:6:7:8:9:a:b:c";
+        assert_eq!(short.split(':').count(), 14, "field count is not what fails here");
+        assert!(decode_checkpoints(short).is_none(), "a 31-hex fingerprint must not parse");
+
+        let path = tmp("shortfp");
+        let _ = std::fs::remove_file(&path);
+        let (fp, ans) = sample(4);
+        assert!(!ans.checkpoints.is_empty(), "the sample must carry a checkpoint");
+        let rendered = DiskStore::render_record(fp, &ans);
+        let full = ans.checkpoints[0].fp.to_string();
+        let mangled = rendered.replace(&full, &full[..full.len() - 1]);
+        assert_ne!(rendered, mangled, "the checkpoint fingerprint must appear verbatim");
+        std::fs::write(&path, format!("{mangled}\n")).unwrap();
+        let store = DiskStore::open(&path).unwrap();
+        assert_eq!(store.salvaged(), 0, "the answer itself is healthy");
+        let got = store.get(&fp).expect("the answer outlives its truncated checkpoint");
+        assert!(got.checkpoints.is_empty(), "decode falls back cold");
+        assert_eq!(StoredAnswer { checkpoints: vec![], ..ans }, got);
+        let _ = std::fs::remove_file(&path);
+    }
 }

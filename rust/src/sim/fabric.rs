@@ -1,0 +1,675 @@
+//! Routed network fabric: topology resolution and the multi-hop
+//! transfer protocol, plus its single-pair reference oracle.
+//!
+//! The paper's testbed is one non-blocking switch, so the model engine
+//! historically hard-wired every transfer to a single out-NIC/in-NIC
+//! station pair — a *star*. This module generalizes that shape into a
+//! routed fabric without giving back the O(1)-events-per-train economy
+//! of bulk frame aggregation:
+//!
+//! * [`FabricPlan`] resolves a topology (star, or two-tier rack + core
+//!   with an oversubscription ratio) into a set of core *links* and a
+//!   [`Route`] per src→dst host pair. Star and in-rack pairs route over
+//!   **zero** links — they keep the exact pre-fabric station pair — and
+//!   cross-rack pairs traverse the source rack's uplink then the
+//!   destination rack's downlink.
+//! * Each core link is a weighted-fair shared server (the same
+//!   virtual-time GPS [`FairStation`] the bulk in-NIC uses): all
+//!   cross-rack trains through a rack's uplink share `rack_size /
+//!   oversub` host lines of bandwidth, byte-proportionally.
+//! * Multi-hop transfers are **pipelined at frame granularity**: a train
+//!   cut-throughs into the next hop one leading-frame service after it
+//!   starts (bulk) or store-and-forwards per frame (per-frame path), and
+//!   final delivery is gated on *every* hop having finished the train —
+//!   the bottleneck hop sets the delivery time, wherever it sits on the
+//!   path. Each hop costs O(1) scheduler events per train.
+//!
+//! [`FabricPath`] is the station-level embodiment of that protocol (one
+//! source out-NIC FIFO, `n` fair hops, the engine's exact coupling
+//! rules), and [`RefStarFabric`] is the independently-written
+//! *single-pair* shape — out FIFO + in fair server, the engine before
+//! the fabric existed — kept as the reference oracle. The lockstep
+//! proptest `prop_star_fabric_matches_reference` drives a zero-link
+//! [`FabricPath`] against [`RefStarFabric`] and demands every announced
+//! time, completion, queue depth and statistic integral match
+//! **bit-for-bit**: the star topology is the degenerate fabric, not an
+//! approximation of it.
+
+use crate::sim::station::{FairStation, RefFairStation, Station, StationStats};
+use crate::util::units::SimTime;
+use std::collections::VecDeque;
+
+// ---------------------------------------------------------------------
+// Topology resolution
+// ---------------------------------------------------------------------
+
+/// A resolved topology: how many core links exist, how fast they are,
+/// and which of them a given host pair crosses. Built once per
+/// simulation from the platform's `Topology` knob (the `sim` layer does
+/// not depend on `model`, so construction takes plain numbers).
+#[derive(Clone, Debug)]
+pub struct FabricPlan {
+    /// Hosts per rack; `0` encodes the star (single switching domain).
+    rack_size: usize,
+    /// Core links: rack `r` owns uplink `2r` and downlink `2r + 1`.
+    n_links: usize,
+    /// Core-link service time per byte. Each link carries
+    /// `rack_size / oversub` host lines: `ns_per_byte_remote · oversub /
+    /// rack_size`.
+    ns_per_byte_link: f64,
+}
+
+impl FabricPlan {
+    /// The degenerate plan: no core links, every pair is single-hop.
+    pub fn star() -> FabricPlan {
+        FabricPlan { rack_size: 0, n_links: 0, ns_per_byte_link: 0.0 }
+    }
+
+    /// A two-tier rack + core plan over `n_hosts` hosts. A layout that
+    /// fits every host into one rack *is* the star and resolves to the
+    /// degenerate plan (no links, so the engine's event sequence is
+    /// unchanged — the bit-identity anchor of the conformance suite).
+    pub fn rack(n_hosts: usize, rack_size: usize, oversub: f64, ns_per_byte_remote: f64) -> FabricPlan {
+        assert!(rack_size >= 1, "rack size must be at least 1");
+        assert!(oversub > 0.0 && oversub.is_finite(), "oversubscription must be positive");
+        let n_racks = n_hosts.div_ceil(rack_size);
+        if n_racks <= 1 {
+            return FabricPlan::star();
+        }
+        FabricPlan {
+            rack_size,
+            n_links: 2 * n_racks,
+            ns_per_byte_link: ns_per_byte_remote * oversub / rack_size as f64,
+        }
+    }
+
+    /// Number of core links (0 under the star).
+    pub fn n_links(&self) -> usize {
+        self.n_links
+    }
+
+    /// True when no pair ever routes over a core link.
+    pub fn is_star(&self) -> bool {
+        self.n_links == 0
+    }
+
+    /// Core-link service time per byte (meaningless under the star).
+    pub fn ns_per_byte_link(&self) -> f64 {
+        self.ns_per_byte_link
+    }
+
+    /// The rack a host lives in.
+    pub fn rack_of(&self, host: usize) -> usize {
+        if self.rack_size == 0 {
+            0
+        } else {
+            host / self.rack_size
+        }
+    }
+
+    /// The core links a `src → dst` transfer crosses, in traversal
+    /// order: empty for star, same-host and in-rack pairs; source
+    /// uplink then destination downlink otherwise.
+    pub fn route(&self, src: usize, dst: usize) -> Route {
+        if self.n_links == 0 {
+            return Route::EMPTY;
+        }
+        let (rs, rd) = (self.rack_of(src), self.rack_of(dst));
+        if rs == rd {
+            return Route::EMPTY;
+        }
+        Route { n: 2, links: [2 * rs, 2 * rd + 1] }
+    }
+}
+
+/// The ordered core links of one transfer (at most two in a two-tier
+/// fabric: rack uplink, then rack downlink).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Route {
+    n: u8,
+    links: [usize; 2],
+}
+
+impl Route {
+    pub const EMPTY: Route = Route { n: 0, links: [0, 0] };
+
+    pub fn len(&self) -> usize {
+        self.n as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// First link on the path (None = deliver straight to the in-NIC).
+    pub fn first(&self) -> Option<usize> {
+        if self.n > 0 {
+            Some(self.links[0])
+        } else {
+            None
+        }
+    }
+
+    /// The link after `link` on this path (None = `link` is the last
+    /// hop before the destination in-NIC).
+    pub fn after(&self, link: usize) -> Option<usize> {
+        if self.n == 2 && self.links[0] == link {
+            Some(self.links[1])
+        } else {
+            None
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Station-level path protocol (conformance harness)
+// ---------------------------------------------------------------------
+
+/// Per-hop service decomposition of one frame train (the station-level
+/// mirror of the engine's `TrainSvc`, with the fair-share weight and
+/// the analytic partial-last-frame wait carried along).
+#[derive(Clone, Copy, Debug)]
+pub struct TrainSpec {
+    /// Aggregate service time at this hop (exact Σ of per-frame times).
+    pub total: SimTime,
+    /// Leading-frame service — the cut-through offset into the next hop.
+    pub first: SimTime,
+    /// Full-frame service (analytic intra-train pacing unit).
+    pub unit: SimTime,
+    /// Wire frames in the train.
+    pub units: u64,
+    /// Fair-share weight (wire bytes; clamped ≥ 1 by the fair server).
+    pub weight: u64,
+    /// Analytic short-last-frame wait (ns) charged at fair hops.
+    pub tail_wait_ns: u64,
+}
+
+/// One pending internal event of a path mini-simulation. Exposed so the
+/// lockstep driver can assert the two implementations agree on *what*
+/// happens next, not just when.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PathEv {
+    /// The source out-NIC finished its in-service train.
+    OutDone,
+    /// A train's leading frame reaches fair hop `h` (cut-through).
+    Arrive(usize),
+    /// Fair hop `h` finished a train.
+    HopDone(usize),
+}
+
+/// What one [`FabricPath::step`]/[`RefStarFabric::step`] processed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PathStep {
+    pub at: SimTime,
+    pub ev: PathEv,
+    /// A message fully delivered by this step (all hops done), if any.
+    pub delivered: Option<usize>,
+}
+
+/// Event-selection rank shared by both mini-sims: completions before
+/// arrivals at equal times (lowest hop first), out-NIC completions in
+/// between, arrivals in FIFO scheduling order. Both implementations use
+/// this exact rule, so lockstep comparison is well-defined.
+fn rank(ev: &PathEv) -> (u8, usize) {
+    match *ev {
+        PathEv::HopDone(h) => (0, h),
+        PathEv::OutDone => (1, 0),
+        PathEv::Arrive(h) => (2, h),
+    }
+}
+
+/// The routed-path protocol as a self-contained station-level
+/// mini-simulation: one source out-NIC ([`Station`], FIFO) feeding
+/// `n_hops` weighted-fair servers ([`FairStation`]) — the core links
+/// plus the destination in-NIC — with the engine's coupling rules:
+///
+/// * a train cut-throughs into hop 1 one leading-frame service (plus
+///   the path latency, charged once) after its out-NIC service starts;
+/// * each fair hop forwards the cut-through one *link-rate* leading-
+///   frame service after the train arrives, and charges the whole train
+///   service to itself;
+/// * delivery fires when the train has completed at **every** fair hop
+///   (the bottleneck hop gates, wherever it is).
+///
+/// With `n_hops == 1` this is exactly the pre-fabric single-pair shape,
+/// pinned bit-for-bit against [`RefStarFabric`] by the lockstep
+/// proptest.
+#[derive(Debug)]
+pub struct FabricPath {
+    lat: SimTime,
+    out: Station<usize>,
+    hops: Vec<FairStation<usize>>,
+    /// Per-message per-hop specs: `specs[m][0]` is the out-NIC hop,
+    /// `specs[m][1..]` the fair hops.
+    specs: Vec<Vec<TrainSpec>>,
+    /// Remaining fair-hop completions before message `m` delivers.
+    gate: Vec<u32>,
+    out_done: Option<SimTime>,
+    /// Live announced completion per fair hop (arrivals supersede).
+    hop_done: Vec<Option<SimTime>>,
+    /// Scheduled cut-through arrivals `(t, hop, msg)`, FIFO by insertion.
+    arrivals: VecDeque<(SimTime, usize, usize)>,
+}
+
+impl FabricPath {
+    /// A path with `n_fair_hops` fair servers (≥ 1: links + in-NIC).
+    pub fn new(lat: SimTime, n_fair_hops: usize) -> FabricPath {
+        assert!(n_fair_hops >= 1);
+        FabricPath {
+            lat,
+            out: Station::new(),
+            hops: (0..n_fair_hops).map(|_| FairStation::new()).collect(),
+            specs: Vec::new(),
+            gate: Vec::new(),
+            out_done: None,
+            hop_done: vec![None; n_fair_hops],
+            arrivals: VecDeque::new(),
+        }
+    }
+
+    /// A message train enters the source out-NIC at `now`. `specs[0]`
+    /// is its out-NIC decomposition, `specs[1..]` one per fair hop.
+    /// Returns the message id deliveries refer to.
+    pub fn send(&mut self, now: SimTime, specs: Vec<TrainSpec>) -> usize {
+        assert_eq!(specs.len(), self.hops.len() + 1, "one spec per hop plus the out-NIC");
+        let msg = self.specs.len();
+        let s0 = specs[0];
+        self.specs.push(specs);
+        self.gate.push(self.hops.len() as u32);
+        if let Some(t) = self.out.arrive_train(now, msg, s0.total, s0.units, s0.unit) {
+            self.out_done = Some(t);
+            self.arrivals.push_back((now + s0.first + self.lat, 1, msg));
+        }
+        msg
+    }
+
+    /// The earliest pending internal event.
+    pub fn next(&self) -> Option<(SimTime, PathEv)> {
+        let mut best: Option<(SimTime, PathEv)> = None;
+        let mut consider = |t: SimTime, ev: PathEv| {
+            let better = match &best {
+                None => true,
+                Some((bt, bev)) => t < *bt || (t == *bt && rank(&ev) < rank(bev)),
+            };
+            if better {
+                best = Some((t, ev));
+            }
+        };
+        if let Some(t) = self.out_done {
+            consider(t, PathEv::OutDone);
+        }
+        for (h, d) in self.hop_done.iter().enumerate() {
+            if let Some(t) = *d {
+                consider(t, PathEv::HopDone(h));
+            }
+        }
+        // FIFO: the front-most arrival wins ties among arrivals, so scan
+        // front to back with a strictly-better comparison.
+        for &(t, hop, _) in &self.arrivals {
+            consider(t, PathEv::Arrive(hop));
+        }
+        best
+    }
+
+    /// Process the earliest pending event.
+    pub fn step(&mut self) -> PathStep {
+        let (at, ev) = self.next().expect("step() on an idle path");
+        let mut delivered = None;
+        match ev {
+            PathEv::OutDone => {
+                let (_msg, next) = self.out.complete(at);
+                self.out_done = next;
+                if next.is_some() {
+                    let m2 = *self.out.in_service().expect("next completion implies in-service");
+                    let s0 = self.specs[m2][0];
+                    self.arrivals.push_back((at + s0.first + self.lat, 1, m2));
+                }
+            }
+            PathEv::Arrive(hop) => {
+                let pos = self
+                    .arrivals
+                    .iter()
+                    .position(|&(t, h, _)| t == at && h == hop)
+                    .expect("announced arrival is pending");
+                let (_, _, msg) = self.arrivals.remove(pos).expect("position just found");
+                let s = self.specs[msg][hop];
+                let t = self.hops[hop - 1].arrive(at, msg, s.total, s.units, s.weight, s.tail_wait_ns);
+                self.hop_done[hop - 1] = Some(t); // supersedes the old announcement
+                if hop < self.hops.len() {
+                    self.arrivals.push_back((at + s.first, hop + 1, msg));
+                }
+            }
+            PathEv::HopDone(h) => {
+                let (msg, next) = self.hops[h].complete(at);
+                self.hop_done[h] = next;
+                self.gate[msg] -= 1;
+                if self.gate[msg] == 0 {
+                    delivered = Some(msg);
+                }
+            }
+        }
+        PathStep { at, ev, delivered }
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.next().is_none()
+    }
+
+    pub fn out_queue_len(&self) -> usize {
+        self.out.queue_len()
+    }
+
+    pub fn hop_queue_len(&self, h: usize) -> usize {
+        self.hops[h].queue_len()
+    }
+
+    /// Finalize statistics at `end` and return them: out-NIC first, then
+    /// each fair hop in order.
+    pub fn finish(mut self, end: SimTime) -> Vec<StationStats> {
+        self.out.finish(end);
+        let mut all = vec![self.out.stats.clone()];
+        for mut h in self.hops {
+            h.finish(end);
+            all.push(h.stats.clone());
+        }
+        all
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reference oracle: the pre-fabric single-pair shape
+// ---------------------------------------------------------------------
+
+/// The network shape the engine had before the routed fabric existed —
+/// one source out-NIC FIFO feeding one destination in-NIC fair server,
+/// cut-through coupled — written independently of [`FabricPath`] (its
+/// fair server is the linear-scan [`RefFairStation`], its bookkeeping
+/// its own) and kept as the conformance oracle: a zero-link
+/// [`FabricPath`] must match it event-for-event, bit-for-bit. Hidden
+/// from the supported API: it exists for the lockstep proptests.
+#[doc(hidden)]
+#[derive(Debug)]
+pub struct RefStarFabric {
+    lat: SimTime,
+    out: Station<usize>,
+    inn: RefFairStation<usize>,
+    specs: Vec<[TrainSpec; 2]>,
+    out_done: Option<SimTime>,
+    in_done: Option<SimTime>,
+    arrivals: VecDeque<(SimTime, usize)>,
+}
+
+impl RefStarFabric {
+    pub fn new(lat: SimTime) -> RefStarFabric {
+        RefStarFabric {
+            lat,
+            out: Station::new(),
+            inn: RefFairStation::new(),
+            specs: Vec::new(),
+            out_done: None,
+            in_done: None,
+            arrivals: VecDeque::new(),
+        }
+    }
+
+    /// A message train enters the pair: `out_spec` at the source
+    /// out-NIC, `in_spec` at the destination in-NIC.
+    pub fn send(&mut self, now: SimTime, out_spec: TrainSpec, in_spec: TrainSpec) -> usize {
+        let msg = self.specs.len();
+        self.specs.push([out_spec, in_spec]);
+        if let Some(t) = self.out.arrive_train(now, msg, out_spec.total, out_spec.units, out_spec.unit)
+        {
+            self.out_done = Some(t);
+            self.arrivals.push_back((now + out_spec.first + self.lat, msg));
+        }
+        msg
+    }
+
+    pub fn next(&self) -> Option<(SimTime, PathEv)> {
+        let mut best: Option<(SimTime, PathEv)> = None;
+        let mut consider = |t: SimTime, ev: PathEv| {
+            let better = match &best {
+                None => true,
+                Some((bt, bev)) => t < *bt || (t == *bt && rank(&ev) < rank(bev)),
+            };
+            if better {
+                best = Some((t, ev));
+            }
+        };
+        if let Some(t) = self.in_done {
+            consider(t, PathEv::HopDone(0));
+        }
+        if let Some(t) = self.out_done {
+            consider(t, PathEv::OutDone);
+        }
+        for &(t, _) in &self.arrivals {
+            consider(t, PathEv::Arrive(1));
+        }
+        best
+    }
+
+    pub fn step(&mut self) -> PathStep {
+        let (at, ev) = self.next().expect("step() on an idle pair");
+        let mut delivered = None;
+        match ev {
+            PathEv::OutDone => {
+                let (_msg, next) = self.out.complete(at);
+                self.out_done = next;
+                if next.is_some() {
+                    let m2 = *self.out.in_service().expect("next completion implies in-service");
+                    let s0 = self.specs[m2][0];
+                    self.arrivals.push_back((at + s0.first + self.lat, m2));
+                }
+            }
+            PathEv::Arrive(_) => {
+                let pos = self
+                    .arrivals
+                    .iter()
+                    .position(|&(t, _)| t == at)
+                    .expect("announced arrival is pending");
+                let (_, msg) = self.arrivals.remove(pos).expect("position just found");
+                let s = self.specs[msg][1];
+                let t = self.inn.arrive(at, msg, s.total, s.units, s.weight, s.tail_wait_ns);
+                self.in_done = Some(t);
+            }
+            PathEv::HopDone(_) => {
+                let (msg, next) = self.inn.complete(at);
+                self.in_done = next;
+                delivered = Some(msg); // single hop: in-NIC completion delivers
+            }
+        }
+        PathStep { at, ev, delivered }
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.next().is_none()
+    }
+
+    pub fn out_queue_len(&self) -> usize {
+        self.out.queue_len()
+    }
+
+    pub fn in_queue_len(&self) -> usize {
+        self.inn.queue_len()
+    }
+
+    /// Finalize statistics at `end`: `[out, in]`.
+    pub fn finish(mut self, end: SimTime) -> Vec<StationStats> {
+        self.out.finish(end);
+        self.inn.finish(end);
+        vec![self.out.stats.clone(), self.inn.stats.clone()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ns(x: u64) -> SimTime {
+        SimTime::from_ns(x)
+    }
+
+    /// An even `bytes`-byte train split into `units` equal frames of
+    /// `unit_ns` each, at weight = bytes.
+    fn spec(units: u64, unit_ns: u64, weight: u64) -> TrainSpec {
+        TrainSpec {
+            total: ns(unit_ns * units),
+            first: ns(unit_ns),
+            unit: ns(unit_ns),
+            units,
+            weight,
+            tail_wait_ns: 0,
+        }
+    }
+
+    #[test]
+    fn star_plan_routes_nothing() {
+        let p = FabricPlan::star();
+        assert!(p.is_star());
+        assert_eq!(p.n_links(), 0);
+        assert!(p.route(0, 17).is_empty());
+    }
+
+    #[test]
+    fn single_rack_layout_degenerates_to_star() {
+        // Every host fits in one rack: no links, no routed pairs — the
+        // engine's event sequence is untouched.
+        let p = FabricPlan::rack(20, 32, 4.0, 8.0);
+        assert!(p.is_star());
+        assert!(p.route(1, 19).is_empty());
+    }
+
+    #[test]
+    fn rack_plan_routes_cross_rack_pairs_over_two_links() {
+        // 20 hosts in racks of 8: racks {0..8}, {8..16}, {16..20}.
+        let p = FabricPlan::rack(20, 8, 4.0, 8.0);
+        assert!(!p.is_star());
+        assert_eq!(p.n_links(), 6);
+        assert_eq!(p.rack_of(7), 0);
+        assert_eq!(p.rack_of(8), 1);
+        assert!(p.route(1, 7).is_empty(), "in-rack stays single-hop");
+        assert!(p.route(3, 3).is_empty(), "same host never routes");
+        let r = p.route(1, 9); // rack 0 -> rack 1
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.first(), Some(0), "rack 0's uplink");
+        assert_eq!(r.after(0), Some(3), "rack 1's downlink");
+        assert_eq!(r.after(3), None, "downlink is the last hop");
+        let back = p.route(9, 1); // rack 1 -> rack 0
+        assert_eq!(back.first(), Some(2));
+        assert_eq!(back.after(2), Some(1));
+    }
+
+    #[test]
+    fn link_rate_scales_with_rack_size_and_oversub() {
+        // rack_size 8, oversub 4: each link carries 2 host lines, so
+        // bytes cost half the host-NIC ns/byte.
+        let p = FabricPlan::rack(64, 8, 4.0, 8.0);
+        assert!((p.ns_per_byte_link() - 4.0).abs() < 1e-12);
+        // Non-blocking core (oversub 1): 8 lines, 8x faster than a host.
+        let p = FabricPlan::rack(64, 8, 1.0, 8.0);
+        assert!((p.ns_per_byte_link() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_link_path_matches_reference_on_a_scripted_mix() {
+        // Deterministic lockstep smoke (the proptest randomizes this):
+        // contended sends through a 1-fair-hop path vs the single-pair
+        // oracle, every event and delivery bit-identical.
+        let mut path = FabricPath::new(ns(90_000), 1);
+        let mut oracle = RefStarFabric::new(ns(90_000));
+        let script: [(u64, TrainSpec); 3] = [
+            (0, spec(4, 500, 64 * 1024)),
+            (100, spec(9, 500, 150_000)),
+            (2_000, spec(1, 137, 137)),
+        ];
+        for &(at, s) in &script {
+            let a = path.send(ns(at), vec![s, s]);
+            let b = oracle.send(ns(at), s, s);
+            assert_eq!(a, b);
+        }
+        let mut deliveries = 0;
+        for _ in 0..64 {
+            match (path.next(), oracle.next()) {
+                (None, None) => break,
+                (a, b) => assert_eq!(a, b, "pending event diverged"),
+            }
+            let sa = path.step();
+            let sb = oracle.step();
+            assert_eq!(sa, sb, "step diverged");
+            assert_eq!(path.out_queue_len(), oracle.out_queue_len());
+            assert_eq!(path.hop_queue_len(0), oracle.in_queue_len());
+            if sa.delivered.is_some() {
+                deliveries += 1;
+            }
+        }
+        assert_eq!(deliveries, 3, "all messages delivered");
+        let fa = path.finish(ns(10_000_000));
+        let fb = oracle.finish(ns(10_000_000));
+        for (a, b) in fa.iter().zip(fb.iter()) {
+            assert_eq!(a.busy_ns, b.busy_ns);
+            assert_eq!(a.qlen_ns, b.qlen_ns);
+            assert_eq!(a.max_qlen, b.max_qlen);
+            assert_eq!(a.arrivals, b.arrivals);
+            assert_eq!(a.departures, b.departures);
+        }
+    }
+
+    #[test]
+    fn slow_middle_hop_gates_delivery() {
+        // 3 fair hops; the middle one is 4x slower. Delivery must wait
+        // for the bottleneck even though the in-NIC finishes earlier.
+        let mut path = FabricPath::new(ns(0), 3);
+        let fast = spec(4, 100, 4_000);
+        let slow = spec(4, 400, 4_000);
+        path.send(ns(0), vec![fast, fast, slow, fast]);
+        let mut delivered_at = None;
+        for _ in 0..32 {
+            if path.is_idle() {
+                break;
+            }
+            let s = path.step();
+            if let Some(_m) = s.delivered {
+                delivered_at = Some(s.at);
+            }
+        }
+        let t = delivered_at.expect("message delivered");
+        // Cut-throughs: hop 1 at 100 (out leading frame), hop 2 at 200,
+        // hop 3 at 600 (after the slow hop's 400ns leading frame). The
+        // slow hop charges 4 × 400 = 1600ns from 200 → done at 1800,
+        // while the in-NIC finishes at 600 + 400 = 1000 — delivery is
+        // gated on the bottleneck hop, not the last one.
+        assert_eq!(t, ns(1_800));
+    }
+
+    #[test]
+    fn pipelined_hops_overlap_like_cut_through() {
+        // A single-hop-rate path: each extra hop adds one leading-frame
+        // service, not one full train service (frame-granularity
+        // pipelining, the O(1)-events analogue of store-and-forward).
+        let s = spec(8, 250, 8_000);
+        let mut one = FabricPath::new(ns(0), 1);
+        one.send(ns(0), vec![s, s]);
+        let mut t1 = None;
+        while !one.is_idle() {
+            let st = one.step();
+            if st.delivered.is_some() {
+                t1 = Some(st.at);
+            }
+        }
+        let mut three = FabricPath::new(ns(0), 3);
+        three.send(ns(0), vec![s, s, s, s]);
+        let mut t3 = None;
+        while !three.is_idle() {
+            let st = three.step();
+            if st.delivered.is_some() {
+                t3 = Some(st.at);
+            }
+        }
+        let (t1, t3) = (t1.unwrap(), t3.unwrap());
+        assert_eq!(
+            t3.as_ns() - t1.as_ns(),
+            2 * 250,
+            "two extra hops cost two leading-frame services"
+        );
+    }
+}

@@ -3,20 +3,26 @@
 //! The paper's predictor is "a discrete-event simulator" instantiating "a
 //! queue-based storage system model" (§2.3–2.4). This module provides the
 //! domain-independent machinery: a virtual clock and event queue
-//! ([`engine`]) and FIFO single-server service stations ([`station`]) —
+//! ([`engine`]), FIFO single-server service stations ([`station`]) —
 //! the "queues" every system component (manager, storage, client, NIC
-//! in/out) is modeled as.
+//! in/out) is modeled as — and the routed network fabric ([`fabric`]):
+//! topology resolution (star / two-tier rack + core) and the multi-hop
+//! cut-through transfer protocol with its star-degenerate oracle.
 //!
 //! Both the coarse predictor (`model/`) and the high-fidelity testbed
 //! (`testbed/`) run on this engine; they differ only in the protocol
 //! detail of their event handlers (DESIGN.md §4).
 
 pub mod engine;
+pub mod fabric;
 pub mod station;
 
 pub use engine::{EventToken, Scheduler, SimState, Simulation};
+pub use fabric::{FabricPlan, Route};
 pub use station::{FairStation, Station, StationStats};
-// The linear-scan equivalence oracle, compiled for the integration
-// proptests but kept out of the supported API surface.
+// The linear-scan / single-pair equivalence oracles, compiled for the
+// integration proptests but kept out of the supported API surface.
+#[doc(hidden)]
+pub use fabric::RefStarFabric;
 #[doc(hidden)]
 pub use station::RefFairStation;

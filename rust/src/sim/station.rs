@@ -35,6 +35,12 @@
 //! uncontended path stays bit-exact), and the server is busy exactly when
 //! work is pending (busy integrals are conserved).
 //!
+//! The same server is reused unchanged for the routed fabric's core
+//! links (`sim::fabric`): an oversubscribed rack uplink is just another
+//! weighted-fair station whose capacity is a fraction of the host line
+//! rate, so cross-rack trains share it byte-proportionally exactly like
+//! incast trains share a receive NIC.
+//!
 //! The implementation is **virtual-time** GPS: a virtual clock advances at
 //! `1 / Σ weights` of real time while the server is busy, every train is
 //! stamped once, at arrival, with the virtual *finish tag*

@@ -46,6 +46,9 @@ pub enum Lane {
     NicOut(u32),
     /// Host `h`'s receive NIC queue.
     NicIn(u32),
+    /// Core-fabric link `n`'s transmission queue (routed topologies
+    /// only; the star fabric has no links, so star runs never emit it).
+    Link(u32),
     /// The metadata manager's service queue.
     Manager,
     /// Storage node `s`'s service queue.
@@ -60,6 +63,7 @@ impl Lane {
         match self {
             Lane::NicOut(_) => Class::OutNic,
             Lane::NicIn(_) => Class::InNic,
+            Lane::Link(_) => Class::CoreLink,
             Lane::Manager => Class::Manager,
             Lane::Storage(_) => Class::Storage,
             Lane::Client(_) => Class::ClientCompute,
@@ -71,6 +75,7 @@ impl Lane {
         match self {
             Lane::NicOut(h) => format!("out-nic:{h}"),
             Lane::NicIn(h) => format!("in-nic:{h}"),
+            Lane::Link(n) => format!("link:{n}"),
             Lane::Manager => "manager".to_string(),
             Lane::Storage(s) => format!("storage:{s}"),
             Lane::Client(c) => format!("client:{c}"),
@@ -87,6 +92,7 @@ pub enum Class {
     ClientCompute,
     OutNic,
     InNic,
+    CoreLink,
     Storage,
     Manager,
     FaultRecovery,
@@ -94,13 +100,14 @@ pub enum Class {
 }
 
 /// Number of attribution classes (`Class::ALL.len()`).
-pub const N_CLASSES: usize = 7;
+pub const N_CLASSES: usize = 8;
 
 impl Class {
     pub const ALL: [Class; N_CLASSES] = [
         Class::ClientCompute,
         Class::OutNic,
         Class::InNic,
+        Class::CoreLink,
         Class::Storage,
         Class::Manager,
         Class::FaultRecovery,
@@ -113,6 +120,7 @@ impl Class {
             Class::ClientCompute => "client_compute",
             Class::OutNic => "out_nic",
             Class::InNic => "in_nic",
+            Class::CoreLink => "core_link",
             Class::Storage => "storage",
             Class::Manager => "manager",
             Class::FaultRecovery => "fault_recovery",
@@ -256,10 +264,12 @@ mod tests {
     fn lane_class_mapping() {
         assert_eq!(Lane::NicOut(0).class(), Class::OutNic);
         assert_eq!(Lane::NicIn(3).class(), Class::InNic);
+        assert_eq!(Lane::Link(5).class(), Class::CoreLink);
         assert_eq!(Lane::Manager.class(), Class::Manager);
         assert_eq!(Lane::Storage(1).class(), Class::Storage);
         assert_eq!(Lane::Client(2).class(), Class::ClientCompute);
         assert_eq!(Lane::NicOut(3).label(), "out-nic:3");
+        assert_eq!(Lane::Link(5).label(), "link:5");
         assert_eq!(Lane::Manager.label(), "manager");
     }
 

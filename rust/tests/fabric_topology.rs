@@ -1,0 +1,220 @@
+//! Integration tests for the routed network fabric: the star topology
+//! (and any rack layout that degenerates to a single rack) must be
+//! bit-identical to the pre-fabric engine on every paper workload, core
+//! oversubscription must slow an incast monotonically, placement must
+//! feel the rack boundary, and fault-plan message loss must touch only
+//! the host pairs that actually route through the core.
+
+use wfpred::model::{simulate, simulate_fid, Config, FaultPlan, Fidelity, Platform, Topology};
+use wfpred::util::units::{Bytes, SimTime};
+use wfpred::workload::blast::{blast, BlastParams};
+use wfpred::workload::montage::montage;
+use wfpred::workload::patterns::{pipeline, reduce, PatternScale};
+use wfpred::workload::{FileHint, FileSpec, TaskSpec, Workload};
+
+/// The paper testbed with a non-star topology knob.
+fn rack_platform(rack_size: usize, oversub: f64) -> Platform {
+    let mut p = Platform::paper_testbed();
+    p.topology = Topology::Rack { rack_size, oversub };
+    p.validate().unwrap();
+    p
+}
+
+/// A BLAST instance scaled down to integration-test size.
+fn small_blast(n_app: usize) -> Workload {
+    let params = BlastParams {
+        queries: 8,
+        db_size: Bytes::mb(64),
+        query_file: Bytes::mb(1),
+        output_file: Bytes::mb(2),
+        per_query: SimTime::from_secs_f64(0.05),
+    };
+    blast(n_app, &params)
+}
+
+/// Star vs a single-rack ("degenerate") layout: the rack holds every
+/// host, so no pair routes through the core, the fabric schedules zero
+/// link events, and the whole report — times, completions, integrals,
+/// event counts — must match bit for bit (`f64`'s `Debug` is
+/// shortest-round-trip, so string equality is bit equality).
+#[test]
+fn degenerate_rack_is_bit_identical_to_star_on_all_paper_workloads() {
+    let star = Platform::paper_testbed();
+    let one_rack = rack_platform(4096, 1.0);
+    let cases: Vec<(Workload, Config)> = vec![
+        (
+            pipeline(6, PatternScale::Small, false),
+            Config::partitioned(6, 3, Bytes::mb(1)).with_label("fab-pipe").with_stripe(2),
+        ),
+        (
+            reduce(8, PatternScale::Small, false),
+            Config::partitioned(8, 4, Bytes::mb(1)).with_label("fab-reduce").with_stripe(4),
+        ),
+        (
+            montage(8),
+            Config::partitioned(8, 4, Bytes::mb(1)).with_label("fab-montage").with_stripe(2),
+        ),
+        (
+            small_blast(4),
+            Config::partitioned(4, 2, Bytes::mb(1)).with_label("fab-blast"),
+        ),
+    ];
+    for (wl, cfg) in &cases {
+        assert!(one_rack.topology != Topology::Star, "the knob must actually be set");
+        let a = simulate(wl, cfg, &star);
+        let b = simulate(wl, cfg, &one_rack);
+        assert!(a.util.links.is_empty(), "star has no core links");
+        assert!(b.util.links.is_empty(), "a single rack degenerates to zero links");
+        assert_eq!(
+            format!("{a:?}"),
+            format!("{b:?}"),
+            "star/degenerate-rack divergence on {}",
+            wl.name
+        );
+    }
+}
+
+/// Same bit-identity demand on the per-frame fidelity path, whose
+/// store-and-forward link handling is a separate code path from the
+/// bulk-train fabric.
+#[test]
+fn degenerate_rack_is_bit_identical_to_star_per_frame() {
+    let star = Platform::paper_testbed();
+    let one_rack = rack_platform(1024, 1.0);
+    let wl = reduce(4, PatternScale::Small, false);
+    let cfg = Config::partitioned(4, 2, Bytes::mb(1)).with_label("fab-frames").with_stripe(2);
+    let a = simulate_fid(&wl, &cfg, &star, Fidelity::coarse_per_frame());
+    let b = simulate_fid(&wl, &cfg, &one_rack, Fidelity::coarse_per_frame());
+    assert_eq!(format!("{a:?}"), format!("{b:?}"));
+}
+
+/// A routed layout reports per-link residency: one uplink and one
+/// downlink per rack, in layout order, and at least one of them saw
+/// traffic when the workload crosses racks.
+#[test]
+fn rack_reports_expose_per_link_residency() {
+    let wl = reduce(8, PatternScale::Small, false);
+    let cfg = Config::partitioned(8, 4, Bytes::mb(1)).with_label("fab-links").with_stripe(4);
+    // 1 manager + 8 clients + 4 storage = 13 hosts; rack size 4 => 4 racks.
+    let rep = simulate(&wl, &cfg, &rack_platform(4, 2.0));
+    assert_eq!(rep.util.links.len(), 8, "two core links per rack");
+    assert!(
+        rep.util.links.iter().any(|&(u, _)| u > 0.0),
+        "cross-rack traffic must land on at least one core link"
+    );
+    for &(u, q) in &rep.util.links {
+        assert!((0.0..=1.0).contains(&u), "link utilization {u} out of range");
+        assert!(q >= 0.0 && q.is_finite(), "mean queue length {q} out of range");
+    }
+}
+
+/// Growing the core oversubscription ratio only ever slows the fabric:
+/// turnaround on a wide incast is non-decreasing in the ratio, and a
+/// heavily oversubscribed core is strictly slower than the star.
+#[test]
+fn core_oversubscription_monotonically_slows_the_incast() {
+    let wl = reduce(16, PatternScale::Small, false);
+    let cfg = Config::partitioned(16, 4, Bytes::mb(1)).with_label("fab-oversub").with_stripe(4);
+    let t_star = simulate(&wl, &cfg, &Platform::paper_testbed()).turnaround;
+    let mut prev = t_star;
+    for oversub in [1.0, 2.0, 8.0] {
+        let t = simulate(&wl, &cfg, &rack_platform(8, oversub)).turnaround;
+        assert!(
+            t >= prev,
+            "turnaround regressed as oversubscription grew: {prev:?} -> {t:?} at {oversub}x"
+        );
+        prev = t;
+    }
+    assert!(
+        prev > t_star,
+        "an 8x-oversubscribed core must be measurably slower than the star \
+         (star {t_star:?}, rack {prev:?})"
+    );
+}
+
+/// One pinned client writing one node-pinned file: keeping the target
+/// storage node inside the writer's rack avoids the core entirely, so
+/// it must beat the same write routed across racks through an
+/// oversubscribed uplink/downlink pair.
+#[test]
+fn cross_rack_placement_is_slower_than_in_rack() {
+    // partitioned(1, 9): manager=0, client=1, storage s at host 2+s.
+    // Rack size 4 puts storage 0..=1 in the client's rack and storage
+    // 2..=5 in the next one.
+    let cfg = Config::partitioned(1, 9, Bytes::mb(1)).with_label("fab-place").with_stripe(1);
+    let plat = rack_platform(4, 8.0);
+    let build = |node: usize| {
+        let mut w = Workload::new(format!("fab-place-{node}"));
+        let out = w.add_file(FileSpec::new("out", Bytes::mb(32)).hint(FileHint::OnNode(node)));
+        w.add_task(TaskSpec::new("writer", 0).pin(0).writes(out));
+        w
+    };
+    let t_in_rack = simulate(&build(0), &cfg, &plat).turnaround;
+    let t_cross = simulate(&build(4), &cfg, &plat).turnaround;
+    assert!(
+        t_cross > t_in_rack,
+        "a cross-rack write through an 8x-oversubscribed core must cost more \
+         than the in-rack write (in-rack {t_in_rack:?}, cross {t_cross:?})"
+    );
+}
+
+/// Message loss in the fault plan is addressed by host pair, which on a
+/// routed layout is exactly "loss on the core path between those
+/// racks": a drop directive on a pair that never communicates leaves
+/// the run bit-identical, while the same class of directive on the
+/// routed pair actually carrying the data drops frames and delays the
+/// run. Placement that stays inside one rack dodges the lossy core
+/// path entirely.
+#[test]
+fn link_loss_affects_only_routed_pairs() {
+    // partitioned(2, 4): manager=0, clients at hosts 1-2, storage at
+    // hosts 3-6. Rack size 4: hosts 0-3 share the client rack, hosts
+    // 4-6 form the second rack. Storage 0 (host 3) is in-rack for
+    // client 0 (host 1); storage 1 (host 4) is across the core.
+    let cfg = |plan: &str| {
+        let c = Config::partitioned(2, 4, Bytes::mb(1)).with_label("fab-loss").with_stripe(1);
+        if plan.is_empty() { c } else { c.with_fault_plan(FaultPlan::parse(plan).unwrap()) }
+    };
+    let plat = rack_platform(4, 2.0);
+    let build = |node: usize| {
+        let mut w = Workload::new(format!("fab-loss-{node}"));
+        let out = w.add_file(FileSpec::new("out", Bytes::mb(16)).hint(FileHint::OnNode(node)));
+        w.add_task(TaskSpec::new("writer", 0).pin(0).writes(out));
+        w
+    };
+    let cross = build(1); // client host 1 -> storage host 4, routed over the core
+
+    // A lossy window on a pair that never exchanges a message (idle
+    // client 1 -> storage 2) leaves every performance observable
+    // untouched. (A non-empty plan arms the degraded-mode chunk
+    // timeouts, so raw event *counts* legitimately differ from the
+    // fault-free run — the comparison is on what the run produced.)
+    let clean = simulate(&cross, &cfg(""), &plat);
+    let unrelated = simulate(&cross, &cfg("seed=9;drop=2-5@0-1000p0.5"), &plat);
+    assert_eq!(unrelated.fault_msgs_dropped, 0);
+    assert_eq!(unrelated.turnaround, clean.turnaround);
+    assert_eq!(unrelated.net_bytes, clean.net_bytes);
+    assert_eq!(unrelated.net_frames, clean.net_frames);
+    assert_eq!(format!("{:?}", unrelated.util), format!("{:?}", clean.util));
+    // Two distinct never-matching windows are bit-identical in full:
+    // the armed-timeout bookkeeping itself is deterministic.
+    let unrelated2 = simulate(&cross, &cfg("seed=9;drop=2-6@0-1000p0.5"), &plat);
+    assert_eq!(format!("{unrelated:?}"), format!("{unrelated2:?}"));
+
+    // The same window on the routed pair drops real frames and the
+    // retries push turnaround out.
+    let hit = simulate(&cross, &cfg("seed=9;drop=1-4@0-1000p0.5"), &plat);
+    assert!(hit.fault_msgs_dropped > 0, "the routed pair must lose messages");
+    assert!(hit.turnaround > clean.turnaround, "loss + retry must delay the run");
+
+    // In-rack placement never enters the lossy core path: the same drop
+    // directive that delayed the cross-rack run leaves every observable
+    // of the in-rack run at its fault-free value.
+    let in_rack = build(0); // client host 1 -> storage host 3, same rack
+    let base = simulate(&in_rack, &cfg(""), &plat);
+    let shielded = simulate(&in_rack, &cfg("seed=9;drop=1-4@0-1000p0.5"), &plat);
+    assert_eq!(shielded.fault_msgs_dropped, 0);
+    assert_eq!(shielded.turnaround, base.turnaround);
+    assert_eq!(shielded.net_bytes, base.net_bytes);
+    assert_eq!(format!("{:?}", shielded.util), format!("{:?}", base.util));
+}
